@@ -1,0 +1,13 @@
+//! Bench + regenerator for Fig 10 (latency/throughput tradeoff).
+use recsys::config::ServerGen;
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 10 — latency vs latency-bounded throughput");
+    let s = bench("rmc2 co-location point (Skylake, N=8)", 0, 2, || {
+        let pts = recsys::figures::fig10::sweep(&[ServerGen::Skylake], &[8]);
+        assert_eq!(pts.len(), 1);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig10::report());
+}

@@ -1,0 +1,14 @@
+//! Bench + regenerator for Fig 11 (tail latency under co-location).
+use recsys::config::ServerSpec;
+use recsys::simulator::colocation::focal_fc_distribution;
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 11 — FC operator tail latency");
+    let s = bench("150 focal-FC executions w/ 20 bg jobs (BDW)", 0, 2, || {
+        let h = focal_fc_distribution(ServerSpec::broadwell(), 512, 512, 1, 20, 150, 3);
+        assert_eq!(h.len(), 150);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig11::report());
+}

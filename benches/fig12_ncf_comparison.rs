@@ -1,0 +1,12 @@
+//! Bench + regenerator for Fig 12 (RMC vs MLPerf-NCF).
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 12 — RMC vs NCF");
+    let s = bench("normalized comparison rows", 0, 3, || {
+        let rows = recsys::figures::fig12::rows();
+        assert_eq!(rows.len(), 3);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig12::report());
+}

@@ -1,0 +1,12 @@
+//! Bench + regenerator for Fig 14 (unique sparse-ID fractions).
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 14 — unique-ID fraction across traces");
+    let s = bench("6 use cases x 20k-lookup windows", 1, 5, || {
+        let m = recsys::figures::fig14::measure();
+        assert_eq!(m.len(), 6);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig14::report());
+}

@@ -1,0 +1,13 @@
+//! Bench + regenerator for Fig 1 (fleet cycle shares).
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 1 — fleet AI-inference cycle shares");
+    let s = bench("fleet accounting (6 services, Broadwell)", 1, 3, || {
+        let acct = recsys::fleet::FleetModel::production_mix()
+            .account(&recsys::config::ServerSpec::broadwell());
+        assert!(acct.rec_share() > 0.7);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig1::report());
+}

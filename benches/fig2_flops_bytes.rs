@@ -1,0 +1,12 @@
+//! Bench + regenerator for Fig 2 (FLOPs vs bytes scatter).
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 2 — per-sample FLOPs vs bytes");
+    let s = bench("cost model over 9 networks", 2, 50, || {
+        let v = recsys::figures::fig2::summaries();
+        assert_eq!(v.len(), 9);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig2::report());
+}

@@ -1,0 +1,13 @@
+//! Bench + regenerator for Fig 4 (operator cycle breakdown).
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 4 — data-center cycles by operator");
+    let s = bench("fleet operator attribution", 1, 3, || {
+        let acct = recsys::fleet::FleetModel::production_mix()
+            .account(&recsys::config::ServerSpec::broadwell());
+        assert!(acct.sls_total_share > 0.0);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig4::report());
+}

@@ -1,0 +1,12 @@
+//! Bench + regenerator for Fig 5 (op intensity + LLC MPKI).
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 5 — operator intensity + MPKI");
+    let s = bench("trace-driven SLS MPKI measurement", 1, 3, || {
+        let m = recsys::figures::fig5::measure();
+        assert_eq!(m.len(), 4);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig5::report());
+}

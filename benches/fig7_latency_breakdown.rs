@@ -1,0 +1,19 @@
+//! Bench + regenerator for Fig 7 (unit-batch latency + breakdown).
+use recsys::config::ServerSpec;
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 7 — unit-batch inference simulation");
+    for cfg in [
+        recsys::config::rmc1_small(),
+        recsys::config::rmc2_small(),
+        recsys::config::rmc3_small(),
+    ] {
+        let s = bench(&format!("simulate {} b1 on Broadwell", cfg.name), 1, 5, || {
+            let b = recsys::figures::fig7::measure(&cfg, ServerSpec::broadwell(), 1);
+            assert!(b.total_ns > 0.0);
+        });
+        println!("{}", s.report());
+    }
+    println!("{}", recsys::figures::fig7::report());
+}

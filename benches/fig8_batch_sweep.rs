@@ -1,0 +1,13 @@
+//! Bench + regenerator for Fig 8 (batch x server sweep).
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 8 — batch sweep across server generations");
+    let cfgs = [recsys::config::rmc1_small()];
+    let s = bench("rmc1 sweep {16,128,256} x 3 servers", 0, 2, || {
+        let d = recsys::figures::fig8::sweep(&cfgs, &recsys::figures::fig8::BATCHES);
+        assert_eq!(d[0].len(), 3);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig8::report());
+}

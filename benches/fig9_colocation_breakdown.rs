@@ -1,0 +1,13 @@
+//! Bench + regenerator for Fig 9 (co-location degradation).
+use recsys::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 9 — co-location on Broadwell");
+    let cfg = recsys::config::rmc2_small();
+    let s = bench("rmc2 x8 co-location round", 0, 2, || {
+        let r = recsys::figures::fig9::measure(&cfg, 8);
+        assert!(r.mean_ms() > 0.0);
+    });
+    println!("{}", s.report());
+    println!("{}", recsys::figures::fig9::report());
+}

@@ -1,0 +1,126 @@
+//! L3 hot-path micro-benchmarks: PJRT execute latency per (model,
+//! batch), input marshalling, batcher, and router — the profile targets
+//! of the performance pass (EXPERIMENTS.md §Perf).
+
+use std::time::{Duration, Instant};
+
+use recsys::coordinator::{DynamicBatcher, RoutingPolicy, WorkerInfo};
+use recsys::runtime::{default_artifacts_dir, golden_dense, golden_ids, golden_lwts, ModelPool};
+use recsys::util::bench::{bench, header};
+use recsys::workload::Query;
+
+fn main() -> anyhow::Result<()> {
+    header("runtime hot path");
+
+    // ---- PJRT execute (the request-path kernel) -----------------------
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let pool = ModelPool::new(&dir)?;
+        for model in ["rmc1-small", "rmc2-small", "rmc3-small"] {
+            for batch in [1usize, 8, 32, 128] {
+                let compiled = pool.get(model, "xla", batch)?;
+                let spec = &compiled.spec;
+                let t = spec.config_usize("num_tables")?;
+                let l = spec.config_usize("lookups")?;
+                let r = spec.config_usize("rows")?;
+                let d = spec.config_usize("dense_dim")?;
+                let dense = golden_dense(batch, d);
+                let ids = golden_ids(t, batch, l, r);
+                let lwts = golden_lwts(t, batch, l);
+                let iters = if batch >= 128 { 20 } else { 50 };
+                let s = bench(&format!("pjrt {model} b{batch}"), 3, iters, || {
+                    let out = compiled.run_rmc(&dense, &ids, &lwts).unwrap();
+                    assert_eq!(out.len(), batch);
+                });
+                // Per-item throughput alongside raw latency.
+                println!(
+                    "{}   ({:.1} items/ms)",
+                    s.report(),
+                    batch as f64 / (s.mean_ns / 1e6)
+                );
+            }
+        }
+        // Pallas-variant cross-check timing (AOT'd interpret-mode kernels).
+        let compiled = pool.get("rmc1-small", "pallas", 1)?;
+        let spec = &compiled.spec;
+        let (t, l, r, d) = (
+            spec.config_usize("num_tables")?,
+            spec.config_usize("lookups")?,
+            spec.config_usize("rows")?,
+            spec.config_usize("dense_dim")?,
+        );
+        let (dense, ids, lwts) =
+            (golden_dense(1, d), golden_ids(t, 1, l, r), golden_lwts(t, 1, l));
+        let s = bench("pjrt rmc1-small b1 (pallas impl)", 2, 20, || {
+            compiled.run_rmc(&dense, &ids, &lwts).unwrap();
+        });
+        println!("{}", s.report());
+    } else {
+        println!("(artifacts not built — skipping PJRT section)");
+    }
+
+    // ---- batcher ------------------------------------------------------
+    let s = bench("batcher push+flush 1k queries", 2, 50, || {
+        let mut b =
+            DynamicBatcher::new(vec![1, 8, 32, 128], 128, Duration::from_micros(200));
+        let now = Instant::now();
+        let mut out = 0;
+        for i in 0..1000u64 {
+            if b.push(Query::new(i, "m", 4, 0.0), now).is_some() {
+                out += 1;
+            }
+        }
+        out += b.drain(now).len();
+        assert!(out > 0);
+    });
+    println!("{}", s.report());
+
+    // ---- router -------------------------------------------------------
+    let workers: Vec<WorkerInfo> = (0..16)
+        .map(|id| WorkerInfo {
+            id,
+            gen: recsys::config::ServerGen::Skylake,
+            models: vec![],
+        })
+        .collect();
+    let outstanding = vec![0usize; 16];
+    let s = bench("router 10k heterogeneity picks", 2, 50, || {
+        let mut rr = 0;
+        for i in 0..10_000 {
+            let b = if i % 2 == 0 { 8 } else { 128 };
+            RoutingPolicy::Heterogeneity
+                .pick(&workers, "m", b, &outstanding, &mut rr)
+                .unwrap();
+        }
+    });
+    println!("{}", s.report());
+    marshal_bench();
+    Ok(())
+}
+
+// Appended by the perf pass: input-marshalling microbenchmark (the
+// PjrtBackend serving path generates per-slot dense + sparse inputs).
+#[allow(dead_code)]
+fn marshal_bench() {
+    use recsys::util::Rng;
+    use recsys::workload::SparseIdGen;
+    let (tables, lookups, rows, dense_dim, bucket) = (24usize, 80usize, 10_000usize, 256usize, 128usize);
+    let s = bench("marshal rmc2-small b128 inputs", 2, 20, || {
+        let mut rng = Rng::seed_from_u64(42);
+        let mut idgen = SparseIdGen::production_like(rows, 42);
+        let mut dense = vec![0.0f32; bucket * dense_dim];
+        let mut ids = vec![0i32; tables * bucket * lookups];
+        for s in 0..bucket {
+            for j in 0..dense_dim {
+                dense[s * dense_dim + j] = (rng.gen_f64() - 0.5) as f32;
+            }
+            for t in 0..tables {
+                for l in 0..lookups {
+                    ids[(t * bucket + s) * lookups + l] = idgen.next_id() as i32;
+                }
+            }
+        }
+        std::hint::black_box((&dense, &ids));
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,71 @@
+//! Co-location study (paper §VI) on the modeled Intel servers: sweep the
+//! number of co-located RMC2 jobs on each architecture and print the
+//! latency / latency-bounded-throughput / MPKI trajectory — the data
+//! behind Figs 9-10 plus the hyperthreading ablation.
+//!
+//! Run: `cargo run --release --example colocation_study [model] [batch]`
+
+use recsys::config::{ServerGen, ServerSpec};
+use recsys::model::ModelGraph;
+use recsys::simulator::{ColocationSim, MachineSim};
+use recsys::workload::SparseIdGen;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().cloned().unwrap_or_else(|| "rmc2-small".into());
+    let batch: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let cfg = recsys::config::all_rmc()
+        .into_iter()
+        .find(|c| c.name == model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+
+    println!("== co-location study: {model}, batch {batch}, SLA 450 ms ==\n");
+    for gen in ServerGen::all() {
+        println!(
+            "{:<10} {:>4} {:>10} {:>10} {:>12} {:>9} {:>9} {:>8}",
+            gen.name(),
+            "N",
+            "mean ms",
+            "p99 ms",
+            "items/s",
+            "L2 MPKI",
+            "LLC MPKI",
+            "backinv"
+        );
+        let mut solo_ms = 0.0;
+        for n in [1usize, 2, 4, 8, 12, 16, 20, 24] {
+            let mut sim = ColocationSim::new(ServerSpec::by_gen(gen), &cfg, batch, n, 7);
+            let r = sim.run(2, 4);
+            let mut lat = r.latency_ms.clone();
+            if n == 1 {
+                solo_ms = lat.mean();
+            }
+            println!(
+                "{:<10} {:>4} {:>9.2}ms {:>9.2}ms {:>12.0} {:>9.1} {:>9.1} {:>8}",
+                "",
+                n,
+                lat.mean(),
+                lat.p99(),
+                r.throughput_ips() * batch as f64,
+                r.l2_mpki(),
+                r.llc_mpki(),
+                r.counters.l2_back_invalidations,
+            );
+        }
+        let mut sim8 = ColocationSim::new(ServerSpec::by_gen(gen), &cfg, batch, 8, 7);
+        let deg = sim8.run(2, 4).mean_ms() / solo_ms;
+        println!("  -> degradation at N=8: {deg:.2}x\n");
+    }
+
+    // Hyperthreading ablation (paper §VI: FC 1.6x, SLS 1.3x penalties).
+    println!("== hyperthreading ablation ({model}, batch {batch}, Broadwell) ==");
+    let graph = ModelGraph::from_rmc(&cfg);
+    for ht in [false, true] {
+        let mut sim = MachineSim::new(ServerSpec::broadwell(), 1).with_hyperthreading(ht);
+        let mut idgen = SparseIdGen::production_like(cfg.rows, 3);
+        sim.warmup(0, &graph, batch, &mut idgen, 3);
+        let b = sim.run_inference(0, &graph, batch, &mut idgen, 1);
+        println!("  HT={ht:<5}  {:.3} ms", b.ms());
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Data-center fleet demo: (1) the Fig 1/4 cycle accounting over the
+//! production service mix, and (2) a heterogeneous-fleet scheduling
+//! experiment — Broadwell + Skylake pools serving mixed small/large
+//! queries under three routing policies, with latencies supplied by the
+//! architectural simulator (SimBackend). This demonstrates the paper's
+//! closing insight: server heterogeneity is a scheduling opportunity.
+//!
+//! Run: `cargo run --release --example datacenter_fleet [config.json]`
+
+use std::sync::Arc;
+
+use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig, ServerSpec};
+use recsys::coordinator::{Coordinator, SimBackend};
+use recsys::fleet::FleetModel;
+use recsys::workload::{PoissonArrivals, Query};
+
+fn main() -> anyhow::Result<()> {
+    // ---- part 1: fleet cycle accounting (Figs 1, 4) -------------------
+    println!("== fleet cycle accounting (Broadwell reference) ==");
+    let acct = FleetModel::production_mix().account(&ServerSpec::broadwell());
+    for (name, class, share) in &acct.service_shares {
+        println!("  {:<10} {:<5} {:>5.0}%", name, class.name(), share * 100.0);
+    }
+    println!(
+        "  RMC1-3 = {:.0}% (paper 65%), rec total = {:.0}% (paper 79%), SLS = {:.1}% of all cycles",
+        acct.rmc_share() * 100.0,
+        acct.rec_share() * 100.0,
+        acct.sls_total_share * 100.0
+    );
+
+    // ---- part 2: heterogeneous-fleet routing ablation ------------------
+    let cfg_path = std::env::args().nth(1);
+    let base = match cfg_path {
+        Some(p) => DeploymentConfig::from_path(std::path::Path::new(&p))?,
+        None => DeploymentConfig {
+            sla_ms: 25.0,
+            batch_timeout_us: 300,
+            max_batch: 128,
+            routing: "heterogeneity".into(),
+            pools: vec![
+                ServerPoolConfig {
+                    gen: ServerGen::Broadwell,
+                    machines: 1,
+                    colocation: 1,
+                    models: vec![],
+                },
+                ServerPoolConfig {
+                    gen: ServerGen::Skylake,
+                    machines: 1,
+                    colocation: 1,
+                    models: vec![],
+                },
+            ],
+        },
+    };
+
+    println!("\n== routing-policy ablation on Broadwell+Skylake fleet ==");
+    println!("mixed load: 70% small (2 items) + 30% large (64 items) queries");
+    let backend = Arc::new(SimBackend::new(1.0));
+    // Warm the simulator latency cache.
+    for gen in [ServerGen::Broadwell, ServerGen::Skylake, ServerGen::Haswell] {
+        for b in [1usize, 8, 32, 128] {
+            let _ = backend.latency_ms("rmc1-small", b, gen);
+        }
+    }
+    println!(
+        "{:<16} {:>12} {:>10} {:>10} {:>8}",
+        "policy", "items/s", "p50 ms", "p99 ms", "viol%"
+    );
+    for policy in ["round-robin", "least-loaded", "heterogeneity"] {
+        let mut cfg = base.clone();
+        cfg.routing = policy.into();
+        let mut c = Coordinator::new(&cfg, backend.clone(), vec![1, 8, 32, 128])?;
+        let mut arr = PoissonArrivals::new(800.0, 9);
+        let queries: Vec<Query> = (0..1200u64)
+            .map(|i| {
+                let items = if i % 10 < 7 { 2 } else { 64 };
+                Query::new(i, "rmc1-small", items, arr.next_arrival_s())
+            })
+            .collect();
+        let r = c.run_open_loop(queries, cfg.sla_ms);
+        println!(
+            "{:<16} {:>12.0} {:>10.2} {:>10.2} {:>7.1}%",
+            policy,
+            r.bounded_throughput,
+            r.p50_ms,
+            r.p99_ms,
+            r.violation_rate * 100.0
+        );
+        c.shutdown();
+    }
+    println!("\nheterogeneity routing sends small batches to Broadwell (clock) and");
+    println!("large batches to Skylake (AVX-512) — the paper's Takeaway 3+4.");
+    println!("(On this 2-worker fleet it wins median latency by keeping small");
+    println!("queries off the AVX-512 box; its p99 concentrates large-batch");
+    println!("queueing on Skylake — the latency/throughput tension of §VI.)");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: load an AOT-compiled recommendation model and score a
+//! handful of user-post pairs through the PJRT runtime — the minimal
+//! "hello world" of the public API.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use recsys::runtime::{default_artifacts_dir, golden_dense, golden_ids, golden_lwts, ModelPool};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the artifact manifest and compile one executable.
+    let pool = ModelPool::new(&default_artifacts_dir())?;
+    let model = "rmc1-small";
+    let batch = 8;
+    let compiled = pool.get(model, "xla", batch)?;
+    println!("compiled {model} (batch {batch}) on PJRT CPU");
+
+    // 2. Build a request: dense features + sparse embedding lookups.
+    let spec = &compiled.spec;
+    let tables = spec.config_usize("num_tables")?;
+    let lookups = spec.config_usize("lookups")?;
+    let rows = spec.config_usize("rows")?;
+    let dense_dim = spec.config_usize("dense_dim")?;
+    let dense = golden_dense(batch, dense_dim);
+    let ids = golden_ids(tables, batch, lookups, rows);
+    let lwts = golden_lwts(tables, batch, lookups);
+
+    // 3. Execute: predicted click-through-rate per user-post pair.
+    let ctrs = compiled.run_rmc(&dense, &ids, &lwts)?;
+    println!("predicted CTRs:");
+    for (i, ctr) in ctrs.iter().enumerate() {
+        println!("  pair {i}: {ctr:.4}");
+    }
+
+    // 4. Rank: the serving stack returns pairs sorted by CTR.
+    let mut ranked: Vec<(usize, f32)> = ctrs.iter().copied().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("top-3 posts: {:?}", &ranked[..3.min(ranked.len())]);
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! End-to-end serving driver — the repo's E2E validation run
+//! (EXPERIMENTS.md §E2E): load the real AOT-compiled DLRM artifacts,
+//! serve open-loop Poisson traffic through the full coordinator stack
+//! (router → dynamic batcher → PJRT workers), and report the paper's
+//! headline metric, latency-bounded throughput, across an offered-load
+//! sweep.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_sla
+//!       [model] [sla_ms]`
+
+use std::sync::Arc;
+
+use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig};
+use recsys::coordinator::{Coordinator, PjrtBackend};
+use recsys::runtime::{default_artifacts_dir, ModelPool};
+use recsys::workload::{PoissonArrivals, Query};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().cloned().unwrap_or_else(|| "rmc1-small".into());
+    let sla_ms: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(10.0);
+    let items = 4usize;
+
+    println!("== serve_sla: {model}, SLA {sla_ms} ms, {items} items/query ==");
+    let pool = Arc::new(ModelPool::new(&default_artifacts_dir())?);
+    let n = pool.preload(&model, "xla")?;
+    println!("pre-compiled {n} batch buckets");
+    let buckets = pool.manifest.batches.clone();
+
+    println!(
+        "\n{:>8} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "qps", "items/s", "mean ms", "p50 ms", "p99 ms", "viol%"
+    );
+    for qps in [50.0, 100.0, 200.0, 400.0, 800.0, 1600.0] {
+        let cfg = DeploymentConfig {
+            sla_ms,
+            batch_timeout_us: 400,
+            max_batch: 128,
+            routing: "least-loaded".into(),
+            pools: vec![ServerPoolConfig {
+                gen: ServerGen::Broadwell,
+                machines: 2,
+                colocation: 1,
+                models: vec![],
+            }],
+        };
+        let backend = Arc::new(PjrtBackend::new(pool.clone()));
+        let mut coordinator = Coordinator::new(&cfg, backend, buckets.clone())?;
+        let mut arr = PoissonArrivals::new(qps, 42);
+        let queries: Vec<Query> = (0..(qps * 1.5).max(100.0) as usize)
+            .map(|i| Query::new(i as u64, model.clone(), items, arr.next_arrival_s()))
+            .collect();
+        let r = coordinator.run_open_loop(queries, sla_ms);
+        println!(
+            "{:>8.0} {:>10.0} {:>10.3} {:>10.3} {:>10.3} {:>7.1}%",
+            qps,
+            r.bounded_throughput,
+            r.mean_ms,
+            r.p50_ms,
+            r.p99_ms,
+            r.violation_rate * 100.0
+        );
+        coordinator.shutdown();
+    }
+    println!("\nbatch buckets fill as load rises — the paper's batching-for-throughput knob.");
+    Ok(())
+}

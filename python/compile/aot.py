@@ -1,0 +1,192 @@
+"""AOT pipeline: lower every (model, impl, batch) variant to HLO *text*
+plus a params blob and a manifest the rust runtime consumes.
+
+HLO text — NOT `lowered.compile().serialize()` — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that
+xla_extension 0.5.1 (behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts layout (all under --out-dir, default ../artifacts):
+  manifest.json                     index of everything below
+  <model>_<impl>_b<B>.hlo.txt       one executable per variant
+  <model>.params.bin                raw little-endian param blob (offsets
+                                    in manifest), shared across batches
+Golden CTR outputs (deterministic params + formula inputs) are embedded in
+the manifest for batches in GOLDEN_BATCHES so the rust integration tests
+can assert numerics end-to-end.
+
+Python runs ONLY here (build time); never on the request path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as dlrm
+from . import ncf as ncf_mod
+from . import presets
+
+GOLDEN_BATCHES = [1, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_params_bin(path, flat, spec):
+    """Raw little-endian concatenation; returns manifest param entries."""
+    entries = []
+    off = 0
+    with open(path, "wb") as f:
+        for arr, (name, shape, dtype) in zip(flat, spec):
+            raw = np.ascontiguousarray(arr)
+            if sys.byteorder != "little":  # pragma: no cover
+                raw = raw.byteswap()
+            data = raw.tobytes()
+            f.write(data)
+            entries.append(
+                {"name": name, "shape": shape, "dtype": dtype, "offset": off, "nbytes": len(data)}
+            )
+            off += len(data)
+    return entries
+
+
+def lower_variant(fwd, param_specs, input_specs):
+    args = [jax.ShapeDtypeStruct(tuple(s), np.dtype(d)) for (_, s, d) in param_specs]
+    args += [jax.ShapeDtypeStruct(tuple(s["shape"]), np.dtype(s["dtype"])) for s in input_specs]
+    return to_hlo_text(jax.jit(fwd).lower(*args))
+
+
+def build_rmc(out_dir, cfg: presets.RmcConfig, verbose=True):
+    flat, spec = dlrm.init_params(cfg, pjrt_scale=True)
+    params_bin = f"{cfg.name}.params.bin"
+    param_entries = write_params_bin(os.path.join(out_dir, params_bin), flat, spec)
+
+    variants = []
+    goldens = {b: dlrm.run_reference(cfg, b).tolist() for b in GOLDEN_BATCHES}
+    for impl in ("xla", "pallas"):
+        batches = presets.PJRT_BATCHES if impl == "xla" else presets.PALLAS_BATCHES
+        fwd = dlrm.make_forward(cfg, impl=impl)
+        for b in batches:
+            input_specs = [
+                {"name": "dense", "shape": [b, cfg.dense_dim], "dtype": "float32"},
+                {"name": "ids", "shape": [cfg.num_tables, b, cfg.lookups], "dtype": "int32"},
+                {"name": "lwts", "shape": [cfg.num_tables, b, cfg.lookups], "dtype": "float32"},
+            ]
+            hlo_name = f"{cfg.name}_{impl}_b{b}.hlo.txt"
+            if verbose:
+                print(f"  lowering {hlo_name} ...", flush=True)
+            text = lower_variant(fwd, spec, input_specs)
+            with open(os.path.join(out_dir, hlo_name), "w") as f:
+                f.write(text)
+            variants.append(
+                {
+                    "name": f"{cfg.name}_{impl}_b{b}",
+                    "model": cfg.name,
+                    "kind": "rmc",
+                    "impl": impl,
+                    "batch": b,
+                    "hlo": hlo_name,
+                    "params_bin": params_bin,
+                    "params": param_entries,
+                    "inputs": input_specs,
+                    "config": {
+                        "dense_dim": cfg.dense_dim,
+                        "bottom_mlp": cfg.bottom_mlp,
+                        "top_mlp": cfg.top_mlp,
+                        "num_tables": cfg.num_tables,
+                        "rows": cfg.pjrt_rows,
+                        "full_rows": cfg.rows,
+                        "emb_dim": cfg.emb_dim,
+                        "lookups": cfg.lookups,
+                    },
+                    "golden_ctr": goldens.get(b),
+                }
+            )
+    return variants
+
+
+def build_ncf(out_dir, cfg: presets.NcfConfig = presets.NCF, verbose=True):
+    flat, spec = ncf_mod.init_params(cfg, pjrt_scale=True)
+    params_bin = f"{cfg.name}.params.bin"
+    param_entries = write_params_bin(os.path.join(out_dir, params_bin), flat, spec)
+    fwd = ncf_mod.make_forward(cfg)
+    goldens = {b: ncf_mod.run_reference(cfg, b).tolist() for b in GOLDEN_BATCHES}
+    variants = []
+    for b in presets.PJRT_BATCHES:
+        input_specs = [
+            {"name": "user_ids", "shape": [b], "dtype": "int32"},
+            {"name": "item_ids", "shape": [b], "dtype": "int32"},
+        ]
+        hlo_name = f"{cfg.name}_xla_b{b}.hlo.txt"
+        if verbose:
+            print(f"  lowering {hlo_name} ...", flush=True)
+        text = lower_variant(fwd, spec, input_specs)
+        with open(os.path.join(out_dir, hlo_name), "w") as f:
+            f.write(text)
+        variants.append(
+            {
+                "name": f"{cfg.name}_xla_b{b}",
+                "model": cfg.name,
+                "kind": "ncf",
+                "impl": "xla",
+                "batch": b,
+                "hlo": hlo_name,
+                "params_bin": params_bin,
+                "params": param_entries,
+                "inputs": input_specs,
+                "config": {
+                    "users": cfg.pjrt_users,
+                    "items": cfg.pjrt_items,
+                    "mf_dim": cfg.mf_dim,
+                    "mlp_emb_dim": cfg.mlp_emb_dim,
+                    "mlp_layers": cfg.mlp_layers,
+                },
+                "golden_ctr": goldens.get(b),
+            }
+        )
+    return variants
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated model names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    variants = []
+    for cfg in presets.PJRT_VARIANTS:
+        if only and cfg.name not in only:
+            continue
+        print(f"[aot] building {cfg.name}", flush=True)
+        variants += build_rmc(args.out_dir, cfg)
+    if only is None or "ncf" in only:
+        print("[aot] building ncf", flush=True)
+        variants += build_ncf(args.out_dir)
+
+    manifest = {
+        "version": 1,
+        "golden_batches": GOLDEN_BATCHES,
+        "batches": presets.PJRT_BATCHES,
+        "variants": variants,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(variants)} variants to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

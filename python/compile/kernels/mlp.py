@@ -1,0 +1,71 @@
+"""Pallas tiled FC (+bias, +ReLU) kernel — the paper's compute-bound op.
+
+TPU mapping (DESIGN.md §4): tile (B, K) x (K, N) into MXU-shaped
+(block_b, K) x (K, block_n) VMEM blocks with a float32 accumulator; the
+full K reduction happens inside one grid step (K <= 2560 for every model
+in this repo, so an x-tile plus a w-tile fit VMEM comfortably — see
+EXPERIMENTS.md §Perf for the footprint table). block_n = 128 matches the
+MXU systolic width; batch only fills the other MXU dimension once
+block_b >= 128, which is exactly the paper's AVX-512 "needs batch >= 128"
+observation transposed to the TPU.
+
+interpret=True (Mosaic custom-calls cannot run on CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w_ref, b_ref, out_ref, *, relu):
+    acc = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _round_up(v, m):
+    return (v + m - 1) // m * m
+
+
+def mlp_layer(x, w, b, relu=True, *, block_b=128, block_n=128):
+    """One FC layer via Pallas. x: (B, K), w: (K, N), b: (N,) -> (B, N)."""
+    bsz, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+
+    block_b = min(block_b, _round_up(bsz, 8))
+    block_n = min(block_n, _round_up(n, 8))
+    bp, np_ = _round_up(bsz, block_b), _round_up(n, block_n)
+    if bp != bsz:
+        x = jnp.pad(x, ((0, bp - bsz), (0, 0)))
+    if np_ != n:
+        w = jnp.pad(w, ((0, 0), (0, np_ - n)))
+        b = jnp.pad(b, (0, np_ - n))
+
+    grid = (bp // block_b, np_ // block_n)
+    out = pl.pallas_call(
+        functools.partial(_mlp_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), x.dtype),
+        interpret=True,
+    )(x, w, b)
+    return out[:bsz, :n]
+
+
+def mlp_stack(x, layers, **kw):
+    """Apply a stack of (w, b, relu) tuples via the Pallas layer kernel."""
+    for w, b, relu in layers:
+        x = mlp_layer(x, w, b, relu, **kw)
+    return x

@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite compares the kernels against,
+and they are also the "xla" (fast) implementation variant used by the
+production artifacts (the Pallas variant exists to express the paper's
+hot-spot as an explicit kernel; see DESIGN.md §4).
+"""
+
+import jax.numpy as jnp
+
+
+def sls_ref(table, ids, weights=None):
+    """SparseLengthsWeightedSum oracle (paper Algorithm 1, fixed L).
+
+    table: (R, C) f32; ids: (B, L) int32; weights: (B, L) f32 or None.
+    Returns (B, C): per-sample weighted sum of gathered rows. Padding is
+    expressed as weight 0 (matching variable-length production inputs).
+    """
+    rows = table[ids]  # (B, L, C) gather
+    if weights is not None:
+        rows = rows * weights[..., None]
+    return rows.sum(axis=1)
+
+
+def mlp_layer_ref(x, w, b, relu=True):
+    """FC (+bias, +optional ReLU) oracle. x: (B, K), w: (K, N), b: (N,)."""
+    y = jnp.dot(x, w) + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def mlp_stack_ref(x, layers):
+    """Apply a stack of (w, b, relu) tuples."""
+    for w, b, relu in layers:
+        x = mlp_layer_ref(x, w, b, relu)
+    return x

@@ -1,0 +1,82 @@
+"""Pallas SparseLengthsWeightedSum kernel (paper Algorithm 1).
+
+The paper's signature memory-bound operator: for each sample, gather L
+rows of the embedding table and reduce them into one C-wide vector.
+
+TPU mapping (DESIGN.md §4 Hardware-Adaptation): the table lives in HBM
+(never blocked into VMEM — it is orders of magnitude too large), the
+per-sample ID/weight lists ride in with the grid block, and the kernel
+streams rows through a (block_b, C) VMEM accumulator; C ∈ {32, 64} is
+lane-aligned so the reduce is a plain VPU add. interpret=True is
+mandatory on this image: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sls_kernel(ids_ref, wts_ref, table_ref, out_ref, *, lookups):
+    """One grid step = `block_b` samples.
+
+    ids_ref: (block_b, L) i32, wts_ref: (block_b, L) f32 — in VMEM.
+    table_ref: (R, C) f32 — unblocked (HBM-resident on real hardware).
+    out_ref: (block_b, C) f32 accumulator tile.
+    """
+    block_b = out_ref.shape[0]
+    c = out_ref.shape[1]
+
+    def sample_body(s, acc):
+        def lookup_body(i, sacc):
+            idx = ids_ref[s, i]
+            w = wts_ref[s, i]
+            row = table_ref[pl.dslice(idx, 1), :]  # (1, C) dynamic gather
+            return sacc + w * row[0, :]
+
+        svec = jax.lax.fori_loop(
+            0, lookups, lookup_body, jnp.zeros((c,), table_ref.dtype)
+        )
+        return acc.at[s, :].set(svec)
+
+    acc = jax.lax.fori_loop(
+        0, block_b, sample_body, jnp.zeros((block_b, c), table_ref.dtype)
+    )
+    out_ref[...] = acc
+
+
+def sls(table, ids, weights=None, *, block_b=8):
+    """SparseLengthsWeightedSum via Pallas.
+
+    table: (R, C) f32; ids: (B, L) i32; weights: (B, L) f32 (None = ones).
+    Returns (B, C) f32. B is padded up to a multiple of block_b internally.
+    """
+    b, l = ids.shape
+    r, c = table.shape
+    if weights is None:
+        weights = jnp.ones((b, l), table.dtype)
+
+    block_b = min(block_b, b)
+    pad_b = (-b) % block_b
+    if pad_b:
+        # Padded samples gather row 0 with weight 0 — contributes nothing.
+        ids = jnp.pad(ids, ((0, pad_b), (0, 0)))
+        weights = jnp.pad(weights, ((0, pad_b), (0, 0)))
+    bp = b + pad_b
+
+    grid = (bp // block_b,)
+    out = pl.pallas_call(
+        functools.partial(_sls_kernel, lookups=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, l), lambda g: (g, 0)),
+            pl.BlockSpec((block_b, l), lambda g: (g, 0)),
+            pl.BlockSpec((r, c), lambda g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, c), table.dtype),
+        interpret=True,
+    )(ids, weights, table)
+    return out[:b]

@@ -1,0 +1,128 @@
+"""L2: DLRM forward pass (paper Fig 3) in JAX, calling the L1 kernels.
+
+Two interchangeable implementations of the hot operators:
+  impl="pallas" — the explicit Pallas kernels (kernels/sls.py, mlp.py);
+  impl="xla"    — the pure-jnp oracles (kernels/ref.py), which XLA fuses
+                  natively and which the production serving path uses.
+Both lower to the same I/O signature so the rust runtime can cross-check
+them executable-against-executable.
+
+Parameter layout (flattened, deterministic order — mirrored by the rust
+manifest loader):
+  bottom w/b per layer, top w/b per layer, then one embedding table per
+  sparse feature. Runtime inputs: dense (B, Dd) f32, ids (T, B, L) i32,
+  lwts (T, B, L) f32 (lookup weights; 0 = padding).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import presets
+from .kernels import mlp as pallas_mlp
+from .kernels import ref
+from .kernels import sls as pallas_sls
+
+
+def init_params(cfg: presets.RmcConfig, seed: int = 0, pjrt_scale: bool = True):
+    """Deterministic He-ish init. Returns (flat list of np arrays, spec list).
+
+    spec entries: (name, shape, dtype_str).
+    """
+    rng = np.random.default_rng(seed)
+    rows = cfg.pjrt_rows if pjrt_scale else cfg.rows
+    flat, spec = [], []
+
+    def add(name, arr):
+        flat.append(arr)
+        spec.append((name, list(arr.shape), str(arr.dtype)))
+
+    def dense_stack(prefix, dims):
+        for i in range(len(dims) - 1):
+            fan_in, fan_out = dims[i], dims[i + 1]
+            w = (rng.standard_normal((fan_in, fan_out)) * np.sqrt(2.0 / fan_in)).astype(
+                np.float32
+            )
+            b = np.zeros((fan_out,), np.float32)
+            add(f"{prefix}.w{i}", w)
+            add(f"{prefix}.b{i}", b)
+
+    # Bottom MLP: dense_dim -> bottom_mlp widths.
+    dense_stack("bottom", [cfg.dense_dim] + cfg.bottom_mlp)
+    # Top MLP: top_input -> hidden widths -> 1 (CTR logit).
+    dense_stack("top", [cfg.top_input_dim] + cfg.top_mlp + [1])
+    for t in range(cfg.num_tables):
+        tbl = (rng.standard_normal((rows, cfg.emb_dim)) / np.sqrt(cfg.emb_dim)).astype(
+            np.float32
+        )
+        add(f"table{t}", tbl)
+    return flat, spec
+
+
+def _unflatten(cfg: presets.RmcConfig, flat):
+    """Invert init_params' flattening into (bottom, top, tables)."""
+    i = 0
+    bottom = []
+    for _ in range(len(cfg.bottom_mlp)):
+        bottom.append((flat[i], flat[i + 1]))
+        i += 2
+    top = []
+    for _ in range(len(cfg.top_mlp) + 1):
+        top.append((flat[i], flat[i + 1]))
+        i += 2
+    tables = list(flat[i : i + cfg.num_tables])
+    assert i + cfg.num_tables == len(flat)
+    return bottom, top, tables
+
+
+def num_params(cfg: presets.RmcConfig) -> int:
+    flat, _ = init_params(cfg, pjrt_scale=True)
+    return sum(int(np.prod(p.shape)) for p in flat)
+
+
+def make_forward(cfg: presets.RmcConfig, impl: str = "xla"):
+    """Build fwd(*params, dense, ids, lwts) -> (ctr,) for jax.jit/lowering."""
+    assert impl in ("xla", "pallas")
+    if impl == "pallas":
+        mlp_stack = pallas_mlp.mlp_stack
+        sls = pallas_sls.sls
+    else:
+        mlp_stack = ref.mlp_stack_ref
+        sls = ref.sls_ref
+
+    n_flat = 2 * (len(cfg.bottom_mlp) + len(cfg.top_mlp) + 1) + cfg.num_tables
+
+    def fwd(*args):
+        flat, dense, ids, lwts = args[:n_flat], args[n_flat], args[n_flat + 1], args[n_flat + 2]
+        bottom, top, tables = _unflatten(cfg, list(flat))
+
+        x = mlp_stack(dense, [(w, b, True) for w, b in bottom])
+        embs = [sls(tables[t], ids[t], lwts[t]) for t in range(cfg.num_tables)]
+        # Paper Fig 3: concat dense-tower output with per-table embeddings.
+        z = jnp.concatenate([x] + embs, axis=1)
+        hidden = [(w, b, True) for w, b in top[:-1]]
+        z = mlp_stack(z, hidden)
+        w_out, b_out = top[-1]
+        logit = jnp.dot(z, w_out) + b_out  # (B, 1)
+        ctr = jnp.squeeze(1.0 / (1.0 + jnp.exp(-logit)), axis=1)
+        return (ctr,)
+
+    fwd.n_flat = n_flat
+    return fwd
+
+
+def example_inputs(cfg: presets.RmcConfig, batch: int, pjrt_scale: bool = True):
+    """Formula-based deterministic inputs (mirrored in rust runtime::golden)."""
+    rows = cfg.pjrt_rows if pjrt_scale else cfg.rows
+    dense = presets.deterministic_dense(batch, cfg.dense_dim)
+    ids = presets.deterministic_ids(cfg.num_tables, batch, cfg.lookups, rows)
+    lwts = np.ones((cfg.num_tables, batch, cfg.lookups), np.float32)
+    return dense, ids, lwts
+
+
+def run_reference(cfg: presets.RmcConfig, batch: int, seed: int = 0):
+    """Golden CTR outputs for (cfg, batch) with deterministic params+inputs."""
+    flat, _ = init_params(cfg, seed=seed, pjrt_scale=True)
+    dense, ids, lwts = example_inputs(cfg, batch)
+    fwd = make_forward(cfg, impl="xla")
+    (ctr,) = fwd(*[jnp.asarray(p) for p in flat], jnp.asarray(dense), jnp.asarray(ids), jnp.asarray(lwts))
+    return np.asarray(ctr)

@@ -1,0 +1,74 @@
+"""MLPerf-NCF-like baseline model (He et al. 2017) for Fig 12.
+
+NeuMF = GMF (element-wise product of MF embeddings) + MLP tower over
+concatenated MLP embeddings, fused by a final FC. Tiny embedding tables
+and FC layers compared to the RMC models — that gap IS Fig 12.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import presets
+
+
+def init_params(cfg: presets.NcfConfig = presets.NCF, seed: int = 1, pjrt_scale=True):
+    rng = np.random.default_rng(seed)
+    users = cfg.pjrt_users if pjrt_scale else cfg.num_users
+    items = cfg.pjrt_items if pjrt_scale else cfg.num_items
+    flat, spec = [], []
+
+    def add(name, arr):
+        flat.append(arr.astype(np.float32))
+        spec.append((name, list(arr.shape), "float32"))
+
+    add("mf_user", rng.standard_normal((users, cfg.mf_dim)) * 0.01)
+    add("mf_item", rng.standard_normal((items, cfg.mf_dim)) * 0.01)
+    add("mlp_user", rng.standard_normal((users, cfg.mlp_emb_dim)) * 0.01)
+    add("mlp_item", rng.standard_normal((items, cfg.mlp_emb_dim)) * 0.01)
+    dims = [2 * cfg.mlp_emb_dim] + cfg.mlp_layers
+    for i in range(len(dims) - 1):
+        add(f"mlp.w{i}", rng.standard_normal((dims[i], dims[i + 1])) * np.sqrt(2.0 / dims[i]))
+        add(f"mlp.b{i}", np.zeros((dims[i + 1],)))
+    add("out.w", rng.standard_normal((cfg.mf_dim + cfg.mlp_layers[-1], 1)) * 0.1)
+    add("out.b", np.zeros((1,)))
+    return flat, spec
+
+
+def make_forward(cfg: presets.NcfConfig = presets.NCF):
+    n_mlp = len(cfg.mlp_layers)
+    n_flat = 4 + 2 * n_mlp + 2
+
+    def fwd(*args):
+        flat = list(args[:n_flat])
+        user_ids, item_ids = args[n_flat], args[n_flat + 1]  # (B,) i32 each
+        mf_u, mf_i, mlp_u, mlp_i = flat[:4]
+        mlp_params = flat[4 : 4 + 2 * n_mlp]
+        w_out, b_out = flat[-2], flat[-1]
+
+        gmf = mf_u[user_ids] * mf_i[item_ids]  # (B, mf_dim)
+        x = jnp.concatenate([mlp_u[user_ids], mlp_i[item_ids]], axis=1)
+        for i in range(n_mlp):
+            x = jnp.maximum(jnp.dot(x, mlp_params[2 * i]) + mlp_params[2 * i + 1], 0.0)
+        z = jnp.concatenate([gmf, x], axis=1)
+        logit = jnp.dot(z, w_out) + b_out
+        score = jnp.squeeze(1.0 / (1.0 + jnp.exp(-logit)), axis=1)
+        return (score,)
+
+    fwd.n_flat = n_flat
+    return fwd
+
+
+def example_inputs(cfg: presets.NcfConfig, batch: int, pjrt_scale=True):
+    users = cfg.pjrt_users if pjrt_scale else cfg.num_users
+    items = cfg.pjrt_items if pjrt_scale else cfg.num_items
+    b = np.arange(batch, dtype=np.int64)
+    user_ids = ((b * 104729 + 13) % users).astype(np.int32)
+    item_ids = ((b * 1299721 + 7) % items).astype(np.int32)
+    return user_ids, item_ids
+
+
+def run_reference(cfg: presets.NcfConfig, batch: int):
+    flat, _ = init_params(cfg)
+    u, i = example_inputs(cfg, batch)
+    (score,) = make_forward(cfg)(*[jnp.asarray(p) for p in flat], jnp.asarray(u), jnp.asarray(i))
+    return np.asarray(score)

@@ -1,0 +1,153 @@
+"""Concrete de-normalized model parameterizations (DESIGN.md §5).
+
+These mirror `rust/src/config/presets.rs`. The *simulator* (rust) uses the
+full-scale `rows` numbers; the PJRT numeric path uses `pjrt_rows` so the
+artifacts stay laptop-sized. Keep the two files in sync — rust unit tests
+assert the manifest matches its own presets.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class RmcConfig:
+    """One recommendation-model variant (Table I, de-normalized)."""
+
+    name: str
+    dense_dim: int
+    bottom_mlp: List[int]  # layer widths, last = bottom output dim
+    top_mlp: List[int]  # hidden widths; final scalar CTR layer appended
+    num_tables: int
+    rows: int  # full-scale rows/table (simulator path)
+    pjrt_rows: int  # scaled-down rows/table (PJRT numeric path)
+    emb_dim: int
+    lookups: int  # sparse IDs per table per sample (fixed; pad w/ weight 0)
+
+    @property
+    def top_input_dim(self) -> int:
+        return self.bottom_mlp[-1] + self.num_tables * self.emb_dim
+
+
+# Anchor: paper §VII example RMC1 + §III.B aggregate footprints + Table I
+# ratios. U = 32.
+RMC1_SMALL = RmcConfig(
+    name="rmc1-small",
+    dense_dim=256,
+    bottom_mlp=[256, 128, 32],
+    top_mlp=[128, 64],
+    num_tables=4,
+    rows=200_000,
+    pjrt_rows=10_000,
+    emb_dim=32,
+    lookups=80,
+)
+
+RMC1_LARGE = RmcConfig(
+    name="rmc1-large",
+    dense_dim=256,
+    bottom_mlp=[256, 128, 32],
+    top_mlp=[128, 64],
+    num_tables=6,
+    rows=200_000,
+    pjrt_rows=10_000,
+    emb_dim=32,
+    lookups=80,
+)
+
+RMC2_SMALL = RmcConfig(
+    name="rmc2-small",
+    dense_dim=256,
+    bottom_mlp=[256, 128, 32],
+    top_mlp=[128, 64],
+    num_tables=24,
+    rows=2_600_000,
+    pjrt_rows=10_000,
+    emb_dim=32,
+    lookups=80,
+)
+
+RMC2_LARGE = RmcConfig(
+    name="rmc2-large",
+    dense_dim=256,
+    bottom_mlp=[256, 128, 32],
+    top_mlp=[128, 64],
+    num_tables=32,
+    rows=2_600_000,
+    pjrt_rows=10_000,
+    emb_dim=32,
+    lookups=80,
+)
+
+RMC3_SMALL = RmcConfig(
+    name="rmc3-small",
+    dense_dim=2560,
+    bottom_mlp=[2560, 256, 128],
+    top_mlp=[128, 64],
+    num_tables=2,
+    rows=2_600_000,
+    pjrt_rows=20_000,
+    emb_dim=32,
+    lookups=20,
+)
+
+RMC3_LARGE = RmcConfig(
+    name="rmc3-large",
+    dense_dim=2560,
+    bottom_mlp=[2560, 256, 128],
+    top_mlp=[128, 64],
+    num_tables=3,
+    rows=2_600_000,
+    pjrt_rows=20_000,
+    emb_dim=32,
+    lookups=20,
+)
+
+ALL_RMC = [RMC1_SMALL, RMC1_LARGE, RMC2_SMALL, RMC2_LARGE, RMC3_SMALL, RMC3_LARGE]
+
+# Variants AOT-compiled for the PJRT numeric path. Small variants only —
+# the large ones differ only in table count and are simulator-side.
+PJRT_VARIANTS = [RMC1_SMALL, RMC2_SMALL, RMC3_SMALL]
+# Bucketed batch sizes the dynamic batcher rounds up to (one executable
+# each). Keep in sync with rust coordinator::batcher.
+PJRT_BATCHES = [1, 8, 32, 128]
+# Pallas-kernel implementation is also AOT'd at these batches for
+# cross-checking vs the XLA-native implementation on the rust side.
+PALLAS_BATCHES = [1, 32]
+
+
+@dataclass(frozen=True)
+class NcfConfig:
+    """MLPerf-NCF-like baseline (Fig 12): MF + MLP towers on ML-20m scale."""
+
+    name: str = "ncf"
+    num_users: int = 138_493  # MovieLens-20m
+    num_items: int = 26_744
+    pjrt_users: int = 10_000
+    pjrt_items: int = 5_000
+    mf_dim: int = 8
+    mlp_emb_dim: int = 32
+    mlp_layers: List[int] = field(default_factory=lambda: [64, 32, 16, 8])
+
+
+NCF = NcfConfig()
+
+
+def deterministic_dense(batch: int, dim: int):
+    """Formula-based deterministic dense inputs, mirrored in rust
+    (`runtime::golden`): dense[b, j] = ((b*131 + j*31) % 97) / 97 - 0.5."""
+    import numpy as np
+
+    b = np.arange(batch, dtype=np.int64)[:, None]
+    j = np.arange(dim, dtype=np.int64)[None, :]
+    return (((b * 131 + j * 31) % 97).astype(np.float32) / 97.0) - 0.5
+
+
+def deterministic_ids(num_tables: int, batch: int, lookups: int, rows: int):
+    """ids[t,b,l] = (t*7919 + b*104729 + l*1299721) % rows (mirrored in rust)."""
+    import numpy as np
+
+    t = np.arange(num_tables, dtype=np.int64)[:, None, None]
+    b = np.arange(batch, dtype=np.int64)[None, :, None]
+    l = np.arange(lookups, dtype=np.int64)[None, None, :]
+    return ((t * 7919 + b * 104729 + l * 1299721) % rows).astype(np.int32)

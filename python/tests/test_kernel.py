@@ -1,0 +1,125 @@
+"""Kernel-vs-oracle correctness — the CORE L1 signal.
+
+hypothesis sweeps shapes/dtypes of the Pallas kernels and asserts
+allclose against the pure-jnp oracles in kernels/ref.py.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mlp import mlp_layer, mlp_stack
+from compile.kernels.ref import mlp_layer_ref, mlp_stack_ref, sls_ref
+from compile.kernels.sls import sls
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- SLS ----
+@settings(max_examples=30, deadline=None)
+@given(
+    batch=st.integers(1, 17),
+    lookups=st.integers(1, 24),
+    rows=st.integers(1, 300),
+    cols=st.sampled_from([1, 8, 32, 64]),
+    block_b=st.sampled_from([1, 4, 8]),
+    weighted=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_sls_matches_ref(batch, lookups, rows, cols, block_b, weighted, seed):
+    rng = _rng(seed)
+    table = jnp.asarray(rng.standard_normal((rows, cols)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, rows, size=(batch, lookups)).astype(np.int32))
+    wts = (
+        jnp.asarray(rng.standard_normal((batch, lookups)).astype(np.float32))
+        if weighted
+        else None
+    )
+    out = sls(table, ids, wts, block_b=block_b)
+    ref = sls_ref(table, ids, wts)
+    np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+
+def test_sls_zero_weights_are_padding():
+    """Weight-0 lookups must contribute nothing (the padding contract)."""
+    rng = _rng(0)
+    table = jnp.asarray(rng.standard_normal((50, 32)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 50, size=(4, 10)).astype(np.int32))
+    wts = np.ones((4, 10), np.float32)
+    wts[:, 6:] = 0.0  # pad the tail
+    out_padded = sls(table, ids, jnp.asarray(wts))
+    out_short = sls_ref(table, ids[:, :6], None)
+    np.testing.assert_allclose(out_padded, out_short, rtol=RTOL, atol=ATOL)
+
+
+def test_sls_duplicate_ids_accumulate():
+    """Algorithm 1 sums every occurrence; duplicates count twice."""
+    table = jnp.asarray(np.eye(4, dtype=np.float32))
+    ids = jnp.asarray(np.array([[2, 2, 1]], dtype=np.int32))
+    out = np.asarray(sls(table, ids))
+    np.testing.assert_allclose(out[0], [0, 1, 2, 0], rtol=RTOL, atol=ATOL)
+
+
+def test_sls_batch_not_multiple_of_block():
+    rng = _rng(3)
+    table = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 64, size=(5, 7)).astype(np.int32))
+    np.testing.assert_allclose(
+        sls(table, ids, block_b=4), sls_ref(table, ids), rtol=RTOL, atol=ATOL
+    )
+
+
+# ---------------------------------------------------------------- MLP ----
+@settings(max_examples=30, deadline=None)
+@given(
+    batch=st.integers(1, 40),
+    k=st.integers(1, 96),
+    n=st.integers(1, 160),
+    relu=st.booleans(),
+    block_b=st.sampled_from([8, 32, 128]),
+    block_n=st.sampled_from([8, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_mlp_layer_matches_ref(batch, k, n, relu, block_b, block_n, seed):
+    rng = _rng(seed)
+    x = jnp.asarray(rng.standard_normal((batch, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.standard_normal((n,)).astype(np.float32))
+    out = mlp_layer(x, w, b, relu, block_b=block_b, block_n=block_n)
+    ref = mlp_layer_ref(x, w, b, relu)
+    np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+
+def test_mlp_stack_matches_ref():
+    rng = _rng(7)
+    dims = [48, 96, 33, 1]
+    x = jnp.asarray(rng.standard_normal((10, dims[0])).astype(np.float32))
+    layers = []
+    for i in range(len(dims) - 1):
+        w = jnp.asarray(rng.standard_normal((dims[i], dims[i + 1])).astype(np.float32) * 0.2)
+        b = jnp.asarray(rng.standard_normal((dims[i + 1],)).astype(np.float32))
+        layers.append((w, b, i < len(dims) - 2))
+    np.testing.assert_allclose(
+        mlp_stack(x, layers), mlp_stack_ref(x, layers), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_mlp_relu_clamps_negative():
+    x = jnp.asarray(np.array([[-1.0, 2.0]], np.float32))
+    w = jnp.asarray(np.eye(2, dtype=np.float32))
+    b = jnp.asarray(np.zeros(2, np.float32))
+    out = np.asarray(mlp_layer(x, w, b, relu=True))
+    np.testing.assert_allclose(out, [[0.0, 2.0]])
+
+
+def test_mlp_inner_dim_mismatch_raises():
+    x = jnp.zeros((2, 3), jnp.float32)
+    w = jnp.zeros((4, 5), jnp.float32)
+    b = jnp.zeros((5,), jnp.float32)
+    with pytest.raises(AssertionError):
+        mlp_layer(x, w, b)

@@ -1,0 +1,136 @@
+"""L2 model tests: shapes, impl-equivalence (pallas vs xla), determinism,
+and NCF baseline sanity."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import model as dlrm
+from compile import ncf as ncf_mod
+from compile import presets
+
+
+def tiny_cfg(num_tables=2, lookups=5):
+    return presets.RmcConfig(
+        name="tiny",
+        dense_dim=16,
+        bottom_mlp=[16, 8],
+        top_mlp=[12],
+        num_tables=num_tables,
+        rows=64,
+        pjrt_rows=64,
+        emb_dim=4,
+        lookups=lookups,
+    )
+
+
+def _run(cfg, batch, impl):
+    flat, _ = dlrm.init_params(cfg, pjrt_scale=True)
+    dense, ids, lwts = dlrm.example_inputs(cfg, batch)
+    fwd = dlrm.make_forward(cfg, impl=impl)
+    (ctr,) = fwd(
+        *[jnp.asarray(p) for p in flat],
+        jnp.asarray(dense),
+        jnp.asarray(ids),
+        jnp.asarray(lwts),
+    )
+    return np.asarray(ctr)
+
+
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_forward_shapes_and_range(batch):
+    ctr = _run(tiny_cfg(), batch, "xla")
+    assert ctr.shape == (batch,)
+    assert np.all((ctr > 0.0) & (ctr < 1.0)), "sigmoid CTR must be in (0,1)"
+
+
+@pytest.mark.parametrize("batch", [1, 4])
+def test_pallas_impl_matches_xla_impl(batch):
+    """The two AOT'd implementations must agree numerically."""
+    cfg = tiny_cfg(num_tables=3, lookups=7)
+    np.testing.assert_allclose(
+        _run(cfg, batch, "pallas"), _run(cfg, batch, "xla"), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_params_flattening_roundtrip():
+    cfg = tiny_cfg()
+    flat, spec = dlrm.init_params(cfg)
+    fwd = dlrm.make_forward(cfg)
+    assert len(flat) == len(spec) == fwd.n_flat
+    # bottom: 2 layers * 2, top: (1 hidden + out) * 2, tables: 2
+    assert fwd.n_flat == 2 * 2 + 2 * 2 + 2
+    names = [s[0] for s in spec]
+    assert names[0] == "bottom.w0" and names[-1] == "table1"
+
+
+def test_init_params_deterministic():
+    cfg = tiny_cfg()
+    a, _ = dlrm.init_params(cfg, seed=0)
+    b, _ = dlrm.init_params(cfg, seed=0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c, _ = dlrm.init_params(cfg, seed=1)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_example_inputs_formula():
+    """Spot-check the formula the rust side mirrors (runtime::golden)."""
+    dense = presets.deterministic_dense(2, 3)
+    assert dense[0, 0] == pytest.approx((0 % 97) / 97.0 - 0.5)
+    assert dense[1, 2] == pytest.approx(((131 + 62) % 97) / 97.0 - 0.5)
+    ids = presets.deterministic_ids(2, 2, 2, 1000)
+    assert ids[1, 1, 1] == (7919 + 104729 + 1299721) % 1000
+
+
+def test_run_reference_golden_stability():
+    """Golden outputs must not drift across calls (manifest contract)."""
+    cfg = tiny_cfg()
+    np.testing.assert_array_equal(
+        dlrm.run_reference(cfg, 4), dlrm.run_reference(cfg, 4)
+    )
+
+
+def test_top_input_dim():
+    cfg = tiny_cfg(num_tables=5)
+    assert cfg.top_input_dim == 8 + 5 * 4
+
+
+@pytest.mark.parametrize("preset", presets.ALL_RMC, ids=lambda c: c.name)
+def test_presets_are_well_formed(preset):
+    assert preset.bottom_mlp[0] == preset.dense_dim
+    assert preset.emb_dim in (24, 32, 40), "paper: output dim 24-40"
+    assert preset.pjrt_rows <= preset.rows
+    assert preset.lookups in (20, 80)
+
+
+def test_preset_footprints_match_paper():
+    """§III.B: aggregate emb storage ~100MB / ~10GB / ~1GB (fp32)."""
+    def agg_gb(cfg):
+        return cfg.num_tables * cfg.rows * cfg.emb_dim * 4 / 1e9
+
+    assert 0.05 < agg_gb(presets.RMC1_SMALL) < 0.2
+    assert 5.0 < agg_gb(presets.RMC2_LARGE) < 15.0
+    assert 0.5 < agg_gb(presets.RMC3_LARGE) < 1.5
+
+
+# ------------------------------------------------------------- NCF -------
+def test_ncf_forward():
+    score = ncf_mod.run_reference(presets.NCF, 6)
+    assert score.shape == (6,)
+    assert np.all((score > 0) & (score < 1))
+
+
+def test_ncf_is_orders_of_magnitude_smaller():
+    """Fig 12 precondition: NCF embedding bytes << RMC2 embedding bytes."""
+    ncf_bytes = (
+        presets.NCF.num_users * (presets.NCF.mf_dim + presets.NCF.mlp_emb_dim)
+        + presets.NCF.num_items * (presets.NCF.mf_dim + presets.NCF.mlp_emb_dim)
+    ) * 4
+    rmc2_bytes = (
+        presets.RMC2_SMALL.num_tables
+        * presets.RMC2_SMALL.rows
+        * presets.RMC2_SMALL.emb_dim
+        * 4
+    )
+    assert rmc2_bytes > 100 * ncf_bytes

@@ -1,0 +1,167 @@
+//! JSON-loadable deployment configuration for the serving coordinator —
+//! the config system a downstream user drives the launcher with.
+//! (JSON rather than TOML: the offline registry has no toml crate; see
+//! Cargo.toml note.)
+//!
+//! Example (`examples/configs/fleet.json` ships one):
+//! ```json
+//! {
+//!   "sla_ms": 10.0,
+//!   "batch_timeout_us": 500,
+//!   "pools": [
+//!     {"gen": "Skylake", "machines": 2, "colocation": 4,
+//!      "models": ["rmc1-small", "rmc2-small"]}
+//!   ]
+//! }
+//! ```
+
+use crate::util::Json;
+
+use super::server_spec::ServerGen;
+
+/// One homogeneous pool of servers in the deployment.
+#[derive(Debug, Clone)]
+pub struct ServerPoolConfig {
+    pub gen: ServerGen,
+    /// Number of machines in the pool.
+    pub machines: usize,
+    /// Co-located inference workers per machine (paper §VI).
+    pub colocation: usize,
+    /// Model names this pool serves (empty = all).
+    pub models: Vec<String>,
+}
+
+/// Whole-deployment config consumed by `recsys serve` and the examples.
+#[derive(Debug, Clone)]
+pub struct DeploymentConfig {
+    /// Service-level agreement: per-query latency bound, ms.
+    pub sla_ms: f64,
+    /// Dynamic-batcher flush timeout, microseconds.
+    pub batch_timeout_us: u64,
+    /// Maximum batch bucket (must be one of the AOT'd batch sizes).
+    pub max_batch: usize,
+    /// Routing policy: "round-robin" | "least-loaded" | "heterogeneity".
+    pub routing: String,
+    pub pools: Vec<ServerPoolConfig>,
+}
+
+fn parse_gen(s: &str) -> crate::Result<ServerGen> {
+    match s {
+        "Haswell" | "haswell" => Ok(ServerGen::Haswell),
+        "Broadwell" | "broadwell" => Ok(ServerGen::Broadwell),
+        "Skylake" | "skylake" => Ok(ServerGen::Skylake),
+        other => anyhow::bail!("unknown server gen '{other}'"),
+    }
+}
+
+impl DeploymentConfig {
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let sla_ms = v
+            .field("sla_ms")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("sla_ms must be a number"))?;
+        let batch_timeout_us =
+            v.get("batch_timeout_us").and_then(Json::as_f64).unwrap_or(500.0) as u64;
+        let max_batch = v.get("max_batch").and_then(Json::as_usize).unwrap_or(128);
+        let routing = v
+            .get("routing")
+            .and_then(Json::as_str)
+            .unwrap_or("heterogeneity")
+            .to_string();
+        let mut pools = Vec::new();
+        for p in v
+            .field("pools")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("pools must be an array"))?
+        {
+            let gen = parse_gen(
+                p.field("gen")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("gen must be a string"))?,
+            )?;
+            let machines = p
+                .field("machines")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("machines must be a number"))?;
+            let colocation = p.get("colocation").and_then(Json::as_usize).unwrap_or(1);
+            let models = p
+                .get("models")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default();
+            pools.push(ServerPoolConfig { gen, machines, colocation, models });
+        }
+        if pools.is_empty() {
+            anyhow::bail!("deployment needs at least one pool");
+        }
+        Ok(DeploymentConfig { sla_ms, batch_timeout_us, max_batch, routing, pools })
+    }
+
+    pub fn from_path(path: &std::path::Path) -> crate::Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// A single-Broadwell-box default for the quickstart example.
+    pub fn single_node() -> Self {
+        DeploymentConfig {
+            sla_ms: 10.0,
+            batch_timeout_us: 500,
+            max_batch: 128,
+            routing: "round-robin".into(),
+            pools: vec![ServerPoolConfig {
+                gen: ServerGen::Broadwell,
+                machines: 1,
+                colocation: 1,
+                models: vec![],
+            }],
+        }
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.pools.iter().map(|p| p.machines * p.colocation).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_json_with_defaults() {
+        let text = r#"{
+            "sla_ms": 12.5,
+            "pools": [
+                {"gen": "Skylake", "machines": 2, "colocation": 4,
+                 "models": ["rmc2-small"]},
+                {"gen": "Broadwell", "machines": 1}
+            ]
+        }"#;
+        let cfg = DeploymentConfig::from_json(text).unwrap();
+        assert_eq!(cfg.sla_ms, 12.5);
+        assert_eq!(cfg.batch_timeout_us, 500); // default
+        assert_eq!(cfg.pools.len(), 2);
+        assert_eq!(cfg.pools[0].colocation, 4);
+        assert_eq!(cfg.pools[1].colocation, 1); // default
+        assert_eq!(cfg.total_workers(), 9);
+        assert_eq!(cfg.routing, "heterogeneity");
+    }
+
+    #[test]
+    fn bad_gen_rejected() {
+        assert!(DeploymentConfig::from_json(
+            r#"{"sla_ms": 1.0, "pools": [{"gen": "Epyc", "machines": 1}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn empty_pools_rejected() {
+        assert!(DeploymentConfig::from_json(r#"{"sla_ms": 1.0, "pools": []}"#).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Configuration layer: model architectures (paper Table I, de-normalized
+//! per DESIGN.md §5), server specifications (paper Table II), and the
+//! JSON-loadable deployment config consumed by the CLI / coordinator.
+
+mod deployment;
+mod model_config;
+pub mod presets;
+mod server_spec;
+
+pub use deployment::{DeploymentConfig, ServerPoolConfig};
+pub use model_config::{ModelClass, NcfConfig, RmcConfig};
+pub use presets::{
+    all_rmc, ncf, rmc1_large, rmc1_small, rmc2_large, rmc2_small, rmc3_large, rmc3_small,
+    PJRT_BATCHES,
+};
+pub use server_spec::{CacheInclusion, DdrType, ServerGen, ServerSpec, SimdIsa};

@@ -1,0 +1,192 @@
+//! Model architecture configuration — paper Table I de-normalized to the
+//! concrete parameterization in DESIGN.md §5. Mirrors
+//! `python/compile/presets.py`; a runtime test cross-checks the AOT
+//! manifest against these values.
+
+
+/// Model class taxonomy used by the fleet accounting (Figs 1, 4) and by
+/// the figure harnesses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelClass {
+    /// Small FC, few small embedding tables (filtering step).
+    Rmc1,
+    /// Small FC, many embedding tables (memory-intensive ranking).
+    Rmc2,
+    /// Large FC, few large embedding tables (compute-intensive ranking).
+    Rmc3,
+    /// MLPerf-NCF-like open-source baseline (Fig 12).
+    Ncf,
+    /// Reference CNN (ResNet50-class conv layers) for Figs 2/4/5.
+    Cnn,
+    /// Reference RNN (LSTM-class) for Figs 2/4/5.
+    Rnn,
+}
+
+impl ModelClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelClass::Rmc1 => "RMC1",
+            ModelClass::Rmc2 => "RMC2",
+            ModelClass::Rmc3 => "RMC3",
+            ModelClass::Ncf => "NCF",
+            ModelClass::Cnn => "CNN",
+            ModelClass::Rnn => "RNN",
+        }
+    }
+
+    pub fn is_recommendation(self) -> bool {
+        matches!(
+            self,
+            ModelClass::Rmc1 | ModelClass::Rmc2 | ModelClass::Rmc3 | ModelClass::Ncf
+        )
+    }
+}
+
+/// One recommendation-model variant (Table I de-normalized).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RmcConfig {
+    pub name: String,
+    pub class: ModelClass,
+    /// Dense (continuous) feature input dimension.
+    pub dense_dim: usize,
+    /// Bottom-MLP layer widths (first consumes `dense_dim`).
+    pub bottom_mlp: Vec<usize>,
+    /// Top-MLP hidden widths (a final width-1 CTR layer is implied).
+    pub top_mlp: Vec<usize>,
+    pub num_tables: usize,
+    /// Full-scale rows per embedding table (simulator path).
+    pub rows: usize,
+    /// Scaled-down rows per table used by the AOT/PJRT numeric path.
+    pub pjrt_rows: usize,
+    pub emb_dim: usize,
+    /// Sparse IDs gathered per table per sample (fixed; pad w/ weight 0).
+    pub lookups: usize,
+}
+
+impl RmcConfig {
+    /// Input width of the Top-MLP: bottom output ++ one vector per table.
+    pub fn top_input_dim(&self) -> usize {
+        self.bottom_mlp.last().unwrap() + self.num_tables * self.emb_dim
+    }
+
+    /// Aggregate full-scale embedding storage in bytes (fp32) — the
+    /// paper's §III.B "100MB / 10GB / 1GB" axis.
+    pub fn emb_bytes(&self) -> u64 {
+        self.num_tables as u64 * self.rows as u64 * self.emb_dim as u64 * 4
+    }
+
+    /// Bytes of one embedding-table row (fp32).
+    pub fn row_bytes(&self) -> u64 {
+        self.emb_dim as u64 * 4
+    }
+
+    /// FC parameter count (bottom + top, weights + biases).
+    pub fn fc_params(&self) -> u64 {
+        let mut total = 0u64;
+        let mut prev = self.dense_dim;
+        for &w in &self.bottom_mlp {
+            total += (prev * w + w) as u64;
+            prev = w;
+        }
+        let mut prev = self.top_input_dim();
+        for &w in &self.top_mlp {
+            total += (prev * w + w) as u64;
+            prev = w;
+        }
+        total += (prev + 1) as u64; // final CTR layer
+        total
+    }
+
+    pub fn fc_weight_bytes(&self) -> u64 {
+        self.fc_params() * 4
+    }
+
+    /// Total sparse lookups per sample across all tables.
+    pub fn total_lookups(&self) -> usize {
+        self.num_tables * self.lookups
+    }
+}
+
+/// MLPerf-NCF-like baseline config (Fig 12), MovieLens-20m scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NcfConfig {
+    pub name: String,
+    pub num_users: usize,
+    pub num_items: usize,
+    pub mf_dim: usize,
+    pub mlp_emb_dim: usize,
+    pub mlp_layers: Vec<usize>,
+}
+
+impl NcfConfig {
+    pub fn emb_bytes(&self) -> u64 {
+        ((self.num_users + self.num_items) * (self.mf_dim + self.mlp_emb_dim)) as u64 * 4
+    }
+
+    pub fn fc_params(&self) -> u64 {
+        let mut total = 0u64;
+        let mut prev = 2 * self.mlp_emb_dim;
+        for &w in &self.mlp_layers {
+            total += (prev * w + w) as u64;
+            prev = w;
+        }
+        total += (self.mf_dim + prev + 1) as u64; // NeuMF fusion layer
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn top_input_dim_concat_width() {
+        let c = presets::rmc2_small();
+        assert_eq!(c.top_input_dim(), 32 + 24 * 32);
+    }
+
+    #[test]
+    fn emb_footprints_match_paper_bands() {
+        // §III.B: ~100MB (RMC1), ~10GB (RMC2), ~1GB (RMC3).
+        let gb = |c: &RmcConfig| c.emb_bytes() as f64 / 1e9;
+        assert!((0.05..0.2).contains(&gb(&presets::rmc1_small())));
+        assert!((5.0..15.0).contains(&gb(&presets::rmc2_large())));
+        assert!((0.5..1.5).contains(&gb(&presets::rmc3_large())));
+    }
+
+    #[test]
+    fn rmc3_is_compute_heavy_rmc2_is_table_heavy() {
+        let r1 = presets::rmc1_small();
+        let r2 = presets::rmc2_small();
+        let r3 = presets::rmc3_small();
+        assert!(r3.fc_params() > 10 * r1.fc_params());
+        assert!(r2.num_tables >= 4 * r1.num_tables);
+        assert!(r3.lookups < r1.lookups); // Table I: lookups normalized to RMC3
+    }
+
+    #[test]
+    fn fc_params_hand_check() {
+        let c = RmcConfig {
+            name: "t".into(),
+            class: ModelClass::Rmc1,
+            dense_dim: 4,
+            bottom_mlp: vec![3],
+            top_mlp: vec![2],
+            num_tables: 1,
+            rows: 10,
+            pjrt_rows: 10,
+            emb_dim: 2,
+            lookups: 1,
+        };
+        // bottom: 4*3+3 = 15; top_in = 3+2 = 5; top: 5*2+2 = 12; out: 2+1 = 3.
+        assert_eq!(c.fc_params(), 30);
+    }
+
+    #[test]
+    fn class_taxonomy() {
+        assert!(ModelClass::Ncf.is_recommendation());
+        assert!(!ModelClass::Cnn.is_recommendation());
+        assert_eq!(ModelClass::Rmc2.name(), "RMC2");
+    }
+}

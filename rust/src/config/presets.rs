@@ -1,0 +1,127 @@
+//! Concrete model presets — MUST stay in sync with
+//! `python/compile/presets.py` (a runtime integration test cross-checks
+//! the AOT manifest against these).
+
+use super::model_config::{ModelClass, NcfConfig, RmcConfig};
+
+/// Bucketed batch sizes the dynamic batcher rounds up to; one AOT
+/// executable exists per (model, batch) pair.
+pub const PJRT_BATCHES: [usize; 4] = [1, 8, 32, 128];
+
+pub fn rmc1_small() -> RmcConfig {
+    RmcConfig {
+        name: "rmc1-small".into(),
+        class: ModelClass::Rmc1,
+        dense_dim: 256,
+        bottom_mlp: vec![256, 128, 32],
+        top_mlp: vec![128, 64],
+        num_tables: 4,
+        rows: 200_000,
+        pjrt_rows: 10_000,
+        emb_dim: 32,
+        lookups: 80,
+    }
+}
+
+pub fn rmc1_large() -> RmcConfig {
+    RmcConfig { name: "rmc1-large".into(), num_tables: 6, ..rmc1_small() }
+}
+
+pub fn rmc2_small() -> RmcConfig {
+    RmcConfig {
+        name: "rmc2-small".into(),
+        class: ModelClass::Rmc2,
+        dense_dim: 256,
+        bottom_mlp: vec![256, 128, 32],
+        top_mlp: vec![128, 64],
+        num_tables: 24,
+        rows: 2_600_000,
+        pjrt_rows: 10_000,
+        emb_dim: 32,
+        lookups: 80,
+    }
+}
+
+pub fn rmc2_large() -> RmcConfig {
+    RmcConfig { name: "rmc2-large".into(), num_tables: 32, ..rmc2_small() }
+}
+
+pub fn rmc3_small() -> RmcConfig {
+    RmcConfig {
+        name: "rmc3-small".into(),
+        class: ModelClass::Rmc3,
+        dense_dim: 2560,
+        bottom_mlp: vec![2560, 256, 128],
+        top_mlp: vec![128, 64],
+        num_tables: 2,
+        rows: 2_600_000,
+        pjrt_rows: 20_000,
+        emb_dim: 32,
+        lookups: 20,
+    }
+}
+
+pub fn rmc3_large() -> RmcConfig {
+    RmcConfig { name: "rmc3-large".into(), num_tables: 3, ..rmc3_small() }
+}
+
+pub fn all_rmc() -> Vec<RmcConfig> {
+    vec![
+        rmc1_small(),
+        rmc1_large(),
+        rmc2_small(),
+        rmc2_large(),
+        rmc3_small(),
+        rmc3_large(),
+    ]
+}
+
+/// MLPerf-NCF baseline at MovieLens-20m scale (Fig 12).
+pub fn ncf() -> NcfConfig {
+    NcfConfig {
+        name: "ncf".into(),
+        num_users: 138_493,
+        num_items: 26_744,
+        mf_dim: 8,
+        mlp_emb_dim: 32,
+        mlp_layers: vec![64, 32, 16, 8],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_ratios_hold() {
+        // Table I, normalized: RMC2 has ~an order of magnitude more
+        // tables than RMC1/RMC3; RMC3's bottom layer-1 is 80x RMC1's
+        // layer-3; lookups are 4x RMC3's for RMC1/RMC2.
+        let (r1, r2, r3) = (rmc1_small(), rmc2_small(), rmc3_small());
+        assert_eq!(r2.num_tables / r1.num_tables, 6);
+        assert!(r2.num_tables >= 8 * r3.num_tables);
+        assert_eq!(r3.bottom_mlp[0] / r1.bottom_mlp[2], 80);
+        assert_eq!(r1.lookups / r3.lookups, 4);
+        assert_eq!(r2.lookups, r1.lookups);
+        // Output (embedding) dim identical across models, 24-40 band.
+        assert!(r1.emb_dim == r2.emb_dim && r2.emb_dim == r3.emb_dim);
+        assert!((24..=40).contains(&r1.emb_dim));
+    }
+
+    #[test]
+    fn large_variants_grow_tables_only() {
+        assert_eq!(rmc1_large().num_tables, 6);
+        assert_eq!(rmc1_large().bottom_mlp, rmc1_small().bottom_mlp);
+        assert_eq!(rmc2_large().num_tables, 32);
+        assert_eq!(rmc3_large().num_tables, 3);
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let names: Vec<String> = all_rmc().into_iter().map(|c| c.name).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

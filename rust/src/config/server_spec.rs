@@ -1,0 +1,282 @@
+//! Server architecture specifications — paper Table II verbatim, plus the
+//! documented micro-architectural constants (latencies, bandwidths) the
+//! paper relies on but does not tabulate. These three machines are the
+//! substituted "testbed" (DESIGN.md §3): every figure that the paper
+//! measured on real Haswell/Broadwell/Skylake hosts is regenerated on
+//! these models.
+
+
+/// SIMD instruction set (Table II row "SIMD").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// 256-bit: 8 f32 lanes (Haswell, Broadwell).
+    Avx2,
+    /// 512-bit: 16 f32 lanes (Skylake).
+    Avx512,
+}
+
+impl SimdIsa {
+    /// f32 lanes per vector register.
+    pub fn lanes_f32(self) -> usize {
+        match self {
+            SimdIsa::Avx2 => 8,
+            SimdIsa::Avx512 => 16,
+        }
+    }
+
+    /// Peak f32 FLOPs/cycle/core: lanes x 2 (FMA) x 2 (FMA ports).
+    pub fn peak_flops_per_cycle(self) -> f64 {
+        (self.lanes_f32() * 2 * 2) as f64
+    }
+}
+
+/// L2/L3 inclusion policy (Table II last cache row). The paper's
+/// Takeaway 7 hinges on this: inclusive hierarchies back-invalidate L2
+/// lines when L3 evicts, amplifying co-location interference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheInclusion {
+    Inclusive,
+    Exclusive,
+}
+
+/// DDR generation (Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DdrType {
+    Ddr3,
+    Ddr4,
+}
+
+/// The three server generations of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ServerGen {
+    Haswell,
+    Broadwell,
+    Skylake,
+}
+
+impl ServerGen {
+    pub fn all() -> [ServerGen; 3] {
+        [ServerGen::Haswell, ServerGen::Broadwell, ServerGen::Skylake]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ServerGen::Haswell => "Haswell",
+            ServerGen::Broadwell => "Broadwell",
+            ServerGen::Skylake => "Skylake",
+        }
+    }
+}
+
+/// One server model — Table II columns plus documented constants.
+#[derive(Debug, Clone)]
+pub struct ServerSpec {
+    pub gen: ServerGen,
+    /// Core clock, GHz (turbo disabled, as in the paper §IV).
+    pub freq_ghz: f64,
+    /// Sustained clock under heavy AVX load (AVX licensing downclock;
+    /// large on Haswell-EP AVX-2 and Skylake-SP AVX-512).
+    pub avx_freq_ghz: f64,
+    pub cores_per_socket: usize,
+    pub sockets: usize,
+    pub simd: SimdIsa,
+    pub l1_kb: usize,
+    pub l2_kb: usize,
+    pub l3_mb: f64,
+    pub inclusion: CacheInclusion,
+    pub dram_capacity_gb: usize,
+    pub ddr: DdrType,
+    pub ddr_freq_mhz: usize,
+    /// DDR bandwidth per socket, GB/s (Table II last row).
+    pub dram_bw_gbs: f64,
+
+    // ---- documented micro-architectural constants (not in Table II) ----
+    /// Load-to-use latencies, ns. DRAM latency includes the memory
+    /// controller round trip; DDR3 is slower end-to-end.
+    pub l1_lat_ns: f64,
+    pub l2_lat_ns: f64,
+    pub l3_lat_ns: f64,
+    pub dram_lat_ns: f64,
+    /// Sustained single-core L3 bandwidth, GB/s (streaming weight reads).
+    pub l3_bw_gbs: f64,
+    /// Data-TLB reach in bytes (entries x 4KB pages, STLB).
+    pub tlb_reach_bytes: u64,
+    /// Page-walk cost on a DTLB miss, ns (partially cached walks).
+    pub tlb_miss_ns: f64,
+}
+
+impl ServerSpec {
+    /// Paper Table II: Intel Haswell (DDR3-1600, inclusive L2/L3, AVX-2).
+    pub fn haswell() -> Self {
+        ServerSpec {
+            gen: ServerGen::Haswell,
+            freq_ghz: 2.5,
+            avx_freq_ghz: 2.1,
+            cores_per_socket: 12,
+            sockets: 2,
+            simd: SimdIsa::Avx2,
+            l1_kb: 32,
+            l2_kb: 256,
+            l3_mb: 30.0,
+            inclusion: CacheInclusion::Inclusive,
+            dram_capacity_gb: 256,
+            ddr: DdrType::Ddr3,
+            ddr_freq_mhz: 1600,
+            dram_bw_gbs: 51.0,
+            l1_lat_ns: 1.6,
+            l2_lat_ns: 4.8,
+            l3_lat_ns: 15.0,
+            dram_lat_ns: 95.0,
+            l3_bw_gbs: 45.0,
+            tlb_reach_bytes: 1024 * 4096,
+            tlb_miss_ns: 28.0,
+        }
+    }
+
+    /// Paper Table II: Intel Broadwell (DDR4-2400, inclusive L2/L3, AVX-2).
+    pub fn broadwell() -> Self {
+        ServerSpec {
+            gen: ServerGen::Broadwell,
+            freq_ghz: 2.4,
+            avx_freq_ghz: 2.3,
+            cores_per_socket: 14,
+            sockets: 2,
+            simd: SimdIsa::Avx2,
+            l1_kb: 32,
+            l2_kb: 256,
+            l3_mb: 35.0,
+            inclusion: CacheInclusion::Inclusive,
+            dram_capacity_gb: 256,
+            ddr: DdrType::Ddr4,
+            ddr_freq_mhz: 2400,
+            dram_bw_gbs: 77.0,
+            l1_lat_ns: 1.7,
+            l2_lat_ns: 5.0,
+            l3_lat_ns: 16.0,
+            dram_lat_ns: 80.0,
+            l3_bw_gbs: 48.0,
+            tlb_reach_bytes: 1536 * 4096,
+            tlb_miss_ns: 26.0,
+        }
+    }
+
+    /// Paper Table II: Intel Skylake (DDR4-2666, exclusive L2/L3, AVX-512,
+    /// 1MB L2, more cores, lower clock).
+    pub fn skylake() -> Self {
+        ServerSpec {
+            gen: ServerGen::Skylake,
+            freq_ghz: 2.0,
+            avx_freq_ghz: 1.7,
+            cores_per_socket: 20,
+            sockets: 2,
+            simd: SimdIsa::Avx512,
+            l1_kb: 32,
+            l2_kb: 1024,
+            l3_mb: 27.5,
+            inclusion: CacheInclusion::Exclusive,
+            dram_capacity_gb: 256,
+            ddr: DdrType::Ddr4,
+            ddr_freq_mhz: 2666,
+            dram_bw_gbs: 85.0,
+            l1_lat_ns: 2.0,
+            l2_lat_ns: 6.5, // larger L2 -> slightly higher latency
+            l3_lat_ns: 18.0,
+            dram_lat_ns: 78.0,
+            l3_bw_gbs: 52.0,
+            tlb_reach_bytes: 1536 * 4096,
+            tlb_miss_ns: 25.0,
+        }
+    }
+
+    pub fn by_gen(gen: ServerGen) -> Self {
+        match gen {
+            ServerGen::Haswell => Self::haswell(),
+            ServerGen::Broadwell => Self::broadwell(),
+            ServerGen::Skylake => Self::skylake(),
+        }
+    }
+
+    pub fn all() -> Vec<ServerSpec> {
+        ServerGen::all().iter().map(|g| Self::by_gen(*g)).collect()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.gen.name()
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.cores_per_socket * self.sockets
+    }
+
+    pub fn l1_bytes(&self) -> u64 {
+        self.l1_kb as u64 * 1024
+    }
+
+    pub fn l2_bytes(&self) -> u64 {
+        self.l2_kb as u64 * 1024
+    }
+
+    pub fn l3_bytes(&self) -> u64 {
+        (self.l3_mb * 1024.0 * 1024.0) as u64
+    }
+
+    /// Peak single-core f32 GFLOP/s at the sustained AVX clock.
+    pub fn peak_gflops(&self) -> f64 {
+        self.avx_freq_ghz * self.simd.peak_flops_per_cycle()
+    }
+
+    /// Total per-socket DRAM bandwidth across both sockets, GB/s.
+    pub fn total_dram_bw_gbs(&self) -> f64 {
+        self.dram_bw_gbs * self.sockets as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let h = ServerSpec::haswell();
+        let b = ServerSpec::broadwell();
+        let s = ServerSpec::skylake();
+        // Table II verbatim.
+        assert_eq!((h.freq_ghz, b.freq_ghz, s.freq_ghz), (2.5, 2.4, 2.0));
+        assert_eq!(
+            (h.cores_per_socket, b.cores_per_socket, s.cores_per_socket),
+            (12, 14, 20)
+        );
+        assert_eq!((h.l2_kb, b.l2_kb, s.l2_kb), (256, 256, 1024));
+        assert_eq!((h.l3_mb, b.l3_mb, s.l3_mb), (30.0, 35.0, 27.5));
+        assert_eq!(h.inclusion, CacheInclusion::Inclusive);
+        assert_eq!(b.inclusion, CacheInclusion::Inclusive);
+        assert_eq!(s.inclusion, CacheInclusion::Exclusive);
+        assert_eq!((h.dram_bw_gbs, b.dram_bw_gbs, s.dram_bw_gbs), (51.0, 77.0, 85.0));
+        assert_eq!(h.ddr, DdrType::Ddr3);
+        assert_eq!((h.ddr_freq_mhz, b.ddr_freq_mhz, s.ddr_freq_mhz), (1600, 2400, 2666));
+    }
+
+    #[test]
+    fn skylake_has_wider_simd_but_lower_clock() {
+        let b = ServerSpec::broadwell();
+        let s = ServerSpec::skylake();
+        assert!(s.peak_gflops() > b.peak_gflops());
+        assert!(s.freq_ghz < b.freq_ghz);
+        assert_eq!(s.simd.lanes_f32(), 2 * b.simd.lanes_f32());
+    }
+
+    #[test]
+    fn peak_flops_per_cycle() {
+        assert_eq!(SimdIsa::Avx2.peak_flops_per_cycle(), 32.0);
+        assert_eq!(SimdIsa::Avx512.peak_flops_per_cycle(), 64.0);
+    }
+
+    #[test]
+    fn haswell_dram_is_slowest() {
+        // Takeaway 3's Haswell-vs-Broadwell gap comes from DDR3 vs DDR4.
+        let h = ServerSpec::haswell();
+        let b = ServerSpec::broadwell();
+        assert!(h.dram_bw_gbs < b.dram_bw_gbs);
+        assert!(h.dram_lat_ns > b.dram_lat_ns);
+    }
+}

@@ -1,0 +1,125 @@
+//! SLA-aware batch-bucket autotuner — the scheduling optimization the
+//! paper's Takeaways 4/5 motivate: the best batch size is the largest
+//! one whose (queueing-inclusive) latency still meets the SLA, because
+//! batching raises compute density and per-item throughput.
+//!
+//! Given a latency table for the target machine (from the architectural
+//! simulator or measured on the PJRT runtime), the tuner picks the
+//! bucket maximizing latency-bounded items/sec under an M/D/1-style
+//! accumulation model: a bucket of size `b` at arrival rate `lambda`
+//! items/s waits ~`(b-1)/(2*lambda)` to fill (or flushes at the batcher
+//! timeout, whichever is first).
+
+/// One candidate point evaluated by the tuner.
+#[derive(Debug, Clone)]
+pub struct TunePoint {
+    pub bucket: usize,
+    pub exec_ms: f64,
+    pub wait_ms: f64,
+    /// Expected end-to-end latency (fill wait + execute).
+    pub latency_ms: f64,
+    /// Items/s the machine sustains at this bucket (0 if SLA-infeasible).
+    pub throughput: f64,
+    pub feasible: bool,
+}
+
+/// Pick the best bucket. `latency_ms(bucket)` is the machine's batch
+/// execution latency; `buckets` the AOT'd sizes; `lambda_items` the
+/// offered item rate; `timeout_ms` the batcher flush timeout.
+pub fn tune(
+    buckets: &[usize],
+    latency_ms: impl Fn(usize) -> f64,
+    lambda_items: f64,
+    sla_ms: f64,
+    timeout_ms: f64,
+) -> (Option<usize>, Vec<TunePoint>) {
+    assert!(lambda_items > 0.0 && sla_ms > 0.0);
+    let mut points = Vec::new();
+    for &b in buckets {
+        let exec_ms = latency_ms(b);
+        // Mean fill wait for the *first* item in the batch; capped by the
+        // flush timeout.
+        let fill_ms = ((b.saturating_sub(1)) as f64 / lambda_items) * 1e3;
+        let wait_ms = fill_ms.min(timeout_ms);
+        let latency = wait_ms + exec_ms;
+        // Items actually in the batch when it flushes.
+        let filled = if fill_ms <= timeout_ms {
+            b as f64
+        } else {
+            (lambda_items * timeout_ms / 1e3).max(1.0)
+        };
+        // One worker executes back-to-back: service rate bound.
+        let service_items = filled / (exec_ms / 1e3);
+        let feasible = latency <= sla_ms;
+        points.push(TunePoint {
+            bucket: b,
+            exec_ms,
+            wait_ms,
+            latency_ms: latency,
+            throughput: if feasible { service_items.min(lambda_items) } else { 0.0 },
+            feasible,
+        });
+    }
+    let best = points
+        .iter()
+        .filter(|p| p.feasible)
+        .max_by(|a, b| {
+            a.throughput
+                .partial_cmp(&b.throughput)
+                .unwrap()
+                .then(b.latency_ms.partial_cmp(&a.latency_ms).unwrap())
+        })
+        .map(|p| p.bucket);
+    (best, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Latency model with batching economy: fixed 0.5ms + 0.02ms/item.
+    fn lat(b: usize) -> f64 {
+        0.5 + 0.02 * b as f64
+    }
+
+    #[test]
+    fn high_load_prefers_large_buckets() {
+        let (best, _) = tune(&[1, 8, 32, 128], lat, 50_000.0, 10.0, 5.0);
+        assert_eq!(best, Some(128), "amortize at high load");
+    }
+
+    #[test]
+    fn tight_sla_prefers_small_buckets() {
+        // SLA below the 128-batch execution time forces small batches.
+        let (best, pts) = tune(&[1, 8, 32, 128], lat, 50_000.0, 1.0, 0.5);
+        let best = best.unwrap();
+        assert!(best <= 8, "tight SLA picked {best}");
+        assert!(!pts.iter().find(|p| p.bucket == 128).unwrap().feasible);
+    }
+
+    #[test]
+    fn low_load_accounts_for_fill_wait() {
+        // At 100 items/s, filling 128 items takes 1.27s — way past a
+        // 10ms SLA; the tuner must not pick it.
+        let (best, pts) = tune(&[1, 8, 32, 128], lat, 100.0, 10.0, 5.0);
+        assert!(best.unwrap() <= 32);
+        // Timeout caps the wait, so feasibility is wait+exec based.
+        for p in &pts {
+            assert!(p.wait_ms <= 5.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn infeasible_everywhere_returns_none() {
+        let (best, _) = tune(&[8, 32], |_| 100.0, 1000.0, 1.0, 0.1);
+        assert_eq!(best, None);
+    }
+
+    #[test]
+    fn throughput_never_exceeds_offered_load() {
+        let (_, pts) = tune(&[1, 8, 32, 128], lat, 500.0, 50.0, 1.0);
+        for p in pts {
+            assert!(p.throughput <= 500.0 + 1e-9);
+        }
+    }
+}

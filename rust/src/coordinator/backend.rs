@@ -1,0 +1,172 @@
+//! Execution backends for the worker pool.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::{ServerGen, ServerSpec};
+use crate::model::ModelGraph;
+use crate::runtime::{golden_lwts, ModelPool};
+use crate::simulator::MachineSim;
+use crate::util::Rng;
+use crate::workload::{Query, SparseIdGen};
+
+/// A backend executes one padded batch of queries and returns per-query
+/// CTR vectors (empty for latency-only backends).
+pub trait Backend: Send + Sync {
+    fn execute(
+        &self,
+        model: &str,
+        bucket: usize,
+        queries: &[Query],
+        gen: ServerGen,
+    ) -> anyhow::Result<Vec<Vec<f32>>>;
+}
+
+// ---------------------------------------------------------------------
+/// Real numeric execution through the PJRT runtime. Inputs are derived
+/// deterministically from each query's seed (dense features + Zipf-like
+/// sparse IDs), so results are reproducible end-to-end.
+pub struct PjrtBackend {
+    pub pool: Arc<ModelPool>,
+    /// Which kernel implementation to serve ("xla" fast path or
+    /// "pallas" for cross-checking).
+    pub impl_: String,
+}
+
+impl PjrtBackend {
+    pub fn new(pool: Arc<ModelPool>) -> Self {
+        PjrtBackend { pool, impl_: "xla".into() }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn execute(
+        &self,
+        model: &str,
+        bucket: usize,
+        queries: &[Query],
+        _gen: ServerGen,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let compiled = self.pool.get(model, &self.impl_, bucket)?;
+        let v = &compiled.spec;
+        let tables = v.config_usize("num_tables")?;
+        let lookups = v.config_usize("lookups")?;
+        let rows = v.config_usize("rows")?;
+        let dense_dim = v.config_usize("dense_dim")?;
+
+        // Slot assignment: queries fill the batch in order; padding
+        // samples replicate slot 0 with lookup weight 0 (inert).
+        let mut slot_of_query = Vec::with_capacity(queries.len());
+        let mut used = 0usize;
+        for q in queries {
+            slot_of_query.push((used, q.items.min(bucket - used)));
+            used += q.items.min(bucket - used);
+        }
+
+        let mut dense = vec![0.0f32; bucket * dense_dim];
+        let mut ids = vec![0i32; tables * bucket * lookups];
+        let mut lwts = golden_lwts(tables, bucket, lookups);
+        // Zero out padding-sample weights.
+        for t in 0..tables {
+            for b in used..bucket {
+                for l in 0..lookups {
+                    lwts[(t * bucket + b) * lookups + l] = 0.0;
+                }
+            }
+        }
+        for (q, (slot0, n)) in queries.iter().zip(&slot_of_query) {
+            let mut rng = Rng::seed_from_u64(q.seed);
+            let mut idgen = SparseIdGen::production_like(rows, q.seed);
+            for s in *slot0..slot0 + n {
+                for j in 0..dense_dim {
+                    dense[s * dense_dim + j] = (rng.gen_f64() - 0.5) as f32;
+                }
+                for t in 0..tables {
+                    for l in 0..lookups {
+                        ids[(t * bucket + s) * lookups + l] = idgen.next_id() as i32;
+                    }
+                }
+            }
+        }
+
+        let ctrs = compiled.run_rmc(&dense, &ids, &lwts)?;
+        Ok(queries
+            .iter()
+            .zip(&slot_of_query)
+            .map(|(_, (s0, n))| ctrs[*s0..s0 + n].to_vec())
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------
+/// Latency-realistic backend: computes the batch latency on the modeled
+/// Intel server for `gen` via the architectural simulator and sleeps for
+/// it (scaled). Used by the heterogeneity-routing experiments, where
+/// what matters is *which* machine a batch lands on.
+pub struct SimBackend {
+    /// Memoized (model, bucket, gen) -> latency_ms. The trace simulation
+    /// is expensive relative to the request path, so it runs once per
+    /// key; workers then just sleep the simulated duration.
+    cache: std::sync::Mutex<std::collections::HashMap<(String, usize, ServerGen), f64>>,
+    /// Wall-clock scale factor (1.0 = sleep the simulated time).
+    pub time_scale: f64,
+}
+
+impl SimBackend {
+    pub fn new(time_scale: f64) -> Self {
+        SimBackend { cache: Default::default(), time_scale }
+    }
+
+    /// Simulated batch latency in ms on `gen` (steady-state caches),
+    /// memoized per (model, bucket, gen).
+    pub fn latency_ms(&self, model: &str, bucket: usize, gen: ServerGen) -> anyhow::Result<f64> {
+        let key = (model.to_string(), bucket, gen);
+        if let Some(ms) = self.cache.lock().unwrap().get(&key) {
+            return Ok(*ms);
+        }
+        let cfg = crate::config::all_rmc()
+            .into_iter()
+            .find(|c| c.name == model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+        let graph = ModelGraph::from_rmc(&cfg);
+        let mut sim = MachineSim::new(ServerSpec::by_gen(gen), 1);
+        let mut idgen = SparseIdGen::production_like(cfg.rows, 11);
+        sim.warmup(0, &graph, bucket, &mut idgen, 2);
+        let ms = sim.run_inference(0, &graph, bucket, &mut idgen, 1).ms();
+        self.cache.lock().unwrap().insert(key, ms);
+        Ok(ms)
+    }
+}
+
+impl Backend for SimBackend {
+    fn execute(
+        &self,
+        model: &str,
+        bucket: usize,
+        queries: &[Query],
+        gen: ServerGen,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let ms = self.latency_ms(model, bucket, gen)?;
+        std::thread::sleep(Duration::from_secs_f64(ms * self.time_scale / 1e3));
+        Ok(queries.iter().map(|_| Vec::new()).collect())
+    }
+}
+
+// ---------------------------------------------------------------------
+/// Fixed-latency backend for coordinator unit tests.
+pub struct MockBackend {
+    pub latency: Duration,
+}
+
+impl Backend for MockBackend {
+    fn execute(
+        &self,
+        _model: &str,
+        bucket: usize,
+        queries: &[Query],
+        _gen: ServerGen,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.latency);
+        Ok(queries.iter().map(|q| vec![0.5; q.items.min(bucket)]).collect())
+    }
+}

@@ -1,0 +1,266 @@
+//! Dynamic batcher: per-model pending queues flushed by size or age into
+//! bucketed batches matching the AOT'd batch sizes (the paper's
+//! batching-for-throughput knob, §V).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::workload::Query;
+
+/// A flushed batch ready for a worker.
+#[derive(Debug)]
+pub struct Batch {
+    pub model: String,
+    /// Total items across queries (<= bucket).
+    pub items: usize,
+    /// AOT bucket the batch will execute in (>= items; padded).
+    pub bucket: usize,
+    pub queries: Vec<Query>,
+    pub formed_at: Instant,
+}
+
+struct PendingQueue {
+    queries: Vec<Query>,
+    items: usize,
+    oldest: Instant,
+}
+
+/// Size/age-triggered batcher. `buckets` must be the sorted AOT batch
+/// sizes; `max_batch` caps the bucket used.
+pub struct DynamicBatcher {
+    buckets: Vec<usize>,
+    max_batch: usize,
+    timeout: Duration,
+    pending: HashMap<String, PendingQueue>,
+}
+
+impl DynamicBatcher {
+    pub fn new(mut buckets: Vec<usize>, max_batch: usize, timeout: Duration) -> Self {
+        assert!(!buckets.is_empty(), "need at least one bucket");
+        buckets.sort_unstable();
+        DynamicBatcher { buckets, max_batch, timeout, pending: HashMap::new() }
+    }
+
+    /// Smallest bucket >= n (clamped to max_batch / largest).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        let cap = self.max_batch.min(*self.buckets.last().unwrap());
+        *self
+            .buckets
+            .iter()
+            .filter(|&&b| b <= cap)
+            .find(|&&b| b >= n)
+            .unwrap_or(&cap)
+    }
+
+    fn effective_max(&self) -> usize {
+        self.max_batch.min(*self.buckets.last().unwrap())
+    }
+
+    /// Enqueue a query; returns any batch that became ready (full).
+    pub fn push(&mut self, q: Query, now: Instant) -> Option<Batch> {
+        let max = self.effective_max();
+        let entry = self.pending.entry(q.model.clone()).or_insert_with(|| PendingQueue {
+            queries: Vec::new(),
+            items: 0,
+            oldest: now,
+        });
+        if entry.queries.is_empty() {
+            entry.oldest = now;
+        }
+        entry.items += q.items;
+        entry.queries.push(q);
+        if entry.items >= max {
+            return self.flush_model_inner(now, true);
+        }
+        None
+    }
+
+    fn flush_model_inner(&mut self, now: Instant, only_full: bool) -> Option<Batch> {
+        let max = self.effective_max();
+        let key = self
+            .pending
+            .iter()
+            .filter(|(_, p)| !p.queries.is_empty())
+            .find(|(_, p)| {
+                if only_full {
+                    p.items >= max
+                } else {
+                    now.duration_since(p.oldest) >= self.timeout
+                }
+            })
+            .map(|(k, _)| k.clone())?;
+        let p = self.pending.get_mut(&key).unwrap();
+        // Take queries until the batch is full.
+        let mut taken = Vec::new();
+        let mut items = 0usize;
+        while let Some(q) = p.queries.first() {
+            if !taken.is_empty() && items + q.items > max {
+                break;
+            }
+            items += q.items.min(max);
+            taken.push(p.queries.remove(0));
+            if items >= max {
+                break;
+            }
+        }
+        p.items = p.queries.iter().map(|q| q.items).sum();
+        p.oldest = now;
+        let bucket = self.bucket_for(items);
+        Some(Batch { model: key, items, bucket, queries: taken, formed_at: now })
+    }
+
+    /// Flush any queue whose oldest query has waited past the timeout.
+    pub fn poll_timeout(&mut self, now: Instant) -> Option<Batch> {
+        self.flush_model_inner(now, false)
+    }
+
+    /// Force-flush everything (shutdown drain).
+    pub fn drain(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        loop {
+            let any = self.pending.values().any(|p| !p.queries.is_empty());
+            if !any {
+                break;
+            }
+            // Age all queues artificially by using only_full = false with
+            // zero timeout via direct flush.
+            let keys: Vec<String> = self
+                .pending
+                .iter()
+                .filter(|(_, p)| !p.queries.is_empty())
+                .map(|(k, _)| k.clone())
+                .collect();
+            for key in keys {
+                let max = self.effective_max();
+                let p = self.pending.get_mut(&key).unwrap();
+                if p.queries.is_empty() {
+                    continue;
+                }
+                let mut taken = Vec::new();
+                let mut items = 0usize;
+                while let Some(q) = p.queries.first() {
+                    if !taken.is_empty() && items + q.items > max {
+                        break;
+                    }
+                    items += q.items.min(max);
+                    taken.push(p.queries.remove(0));
+                    if items >= max {
+                        break;
+                    }
+                }
+                p.items = p.queries.iter().map(|q| q.items).sum();
+                let bucket = self.bucket_for(items);
+                out.push(Batch { model: key.clone(), items, bucket, queries: taken, formed_at: now });
+            }
+        }
+        out
+    }
+
+    /// Time until the next age-based flush is due (for recv_timeout).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending
+            .values()
+            .filter(|p| !p.queries.is_empty())
+            .map(|p| {
+                self.timeout
+                    .checked_sub(now.duration_since(p.oldest))
+                    .unwrap_or(Duration::ZERO)
+            })
+            .min()
+    }
+
+    pub fn pending_items(&self) -> usize {
+        self.pending.values().map(|p| p.items).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, model: &str, items: usize) -> Query {
+        Query::new(id, model, items, 0.0)
+    }
+
+    #[test]
+    fn bucket_rounding() {
+        let b = DynamicBatcher::new(vec![1, 8, 32, 128], 128, Duration::from_millis(1));
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(2), 8);
+        assert_eq!(b.bucket_for(33), 128);
+        assert_eq!(b.bucket_for(500), 128);
+    }
+
+    #[test]
+    fn max_batch_caps_bucket() {
+        let b = DynamicBatcher::new(vec![1, 8, 32, 128], 32, Duration::from_millis(1));
+        assert_eq!(b.bucket_for(100), 32);
+    }
+
+    #[test]
+    fn flush_on_size() {
+        let mut b = DynamicBatcher::new(vec![1, 8], 8, Duration::from_secs(10));
+        let now = Instant::now();
+        assert!(b.push(q(1, "m", 4), now).is_none());
+        let batch = b.push(q(2, "m", 4), now).expect("full flush");
+        assert_eq!(batch.items, 8);
+        assert_eq!(batch.bucket, 8);
+        assert_eq!(batch.queries.len(), 2);
+        assert_eq!(b.pending_items(), 0);
+    }
+
+    #[test]
+    fn flush_on_timeout() {
+        let mut b = DynamicBatcher::new(vec![1, 8], 8, Duration::from_millis(5));
+        let t0 = Instant::now();
+        b.push(q(1, "m", 2), t0);
+        assert!(b.poll_timeout(t0).is_none(), "too early");
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.poll_timeout(later).expect("timeout flush");
+        assert_eq!(batch.items, 2);
+        assert_eq!(batch.bucket, 8);
+    }
+
+    #[test]
+    fn models_batch_separately() {
+        let mut b = DynamicBatcher::new(vec![4], 4, Duration::from_secs(1));
+        let now = Instant::now();
+        b.push(q(1, "a", 2), now);
+        b.push(q(2, "b", 2), now);
+        assert!(b.pending_items() == 4);
+        let batch = b.push(q(3, "a", 2), now).expect("a is full");
+        assert_eq!(batch.model, "a");
+        assert_eq!(b.pending_items(), 2); // b still pending
+    }
+
+    #[test]
+    fn oversized_query_gets_own_batch() {
+        let mut b = DynamicBatcher::new(vec![1, 8], 8, Duration::from_secs(1));
+        let now = Instant::now();
+        let batch = b.push(q(1, "m", 20), now).expect("flush");
+        // Items clamp to the bucket; caller splits across calls.
+        assert_eq!(batch.bucket, 8);
+        assert_eq!(batch.queries.len(), 1);
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut b = DynamicBatcher::new(vec![1, 8], 8, Duration::from_secs(10));
+        let now = Instant::now();
+        b.push(q(1, "a", 2), now);
+        b.push(q(2, "b", 3), now);
+        let batches = b.drain(now);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(b.pending_items(), 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(vec![8], 8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert!(b.next_deadline(t0).is_none());
+        b.push(q(1, "m", 1), t0);
+        let d = b.next_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+}

@@ -1,0 +1,33 @@
+//! L3 serving coordinator: request router, dynamic batcher (bucketed to
+//! the AOT'd batch sizes), worker pool, and SLA accounting — the
+//! vLLM-router-shaped layer of the stack.
+//!
+//! Built on std::thread + mpsc channels (the offline registry has no
+//! tokio; see Cargo.toml note). The data path is:
+//!
+//! ```text
+//! submit(Query) ──► router thread ──(policy)──► per-worker queue
+//!                      │  dynamic batcher:          │
+//!                      │  flush on size/timeout     ▼
+//!                      │                      worker thread
+//!                      ▼                      backend.execute(batch)
+//!                 SLA meter ◄── QueryResult ──────┘
+//! ```
+//!
+//! Backends: `PjrtBackend` (real numeric execution of the AOT
+//! artifacts), `SimBackend` (latency from the architectural simulator —
+//! used for heterogeneity-routing experiments), `MockBackend` (tests).
+
+mod autotune;
+mod backend;
+mod batcher;
+mod router;
+mod service;
+mod worker;
+
+pub use autotune::{tune, TunePoint};
+pub use backend::{Backend, MockBackend, PjrtBackend, SimBackend};
+pub use batcher::{Batch, DynamicBatcher};
+pub use router::{RoutingPolicy, WorkerInfo};
+pub use service::{Coordinator, ServeReport};
+pub use worker::WorkerHandle;

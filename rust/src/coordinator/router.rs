@@ -1,0 +1,182 @@
+//! Routing policies: which worker gets a flushed batch.
+//!
+//! The paper's scheduling insight (Takeaways 3/4 + §VI): Broadwell
+//! minimizes small-batch latency, Skylake maximizes batched throughput
+//! and tolerates co-location. The `Heterogeneity` policy encodes exactly
+//! that: small buckets prefer Broadwell/Haswell pools, large buckets and
+//! co-location-heavy load prefer Skylake.
+
+use crate::config::ServerGen;
+
+/// Static worker description the router selects over.
+#[derive(Debug, Clone)]
+pub struct WorkerInfo {
+    pub id: usize,
+    pub gen: ServerGen,
+    /// Models this worker may serve (empty = any).
+    pub models: Vec<String>,
+}
+
+impl WorkerInfo {
+    fn serves(&self, model: &str) -> bool {
+        self.models.is_empty() || self.models.iter().any(|m| m == model)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    RoundRobin,
+    LeastLoaded,
+    /// Batch-size-aware heterogeneous routing (the paper's insight).
+    Heterogeneity,
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Option<RoutingPolicy> {
+        match s {
+            "round-robin" => Some(RoutingPolicy::RoundRobin),
+            "least-loaded" => Some(RoutingPolicy::LeastLoaded),
+            "heterogeneity" => Some(RoutingPolicy::Heterogeneity),
+            _ => None,
+        }
+    }
+
+    /// Pick a worker for a `bucket`-sized batch of `model`.
+    /// `outstanding[w]` = batches queued+running on worker w;
+    /// `rr_state` = round-robin cursor (updated).
+    pub fn pick(
+        &self,
+        workers: &[WorkerInfo],
+        model: &str,
+        bucket: usize,
+        outstanding: &[usize],
+        rr_state: &mut usize,
+    ) -> Option<usize> {
+        // Allocation-free iteration (perf: this runs per dispatched
+        // batch; collecting eligible workers into a Vec showed up in the
+        // router microbench — see EXPERIMENTS.md §Perf).
+        let eligible = || workers.iter().filter(|w| w.serves(model));
+        match self {
+            RoutingPolicy::RoundRobin => {
+                let count = eligible().count();
+                if count == 0 {
+                    return None;
+                }
+                let w = eligible().nth(*rr_state % count).unwrap();
+                *rr_state = rr_state.wrapping_add(1);
+                Some(w.id)
+            }
+            RoutingPolicy::LeastLoaded => eligible()
+                .min_by_key(|w| (outstanding[w.id], w.id))
+                .map(|w| w.id),
+            RoutingPolicy::Heterogeneity => {
+                // Preference score: lower is better. Small batches favor
+                // high-clock AVX-2 parts; batched work favors AVX-512.
+                let pref = |g: ServerGen| -> usize {
+                    let small = bucket < 64;
+                    match (g, small) {
+                        (ServerGen::Broadwell, true) => 0,
+                        (ServerGen::Haswell, true) => 1,
+                        (ServerGen::Skylake, true) => 2,
+                        (ServerGen::Skylake, false) => 0,
+                        (ServerGen::Broadwell, false) => 1,
+                        (ServerGen::Haswell, false) => 2,
+                    }
+                };
+                eligible()
+                    .min_by_key(|w| (pref(w.gen), outstanding[w.id], w.id))
+                    .map(|w| w.id)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> Vec<WorkerInfo> {
+        vec![
+            WorkerInfo { id: 0, gen: ServerGen::Broadwell, models: vec![] },
+            WorkerInfo { id: 1, gen: ServerGen::Skylake, models: vec![] },
+            WorkerInfo { id: 2, gen: ServerGen::Skylake, models: vec!["rmc2-small".into()] },
+        ]
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let w = pool();
+        let mut rr = 0;
+        let picks: Vec<usize> = (0..4)
+            .map(|_| {
+                RoutingPolicy::RoundRobin
+                    .pick(&w, "rmc1-small", 8, &[0, 0, 0], &mut rr)
+                    .unwrap()
+            })
+            .collect();
+        // Worker 2 only serves rmc2-small, so it is never eligible here.
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn least_loaded_picks_idle() {
+        let w = pool();
+        let mut rr = 0;
+        let pick = RoutingPolicy::LeastLoaded
+            .pick(&w, "rmc1-small", 8, &[3, 1, 9], &mut rr)
+            .unwrap();
+        assert_eq!(pick, 1);
+    }
+
+    #[test]
+    fn heterogeneity_prefers_broadwell_small_skylake_large() {
+        let w = pool();
+        let mut rr = 0;
+        let small = RoutingPolicy::Heterogeneity
+            .pick(&w, "rmc1-small", 8, &[0, 0, 0], &mut rr)
+            .unwrap();
+        let large = RoutingPolicy::Heterogeneity
+            .pick(&w, "rmc1-small", 128, &[0, 0, 0], &mut rr)
+            .unwrap();
+        assert_eq!(w[small].gen, ServerGen::Broadwell);
+        assert_eq!(w[large].gen, ServerGen::Skylake);
+    }
+
+    #[test]
+    fn heterogeneity_respects_load_within_tier() {
+        let w = vec![
+            WorkerInfo { id: 0, gen: ServerGen::Skylake, models: vec![] },
+            WorkerInfo { id: 1, gen: ServerGen::Skylake, models: vec![] },
+        ];
+        let mut rr = 0;
+        let pick = RoutingPolicy::Heterogeneity
+            .pick(&w, "m", 128, &[5, 2], &mut rr)
+            .unwrap();
+        assert_eq!(pick, 1);
+    }
+
+    #[test]
+    fn model_affinity_filters() {
+        let w = pool();
+        let mut rr = 0;
+        // Only worker 2 is... no: workers 0/1 serve any model, worker 2
+        // additionally serves rmc2-small. All three eligible.
+        let pick = RoutingPolicy::LeastLoaded
+            .pick(&w, "rmc2-small", 8, &[1, 1, 0], &mut rr)
+            .unwrap();
+        assert_eq!(pick, 2);
+        // Unknown model with restrictive worker list still routes to
+        // unrestricted workers.
+        let pick2 = RoutingPolicy::LeastLoaded
+            .pick(&w, "other", 8, &[0, 1, 0], &mut rr)
+            .unwrap();
+        assert_eq!(pick2, 0);
+    }
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(RoutingPolicy::parse("round-robin"), Some(RoutingPolicy::RoundRobin));
+        assert_eq!(RoutingPolicy::parse("heterogeneity"), Some(RoutingPolicy::Heterogeneity));
+        assert_eq!(RoutingPolicy::parse("nope"), None);
+    }
+}

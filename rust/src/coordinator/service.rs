@@ -1,0 +1,279 @@
+//! The coordinator service: wires router + batcher + worker pool and
+//! runs complete serving experiments (open-loop Poisson load against a
+//! deployment config), producing the paper's latency-bounded-throughput
+//! report.
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::config::DeploymentConfig;
+use crate::metrics::{LatencyHistogram, SlaMeter};
+use crate::workload::{Query, QueryResult};
+
+use super::backend::Backend;
+use super::batcher::DynamicBatcher;
+use super::router::{RoutingPolicy, WorkerInfo};
+use super::worker::WorkerHandle;
+
+/// Outcome of a serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub queries: u64,
+    pub items: u64,
+    pub elapsed_s: f64,
+    pub qps_offered: f64,
+    /// Items ranked per second within SLA (the headline metric, §III).
+    pub bounded_throughput: f64,
+    pub violation_rate: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Batches per bucket size (batching effectiveness).
+    pub bucket_histogram: Vec<(usize, u64)>,
+}
+
+impl ServeReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "queries={} items={} elapsed={:.2}s offered={:.0}qps\n",
+            self.queries, self.items, self.elapsed_s, self.qps_offered
+        ));
+        s.push_str(&format!(
+            "latency-bounded throughput: {:.0} items/s (violations {:.1}%)\n",
+            self.bounded_throughput,
+            self.violation_rate * 100.0
+        ));
+        s.push_str(&format!(
+            "latency ms: mean {:.3} p50 {:.3} p99 {:.3}\n",
+            self.mean_ms, self.p50_ms, self.p99_ms
+        ));
+        s.push_str("batch buckets: ");
+        for (b, n) in &self.bucket_histogram {
+            s.push_str(&format!("b{b}x{n} "));
+        }
+        s.push('\n');
+        s
+    }
+}
+
+/// The serving coordinator (leader). Owns the worker pool.
+pub struct Coordinator {
+    workers: Vec<WorkerHandle>,
+    infos: Vec<WorkerInfo>,
+    policy: RoutingPolicy,
+    batcher: DynamicBatcher,
+    results_rx: mpsc::Receiver<QueryResult>,
+    rr_state: usize,
+    t0: Instant,
+}
+
+impl Coordinator {
+    /// Build from a deployment config and a backend factory (one backend
+    /// instance shared across workers).
+    pub fn new(
+        cfg: &DeploymentConfig,
+        backend: Arc<dyn Backend>,
+        buckets: Vec<usize>,
+    ) -> anyhow::Result<Self> {
+        let policy = RoutingPolicy::parse(&cfg.routing)
+            .ok_or_else(|| anyhow::anyhow!("unknown routing policy '{}'", cfg.routing))?;
+        let (results_tx, results_rx) = mpsc::channel();
+        let t0 = Instant::now();
+        let mut workers = Vec::new();
+        let mut infos = Vec::new();
+        let mut id = 0usize;
+        for pool in &cfg.pools {
+            for _ in 0..pool.machines * pool.colocation {
+                infos.push(WorkerInfo { id, gen: pool.gen, models: pool.models.clone() });
+                workers.push(WorkerHandle::spawn(
+                    id,
+                    pool.gen,
+                    backend.clone(),
+                    results_tx.clone(),
+                    t0,
+                ));
+                id += 1;
+            }
+        }
+        if workers.is_empty() {
+            anyhow::bail!("deployment has no workers");
+        }
+        let batcher = DynamicBatcher::new(
+            buckets,
+            cfg.max_batch,
+            Duration::from_micros(cfg.batch_timeout_us),
+        );
+        Ok(Coordinator { workers, infos, policy, batcher, results_rx, rr_state: 0, t0 })
+    }
+
+    fn dispatch(&mut self, batch: super::batcher::Batch) {
+        let outstanding: Vec<usize> =
+            self.workers.iter().map(|w| w.outstanding()).collect();
+        let picked = self
+            .policy
+            .pick(&self.infos, &batch.model, batch.bucket, &outstanding, &mut self.rr_state)
+            .unwrap_or(0);
+        self.workers[picked].submit(batch);
+    }
+
+    /// Run an open-loop experiment: submit `queries` (pre-scheduled
+    /// arrivals) pacing to wall-clock, wait for completion, report.
+    pub fn run_open_loop(&mut self, queries: Vec<Query>, sla_ms: f64) -> ServeReport {
+        let n = queries.len() as u64;
+        let total_items: u64 = queries.iter().map(|q| q.items as u64).sum();
+        let offered_horizon = queries.last().map(|q| q.arrival_s).unwrap_or(0.0);
+
+        let mut submitted = 0u64;
+        let mut meter = SlaMeter::new(sla_ms);
+        let mut latencies = LatencyHistogram::new();
+        let mut buckets: std::collections::BTreeMap<usize, u64> = Default::default();
+        let mut completed = 0u64;
+
+        for q in queries {
+            // Pace to the arrival schedule.
+            let target = self.t0 + Duration::from_secs_f64(q.arrival_s);
+            if let Some(wait) = target.checked_duration_since(Instant::now()) {
+                // Drain results while waiting.
+                let deadline = Instant::now() + wait;
+                while Instant::now() < deadline {
+                    let slice = self
+                        .batcher
+                        .next_deadline(Instant::now())
+                        .unwrap_or(deadline - Instant::now())
+                        .min(deadline - Instant::now());
+                    if let Ok(r) = self.results_rx.recv_timeout(slice.max(Duration::from_micros(50))) {
+                        completed += 1;
+                        meter.record(r.latency_ms, r.items as u64);
+                        latencies.record(r.latency_ms);
+                        *buckets.entry(r.batch_bucket).or_default() += 1;
+                    }
+                    while let Some(b) = self.batcher.poll_timeout(Instant::now()) {
+                        self.dispatch(b);
+                    }
+                }
+            }
+            submitted += 1;
+            if let Some(b) = self.batcher.push(q, Instant::now()) {
+                self.dispatch(b);
+            }
+            while let Some(b) = self.batcher.poll_timeout(Instant::now()) {
+                self.dispatch(b);
+            }
+        }
+        // Drain: flush pending, then wait for all results.
+        for b in self.batcher.drain(Instant::now()) {
+            self.dispatch(b);
+        }
+        while completed < submitted {
+            match self.results_rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(r) => {
+                    completed += 1;
+                    meter.record(r.latency_ms, r.items as u64);
+                    latencies.record(r.latency_ms);
+                    *buckets.entry(r.batch_bucket).or_default() += 1;
+                }
+                Err(_) => break, // worker died; report what we have
+            }
+        }
+        let elapsed = self.t0.elapsed().as_secs_f64();
+        meter.set_elapsed(elapsed);
+        ServeReport {
+            queries: completed,
+            items: total_items,
+            elapsed_s: elapsed,
+            qps_offered: if offered_horizon > 0.0 { n as f64 / offered_horizon } else { 0.0 },
+            bounded_throughput: meter.bounded_throughput(),
+            violation_rate: meter.violation_rate(),
+            mean_ms: latencies.mean(),
+            p50_ms: latencies.p50(),
+            p99_ms: latencies.p99(),
+            bucket_histogram: buckets.into_iter().collect(),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        for w in &mut self.workers {
+            w.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeploymentConfig, ServerGen, ServerPoolConfig};
+    use crate::coordinator::backend::MockBackend;
+    use crate::workload::PoissonArrivals;
+
+    fn deployment(workers: usize, routing: &str) -> DeploymentConfig {
+        DeploymentConfig {
+            sla_ms: 50.0,
+            batch_timeout_us: 200,
+            max_batch: 8,
+            routing: routing.into(),
+            pools: vec![ServerPoolConfig {
+                gen: ServerGen::Broadwell,
+                machines: workers,
+                colocation: 1,
+                models: vec![],
+            }],
+        }
+    }
+
+    fn queries(n: usize, qps: f64) -> Vec<Query> {
+        let mut arr = PoissonArrivals::new(qps, 42);
+        (0..n)
+            .map(|i| Query::new(i as u64, "rmc1-small", 2, arr.next_arrival_s()))
+            .collect()
+    }
+
+    #[test]
+    fn serves_all_queries_with_mock_backend() {
+        let cfg = deployment(2, "round-robin");
+        let backend = Arc::new(MockBackend { latency: Duration::from_micros(200) });
+        let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
+        let report = c.run_open_loop(queries(40, 2000.0), 50.0);
+        assert_eq!(report.queries, 40);
+        assert!(report.bounded_throughput > 0.0);
+        assert!(report.violation_rate < 0.2, "violations {}", report.violation_rate);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batches_fill_under_load() {
+        let cfg = deployment(1, "least-loaded");
+        let backend = Arc::new(MockBackend { latency: Duration::from_micros(100) });
+        let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
+        // 200 queries at very high rate: most batches should be b8.
+        let report = c.run_open_loop(queries(200, 100_000.0), 1000.0);
+        assert_eq!(report.queries, 200);
+        let b8 = report
+            .bucket_histogram
+            .iter()
+            .find(|(b, _)| *b == 8)
+            .map(|(_, n)| *n)
+            .unwrap_or(0);
+        assert!(b8 >= 10, "expected batched execution, got {:?}", report.bucket_histogram);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_policy_rejected() {
+        let mut cfg = deployment(1, "nope");
+        cfg.routing = "nope".into();
+        let backend = Arc::new(MockBackend { latency: Duration::from_micros(10) });
+        assert!(Coordinator::new(&cfg, backend, vec![1]).is_err());
+    }
+
+    #[test]
+    fn sla_violations_counted() {
+        let cfg = deployment(1, "round-robin");
+        // Backend slower than the SLA.
+        let backend = Arc::new(MockBackend { latency: Duration::from_millis(20) });
+        let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
+        let report = c.run_open_loop(queries(10, 10_000.0), 0.5);
+        assert!(report.violation_rate > 0.5);
+        c.shutdown();
+    }
+}

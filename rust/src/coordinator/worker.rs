@@ -1,0 +1,108 @@
+//! Worker threads: drain a per-worker batch queue, execute through the
+//! backend, and report per-query results.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::config::ServerGen;
+use crate::workload::QueryResult;
+
+use super::backend::Backend;
+use super::batcher::Batch;
+
+/// Handle to a spawned worker thread.
+pub struct WorkerHandle {
+    pub id: usize,
+    pub gen: ServerGen,
+    tx: Option<mpsc::Sender<Batch>>,
+    /// Batches queued + running (router load signal).
+    outstanding: Arc<AtomicUsize>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Spawn a worker. Results (one per query) flow to `results_tx`;
+    /// `t0` anchors latency measurement to the service start.
+    pub fn spawn(
+        id: usize,
+        gen: ServerGen,
+        backend: Arc<dyn Backend>,
+        results_tx: mpsc::Sender<QueryResult>,
+        t0: Instant,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Batch>();
+        let outstanding = Arc::new(AtomicUsize::new(0));
+        let out2 = outstanding.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("worker-{id}"))
+            .spawn(move || {
+                while let Ok(batch) = rx.recv() {
+                    let exec = backend.execute(&batch.model, batch.bucket, &batch.queries, gen);
+                    let done = Instant::now();
+                    match exec {
+                        Ok(ctrs) => {
+                            for (q, c) in batch.queries.iter().zip(ctrs) {
+                                let arrival =
+                                    t0 + std::time::Duration::from_secs_f64(q.arrival_s);
+                                let latency_ms = done
+                                    .checked_duration_since(arrival)
+                                    .unwrap_or_default()
+                                    .as_secs_f64()
+                                    * 1e3;
+                                let _ = results_tx.send(QueryResult {
+                                    id: q.id,
+                                    model: q.model.clone(),
+                                    items: q.items,
+                                    ctrs: c,
+                                    latency_ms,
+                                    batch_bucket: batch.bucket,
+                                    worker: id,
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("worker-{id}: batch failed: {e:#}");
+                            for q in &batch.queries {
+                                let _ = results_tx.send(QueryResult {
+                                    id: q.id,
+                                    model: q.model.clone(),
+                                    items: q.items,
+                                    ctrs: Vec::new(),
+                                    latency_ms: f64::INFINITY,
+                                    batch_bucket: batch.bucket,
+                                    worker: id,
+                                });
+                            }
+                        }
+                    }
+                    out2.fetch_sub(1, Ordering::SeqCst);
+                }
+            })
+            .expect("spawn worker");
+        WorkerHandle { id, gen, tx: Some(tx), outstanding, join: Some(join) }
+    }
+
+    pub fn submit(&self, batch: Batch) {
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        let _ = self.tx.as_ref().expect("worker shut down").send(batch);
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Close the queue and join the thread (drains pending batches).
+    pub fn shutdown(&mut self) {
+        self.tx.take(); // closes the channel; worker loop exits
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,44 @@
+//! Fig 1: fraction of data-center AI inference cycles per model class.
+//! Paper: RMC1+RMC2+RMC3 = 65%; all recommendation = 79%.
+
+use crate::config::ServerSpec;
+use crate::fleet::FleetModel;
+
+use super::render;
+
+pub fn report() -> String {
+    let acct = FleetModel::production_mix().account(&ServerSpec::broadwell());
+    let rows: Vec<Vec<String>> = acct
+        .service_shares
+        .iter()
+        .map(|(name, class, share)| {
+            vec![
+                name.clone(),
+                class.name().into(),
+                format!("{:.0}%", share * 100.0),
+            ]
+        })
+        .collect();
+    let mut out = render::table(
+        "Fig 1 — fleet AI-inference cycle shares by model class",
+        &["service", "class", "share"],
+        &rows,
+    );
+    out.push_str(&format!(
+        "\nRMC1-3 combined: {:.0}% (paper: 65%)\nall recommendation: {:.0}% (paper: 79%)\n",
+        acct.rmc_share() * 100.0,
+        acct.rec_share() * 100.0
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn report_contains_paper_anchors() {
+        let r = super::report();
+        assert!(r.contains("65%"));
+        assert!(r.contains("79%"));
+        assert!(r.contains("RMC2"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Fig 10: latency vs latency-bounded throughput as co-location scales
+//! (RMC2, across the three servers, SLA 450ms). Paper shape: Broadwell
+//! best at low co-location (N<=2); Skylake best under high co-location
+//! (exclusive hierarchy); Skylake cliff past ~18 jobs; Broadwell L2 MPKI
+//! rises ~29% by 16 jobs vs ~10% on Skylake.
+
+use crate::config::{ServerGen, ServerSpec};
+use crate::simulator::ColocationSim;
+
+use super::render;
+
+pub const BATCH: usize = 32;
+pub const SLA_MS: f64 = 450.0;
+
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub gen: ServerGen,
+    pub n_jobs: usize,
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_ips: f64,
+    pub l2_mpki: f64,
+    pub llc_mpki: f64,
+}
+
+pub fn sweep(gens: &[ServerGen], ns: &[usize]) -> Vec<Point> {
+    let cfg = crate::config::rmc2_small();
+    let mut out = Vec::new();
+    for &gen in gens {
+        for &n in ns {
+            let mut sim = ColocationSim::new(ServerSpec::by_gen(gen), &cfg, BATCH, n, 7);
+            let r = sim.run(2, 4);
+            let mut lat = r.latency_ms.clone();
+            let mean = lat.mean();
+            let thr = if mean <= SLA_MS { r.throughput_ips() } else { 0.0 };
+            out.push(Point {
+                gen,
+                n_jobs: n,
+                mean_ms: mean,
+                p99_ms: lat.p99(),
+                throughput_ips: thr,
+                l2_mpki: r.l2_mpki(),
+                llc_mpki: r.llc_mpki(),
+            });
+        }
+    }
+    out
+}
+
+pub fn report() -> String {
+    let ns = [1usize, 2, 4, 8, 12, 16, 20, 24];
+    let pts = sweep(&ServerGen::all(), &ns);
+    let mut out = String::new();
+    for gen in ServerGen::all() {
+        let rows: Vec<Vec<String>> = pts
+            .iter()
+            .filter(|p| p.gen == gen)
+            .map(|p| {
+                vec![
+                    format!("{}", p.n_jobs),
+                    render::f(p.mean_ms),
+                    render::f(p.p99_ms),
+                    render::f(p.throughput_ips),
+                    render::f(p.l2_mpki),
+                    render::f(p.llc_mpki),
+                ]
+            })
+            .collect();
+        out.push_str(&render::table(
+            &format!("Fig 10 — RMC2 co-location on {} (SLA {SLA_MS}ms)", gen.name()),
+            &["N", "mean ms", "p99 ms", "items/s in SLA", "L2 MPKI", "LLC MPKI"],
+            &rows,
+        ));
+        out.push('\n');
+    }
+    out.push_str(
+        "paper shape: Broadwell best N<=2; Skylake best under high co-location.\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadwell_wins_low_colocation_skylake_wins_high() {
+        let pts = sweep(&[ServerGen::Broadwell, ServerGen::Skylake], &[2, 16]);
+        let get = |g: ServerGen, n: usize| {
+            pts.iter().find(|p| p.gen == g && p.n_jobs == n).unwrap()
+        };
+        // N=2: Broadwell lower latency (paper: ~10% better).
+        assert!(
+            get(ServerGen::Broadwell, 2).mean_ms < get(ServerGen::Skylake, 2).mean_ms
+        );
+        // N=16: Skylake lower latency and >= throughput.
+        assert!(
+            get(ServerGen::Skylake, 16).mean_ms < get(ServerGen::Broadwell, 16).mean_ms,
+            "skl {} !< bdw {}",
+            get(ServerGen::Skylake, 16).mean_ms,
+            get(ServerGen::Broadwell, 16).mean_ms
+        );
+    }
+
+    #[test]
+    fn inclusive_interference_mechanisms_present() {
+        // Paper: Broadwell's L2 miss rate rises with co-location partly
+        // through inclusive back-invalidation (+21% RFO misses vs +9%
+        // on Skylake). Our simulator reproduces the *mechanism*: BDW
+        // back-invalidations grow with N and are impossible on SKL, and
+        // LLC misses rise with N on both. (The absolute L2-MPKI deltas
+        // are below this model's resolution — see EXPERIMENTS.md
+        // §Residuals.)
+        let cfg = crate::config::rmc2_small();
+        let backinv = |gen: ServerGen, n: usize| {
+            let mut sim =
+                crate::simulator::ColocationSim::new(ServerSpec::by_gen(gen), &cfg, BATCH, n, 7);
+            let r = sim.run(2, 3);
+            (r.counters.l2_back_invalidations, r.llc_mpki())
+        };
+        let (bdw_bi_2, bdw_llc_2) = backinv(ServerGen::Broadwell, 2);
+        let (bdw_bi_16, bdw_llc_16) = backinv(ServerGen::Broadwell, 16);
+        let (skl_bi_16, _) = backinv(ServerGen::Skylake, 16);
+        assert!(bdw_bi_16 > bdw_bi_2, "back-invalidations must grow: {bdw_bi_2} -> {bdw_bi_16}");
+        assert_eq!(skl_bi_16, 0, "exclusive hierarchy cannot back-invalidate");
+        assert!(bdw_llc_16 > bdw_llc_2, "LLC misses must rise with co-location");
+    }
+
+    #[test]
+    fn throughput_grows_with_colocation_within_sla() {
+        let pts = sweep(&[ServerGen::Skylake], &[1, 8]);
+        assert!(pts[1].throughput_ips > pts[0].throughput_ips);
+    }
+}

@@ -1,0 +1,102 @@
+//! Fig 11: production tail behaviour of a standalone FC operator under
+//! co-location. (a) latency distribution — Skylake unimodal (~45us),
+//! Broadwell multi-modal (~40/58/75us); (b) mean with p5-p99 band vs
+//! co-located jobs — Broadwell's p99 blows up past ~20 jobs, Skylake
+//! degrades gradually; (c) same for a 4x larger FC.
+
+use crate::config::{ServerGen, ServerSpec};
+use crate::simulator::colocation::focal_fc_distribution;
+
+use super::render;
+
+pub const EXECUTIONS: usize = 150;
+
+pub fn band_sweep(d_in: usize, d_out: usize, gens: &[ServerGen], ns: &[usize]) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for &gen in gens {
+        for &n in ns {
+            let mut h =
+                focal_fc_distribution(ServerSpec::by_gen(gen), d_in, d_out, 1, n, EXECUTIONS, 3);
+            rows.push(vec![
+                gen.name().into(),
+                format!("{n}"),
+                render::f(h.mean()),
+                render::f(h.p5()),
+                render::f(h.p99()),
+                format!("{:.2}", h.p99() / h.p5()),
+            ]);
+        }
+    }
+    rows
+}
+
+pub fn report() -> String {
+    let mut out = String::new();
+    // (a) distribution modes at heavy co-location.
+    for gen in [ServerGen::Broadwell, ServerGen::Skylake] {
+        let h = focal_fc_distribution(ServerSpec::by_gen(gen), 512, 512, 1, 20, 400, 9);
+        let modes = h.modes(8.0, 0.08);
+        out.push_str(&format!(
+            "Fig 11a — FC 512x512 on {} with 20 co-located jobs: {} mode(s) at {:?} us\n",
+            gen.name(),
+            modes.len(),
+            modes.iter().map(|m| (m * 10.0).round() / 10.0).collect::<Vec<_>>()
+        ));
+    }
+    out.push('\n');
+    // (b) mean + p5/p99 band vs co-location for the L2-sized FC.
+    let ns = [0usize, 5, 10, 15, 20, 24];
+    out.push_str(&render::table(
+        "Fig 11b — FC 512x512 latency (us) vs co-located jobs",
+        &["server", "N", "mean", "p5", "p99", "p99/p5"],
+        &band_sweep(512, 512, &[ServerGen::Broadwell, ServerGen::Skylake], &ns),
+    ));
+    out.push('\n');
+    // (c) larger FC.
+    out.push_str(&render::table(
+        "Fig 11c — FC 1024x1024 latency (us) vs co-located jobs",
+        &["server", "N", "mean", "p5", "p99", "p99/p5"],
+        &band_sweep(1024, 1024, &[ServerGen::Broadwell, ServerGen::Skylake], &ns),
+    ));
+    out.push_str("\npaper shape: Broadwell multi-modal w/ p99 blow-up >20 jobs; Skylake gradual.\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServerSpec;
+
+    #[test]
+    fn broadwell_spread_exceeds_skylake_under_colocation() {
+        let spread = |gen: ServerGen| {
+            let mut h =
+                focal_fc_distribution(ServerSpec::by_gen(gen), 512, 512, 1, 20, 200, 5);
+            h.p99() / h.p5()
+        };
+        assert!(
+            spread(ServerGen::Broadwell) > spread(ServerGen::Skylake),
+            "bdw {} <= skl {}",
+            spread(ServerGen::Broadwell),
+            spread(ServerGen::Skylake)
+        );
+    }
+
+    #[test]
+    fn mean_latency_rises_with_colocation_on_broadwell() {
+        let mean = |n: usize| {
+            focal_fc_distribution(ServerSpec::broadwell(), 512, 512, 1, n, 120, 5)
+                .mean()
+        };
+        assert!(mean(20) > mean(0), "mean(20) {} !> mean(0) {}", mean(20), mean(0));
+    }
+
+    #[test]
+    fn skylake_p99_grows_gradually() {
+        // The Skylake p99/p5 ratio stays small even at 24 jobs (L2-
+        // resident weights are insulated).
+        let mut h =
+            focal_fc_distribution(ServerSpec::skylake(), 512, 512, 1, 24, 150, 5);
+        assert!(h.p99() / h.p5() < 2.0, "ratio {}", h.p99() / h.p5());
+    }
+}

@@ -1,0 +1,81 @@
+//! Fig 12: at-scale RMC models vs MLPerf-NCF, normalized to NCF —
+//! paper: orders of magnitude more inference latency, embedding storage
+//! and FC parameters.
+
+use crate::config::ServerSpec;
+use crate::model::{ncf_graph, ModelCostSummary, ModelGraph};
+use crate::simulator::MachineSim;
+use crate::workload::SparseIdGen;
+
+use super::render;
+
+pub struct Fig12Row {
+    pub name: String,
+    pub latency_x: f64,
+    pub emb_x: f64,
+    pub fc_params_x: f64,
+}
+
+fn latency_ms(graph: &ModelGraph, rows: usize) -> f64 {
+    let mut sim = MachineSim::new(ServerSpec::broadwell(), 1);
+    let mut idgen = SparseIdGen::production_like(rows, 3);
+    sim.warmup(0, graph, 1, &mut idgen, 2);
+    sim.run_inference(0, graph, 1, &mut idgen, 1).ms()
+}
+
+pub fn rows() -> Vec<Fig12Row> {
+    let ncf_cfg = crate::config::ncf();
+    let ncf = ncf_graph(&ncf_cfg);
+    let ncf_sum = ModelCostSummary::of(&ncf);
+    let ncf_lat = latency_ms(&ncf, ncf_cfg.num_users);
+
+    let mut out = Vec::new();
+    for cfg in [
+        crate::config::rmc1_small(),
+        crate::config::rmc2_small(),
+        crate::config::rmc3_small(),
+    ] {
+        let g = ModelGraph::from_rmc(&cfg);
+        let s = ModelCostSummary::of(&g);
+        out.push(Fig12Row {
+            name: cfg.name.clone(),
+            latency_x: latency_ms(&g, cfg.rows) / ncf_lat,
+            emb_x: s.emb_bytes as f64 / ncf_sum.emb_bytes as f64,
+            fc_params_x: s.fc_params as f64 / ncf_sum.fc_params as f64,
+        });
+    }
+    out
+}
+
+pub fn report() -> String {
+    let table_rows: Vec<Vec<String>> = rows()
+        .into_iter()
+        .map(|r| {
+            vec![
+                r.name,
+                format!("{:.0}x", r.latency_x),
+                format!("{:.0}x", r.emb_x),
+                format!("{:.1}x", r.fc_params_x),
+            ]
+        })
+        .collect();
+    render::table(
+        "Fig 12 — RMC vs MLPerf-NCF (normalized to NCF = 1x)",
+        &["model", "latency", "emb storage", "FC params"],
+        &table_rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn rmcs_are_orders_of_magnitude_bigger() {
+        for r in super::rows() {
+            assert!(r.latency_x > 2.0, "{} latency_x {}", r.name, r.latency_x);
+            assert!(r.emb_x > 3.0, "{} emb_x {}", r.name, r.emb_x);
+        }
+        // RMC2 embedding gap is the headline: >100x.
+        let r2 = super::rows().into_iter().find(|r| r.name == "rmc2-small").unwrap();
+        assert!(r2.emb_x > 100.0, "rmc2 emb_x {}", r2.emb_x);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig 2: compute (FLOPs/sample) vs memory (bytes read/sample) scatter
+//! for the at-scale RMC models against CNN/RNN/NCF references.
+
+use crate::config::all_rmc;
+use crate::model::{cnn_reference, ncf_graph, rnn_reference, ModelCostSummary, ModelGraph};
+
+use super::render;
+
+pub fn summaries() -> Vec<ModelCostSummary> {
+    let mut out: Vec<ModelCostSummary> = all_rmc()
+        .iter()
+        .map(|c| ModelCostSummary::of(&ModelGraph::from_rmc(c)))
+        .collect();
+    out.push(ModelCostSummary::of(&ncf_graph(&crate::config::ncf())));
+    out.push(ModelCostSummary::of(&cnn_reference()));
+    out.push(ModelCostSummary::of(&rnn_reference()));
+    out
+}
+
+pub fn report() -> String {
+    let rows: Vec<Vec<String>> = summaries()
+        .iter()
+        .map(|s| {
+            vec![
+                s.name.clone(),
+                render::f(s.flops_per_sample as f64 / 1e6) + "M",
+                render::bytes(s.bytes_per_sample),
+                render::bytes(s.storage_bytes),
+            ]
+        })
+        .collect();
+    render::table(
+        "Fig 2 — per-sample FLOPs vs bytes (unit batch) + resident storage",
+        &["model", "FLOPs", "bytes r+w", "storage"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_holds() {
+        let s = summaries();
+        let find = |n: &str| s.iter().find(|x| x.name.contains(n)).unwrap().clone();
+        let (rmc2, rmc3, ncf, cnn) =
+            (find("rmc2-small"), find("rmc3-small"), find("ncf"), find("cnn"));
+        // RMC3 compute-heavy, RMC2 storage-heavy, NCF tiny, CNN most FLOPs.
+        assert!(rmc3.flops_per_sample > rmc2.flops_per_sample);
+        assert!(rmc2.storage_bytes > 10 * rmc3.flops_per_sample); // GBs vs MFLOPs scale
+        assert!(ncf.storage_bytes < rmc2.storage_bytes / 100);
+        assert!(cnn.flops_per_sample > rmc3.flops_per_sample);
+    }
+
+    #[test]
+    fn report_lists_all_models() {
+        let r = report();
+        for name in ["rmc1-small", "rmc2-large", "rmc3-small", "ncf", "cnn", "rnn"] {
+            assert!(r.contains(name), "missing {name}");
+        }
+    }
+}

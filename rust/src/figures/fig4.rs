@@ -1,0 +1,55 @@
+//! Fig 4: data-center-wide cycle breakdown by operator, recommendation
+//! vs non-recommendation models. Paper anchors: FC+SLS+Concat > 45% of
+//! recommendation cycles; SLS alone ~15% of all AI inference cycles.
+
+use crate::config::ServerSpec;
+use crate::fleet::FleetModel;
+use crate::model::OpCategory;
+
+use super::render;
+
+pub fn report() -> String {
+    let acct = FleetModel::production_mix().account(&ServerSpec::broadwell());
+    let cats = [OpCategory::Fc, OpCategory::Sls, OpCategory::Concat, OpCategory::Rest];
+    let mut rows = Vec::new();
+    for cat in cats {
+        rows.push(vec![
+            cat.name().to_string(),
+            format!("{:.1}%", acct.rec_op_shares.get(&cat).unwrap_or(&0.0) * 100.0),
+        ]);
+    }
+    let mut out = render::table(
+        "Fig 4 — recommendation-model cycles by operator (fleet-weighted)",
+        &["operator", "share of rec cycles"],
+        &rows,
+    );
+    let mut rows2 = Vec::new();
+    for cat in [OpCategory::Conv, OpCategory::Recurrent, OpCategory::Fc, OpCategory::Rest] {
+        rows2.push(vec![
+            cat.name().to_string(),
+            format!("{:.1}%", acct.nonrec_op_shares.get(&cat).unwrap_or(&0.0) * 100.0),
+        ]);
+    }
+    out.push('\n');
+    out.push_str(&render::table(
+        "Fig 4 — non-recommendation cycles by operator",
+        &["operator", "share of non-rec cycles"],
+        &rows2,
+    ));
+    out.push_str(&format!(
+        "\nSLS share of ALL fleet AI cycles: {:.1}% (paper: ~15%)\n",
+        acct.sls_total_share * 100.0
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn report_has_both_splits() {
+        let r = super::report();
+        assert!(r.contains("SparseLengthsSum"));
+        assert!(r.contains("non-recommendation"));
+        assert!(r.contains("paper: ~15%"));
+    }
+}

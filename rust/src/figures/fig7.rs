@@ -1,0 +1,112 @@
+//! Fig 7: (left) unit-batch inference latency of RMC1/2/3 on Broadwell
+//! — paper: 0.04ms / 0.30ms / 0.60ms, a 15x spread; (right) operator
+//! time breakdown — RMC1 ~61% FC + 20% SLS, RMC2 ~80% SLS, RMC3 >96% FC.
+
+use crate::config::{RmcConfig, ServerSpec};
+use crate::model::{ModelGraph, OpCategory};
+use crate::simulator::{InferenceBreakdown, MachineSim};
+use crate::workload::SparseIdGen;
+
+use super::render;
+
+/// Steady-state unit-batch breakdown for one model on one server.
+pub fn measure(cfg: &RmcConfig, spec: ServerSpec, batch: usize) -> InferenceBreakdown {
+    let graph = ModelGraph::from_rmc(cfg);
+    let mut sim = MachineSim::new(spec, 1);
+    let mut idgen = SparseIdGen::production_like(cfg.rows, 7);
+    sim.warmup(0, &graph, batch, &mut idgen, 3);
+    // Average a few steady-state inferences.
+    let mut acc: Option<InferenceBreakdown> = None;
+    let n = 5;
+    for _ in 0..n {
+        let b = sim.run_inference(0, &graph, batch, &mut idgen, 1);
+        acc = Some(match acc {
+            None => b,
+            Some(mut a) => {
+                a.total_ns += b.total_ns;
+                for (k, v) in b.by_cat {
+                    *a.by_cat.entry(k).or_default() += v;
+                }
+                a
+            }
+        });
+    }
+    let mut a = acc.unwrap();
+    a.total_ns /= n as f64;
+    for v in a.by_cat.values_mut() {
+        *v /= n as f64;
+    }
+    a
+}
+
+pub fn report() -> String {
+    let paper_ms = [("rmc1-small", 0.04), ("rmc2-small", 0.30), ("rmc3-small", 0.60)];
+    let mut rows = Vec::new();
+    let mut break_rows = Vec::new();
+    for cfg in [
+        crate::config::rmc1_small(),
+        crate::config::rmc2_small(),
+        crate::config::rmc3_small(),
+    ] {
+        let b = measure(&cfg, ServerSpec::broadwell(), 1);
+        let paper = paper_ms.iter().find(|(n, _)| *n == cfg.name).unwrap().1;
+        rows.push(vec![
+            cfg.name.clone(),
+            render::f(b.ms()),
+            render::f(paper),
+            format!("{:.1}x", b.ms() / paper),
+        ]);
+        break_rows.push(vec![
+            cfg.name.clone(),
+            format!("{:.0}%", b.cat_frac(OpCategory::Fc) * 100.0),
+            format!("{:.0}%", b.cat_frac(OpCategory::Sls) * 100.0),
+            format!("{:.0}%", b.cat_frac(OpCategory::Concat) * 100.0),
+            format!("{:.0}%", b.cat_frac(OpCategory::Rest) * 100.0),
+        ]);
+    }
+    let mut out = render::table(
+        "Fig 7 (left) — unit-batch latency on Broadwell",
+        &["model", "ms", "paper ms", "ratio"],
+        &rows,
+    );
+    out.push('\n');
+    out.push_str(&render::table(
+        "Fig 7 (right) — operator time breakdown (unit batch, Broadwell)",
+        &["model", "FC+BMM", "SLS", "Concat", "Rest"],
+        &break_rows,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_spread_is_order_of_magnitude() {
+        // Paper Takeaway 1: 15x spread RMC1 -> RMC3.
+        let l1 = measure(&crate::config::rmc1_small(), ServerSpec::broadwell(), 1).ms();
+        let l3 = measure(&crate::config::rmc3_small(), ServerSpec::broadwell(), 1).ms();
+        let spread = l3 / l1;
+        assert!(spread > 4.0, "spread {spread}");
+    }
+
+    #[test]
+    fn unit_latencies_in_paper_band() {
+        // Within ~3x of the paper's absolute numbers (different backend).
+        let l1 = measure(&crate::config::rmc1_small(), ServerSpec::broadwell(), 1).ms();
+        let l2 = measure(&crate::config::rmc2_small(), ServerSpec::broadwell(), 1).ms();
+        let l3 = measure(&crate::config::rmc3_small(), ServerSpec::broadwell(), 1).ms();
+        assert!((0.013..0.12).contains(&l1), "rmc1 {l1}ms vs paper 0.04");
+        assert!((0.1..0.9).contains(&l2), "rmc2 {l2}ms vs paper 0.30");
+        assert!((0.2..1.8).contains(&l3), "rmc3 {l3}ms vs paper 0.60");
+    }
+
+    #[test]
+    fn large_variant_slower_than_small() {
+        // Paper: large RMC1 ~2x small RMC1.
+        let s = measure(&crate::config::rmc1_small(), ServerSpec::broadwell(), 1).ms();
+        let l = measure(&crate::config::rmc1_large(), ServerSpec::broadwell(), 1).ms();
+        assert!(l > 1.1 * s, "large {l} vs small {s}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Fig 8: latency vs batch size {16, 128, 256} across Haswell /
+//! Broadwell / Skylake for each RMC. Paper shape: Broadwell wins small
+//! batches (1.3-1.65x over the others at 16); Skylake wins at >=128
+//! (AVX-512 pays off once lanes fill); RMC3's crossover is ~64.
+
+use crate::config::{RmcConfig, ServerGen, ServerSpec};
+
+use super::fig7::measure;
+use super::render;
+
+pub const BATCHES: [usize; 3] = [16, 128, 256];
+
+/// latency_ms[model][batch][gen]
+pub fn sweep(cfgs: &[RmcConfig], batches: &[usize]) -> Vec<Vec<Vec<f64>>> {
+    cfgs.iter()
+        .map(|cfg| {
+            batches
+                .iter()
+                .map(|&b| {
+                    ServerGen::all()
+                        .iter()
+                        .map(|&g| measure(cfg, ServerSpec::by_gen(g), b).ms())
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+pub fn report() -> String {
+    let cfgs = [
+        crate::config::rmc1_small(),
+        crate::config::rmc2_small(),
+        crate::config::rmc3_small(),
+    ];
+    let data = sweep(&cfgs, &BATCHES);
+    let mut out = String::new();
+    for (ci, cfg) in cfgs.iter().enumerate() {
+        let rows: Vec<Vec<String>> = BATCHES
+            .iter()
+            .enumerate()
+            .map(|(bi, &b)| {
+                let l = &data[ci][bi];
+                let best = if l[1] <= l[0] && l[1] <= l[2] {
+                    "Broadwell"
+                } else if l[2] <= l[0] {
+                    "Skylake"
+                } else {
+                    "Haswell"
+                };
+                vec![
+                    format!("{b}"),
+                    render::f(l[0]),
+                    render::f(l[1]),
+                    render::f(l[2]),
+                    best.to_string(),
+                ]
+            })
+            .collect();
+        out.push_str(&render::table(
+            &format!("Fig 8 — {} latency (ms) by batch and server", cfg.name),
+            &["batch", "Haswell", "Broadwell", "Skylake", "best"],
+            &rows,
+        ));
+        out.push('\n');
+    }
+    out.push_str("paper shape: Broadwell best at batch 16; Skylake best at >=128.\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lat(cfg: &RmcConfig, gen: ServerGen, b: usize) -> f64 {
+        measure(cfg, ServerSpec::by_gen(gen), b).ms()
+    }
+
+    #[test]
+    fn broadwell_wins_batch16_all_models() {
+        for cfg in [
+            crate::config::rmc1_small(),
+            crate::config::rmc2_small(),
+            crate::config::rmc3_small(),
+        ] {
+            let h = lat(&cfg, ServerGen::Haswell, 16);
+            let bdw = lat(&cfg, ServerGen::Broadwell, 16);
+            let s = lat(&cfg, ServerGen::Skylake, 16);
+            assert!(bdw < h, "{}: bdw {bdw} !< hsw {h}", cfg.name);
+            assert!(bdw < s, "{}: bdw {bdw} !< skl {s}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn broadwell_speedup_ratios_in_band() {
+        // Paper at batch 16: 1.4x/1.5x (RMC1), 1.3x/1.4x (RMC2),
+        // 1.32x/1.65x (RMC3) vs Haswell/Skylake. Accept +-40%.
+        let cfg = crate::config::rmc3_small();
+        let h = lat(&cfg, ServerGen::Haswell, 16);
+        let bdw = lat(&cfg, ServerGen::Broadwell, 16);
+        let s = lat(&cfg, ServerGen::Skylake, 16);
+        assert!((1.0..2.4).contains(&(h / bdw)), "hsw/bdw {}", h / bdw);
+        assert!((1.1..2.5).contains(&(s / bdw)), "skl/bdw {}", s / bdw);
+    }
+
+    #[test]
+    fn skylake_wins_large_batch_rmc3() {
+        // Takeaway 4: compute-intensive RMC3 crosses over by batch ~64.
+        let cfg = crate::config::rmc3_small();
+        let bdw = lat(&cfg, ServerGen::Broadwell, 128);
+        let s = lat(&cfg, ServerGen::Skylake, 128);
+        assert!(s < bdw, "skl {s} !< bdw {bdw} at batch 128");
+        let bdw256 = lat(&cfg, ServerGen::Broadwell, 256);
+        let s256 = lat(&cfg, ServerGen::Skylake, 256);
+        assert!(s256 < bdw256);
+    }
+
+    #[test]
+    fn haswell_worst_on_memory_bound_rmc2() {
+        // Takeaway 3: Haswell's DDR3 hurts SLS-dominated RMC2.
+        let cfg = crate::config::rmc2_small();
+        let h = lat(&cfg, ServerGen::Haswell, 16);
+        let bdw = lat(&cfg, ServerGen::Broadwell, 16);
+        assert!(h > bdw);
+    }
+
+    #[test]
+    fn latency_grows_with_batch() {
+        let cfg = crate::config::rmc2_small();
+        let a = lat(&cfg, ServerGen::Skylake, 16);
+        let b = lat(&cfg, ServerGen::Skylake, 256);
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,101 @@
+//! Fig 9: per-model latency degradation under co-location on Broadwell
+//! (batch 32, N = 1..8). Paper: at N=8 latency degrades 1.3x / 2.6x /
+//! 1.6x for RMC1/2/3; RMC2's FC degrades 1.6x and SLS 3x; RMC1's SLS
+//! share grows 15% -> 35%.
+
+use crate::config::{RmcConfig, ServerSpec};
+use crate::model::OpCategory;
+use crate::simulator::{ColocationResult, ColocationSim};
+
+use super::render;
+
+pub const BATCH: usize = 32;
+
+pub fn measure(cfg: &RmcConfig, n_jobs: usize) -> ColocationResult {
+    ColocationSim::new(ServerSpec::broadwell(), cfg, BATCH, n_jobs, 42).run(3, 6)
+}
+
+pub fn report() -> String {
+    let paper_deg = [("rmc1-small", 1.3), ("rmc2-small", 2.6), ("rmc3-small", 1.6)];
+    let mut out = String::new();
+    for cfg in [
+        crate::config::rmc1_small(),
+        crate::config::rmc2_small(),
+        crate::config::rmc3_small(),
+    ] {
+        let solo = measure(&cfg, 1);
+        let mut rows = Vec::new();
+        for n in [1usize, 2, 4, 8] {
+            let r = if n == 1 { solo.clone() } else { measure(&cfg, n) };
+            let total: f64 = r.mean_cat_ns.values().sum();
+            let frac = |c: OpCategory| {
+                r.mean_cat_ns.get(&c).copied().unwrap_or(0.0) / total.max(1e-9)
+            };
+            rows.push(vec![
+                format!("{n}"),
+                render::f(r.mean_ms()),
+                format!("{:.2}x", r.mean_ms() / solo.mean_ms()),
+                format!("{:.0}%", frac(OpCategory::Fc) * 100.0),
+                format!("{:.0}%", frac(OpCategory::Sls) * 100.0),
+                format!("{:.0}%", (frac(OpCategory::Concat) + frac(OpCategory::Rest)) * 100.0),
+            ]);
+        }
+        let paper = paper_deg.iter().find(|(n, _)| *n == cfg.name).unwrap().1;
+        out.push_str(&render::table(
+            &format!(
+                "Fig 9 — {} co-location on Broadwell, batch {BATCH} (paper N=8 deg: {paper}x)",
+                cfg.name
+            ),
+            &["N", "mean ms", "deg", "FC", "SLS", "Rest"],
+            &rows,
+        ));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::OpCategory;
+
+    #[test]
+    fn degradation_ordering_matches_paper() {
+        // RMC2 degrades most, RMC1 least (paper: 2.6 > 1.6 > 1.3).
+        let deg = |cfg: &RmcConfig| {
+            measure(cfg, 8).mean_ms() / measure(cfg, 1).mean_ms()
+        };
+        let d1 = deg(&crate::config::rmc1_small());
+        let d2 = deg(&crate::config::rmc2_small());
+        let d3 = deg(&crate::config::rmc3_small());
+        assert!(d2 > d3 && d2 > d1, "d1 {d1} d2 {d2} d3 {d3}");
+        assert!(d2 > 1.4, "rmc2 must degrade substantially, got {d2}");
+        assert!(d1 > 1.0, "even rmc1 degrades, got {d1}");
+    }
+
+    #[test]
+    fn rmc1_sls_share_grows_with_colocation() {
+        // Paper: 15% -> 35% from N=1 to N=8.
+        let frac = |n: usize| {
+            let r = measure(&crate::config::rmc1_small(), n);
+            let total: f64 = r.mean_cat_ns.values().sum();
+            r.mean_cat_ns.get(&OpCategory::Sls).copied().unwrap_or(0.0) / total
+        };
+        let f1 = frac(1);
+        let f8 = frac(8);
+        assert!(f8 > f1, "sls share should grow: {f1} -> {f8}");
+    }
+
+    #[test]
+    fn rmc2_sls_degrades_more_than_fc() {
+        // Paper: SLS 3x vs FC 1.6x for RMC2 at N=8.
+        let solo = measure(&crate::config::rmc2_small(), 1);
+        let co = measure(&crate::config::rmc2_small(), 8);
+        let d = |r: &crate::simulator::ColocationResult, c| {
+            r.mean_cat_ns.get(&c).copied().unwrap_or(1e-9)
+        };
+        let sls_deg = d(&co, OpCategory::Sls) / d(&solo, OpCategory::Sls);
+        let fc_deg = d(&co, OpCategory::Fc) / d(&solo, OpCategory::Fc);
+        assert!(sls_deg > fc_deg, "sls {sls_deg} !> fc {fc_deg}");
+    }
+}

@@ -1,0 +1,65 @@
+//! Figure/table regenerators — one module per paper experiment
+//! (DESIGN.md §6 index). Each returns a plain-text report mirroring the
+//! rows/series the paper plots; `recsys figure <id>` prints them and the
+//! `benches/` binaries time their kernels.
+
+pub mod fig1;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig14;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod render;
+pub mod simd;
+pub mod tables;
+
+/// All figure ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig14", "table1", "table2", "table3", "simd",
+];
+
+/// Run one figure by id.
+pub fn run(id: &str) -> anyhow::Result<String> {
+    Ok(match id {
+        "fig1" => fig1::report(),
+        "fig2" => fig2::report(),
+        "fig4" => fig4::report(),
+        "fig5" => fig5::report(),
+        "fig7" => fig7::report(),
+        "fig8" => fig8::report(),
+        "fig9" => fig9::report(),
+        "fig10" => fig10::report(),
+        "fig11" => fig11::report(),
+        "fig12" => fig12::report(),
+        "fig14" => fig14::report(),
+        "table1" => tables::table1(),
+        "table2" => tables::table2(),
+        "table3" => tables::table3(),
+        "simd" => simd::report(),
+        other => anyhow::bail!("unknown figure '{other}' (available: {ALL:?})"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_figure_errors() {
+        assert!(super::run("fig99").is_err());
+    }
+
+    #[test]
+    fn all_ids_resolve() {
+        // Only run the cheap ones end-to-end here; heavier figures have
+        // their own module tests. This checks dispatch wiring.
+        for id in ["table1", "table2", "fig2", "fig12", "simd"] {
+            let out = super::run(id).unwrap();
+            assert!(!out.is_empty());
+        }
+    }
+}

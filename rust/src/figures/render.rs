@@ -1,0 +1,96 @@
+//! Tiny text-table renderer shared by the figure reports.
+
+/// Render a table with a header row; columns are auto-sized.
+pub fn table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            let w = widths.get(i).copied().unwrap_or(c.len());
+            if i == 0 {
+                line.push_str(&format!("{c:<w$}"));
+            } else {
+                line.push_str(&format!("  {c:>w$}"));
+            }
+        }
+        line.push('\n');
+        line
+    };
+    let header_cells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&header_cells, &widths));
+    let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+    out.push_str(&"-".repeat(total));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// Format a float with engineering-friendly precision.
+pub fn f(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 0.01 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+/// Human-readable bytes.
+pub fn bytes(v: u64) -> String {
+    const UNITS: &[&str] = &["B", "KB", "MB", "GB", "TB"];
+    let mut x = v as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u + 1 < UNITS.len() {
+        x /= 1024.0;
+        u += 1;
+    }
+    format!("{x:.1}{}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let out = table(
+            "T",
+            &["name", "value"],
+            &[vec!["a".into(), "1".into()], vec!["longer".into(), "22".into()]],
+        );
+        assert!(out.contains("## T"));
+        assert!(out.contains("longer"));
+        assert!(out.lines().count() >= 5);
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512.0B");
+        assert_eq!(bytes(2048), "2.0KB");
+        assert_eq!(bytes(10 * 1024 * 1024 * 1024), "10.0GB");
+    }
+
+    #[test]
+    fn float_precision_tiers() {
+        assert_eq!(f(0.0), "0");
+        assert_eq!(f(12345.6), "12346");
+        assert_eq!(f(42.42), "42.4");
+        assert_eq!(f(0.25), "0.250");
+    }
+}

@@ -1,0 +1,32 @@
+//! # recsys — reproduction of "The Architectural Implications of Facebook's
+//! DNN-based Personalized Recommendation" (Gupta et al., 2019)
+//!
+//! A three-layer Rust + JAX + Pallas framework:
+//!
+//! * **L3 (this crate)** — serving coordinator (router / dynamic batcher /
+//!   SLA tracking / co-location scheduler), a PJRT runtime that executes the
+//!   AOT-compiled DLRM artifacts, and the architectural simulation substrate
+//!   (set-associative caches, DRAM, SIMD core models of the paper's Table II
+//!   Intel servers) that regenerates every table and figure.
+//! * **L2 (python/compile/model.py)** — the DLRM forward graph in JAX.
+//! * **L1 (python/compile/kernels/)** — Pallas SLS + MLP kernels.
+//!
+//! Python never runs on the request path: `make artifacts` lowers everything
+//! to HLO text once; the rust binary is self-contained afterwards.
+//!
+//! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod fleet;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,316 @@
+//! `recsys` — CLI leader entrypoint.
+//!
+//! Subcommands (std-only arg parsing; clap is unavailable offline):
+//!   recsys info                         artifact + platform summary
+//!   recsys figure <id|all> [--out-dir]  regenerate paper tables/figures
+//!   recsys serve [--config f.json] [--qps N] [--queries N] [--model M]
+//!                [--impl xla|pallas]    end-to-end PJRT serving run
+//!   recsys check                        golden-output verification
+//!   recsys simulate --model M [--gen G] [--batch B] [--jobs N]
+//!                                       one simulator measurement
+//!   recsys tune --model M [--qps N] [--sla MS]
+//!                                       SLA-aware batch-bucket autotuner
+//!   recsys shard --model M [--gen G] [--batch B]
+//!                                       distributed (table-sharded) study
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use recsys::config::{DeploymentConfig, ServerGen, ServerSpec};
+use recsys::coordinator::{Coordinator, PjrtBackend};
+use recsys::model::ModelGraph;
+use recsys::runtime::{default_artifacts_dir, golden_dense, golden_ids, golden_lwts, ModelPool};
+use recsys::simulator::MachineSim;
+use recsys::workload::{PoissonArrivals, Query, SparseIdGen};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".into());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(),
+        "figure" => cmd_figure(&pos, &flags),
+        "serve" => cmd_serve(&flags),
+        "check" => cmd_check(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "tune" => cmd_tune(&flags),
+        "shard" => cmd_shard(&flags),
+        _ => {
+            eprintln!(
+                "usage: recsys <info|figure|serve|check|simulate|tune|shard> [flags]\n\
+                 figure ids: {:?} or 'all'",
+                recsys::figures::ALL
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    println!("artifacts dir: {dir:?}");
+    let manifest = recsys::runtime::Manifest::load(&dir)?;
+    println!("manifest v{} — {} variants", manifest.version, manifest.variants.len());
+    for m in manifest.models() {
+        let batches: Vec<usize> = manifest
+            .variants
+            .iter()
+            .filter(|v| v.model == m && v.impl_ == "xla")
+            .map(|v| v.batch)
+            .collect();
+        println!("  {m}: xla batches {batches:?}");
+    }
+    let rt = recsys::runtime::PjrtRuntime::cpu()?;
+    println!("pjrt platform: {}", rt.platform());
+    Ok(())
+}
+
+fn cmd_figure(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let id = pos.get(1).map(String::as_str).unwrap_or("all");
+    let out_dir = flags.get("out-dir").map(std::path::PathBuf::from);
+    let ids: Vec<&str> = if id == "all" {
+        recsys::figures::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        eprintln!("[figure] {id} ...");
+        let report = recsys::figures::run(id)?;
+        match &out_dir {
+            Some(dir) => {
+                std::fs::create_dir_all(dir)?;
+                std::fs::write(dir.join(format!("{id}.txt")), &report)?;
+                println!("wrote {}/{id}.txt", dir.display());
+            }
+            None => println!("{report}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = match flags.get("config") {
+        Some(path) => DeploymentConfig::from_path(std::path::Path::new(path))?,
+        None => DeploymentConfig::single_node(),
+    };
+    let model = flags.get("model").cloned().unwrap_or_else(|| "rmc1-small".into());
+    let qps: f64 = flags.get("qps").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
+    let n: usize = flags.get("queries").map(|s| s.parse()).transpose()?.unwrap_or(500);
+    let items: usize = flags.get("items").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let impl_ = flags.get("impl").cloned().unwrap_or_else(|| "xla".into());
+
+    println!("loading artifacts + compiling {model} ({impl_}) ...");
+    let pool = Arc::new(ModelPool::new(&default_artifacts_dir())?);
+    pool.preload(&model, &impl_)?;
+    let buckets = pool.manifest.batches.clone();
+    let mut backend = PjrtBackend::new(pool);
+    backend.impl_ = impl_;
+    let mut coordinator = Coordinator::new(&cfg, Arc::new(backend), buckets)?;
+
+    let mut arr = PoissonArrivals::new(qps, 1234);
+    let queries: Vec<Query> = (0..n)
+        .map(|i| Query::new(i as u64, model.clone(), items, arr.next_arrival_s()))
+        .collect();
+    println!("serving {n} queries at {qps} qps (SLA {} ms) ...", cfg.sla_ms);
+    let report = coordinator.run_open_loop(queries, cfg.sla_ms);
+    print!("{}", report.render());
+    coordinator.shutdown();
+    Ok(())
+}
+
+/// Verify every golden variant end-to-end through PJRT.
+fn cmd_check(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    let pool = ModelPool::new(&dir)?;
+    let only_impl = flags.get("impl").cloned();
+    let mut checked = 0;
+    for v in pool.manifest.variants.clone() {
+        let Some(golden) = v.golden_ctr.clone() else { continue };
+        if let Some(imp) = &only_impl {
+            if v.impl_ != *imp {
+                continue;
+            }
+        }
+        let compiled = pool.get(&v.model, &v.impl_, v.batch)?;
+        let got = if v.kind == "ncf" {
+            let users = v.config_usize("users")?;
+            let items = v.config_usize("items")?;
+            let (u, i) = recsys::runtime::golden_ncf_ids(v.batch, users, items);
+            compiled.run_ncf(&u, &i)?
+        } else {
+            let t = v.config_usize("num_tables")?;
+            let l = v.config_usize("lookups")?;
+            let r = v.config_usize("rows")?;
+            let d = v.config_usize("dense_dim")?;
+            compiled.run_rmc(
+                &golden_dense(v.batch, d),
+                &golden_ids(t, v.batch, l, r),
+                &golden_lwts(t, v.batch, l),
+            )?
+        };
+        let max_err = got
+            .iter()
+            .zip(&golden)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let ok = max_err < 2e-4;
+        println!(
+            "{} {:<24} max|err| = {:.2e}",
+            if ok { "PASS" } else { "FAIL" },
+            v.name,
+            max_err
+        );
+        if !ok {
+            anyhow::bail!("golden mismatch for {}", v.name);
+        }
+        checked += 1;
+    }
+    println!("{checked} golden variants verified");
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model = flags.get("model").cloned().unwrap_or_else(|| "rmc2-small".into());
+    let gen = match flags.get("gen").map(String::as_str) {
+        Some("haswell") => ServerGen::Haswell,
+        Some("skylake") => ServerGen::Skylake,
+        _ => ServerGen::Broadwell,
+    };
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let jobs: usize = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let cfg = recsys::config::all_rmc()
+        .into_iter()
+        .find(|c| c.name == model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    if jobs > 1 {
+        let mut sim =
+            recsys::simulator::ColocationSim::new(ServerSpec::by_gen(gen), &cfg, batch, jobs, 1);
+        let r = sim.run(3, 6);
+        let mut lat = r.latency_ms.clone();
+        println!(
+            "{model} on {} x{jobs} batch {batch}: mean {:.3}ms p99 {:.3}ms  L2 {:.1} MPKI  LLC {:.1} MPKI",
+            gen.name(),
+            lat.mean(),
+            lat.p99(),
+            r.l2_mpki(),
+            r.llc_mpki()
+        );
+    } else {
+        let graph = ModelGraph::from_rmc(&cfg);
+        let mut sim = MachineSim::new(ServerSpec::by_gen(gen), 1);
+        let mut idgen = SparseIdGen::production_like(cfg.rows, 7);
+        sim.warmup(0, &graph, batch, &mut idgen, 3);
+        let b = sim.run_inference(0, &graph, batch, &mut idgen, 1);
+        println!("{model} on {} batch {batch}: {:.3} ms", gen.name(), b.ms());
+        for (cat, ns) in &b.by_cat {
+            println!("  {:<18} {:>8.1} us ({:.0}%)", cat.name(), ns / 1e3, 100.0 * ns / b.total_ns);
+        }
+    }
+    Ok(())
+}
+
+/// SLA-aware batch-bucket autotuning over the simulated latency table.
+fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model = flags.get("model").cloned().unwrap_or_else(|| "rmc1-small".into());
+    let qps: f64 = flags.get("qps").map(|s| s.parse()).transpose()?.unwrap_or(2000.0);
+    let sla_ms: f64 = flags.get("sla").map(|s| s.parse()).transpose()?.unwrap_or(10.0);
+    let timeout_ms: f64 =
+        flags.get("timeout-ms").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+    let gen = match flags.get("gen").map(String::as_str) {
+        Some("haswell") => ServerGen::Haswell,
+        Some("skylake") => ServerGen::Skylake,
+        _ => ServerGen::Broadwell,
+    };
+    let backend = recsys::coordinator::SimBackend::new(0.0);
+    let buckets = [1usize, 8, 32, 128];
+    let lat = |b: usize| backend.latency_ms(&model, b, gen).unwrap();
+    // Pre-warm the memoized table.
+    for &b in &buckets {
+        lat(b);
+    }
+    let (best, pts) = recsys::coordinator::tune(&buckets, lat, qps, sla_ms, timeout_ms);
+    println!(
+        "autotune {model} on {} at {qps} items/s, SLA {sla_ms} ms, timeout {timeout_ms} ms:",
+        gen.name()
+    );
+    println!(
+        "{:>8} {:>10} {:>10} {:>12} {:>12} {:>9}",
+        "bucket", "exec ms", "wait ms", "latency ms", "items/s", "feasible"
+    );
+    for p in &pts {
+        println!(
+            "{:>8} {:>10.3} {:>10.3} {:>12.3} {:>12.0} {:>9}",
+            p.bucket, p.exec_ms, p.wait_ms, p.latency_ms, p.throughput, p.feasible
+        );
+    }
+    match best {
+        Some(b) => println!("-> pick bucket {b}"),
+        None => println!("-> no feasible bucket under this SLA"),
+    }
+    Ok(())
+}
+
+/// Distributed (table-sharded) inference study (paper §VII).
+fn cmd_shard(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model = flags.get("model").cloned().unwrap_or_else(|| "rmc2-large".into());
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let gen = match flags.get("gen").map(String::as_str) {
+        Some("haswell") => ServerGen::Haswell,
+        Some("skylake") => ServerGen::Skylake,
+        _ => ServerGen::Broadwell,
+    };
+    let cfg = recsys::config::all_rmc()
+        .into_iter()
+        .find(|c| c.name == model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let net = recsys::simulator::distributed::NetworkModel::default();
+    let results = recsys::simulator::distributed::shard_sweep(
+        &cfg,
+        &ServerSpec::by_gen(gen),
+        &net,
+        &[1, 2, 4, 8, 16],
+        batch,
+    );
+    println!("table-sharded {model} on {} (batch {batch}):", gen.name());
+    println!(
+        "{:>7} {:>11} {:>11} {:>11} {:>11} {:>12}",
+        "shards", "total ms", "shard SLS", "leader ms", "network ms", "emb/shard"
+    );
+    for r in results {
+        println!(
+            "{:>7} {:>11.3} {:>11.3} {:>11.3} {:>11.3} {:>11.1}GB",
+            r.shards,
+            r.total_ms,
+            r.shard_sls_ms,
+            r.leader_ms,
+            r.network_ms,
+            r.shard_emb_bytes as f64 / 1e9
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! Latency distribution tracking with exact quantiles.
+//!
+//! Keeps every sample (figure-scale runs are bounded, so exactness is
+//! affordable) with a lazily-sorted backing store; `quantile` is exact,
+//! which matters for the p99-vs-p5 bands of Fig 11.
+
+
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        debug_assert!(v.is_finite() && v >= 0.0, "latency must be finite/non-negative");
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact quantile by linear interpolation between order statistics.
+    /// `q` in [0, 1].
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile out of range");
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let pos = q * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn p5(&mut self) -> f64 {
+        self.quantile(0.05)
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.quantile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.quantile(1.0)
+    }
+
+    /// Count of samples within [lo, hi) — used to detect the discrete
+    /// latency modes of Fig 11a.
+    pub fn count_in(&self, lo: f64, hi: f64) -> usize {
+        self.samples.iter().filter(|&&v| v >= lo && v < hi).count()
+    }
+
+    /// Simple mode detection: bucketize at `width` resolution and return
+    /// bucket centers holding at least `min_frac` of the mass, sorted.
+    pub fn modes(&self, width: f64, min_frac: f64) -> Vec<f64> {
+        if self.samples.is_empty() {
+            return vec![];
+        }
+        use std::collections::HashMap;
+        let mut buckets: HashMap<i64, usize> = HashMap::new();
+        for &s in &self.samples {
+            *buckets.entry((s / width).floor() as i64).or_default() += 1;
+        }
+        let thresh = (min_frac * self.samples.len() as f64).ceil() as usize;
+        let mut modes: Vec<(i64, usize)> = buckets
+            .into_iter()
+            .filter(|(_, c)| *c >= thresh)
+            .collect();
+        modes.sort_by_key(|(b, _)| *b);
+        // Collapse adjacent buckets into one mode (keep the heavier).
+        let mut out: Vec<(i64, usize)> = Vec::new();
+        for (b, c) in modes {
+            match out.last_mut() {
+                Some((pb, pc)) if b - *pb <= 1 => {
+                    if c > *pc {
+                        *pb = b;
+                        *pc = c;
+                    }
+                }
+                _ => out.push((b, c)),
+            }
+        }
+        out.into_iter().map(|(b, _)| (b as f64 + 0.5) * width).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_exact() {
+        let mut h = LatencyHistogram::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            h.record(v);
+        }
+        assert_eq!(h.p50(), 3.0);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 5.0);
+        assert!((h.quantile(0.25) - 2.0).abs() < 1e-9);
+        assert!((h.mean() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p99_tracks_tail() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record(1.0);
+        }
+        h.record(100.0);
+        assert!(h.p99() > 1.0);
+        assert_eq!(h.p50(), 1.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(1.0);
+        b.record(3.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.p50(), 2.0);
+    }
+
+    #[test]
+    fn mode_detection_finds_three_modes() {
+        // Synthetic tri-modal distribution like Fig 11a Broadwell.
+        let mut h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(40.0);
+            h.record(58.0);
+            h.record(75.0);
+        }
+        let modes = h.modes(5.0, 0.1);
+        assert_eq!(modes.len(), 3, "modes: {modes:?}");
+    }
+
+    #[test]
+    fn unimodal_has_one_mode() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..200 {
+            h.record(45.0 + (i % 7) as f64 * 0.1);
+        }
+        assert_eq!(h.modes(5.0, 0.1).len(), 1);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut h = LatencyHistogram::new();
+        assert!(h.p50().is_nan());
+        assert!(h.mean().is_nan());
+    }
+}

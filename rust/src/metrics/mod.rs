@@ -1,0 +1,11 @@
+//! Metrics: streaming histograms with exact percentiles (p5/p50/p99 for
+//! Fig 11), cache counters (MPKI for Figs 5/10), and the paper's headline
+//! metric — latency-bounded throughput (§III).
+
+mod counters;
+mod histogram;
+mod sla_meter;
+
+pub use counters::{CacheCounters, MpkiReport};
+pub use histogram::LatencyHistogram;
+pub use sla_meter::SlaMeter;

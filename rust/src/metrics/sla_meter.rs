@@ -1,0 +1,106 @@
+//! Latency-bounded throughput — the paper's headline data-center metric
+//! (§III): "the number of items that can be ranked given SLA
+//! requirements". A query only counts toward throughput if it finished
+//! within the SLA bound; late queries are preemptively-terminated work
+//! (the paper: "missing latency targets results in jobs being
+//! preemptively terminated").
+
+
+use super::histogram::LatencyHistogram;
+
+#[derive(Debug, Clone)]
+pub struct SlaMeter {
+    pub sla_ms: f64,
+    latencies: LatencyHistogram,
+    items_ok: u64,
+    items_late: u64,
+    queries_ok: u64,
+    queries_late: u64,
+    elapsed_s: f64,
+}
+
+impl SlaMeter {
+    pub fn new(sla_ms: f64) -> Self {
+        SlaMeter {
+            sla_ms,
+            latencies: LatencyHistogram::new(),
+            items_ok: 0,
+            items_late: 0,
+            queries_ok: 0,
+            queries_late: 0,
+            elapsed_s: 0.0,
+        }
+    }
+
+    /// Record one completed query of `items` ranked items.
+    pub fn record(&mut self, latency_ms: f64, items: u64) {
+        self.latencies.record(latency_ms);
+        if latency_ms <= self.sla_ms {
+            self.items_ok += items;
+            self.queries_ok += 1;
+        } else {
+            self.items_late += items;
+            self.queries_late += 1;
+        }
+    }
+
+    pub fn set_elapsed(&mut self, secs: f64) {
+        self.elapsed_s = secs;
+    }
+
+    /// Items ranked per second *within SLA* — the headline metric.
+    pub fn bounded_throughput(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            return 0.0;
+        }
+        self.items_ok as f64 / self.elapsed_s
+    }
+
+    /// Fraction of queries violating the SLA.
+    pub fn violation_rate(&self) -> f64 {
+        let total = self.queries_ok + self.queries_late;
+        if total == 0 {
+            return 0.0;
+        }
+        self.queries_late as f64 / total as f64
+    }
+
+    pub fn queries(&self) -> u64 {
+        self.queries_ok + self.queries_late
+    }
+
+    pub fn latencies_mut(&mut self) -> &mut LatencyHistogram {
+        &mut self.latencies
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn late_queries_do_not_count() {
+        let mut m = SlaMeter::new(10.0);
+        m.record(5.0, 100);
+        m.record(15.0, 100); // late: terminated, contributes nothing
+        m.set_elapsed(1.0);
+        assert_eq!(m.bounded_throughput(), 100.0);
+        assert_eq!(m.violation_rate(), 0.5);
+        assert_eq!(m.queries(), 2);
+    }
+
+    #[test]
+    fn boundary_is_inclusive() {
+        let mut m = SlaMeter::new(10.0);
+        m.record(10.0, 7);
+        m.set_elapsed(1.0);
+        assert_eq!(m.bounded_throughput(), 7.0);
+        assert_eq!(m.violation_rate(), 0.0);
+    }
+
+    #[test]
+    fn zero_elapsed_guard() {
+        let m = SlaMeter::new(1.0);
+        assert_eq!(m.bounded_throughput(), 0.0);
+    }
+}

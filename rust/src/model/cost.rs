@@ -1,0 +1,138 @@
+//! Static (machine-independent) cost aggregation over model graphs —
+//! the quantities plotted in Figs 2 and 12.
+
+use std::collections::HashMap;
+
+
+use super::graph::ModelGraph;
+use super::ops::OpCategory;
+
+/// Aggregated static costs of one graph at one batch size.
+#[derive(Debug, Clone)]
+pub struct GraphCost {
+    pub batch: usize,
+    pub flops: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Resident parameter storage (FC weights + embedding tables).
+    pub storage_bytes: u64,
+    /// FLOPs per category — feeds the breakdown figures.
+    pub flops_by_cat: HashMap<OpCategory, u64>,
+    pub bytes_by_cat: HashMap<OpCategory, u64>,
+}
+
+impl GraphCost {
+    pub fn of(graph: &ModelGraph, batch: usize) -> Self {
+        let mut flops = 0u64;
+        let mut bytes_read = 0u64;
+        let mut bytes_written = 0u64;
+        let mut flops_by_cat: HashMap<OpCategory, u64> = HashMap::new();
+        let mut bytes_by_cat: HashMap<OpCategory, u64> = HashMap::new();
+        for op in &graph.ops {
+            let f = op.flops(batch);
+            let br = op.bytes_read(batch);
+            let bw = op.bytes_written(batch);
+            flops += f;
+            bytes_read += br;
+            bytes_written += bw;
+            *flops_by_cat.entry(op.category()).or_default() += f;
+            *bytes_by_cat.entry(op.category()).or_default() += br + bw;
+        }
+        GraphCost {
+            batch,
+            flops,
+            bytes_read,
+            bytes_written,
+            storage_bytes: graph.storage_bytes(),
+            flops_by_cat,
+            bytes_by_cat,
+        }
+    }
+
+    /// Whole-graph operational intensity (Fig 2 axes ratio).
+    pub fn intensity(&self) -> f64 {
+        self.flops as f64 / (self.bytes_read + self.bytes_written).max(1) as f64
+    }
+}
+
+/// Fig 2 / Fig 12 row: one model's static profile.
+#[derive(Debug, Clone)]
+pub struct ModelCostSummary {
+    pub name: String,
+    pub flops_per_sample: u64,
+    pub bytes_per_sample: u64,
+    pub storage_bytes: u64,
+    pub fc_params: u64,
+    pub emb_bytes: u64,
+}
+
+impl ModelCostSummary {
+    pub fn of(graph: &ModelGraph) -> Self {
+        let c = GraphCost::of(graph, 1);
+        let emb_bytes: u64 = graph
+            .ops
+            .iter()
+            .filter(|o| matches!(o, super::ops::Op::Sls { .. }))
+            .map(|o| o.storage_bytes())
+            .sum();
+        let fc_params = graph
+            .ops
+            .iter()
+            .filter(|o| !matches!(o, super::ops::Op::Sls { .. }))
+            .map(|o| o.weight_bytes() / 4)
+            .sum();
+        ModelCostSummary {
+            name: graph.name.clone(),
+            flops_per_sample: c.flops,
+            bytes_per_sample: c.bytes_read + c.bytes_written,
+            storage_bytes: c.storage_bytes,
+            fc_params,
+            emb_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::ModelGraph;
+
+    #[test]
+    fn cost_sums_over_categories() {
+        let g = ModelGraph::from_rmc(&presets::rmc1_small());
+        let c = GraphCost::of(&g, 4);
+        let cat_sum: u64 = c.flops_by_cat.values().sum();
+        assert_eq!(cat_sum, c.flops);
+        assert!(c.flops > 0 && c.bytes_read > 0);
+    }
+
+    #[test]
+    fn flops_scale_linearly_with_batch() {
+        let g = ModelGraph::from_rmc(&presets::rmc2_small());
+        let c1 = GraphCost::of(&g, 1);
+        let c8 = GraphCost::of(&g, 8);
+        assert_eq!(c8.flops, 8 * c1.flops);
+        // Bytes sub-linear: weights amortize.
+        assert!(c8.bytes_read < 8 * c1.bytes_read);
+    }
+
+    #[test]
+    fn fig2_relationships() {
+        // RMC3 has the most FLOPs; RMC2 reads the most embedding bytes.
+        let s = |c| ModelCostSummary::of(&ModelGraph::from_rmc(&c));
+        let r1 = s(presets::rmc1_small());
+        let r2 = s(presets::rmc2_small());
+        let r3 = s(presets::rmc3_small());
+        assert!(r3.flops_per_sample > r2.flops_per_sample);
+        assert!(r3.flops_per_sample > r1.flops_per_sample);
+        assert!(r2.emb_bytes > r1.emb_bytes && r2.emb_bytes > r3.emb_bytes);
+    }
+
+    #[test]
+    fn batching_raises_intensity() {
+        // Takeaway 4 precondition: batching increases compute density.
+        let g = ModelGraph::from_rmc(&presets::rmc3_small());
+        assert!(GraphCost::of(&g, 128).intensity() > 5.0 * GraphCost::of(&g, 1).intensity());
+    }
+}

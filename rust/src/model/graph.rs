@@ -1,0 +1,126 @@
+//! Model graphs: the executable-order operator list for each network,
+//! built from configs (paper Fig 3 execution flow).
+
+
+use crate::config::{ModelClass, RmcConfig};
+
+use super::ops::Op;
+
+/// An ordered operator list plus identity metadata. Execution order
+/// follows the paper's Fig 3: Bottom-MLP -> SLS per table -> Concat ->
+/// Top-MLP -> sigmoid.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub class: ModelClass,
+    pub ops: Vec<Op>,
+}
+
+impl ModelGraph {
+    /// Build the DLRM graph for a Table-I configuration.
+    pub fn from_rmc(cfg: &RmcConfig) -> Self {
+        let mut ops = Vec::new();
+        // Bottom MLP over dense features.
+        let mut d_in = cfg.dense_dim;
+        for &d_out in &cfg.bottom_mlp {
+            ops.push(Op::Fc { d_in, d_out });
+            ops.push(Op::Relu { dim: d_out });
+            d_in = d_out;
+        }
+        // One SLS per embedding table.
+        for _ in 0..cfg.num_tables {
+            ops.push(Op::Sls {
+                rows: cfg.rows,
+                emb_dim: cfg.emb_dim,
+                lookups: cfg.lookups,
+            });
+        }
+        // Feature interaction: concat bottom output with table outputs.
+        let total = cfg.top_input_dim();
+        ops.push(Op::Concat { parts: 1 + cfg.num_tables, total_dim: total });
+        // Top MLP.
+        let mut d_in = total;
+        for &d_out in &cfg.top_mlp {
+            ops.push(Op::Fc { d_in, d_out });
+            ops.push(Op::Relu { dim: d_out });
+            d_in = d_out;
+        }
+        ops.push(Op::Fc { d_in, d_out: 1 });
+        ops.push(Op::Sigmoid { dim: 1 });
+        ModelGraph { name: cfg.name.clone(), class: cfg.class, ops }
+    }
+
+    pub fn num_sls(&self) -> usize {
+        self.ops.iter().filter(|o| matches!(o, Op::Sls { .. })).count()
+    }
+
+    pub fn num_fc(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|o| matches!(o, Op::Fc { .. } | Op::BatchMatMul { .. }))
+            .count()
+    }
+
+    /// Resident parameter storage (FC weights + all embedding tables).
+    pub fn storage_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.storage_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::ops::OpCategory;
+
+    #[test]
+    fn rmc1_graph_shape() {
+        let g = ModelGraph::from_rmc(&presets::rmc1_small());
+        assert_eq!(g.num_sls(), 4);
+        // bottom 3 FC + top 2 hidden + 1 out = 6 FC.
+        assert_eq!(g.num_fc(), 6);
+        // Exactly one concat, one sigmoid.
+        assert_eq!(
+            g.ops.iter().filter(|o| o.category() == OpCategory::Concat).count(),
+            1
+        );
+        assert!(matches!(g.ops.last().unwrap(), Op::Sigmoid { .. }));
+    }
+
+    #[test]
+    fn execution_order_follows_fig3() {
+        let g = ModelGraph::from_rmc(&presets::rmc1_small());
+        let first_sls = g.ops.iter().position(|o| matches!(o, Op::Sls { .. })).unwrap();
+        let concat = g
+            .ops
+            .iter()
+            .position(|o| matches!(o, Op::Concat { .. }))
+            .unwrap();
+        let first_fc = g.ops.iter().position(|o| matches!(o, Op::Fc { .. })).unwrap();
+        assert!(first_fc < first_sls, "bottom MLP precedes SLS");
+        assert!(first_sls < concat, "SLS precedes concat");
+    }
+
+    #[test]
+    fn concat_width_matches_config() {
+        let cfg = presets::rmc2_small();
+        let g = ModelGraph::from_rmc(&cfg);
+        let concat = g
+            .ops
+            .iter()
+            .find_map(|o| match o {
+                Op::Concat { parts, total_dim } => Some((*parts, *total_dim)),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(concat, (25, cfg.top_input_dim()));
+    }
+
+    #[test]
+    fn storage_dominated_by_tables() {
+        let cfg = presets::rmc2_small();
+        let g = ModelGraph::from_rmc(&cfg);
+        assert!(g.storage_bytes() > cfg.emb_bytes());
+        assert!(g.storage_bytes() < cfg.emb_bytes() + 10 * cfg.fc_weight_bytes());
+    }
+}

@@ -1,0 +1,13 @@
+//! Operator-graph representation of every network in the study, with the
+//! static FLOPs/bytes cost model feeding Figs 2, 5 and 12 and the
+//! simulator's timing model (Figs 7-11).
+
+mod cost;
+mod graph;
+mod ops;
+mod reference_nets;
+
+pub use cost::{GraphCost, ModelCostSummary};
+pub use graph::ModelGraph;
+pub use ops::{AccessPattern, Op, OpCategory};
+pub use reference_nets::{cnn_reference, ncf_graph, rnn_reference};

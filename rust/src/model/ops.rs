@@ -1,0 +1,242 @@
+//! Operator definitions with the static cost descriptors (FLOPs, bytes,
+//! access pattern) the paper characterizes in §II/Fig 5.
+
+
+/// Reporting buckets used by the paper's breakdown figures (Figs 4, 7, 9).
+/// BatchMatMul is reported jointly with FC ("FC+BMM") exactly as the
+/// paper's text sums them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpCategory {
+    Fc,
+    Sls,
+    Concat,
+    /// Activations, sigmoid, element-wise glue ("Rest" in Fig 9).
+    Rest,
+    /// Convolution (reference CNN only).
+    Conv,
+    /// Recurrent cell (reference RNN only).
+    Recurrent,
+}
+
+impl OpCategory {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpCategory::Fc => "FC",
+            OpCategory::Sls => "SparseLengthsSum",
+            OpCategory::Concat => "Concat",
+            OpCategory::Rest => "Rest",
+            OpCategory::Conv => "Conv",
+            OpCategory::Recurrent => "Recurrent",
+        }
+    }
+}
+
+/// Memory access pattern class — drives which timing model applies
+/// (§II.C: SLS is an irregular gather; FC streams weights with reuse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Sequential streaming with high reuse (FC weights across a batch).
+    StreamingReuse,
+    /// Irregular, input-dependent gathers (embedding lookups).
+    IrregularGather,
+    /// Pure element-wise pass over activations.
+    ElementWise,
+}
+
+/// One operator instance in a model graph. Dimensions are per-sample;
+/// batch is applied at costing time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Fully-connected layer: (B, d_in) x (d_in, d_out) + bias.
+    Fc { d_in: usize, d_out: usize },
+    /// Batched matmul as used by candidate scoring; costed like FC but
+    /// tracked so Fig 7's "BatchMatMul or FC" bucket is honest.
+    BatchMatMul { m: usize, k: usize, n: usize },
+    /// SparseLengthsSum over one embedding table (Algorithm 1).
+    Sls { rows: usize, emb_dim: usize, lookups: usize },
+    /// Feature-interaction concat of `parts` vectors totalling `total_dim`.
+    Concat { parts: usize, total_dim: usize },
+    /// ReLU over a `dim`-wide activation.
+    Relu { dim: usize },
+    /// Sigmoid over a `dim`-wide activation (final CTR).
+    Sigmoid { dim: usize },
+    /// Reference convolution: HxW spatial, KxK kernel, Cin->Cout.
+    Conv2d { h: usize, w: usize, k: usize, c_in: usize, c_out: usize },
+    /// Reference LSTM cell step: hidden `h`, input `d`, `steps` steps.
+    LstmCell { d: usize, h: usize, steps: usize },
+}
+
+impl Op {
+    pub fn category(&self) -> OpCategory {
+        match self {
+            Op::Fc { .. } | Op::BatchMatMul { .. } => OpCategory::Fc,
+            Op::Sls { .. } => OpCategory::Sls,
+            Op::Concat { .. } => OpCategory::Concat,
+            Op::Relu { .. } | Op::Sigmoid { .. } => OpCategory::Rest,
+            Op::Conv2d { .. } => OpCategory::Conv,
+            Op::LstmCell { .. } => OpCategory::Recurrent,
+        }
+    }
+
+    pub fn access_pattern(&self) -> AccessPattern {
+        match self {
+            Op::Sls { .. } => AccessPattern::IrregularGather,
+            Op::Concat { .. } | Op::Relu { .. } | Op::Sigmoid { .. } => AccessPattern::ElementWise,
+            _ => AccessPattern::StreamingReuse,
+        }
+    }
+
+    /// FLOPs for a batch of `b` samples (multiply-add = 2 FLOPs).
+    pub fn flops(&self, b: usize) -> u64 {
+        let b = b as u64;
+        match *self {
+            Op::Fc { d_in, d_out } => 2 * b * d_in as u64 * d_out as u64,
+            Op::BatchMatMul { m, k, n } => 2 * b * (m * k * n) as u64,
+            // SLS: one add (optionally one mul for the weight) per element.
+            Op::Sls { emb_dim, lookups, .. } => 2 * b * (emb_dim * lookups) as u64,
+            Op::Concat { .. } => 0,
+            Op::Relu { dim } | Op::Sigmoid { dim } => b * dim as u64,
+            Op::Conv2d { h, w, k, c_in, c_out } => {
+                2 * b * (h * w * k * k * c_in * c_out) as u64
+            }
+            Op::LstmCell { d, h, steps } => {
+                // 4 gates, (d + h) x h GEMMs per step + elementwise.
+                2 * b * (steps * 4 * (d + h) * h) as u64
+            }
+        }
+    }
+
+    /// Parameter (weight) bytes — read with reuse across the batch.
+    pub fn weight_bytes(&self) -> u64 {
+        match *self {
+            Op::Fc { d_in, d_out } => 4 * (d_in * d_out + d_out) as u64,
+            Op::BatchMatMul { k, n, .. } => 4 * (k * n) as u64,
+            // The table is the parameter store, but only gathered rows are
+            // touched; bytes_read accounts for those.
+            Op::Sls { .. } => 0,
+            Op::Conv2d { k, c_in, c_out, .. } => 4 * (k * k * c_in * c_out + c_out) as u64,
+            Op::LstmCell { d, h, .. } => 4 * (4 * (d + h) * h + 4 * h) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Resident parameter storage (embedding tables included) — the
+    /// paper's "storage capacity" axis (Fig 2 x-axis companion).
+    pub fn storage_bytes(&self) -> u64 {
+        match *self {
+            Op::Sls { rows, emb_dim, .. } => 4 * (rows * emb_dim) as u64,
+            _ => self.weight_bytes(),
+        }
+    }
+
+    /// Bytes read per batch-`b` invocation: weights (once — reuse across
+    /// the batch) + per-sample inputs/gathers.
+    pub fn bytes_read(&self, b: usize) -> u64 {
+        let bu = b as u64;
+        match *self {
+            Op::Fc { d_in, .. } => self.weight_bytes() + 4 * bu * d_in as u64,
+            Op::BatchMatMul { m, k, .. } => self.weight_bytes() + 4 * bu * (m * k) as u64,
+            Op::Sls { emb_dim, lookups, .. } => {
+                // gathered rows + the ID/weight lists themselves
+                bu * lookups as u64 * (4 * emb_dim as u64) + bu * lookups as u64 * 8
+            }
+            Op::Concat { total_dim, .. } => 4 * bu * total_dim as u64,
+            Op::Relu { dim } | Op::Sigmoid { dim } => 4 * bu * dim as u64,
+            Op::Conv2d { h, w, c_in, .. } => self.weight_bytes() + 4 * bu * (h * w * c_in) as u64,
+            // Recurrent weights exceed on-chip caches and re-stream
+            // every time step (this is why RNN intensity ~5.5, Fig 5).
+            Op::LstmCell { d, h, steps } => {
+                steps as u64 * self.weight_bytes() + 4 * bu * (steps * (d + h)) as u64
+            }
+        }
+    }
+
+    /// Bytes written per batch-`b` invocation (outputs).
+    pub fn bytes_written(&self, b: usize) -> u64 {
+        let bu = b as u64;
+        match *self {
+            Op::Fc { d_out, .. } => 4 * bu * d_out as u64,
+            Op::BatchMatMul { m, n, .. } => 4 * bu * (m * n) as u64,
+            Op::Sls { emb_dim, .. } => 4 * bu * emb_dim as u64,
+            Op::Concat { total_dim, .. } => 4 * bu * total_dim as u64,
+            Op::Relu { dim } | Op::Sigmoid { dim } => 4 * bu * dim as u64,
+            Op::Conv2d { h, w, c_out, .. } => 4 * bu * (h * w * c_out) as u64,
+            Op::LstmCell { h, steps, .. } => 4 * bu * (steps * h) as u64,
+        }
+    }
+
+    /// Operational intensity, FLOPs/byte (Fig 5 left).
+    pub fn intensity(&self, b: usize) -> f64 {
+        let bytes = self.bytes_read(b) + self.bytes_written(b);
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.flops(b) as f64 / bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_cost_hand_check() {
+        let fc = Op::Fc { d_in: 10, d_out: 5 };
+        assert_eq!(fc.flops(2), 2 * 2 * 10 * 5);
+        assert_eq!(fc.weight_bytes(), 4 * 55);
+        assert_eq!(fc.bytes_read(2), 4 * 55 + 4 * 2 * 10);
+        assert_eq!(fc.bytes_written(2), 4 * 2 * 5);
+    }
+
+    #[test]
+    fn sls_is_low_intensity_fc_is_high() {
+        // Fig 5: SLS ~0.25 FLOPs/B; FC (batched) ~18 FLOPs/B.
+        let sls = Op::Sls { rows: 1_000_000, emb_dim: 32, lookups: 80 };
+        assert!(sls.intensity(1) < 0.6, "got {}", sls.intensity(1));
+        let fc = Op::Fc { d_in: 512, d_out: 512 };
+        assert!(fc.intensity(64) > 10.0, "got {}", fc.intensity(64));
+        assert!(fc.intensity(1) < 1.0); // unit batch: memory bound
+    }
+
+    #[test]
+    fn cnn_is_highest_intensity() {
+        // Fig 5: CNN ~141 FLOPs/B >> RNN ~5.5 >> SLS 0.25.
+        let conv = Op::Conv2d { h: 14, w: 14, k: 3, c_in: 256, c_out: 256 };
+        let lstm = Op::LstmCell { d: 1024, h: 1024, steps: 1 };
+        let sls = Op::Sls { rows: 1_000_000, emb_dim: 32, lookups: 80 };
+        assert!(conv.intensity(1) > 30.0);
+        assert!(conv.intensity(1) > lstm.intensity(8));
+        assert!(lstm.intensity(8) > sls.intensity(8));
+    }
+
+    #[test]
+    fn sls_flops_scale_with_batch_weights_do_not() {
+        let sls = Op::Sls { rows: 100, emb_dim: 8, lookups: 4 };
+        assert_eq!(sls.flops(2), 2 * sls.flops(1));
+        let fc = Op::Fc { d_in: 8, d_out: 8 };
+        assert_eq!(fc.weight_bytes(), 4 * 72);
+        // bytes amortize: read(2) < 2 * read(1)
+        assert!(fc.bytes_read(2) < 2 * fc.bytes_read(1));
+    }
+
+    #[test]
+    fn categories() {
+        assert_eq!(Op::Fc { d_in: 1, d_out: 1 }.category(), OpCategory::Fc);
+        assert_eq!(
+            Op::BatchMatMul { m: 1, k: 1, n: 1 }.category(),
+            OpCategory::Fc
+        );
+        assert_eq!(
+            Op::Sls { rows: 1, emb_dim: 1, lookups: 1 }.access_pattern(),
+            AccessPattern::IrregularGather
+        );
+    }
+
+    #[test]
+    fn concat_has_zero_flops_nonzero_bytes() {
+        let c = Op::Concat { parts: 5, total_dim: 160 };
+        assert_eq!(c.flops(4), 0);
+        assert_eq!(c.bytes_read(4), 4 * 4 * 160);
+        assert_eq!(c.category(), OpCategory::Concat);
+    }
+}

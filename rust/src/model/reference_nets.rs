@@ -1,0 +1,116 @@
+//! Reference non-recommendation networks (CNN / RNN) and the NCF
+//! baseline graph — the comparison points of Figs 2, 4, 5 and 12.
+//!
+//! The CNN is a ResNet50-class residual stage; the RNN is a DeepSpeech2-
+//! class bidirectional-LSTM layer stack. Dimensions are chosen from the
+//! published architectures so the operational-intensity spectrum of
+//! Fig 5 (CNN 141 >> FC 18 >> RNN 5.5 >> SLS 0.25 FLOPs/B) emerges from
+//! first principles rather than being hard-coded.
+
+use crate::config::{ModelClass, NcfConfig};
+
+use super::graph::ModelGraph;
+use super::ops::Op;
+
+/// ResNet50 conv4 stage (14x14 spatial): 6 residual blocks of
+/// 1x1/3x3/1x1 convolutions at 256/256/1024 channels.
+pub fn cnn_reference() -> ModelGraph {
+    let mut ops = Vec::new();
+    for _ in 0..6 {
+        ops.push(Op::Conv2d { h: 14, w: 14, k: 1, c_in: 1024, c_out: 256 });
+        ops.push(Op::Relu { dim: 14 * 14 * 256 });
+        ops.push(Op::Conv2d { h: 14, w: 14, k: 3, c_in: 256, c_out: 256 });
+        ops.push(Op::Relu { dim: 14 * 14 * 256 });
+        ops.push(Op::Conv2d { h: 14, w: 14, k: 1, c_in: 256, c_out: 1024 });
+        ops.push(Op::Relu { dim: 14 * 14 * 1024 });
+    }
+    // Classifier head.
+    ops.push(Op::Fc { d_in: 2048, d_out: 1000 });
+    ModelGraph { name: "cnn-resnet50".into(), class: ModelClass::Cnn, ops }
+}
+
+/// DeepSpeech2-class recurrent stack: 3 LSTM layers, hidden 1024,
+/// 20 time steps per utterance slice.
+pub fn rnn_reference() -> ModelGraph {
+    let mut ops = Vec::new();
+    ops.push(Op::LstmCell { d: 1280, h: 1024, steps: 20 });
+    ops.push(Op::LstmCell { d: 1024, h: 1024, steps: 20 });
+    ops.push(Op::LstmCell { d: 1024, h: 1024, steps: 20 });
+    ops.push(Op::Fc { d_in: 1024, d_out: 29 }); // character logits
+    ModelGraph { name: "rnn-ds2".into(), class: ModelClass::Rnn, ops }
+}
+
+/// NeuMF graph (GMF + MLP towers) matching `python/compile/ncf.py`.
+pub fn ncf_graph(cfg: &NcfConfig) -> ModelGraph {
+    let mut ops = Vec::new();
+    // Four embedding lookups of exactly one row each (user/item x MF/MLP).
+    for (rows, dim) in [
+        (cfg.num_users, cfg.mf_dim),
+        (cfg.num_items, cfg.mf_dim),
+        (cfg.num_users, cfg.mlp_emb_dim),
+        (cfg.num_items, cfg.mlp_emb_dim),
+    ] {
+        ops.push(Op::Sls { rows, emb_dim: dim, lookups: 1 });
+    }
+    ops.push(Op::Concat { parts: 2, total_dim: 2 * cfg.mlp_emb_dim });
+    let mut d_in = 2 * cfg.mlp_emb_dim;
+    for &d_out in &cfg.mlp_layers {
+        ops.push(Op::Fc { d_in, d_out });
+        ops.push(Op::Relu { dim: d_out });
+        d_in = d_out;
+    }
+    ops.push(Op::Concat { parts: 2, total_dim: cfg.mf_dim + d_in });
+    ops.push(Op::Fc { d_in: cfg.mf_dim + d_in, d_out: 1 });
+    ops.push(Op::Sigmoid { dim: 1 });
+    ModelGraph { name: cfg.name.clone(), class: ModelClass::Ncf, ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::cost::GraphCost;
+
+    #[test]
+    fn cnn_intensity_band() {
+        // Fig 5: CNN layers around 141 FLOPs/B — accept a wide band since
+        // ours is a full stage, not one layer.
+        let g = cnn_reference();
+        let c = GraphCost::of(&g, 1);
+        let intensity = c.flops as f64 / (c.bytes_read + c.bytes_written) as f64;
+        assert!(
+            (40.0..400.0).contains(&intensity),
+            "cnn intensity {intensity}"
+        );
+    }
+
+    #[test]
+    fn rnn_intensity_band() {
+        // Fig 5: RNN ~5.5 FLOPs/B at its measured batch (~8-16).
+        let g = rnn_reference();
+        let c = GraphCost::of(&g, 8);
+        let intensity = c.flops as f64 / (c.bytes_read + c.bytes_written) as f64;
+        assert!((2.0..16.0).contains(&intensity), "rnn intensity {intensity}");
+    }
+
+    #[test]
+    fn intensity_ordering_matches_fig5() {
+        let cnn = GraphCost::of(&cnn_reference(), 1).intensity();
+        let rnn = GraphCost::of(&rnn_reference(), 8).intensity();
+        let rmc2 = GraphCost::of(
+            &ModelGraph::from_rmc(&presets::rmc2_small()),
+            1,
+        )
+        .intensity();
+        assert!(cnn > rnn && rnn > rmc2, "cnn {cnn} rnn {rnn} rmc2 {rmc2}");
+    }
+
+    #[test]
+    fn ncf_is_tiny() {
+        let g = ncf_graph(&presets::ncf());
+        // Fig 12: NCF storage orders of magnitude below any RMC.
+        let rmc1 = ModelGraph::from_rmc(&presets::rmc1_small());
+        assert!(g.storage_bytes() * 3 < rmc1.storage_bytes());
+        assert_eq!(g.num_sls(), 4);
+    }
+}

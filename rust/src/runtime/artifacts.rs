@@ -1,0 +1,285 @@
+//! Artifact manifest loading — the contract between `python/compile/aot.py`
+//! and the rust runtime. Parsed with the std-only JSON module.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::Json;
+
+/// One parameter tensor inside the params blob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// One runtime input tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled executable variant: (model, impl, batch).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub model: String,
+    pub kind: String,
+    pub impl_: String,
+    pub batch: usize,
+    pub hlo: String,
+    pub params_bin: String,
+    pub params: Vec<ParamSpec>,
+    pub inputs: Vec<InputSpec>,
+    /// Expected CTR outputs for the deterministic golden inputs (only
+    /// present for golden batches).
+    pub golden_ctr: Option<Vec<f32>>,
+    /// Model config as raw JSON (rows, lookups, dims, ...).
+    pub config: Json,
+}
+
+impl VariantSpec {
+    pub fn config_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.config
+            .get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("variant {}: config key '{key}' missing", self.name))
+    }
+}
+
+/// The whole manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub batches: Vec<usize>,
+    pub golden_batches: Vec<usize>,
+    pub variants: Vec<VariantSpec>,
+    pub root: PathBuf,
+}
+
+fn parse_shape(v: &Json) -> anyhow::Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("shape must be an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("shape dims must be numbers")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let version = v.field("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let batches = v
+            .field("batches")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("batches must be an array"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let golden_batches = v
+            .field("golden_batches")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("golden_batches must be an array"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let mut variants = Vec::new();
+        for jv in v.field("variants")?.as_arr().unwrap_or(&[]) {
+            let params = jv
+                .field("params")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("params must be an array"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.field("name")?.as_str().unwrap_or("").to_string(),
+                        shape: parse_shape(p.field("shape")?)?,
+                        dtype: p.field("dtype")?.as_str().unwrap_or("").to_string(),
+                        offset: p.field("offset")?.as_usize().unwrap_or(0),
+                        nbytes: p.field("nbytes")?.as_usize().unwrap_or(0),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let inputs = jv
+                .field("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs must be an array"))?
+                .iter()
+                .map(|p| {
+                    Ok(InputSpec {
+                        name: p.field("name")?.as_str().unwrap_or("").to_string(),
+                        shape: parse_shape(p.field("shape")?)?,
+                        dtype: p.field("dtype")?.as_str().unwrap_or("").to_string(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let golden_ctr = match jv.get("golden_ctr") {
+                Some(Json::Arr(a)) => {
+                    Some(a.iter().filter_map(|x| x.as_f64().map(|f| f as f32)).collect())
+                }
+                _ => None,
+            };
+            variants.push(VariantSpec {
+                name: jv.field("name")?.as_str().unwrap_or("").to_string(),
+                model: jv.field("model")?.as_str().unwrap_or("").to_string(),
+                kind: jv.field("kind")?.as_str().unwrap_or("").to_string(),
+                impl_: jv.field("impl")?.as_str().unwrap_or("").to_string(),
+                batch: jv.field("batch")?.as_usize().unwrap_or(0),
+                hlo: jv.field("hlo")?.as_str().unwrap_or("").to_string(),
+                params_bin: jv.field("params_bin")?.as_str().unwrap_or("").to_string(),
+                params,
+                inputs,
+                golden_ctr,
+                config: jv.field("config")?.clone(),
+            });
+        }
+        Ok(Manifest { version, batches, golden_batches, variants, root: dir.to_path_buf() })
+    }
+
+    /// Find the executable for (model, impl, batch).
+    pub fn find(&self, model: &str, impl_: &str, batch: usize) -> Option<&VariantSpec> {
+        self.variants
+            .iter()
+            .find(|v| v.model == model && v.impl_ == impl_ && v.batch == batch)
+    }
+
+    /// Models available (deduped, sorted).
+    pub fn models(&self) -> Vec<String> {
+        let mut m: Vec<String> = self.variants.iter().map(|v| v.model.clone()).collect();
+        m.sort();
+        m.dedup();
+        m
+    }
+
+    /// The smallest AOT'd batch >= `n` for a model (batcher bucketing),
+    /// or the largest available if `n` exceeds them all.
+    pub fn bucket_for(&self, model: &str, impl_: &str, n: usize) -> Option<usize> {
+        let mut batches: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|v| v.model == model && v.impl_ == impl_)
+            .map(|v| v.batch)
+            .collect();
+        batches.sort_unstable();
+        batches.iter().find(|&&b| b >= n).or(batches.last()).copied()
+    }
+
+    pub fn hlo_path(&self, v: &VariantSpec) -> PathBuf {
+        self.root.join(&v.hlo)
+    }
+
+    pub fn params_path(&self, v: &VariantSpec) -> PathBuf {
+        self.root.join(&v.params_bin)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        crate::runtime::default_artifacts_dir()
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.version, 1);
+        assert!(m.variants.len() >= 12);
+        // Every referenced file exists and params sizes add up.
+        for v in &m.variants {
+            assert!(m.hlo_path(v).exists(), "{:?}", m.hlo_path(v));
+            let sz = std::fs::metadata(m.params_path(v)).unwrap().len() as usize;
+            assert_eq!(sz, v.params.iter().map(|p| p.nbytes).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn manifest_matches_rust_presets() {
+        // The python presets and rust presets must agree (DESIGN.md §5).
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for cfg in [
+            crate::config::rmc1_small(),
+            crate::config::rmc2_small(),
+            crate::config::rmc3_small(),
+        ] {
+            let v = m.find(&cfg.name, "xla", 8).expect("variant must exist");
+            assert_eq!(v.config_usize("num_tables").unwrap(), cfg.num_tables);
+            assert_eq!(v.config_usize("rows").unwrap(), cfg.pjrt_rows);
+            assert_eq!(v.config_usize("full_rows").unwrap(), cfg.rows);
+            assert_eq!(v.config_usize("lookups").unwrap(), cfg.lookups);
+            assert_eq!(v.config_usize("emb_dim").unwrap(), cfg.emb_dim);
+            assert_eq!(v.config_usize("dense_dim").unwrap(), cfg.dense_dim);
+            // Input shapes follow (B, Dd) / (T, B, L).
+            assert_eq!(v.inputs[0].shape, vec![8, cfg.dense_dim]);
+            assert_eq!(v.inputs[1].shape, vec![cfg.num_tables, 8, cfg.lookups]);
+        }
+    }
+
+    #[test]
+    fn bucketing_rounds_up() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.bucket_for("rmc1-small", "xla", 1), Some(1));
+        assert_eq!(m.bucket_for("rmc1-small", "xla", 2), Some(8));
+        assert_eq!(m.bucket_for("rmc1-small", "xla", 9), Some(32));
+        assert_eq!(m.bucket_for("rmc1-small", "xla", 100), Some(128));
+        // Above the max bucket: clamp to largest (caller splits).
+        assert_eq!(m.bucket_for("rmc1-small", "xla", 1000), Some(128));
+        assert_eq!(m.bucket_for("nope", "xla", 1), None);
+    }
+
+    #[test]
+    fn golden_present_for_golden_batches() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for v in &m.variants {
+            if m.golden_batches.contains(&v.batch) {
+                let g = v.golden_ctr.as_ref().expect("golden missing");
+                assert_eq!(g.len(), v.batch);
+                assert!(g.iter().all(|&x| x > 0.0 && x < 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT executor: compile HLO text, stage parameters as device buffers
+//! once, execute with per-request inputs. Follows the interchange rules
+//! in /opt/xla-example/README.md (HLO text, `return_tuple=True` → output
+//! is a 1-tuple).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use super::artifacts::{Manifest, VariantSpec};
+
+/// Shared PJRT CPU client. Executables keep a handle to it.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one variant and stage its parameters on device.
+    pub fn load(&self, manifest: &Manifest, variant: &VariantSpec) -> anyhow::Result<CompiledModel> {
+        let hlo_path = manifest.hlo_path(variant);
+        let exe = self.compile_hlo(&hlo_path)?;
+        let param_bufs = self.stage_params(manifest, variant)?;
+        Ok(CompiledModel { spec: variant.clone(), exe, param_bufs, client: self.client.clone() })
+    }
+
+    fn compile_hlo(&self, path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e}"))
+    }
+
+    /// Read the params blob and transfer each tensor to the device.
+    fn stage_params(
+        &self,
+        manifest: &Manifest,
+        variant: &VariantSpec,
+    ) -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+        let blob = std::fs::read(manifest.params_path(variant))
+            .with_context(|| format!("reading {:?}", manifest.params_path(variant)))?;
+        let mut bufs = Vec::with_capacity(variant.params.len());
+        for p in &variant.params {
+            if p.dtype != "float32" {
+                bail!("param {} has unsupported dtype {}", p.name, p.dtype);
+            }
+            let end = p.offset + p.nbytes;
+            if end > blob.len() {
+                bail!("param {} overruns blob ({} > {})", p.name, end, blob.len());
+            }
+            // NOTE: xla 0.1.6's buffer_from_host_raw_bytes passes the
+            // ElementType discriminant where XLA expects a PrimitiveType
+            // (F32: 10 vs 11), silently making F16 buffers. Use the typed
+            // path instead; copy to an aligned f32 vec (params blob is a
+            // byte stream).
+            let mut data = vec![0f32; p.nbytes / 4];
+            for (i, chunk) in blob[p.offset..end].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            let buf = self
+                .client
+                .buffer_from_host_buffer(&data, &p.shape, None)
+                .map_err(|e| anyhow!("staging {}: {e}", p.name))?;
+            bufs.push(buf);
+        }
+        Ok(bufs)
+    }
+}
+
+/// A compiled executable with pre-staged parameter buffers. The hot-path
+/// cost per call is: transfer the (small) request inputs, execute, read
+/// back the (B,) CTR vector — no python, no weight copies.
+pub struct CompiledModel {
+    pub spec: VariantSpec,
+    exe: xla::PjRtLoadedExecutable,
+    param_bufs: Vec<xla::PjRtBuffer>,
+    client: xla::PjRtClient,
+}
+
+impl CompiledModel {
+    pub fn batch(&self) -> usize {
+        self.spec.batch
+    }
+
+    /// Execute an RMC variant: dense (B*Dd), ids (T*B*L), lwts (T*B*L),
+    /// all row-major. Returns the (B,) CTR vector.
+    pub fn run_rmc(&self, dense: &[f32], ids: &[i32], lwts: &[f32]) -> anyhow::Result<Vec<f32>> {
+        if self.spec.inputs.len() != 3 {
+            bail!("{} is not an RMC variant", self.spec.name);
+        }
+        let (ds, is_, ws) =
+            (&self.spec.inputs[0], &self.spec.inputs[1], &self.spec.inputs[2]);
+        if dense.len() != ds.elements() || ids.len() != is_.elements() || lwts.len() != ws.elements()
+        {
+            bail!(
+                "input size mismatch for {}: got {}/{}/{}, want {}/{}/{}",
+                self.spec.name,
+                dense.len(),
+                ids.len(),
+                lwts.len(),
+                ds.elements(),
+                is_.elements(),
+                ws.elements()
+            );
+        }
+        let dense_buf = self
+            .client
+            .buffer_from_host_buffer(dense, &ds.shape, None)
+            .map_err(|e| anyhow!("dense transfer: {e}"))?;
+        let ids_buf = self
+            .client
+            .buffer_from_host_buffer(ids, &is_.shape, None)
+            .map_err(|e| anyhow!("ids transfer: {e}"))?;
+        let lwts_buf = self
+            .client
+            .buffer_from_host_buffer(lwts, &ws.shape, None)
+            .map_err(|e| anyhow!("lwts transfer: {e}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&dense_buf);
+        args.push(&ids_buf);
+        args.push(&lwts_buf);
+        self.execute(&args)
+    }
+
+    /// Execute the NCF variant: user_ids (B), item_ids (B).
+    pub fn run_ncf(&self, user_ids: &[i32], item_ids: &[i32]) -> anyhow::Result<Vec<f32>> {
+        if self.spec.inputs.len() != 2 {
+            bail!("{} is not an NCF variant", self.spec.name);
+        }
+        let u = self
+            .client
+            .buffer_from_host_buffer(user_ids, &self.spec.inputs[0].shape, None)
+            .map_err(|e| anyhow!("user_ids transfer: {e}"))?;
+        let i = self
+            .client
+            .buffer_from_host_buffer(item_ids, &self.spec.inputs[1].shape, None)
+            .map_err(|e| anyhow!("item_ids transfer: {e}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&u);
+        args.push(&i);
+        self.execute(&args)
+    }
+
+    /// One throwaway execution with zero inputs — warms XLA's internal
+    /// thread pools/allocators so first-request p99 is not polluted
+    /// (EXPERIMENTS.md §Perf: cold-start p99 was ~45 ms).
+    pub fn warmup(&self) -> anyhow::Result<()> {
+        if self.spec.inputs.len() == 3 {
+            let d = self.spec.inputs[0].elements();
+            let i = self.spec.inputs[1].elements();
+            self.run_rmc(&vec![0.0; d], &vec![0i32; i], &vec![0.0; i])?;
+        } else if self.spec.inputs.len() == 2 {
+            let b = self.spec.inputs[0].elements();
+            self.run_ncf(&vec![0i32; b], &vec![0i32; b])?;
+        }
+        Ok(())
+    }
+
+    fn execute(&self, args: &[&xla::PjRtBuffer]) -> anyhow::Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute {}: {e}", self.spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+}

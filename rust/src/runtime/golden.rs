@@ -1,0 +1,79 @@
+//! Deterministic golden inputs — exact mirrors of the formulas in
+//! `python/compile/presets.py` (`deterministic_dense` /
+//! `deterministic_ids`) and `python/compile/ncf.py`. The AOT manifest
+//! embeds the CTR outputs python computed for these inputs; the
+//! integration tests assert the rust PJRT path reproduces them bit-close.
+
+/// dense[b, j] = ((b*131 + j*31) % 97) / 97 - 0.5, row-major (B, D).
+pub fn golden_dense(batch: usize, dim: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(batch * dim);
+    for b in 0..batch as i64 {
+        for j in 0..dim as i64 {
+            out.push((((b * 131 + j * 31) % 97) as f32) / 97.0 - 0.5);
+        }
+    }
+    out
+}
+
+/// ids[t, b, l] = (t*7919 + b*104729 + l*1299721) % rows, row-major (T, B, L).
+pub fn golden_ids(num_tables: usize, batch: usize, lookups: usize, rows: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(num_tables * batch * lookups);
+    for t in 0..num_tables as i64 {
+        for b in 0..batch as i64 {
+            for l in 0..lookups as i64 {
+                out.push(((t * 7919 + b * 104729 + l * 1299721) % rows as i64) as i32);
+            }
+        }
+    }
+    out
+}
+
+/// All-ones lookup weights (T, B, L).
+pub fn golden_lwts(num_tables: usize, batch: usize, lookups: usize) -> Vec<f32> {
+    vec![1.0; num_tables * batch * lookups]
+}
+
+/// NCF: user_ids[b] = (b*104729 + 13) % users; item_ids[b] = (b*1299721 + 7) % items.
+pub fn golden_ncf_ids(batch: usize, users: usize, items: usize) -> (Vec<i32>, Vec<i32>) {
+    let u = (0..batch as i64).map(|b| ((b * 104729 + 13) % users as i64) as i32).collect();
+    let i = (0..batch as i64).map(|b| ((b * 1299721 + 7) % items as i64) as i32).collect();
+    (u, i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_formula_spot_checks() {
+        // Mirrors python/tests/test_model.py::test_example_inputs_formula.
+        let d = golden_dense(2, 3);
+        assert!((d[0] - (0.0 / 97.0 - 0.5)).abs() < 1e-7);
+        let expect = (((131 + 62) % 97) as f32) / 97.0 - 0.5;
+        assert!((d[5] - expect).abs() < 1e-7); // [b=1, j=2]
+    }
+
+    #[test]
+    fn ids_formula_spot_checks() {
+        let ids = golden_ids(2, 2, 2, 1000);
+        // [t=1, b=1, l=1] is the last element.
+        assert_eq!(ids[7], ((7919 + 104729 + 1299721) % 1000) as i32);
+        assert!(ids.iter().all(|&i| (0..1000).contains(&i)));
+    }
+
+    #[test]
+    fn lwts_are_ones() {
+        assert!(golden_lwts(3, 2, 4).iter().all(|&w| w == 1.0));
+        assert_eq!(golden_lwts(3, 2, 4).len(), 24);
+    }
+
+    #[test]
+    fn ncf_ids_in_range() {
+        let (u, i) = golden_ncf_ids(8, 10_000, 5_000);
+        assert_eq!(u.len(), 8);
+        assert!(u.iter().all(|&x| (0..10_000).contains(&x)));
+        assert!(i.iter().all(|&x| (0..5_000).contains(&x)));
+        assert_eq!(u[0], 13);
+        assert_eq!(i[0], 7);
+    }
+}

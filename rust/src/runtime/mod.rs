@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/manifest.json` +
+//! HLO text + params blob) produced by `make artifacts`, stages model
+//! parameters as device buffers ONCE, and executes inferences on the
+//! real CPU via the PJRT C API (`xla` crate). This is the numeric-truth
+//! half of the system (the simulator is the performance half); python
+//! never runs here.
+
+mod artifacts;
+mod executor;
+mod golden;
+mod pool;
+
+pub use artifacts::{InputSpec, Manifest, ParamSpec, VariantSpec};
+pub use executor::{CompiledModel, PjrtRuntime};
+pub use golden::{golden_dense, golden_ids, golden_lwts, golden_ncf_ids};
+pub use pool::ModelPool;
+
+/// Default artifacts directory relative to the crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}

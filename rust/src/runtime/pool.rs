@@ -1,0 +1,67 @@
+//! Executable pool: lazily compiles and caches one `CompiledModel` per
+//! (model, impl, batch) key. Shared by the serving workers behind a
+//! mutex-per-entry so concurrent workers can execute different variants
+//! without serializing on a global lock.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::anyhow;
+
+use super::artifacts::Manifest;
+use super::executor::{CompiledModel, PjrtRuntime};
+
+/// Thread-safe pool of compiled executables.
+pub struct ModelPool {
+    runtime: PjrtRuntime,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<(String, String, usize), Arc<CompiledModel>>>,
+}
+
+// PJRT handles are internally thread-safe (the CPU client serializes at
+// the PJRT layer); the raw pointers inside xla wrappers lack auto traits.
+unsafe impl Send for ModelPool {}
+unsafe impl Sync for ModelPool {}
+
+impl ModelPool {
+    pub fn new(artifacts_dir: &std::path::Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let runtime = PjrtRuntime::cpu()?;
+        Ok(ModelPool { runtime, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Get (compiling on first use) the executable for (model, impl, batch).
+    pub fn get(&self, model: &str, impl_: &str, batch: usize) -> anyhow::Result<Arc<CompiledModel>> {
+        let key = (model.to_string(), impl_.to_string(), batch);
+        if let Some(m) = self.cache.lock().unwrap().get(&key) {
+            return Ok(m.clone());
+        }
+        // Compile outside the lock (compilation can take ~100ms+).
+        let variant = self
+            .manifest
+            .find(model, impl_, batch)
+            .ok_or_else(|| anyhow!("no artifact for {model}/{impl_}/b{batch}"))?;
+        let compiled = Arc::new(self.runtime.load(&self.manifest, variant)?);
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(key).or_insert(compiled).clone())
+    }
+
+    /// Pre-compile every batch bucket for a model (warm start).
+    pub fn preload(&self, model: &str, impl_: &str) -> anyhow::Result<usize> {
+        let batches: Vec<usize> = self
+            .manifest
+            .variants
+            .iter()
+            .filter(|v| v.model == model && v.impl_ == impl_)
+            .map(|v| v.batch)
+            .collect();
+        for &b in &batches {
+            self.get(model, impl_, b)?.warmup()?;
+        }
+        Ok(batches.len())
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

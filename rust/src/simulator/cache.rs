@@ -1,0 +1,213 @@
+//! Set-associative cache model with true-LRU replacement.
+//!
+//! Lines are identified by 64B-line-granular addresses (caller shifts).
+//! The model supports probe / insert / invalidate separately so the
+//! hierarchy can implement both inclusive (back-invalidating) and
+//! exclusive (victim) L2/L3 policies on top of it.
+
+/// Statistics kept per cache instance.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub invalidations: u64,
+}
+
+const INVALID: u64 = u64::MAX;
+
+#[derive(Debug, Clone)]
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    /// tags[set * ways + way] = line address (INVALID if empty).
+    tags: Vec<u64>,
+    /// LRU timestamps, parallel to `tags`.
+    lru: Vec<u64>,
+    tick: u64,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    /// Build from a capacity in bytes, associativity, and 64B lines.
+    pub fn new(capacity_bytes: u64, ways: usize) -> Self {
+        let lines = (capacity_bytes / 64).max(1) as usize;
+        let ways = ways.min(lines).max(1);
+        let sets = (lines / ways).max(1);
+        Cache {
+            sets,
+            ways,
+            tags: vec![INVALID; sets * ways],
+            lru: vec![0; sets * ways],
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        (self.sets * self.ways * 64) as u64
+    }
+
+    fn set_of(&self, line: u64) -> usize {
+        // Multiplicative hash to spread instance-tagged address spaces
+        // across sets (real caches hash physical addresses too).
+        let h = line.wrapping_mul(0x9E3779B97F4A7C15) >> 16;
+        (h % self.sets as u64) as usize
+    }
+
+    /// Probe for a line; updates LRU and hit/miss stats.
+    pub fn probe(&mut self, line: u64) -> bool {
+        debug_assert_ne!(line, INVALID);
+        let set = self.set_of(line);
+        let base = set * self.ways;
+        self.tick += 1;
+        for w in 0..self.ways {
+            if self.tags[base + w] == line {
+                self.lru[base + w] = self.tick;
+                self.stats.hits += 1;
+                return true;
+            }
+        }
+        self.stats.misses += 1;
+        false
+    }
+
+    /// Check presence without touching stats or LRU.
+    pub fn contains(&self, line: u64) -> bool {
+        let set = self.set_of(line);
+        let base = set * self.ways;
+        (0..self.ways).any(|w| self.tags[base + w] == line)
+    }
+
+    /// Insert a line, returning the evicted victim (if any). Inserting a
+    /// line that is already present refreshes its LRU and evicts nothing.
+    pub fn insert(&mut self, line: u64) -> Option<u64> {
+        debug_assert_ne!(line, INVALID);
+        let set = self.set_of(line);
+        let base = set * self.ways;
+        self.tick += 1;
+        // Already present -> refresh.
+        for w in 0..self.ways {
+            if self.tags[base + w] == line {
+                self.lru[base + w] = self.tick;
+                return None;
+            }
+        }
+        // Empty way?
+        for w in 0..self.ways {
+            if self.tags[base + w] == INVALID {
+                self.tags[base + w] = line;
+                self.lru[base + w] = self.tick;
+                return None;
+            }
+        }
+        // Evict LRU.
+        let mut victim_w = 0;
+        for w in 1..self.ways {
+            if self.lru[base + w] < self.lru[base + victim_w] {
+                victim_w = w;
+            }
+        }
+        let victim = self.tags[base + victim_w];
+        self.tags[base + victim_w] = line;
+        self.lru[base + victim_w] = self.tick;
+        self.stats.evictions += 1;
+        Some(victim)
+    }
+
+    /// Remove a line if present (back-invalidation / exclusive-move).
+    pub fn invalidate(&mut self, line: u64) -> bool {
+        let set = self.set_of(line);
+        let base = set * self.ways;
+        for w in 0..self.ways {
+            if self.tags[base + w] == line {
+                self.tags[base + w] = INVALID;
+                self.stats.invalidations += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Number of valid lines (for occupancy assertions in tests).
+    pub fn occupancy(&self) -> usize {
+        self.tags.iter().filter(|&&t| t != INVALID).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = Cache::new(64 * 16, 4);
+        assert!(!c.probe(42));
+        c.insert(42);
+        assert!(c.probe(42));
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 1 set, 2 ways.
+        let mut c = Cache::new(64 * 2, 2);
+        assert_eq!(c.capacity_bytes(), 128);
+        c.insert(1);
+        c.insert(2);
+        c.probe(1); // 2 is now LRU
+        let evicted = c.insert(3);
+        assert_eq!(evicted, Some(2));
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c = Cache::new(64 * 2, 2);
+        c.insert(1);
+        c.insert(2);
+        assert_eq!(c.insert(1), None); // refresh
+        assert_eq!(c.insert(3), Some(2)); // 2 was LRU after refresh
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = Cache::new(64 * 8, 2);
+        c.insert(5);
+        assert!(c.invalidate(5));
+        assert!(!c.contains(5));
+        assert!(!c.invalidate(5));
+        assert_eq!(c.stats.invalidations, 1);
+    }
+
+    #[test]
+    fn occupancy_bounded_by_capacity() {
+        let mut c = Cache::new(64 * 32, 4);
+        for i in 0..1000 {
+            c.insert(i);
+        }
+        assert_eq!(c.occupancy(), 32);
+    }
+
+    #[test]
+    fn working_set_fits_gets_full_hits() {
+        let mut c = Cache::new(64 * 64, 8);
+        let lines: Vec<u64> = (0..48).collect();
+        for &l in &lines {
+            c.probe(l);
+            c.insert(l);
+        }
+        c.reset_stats();
+        for _ in 0..10 {
+            for &l in &lines {
+                assert!(c.probe(l));
+            }
+        }
+        assert_eq!(c.stats.misses, 0);
+    }
+}

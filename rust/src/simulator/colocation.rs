@@ -1,0 +1,259 @@
+//! Co-location simulation (paper §VI): N inference jobs on one machine
+//! sharing the L3 and DRAM. Jobs interleave at inference granularity on
+//! the shared hierarchy; at any instant a stochastic subset of
+//! co-runners is actively issuing memory traffic (duty cycle), which is
+//! what quantizes Broadwell's latency into the discrete modes of
+//! Fig 11a and blows up its p99 under high co-location.
+
+use crate::config::{RmcConfig, ServerSpec};
+use crate::metrics::{CacheCounters, LatencyHistogram};
+use crate::model::{ModelGraph, Op, OpCategory};
+use crate::util::Rng;
+use crate::workload::SparseIdGen;
+
+use super::calib;
+use super::machine::MachineSim;
+
+/// Aggregated outcome of a co-location run.
+#[derive(Debug, Clone)]
+pub struct ColocationResult {
+    pub n_jobs: usize,
+    pub batch: usize,
+    /// Per-inference latency distribution (ms), pooled across jobs.
+    pub latency_ms: LatencyHistogram,
+    /// Mean time per category per inference (ns).
+    pub mean_cat_ns: std::collections::HashMap<OpCategory, f64>,
+    /// Mean per-model cache counters per inference.
+    pub counters: CacheCounters,
+    pub inferences: usize,
+    pub instructions: u64,
+}
+
+impl ColocationResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.latency_ms.clone().mean()
+    }
+
+    pub fn llc_mpki(&self) -> f64 {
+        self.counters.llc_misses() as f64 / (self.instructions as f64 / 1000.0).max(1e-9)
+    }
+
+    pub fn l2_mpki(&self) -> f64 {
+        self.counters.l2_misses() as f64 / (self.instructions as f64 / 1000.0).max(1e-9)
+    }
+
+    /// Aggregate machine throughput in inferences/sec, assuming all
+    /// `n_jobs` run closed-loop at the measured mean latency.
+    pub fn throughput_ips(&self) -> f64 {
+        self.n_jobs as f64 / (self.mean_ms() / 1e3)
+    }
+}
+
+/// Homogeneous co-location of `n_jobs` copies of one model.
+pub struct ColocationSim {
+    pub machine: MachineSim,
+    graph: ModelGraph,
+    batch: usize,
+    n_jobs: usize,
+    idgens: Vec<SparseIdGen>,
+    activity_rng: Rng,
+}
+
+impl ColocationSim {
+    pub fn new(spec: ServerSpec, cfg: &RmcConfig, batch: usize, n_jobs: usize, seed: u64) -> Self {
+        assert!(n_jobs >= 1);
+        let machine = MachineSim::new(spec, n_jobs).with_production_jitter(seed);
+        let graph = ModelGraph::from_rmc(cfg);
+        let idgens = (0..n_jobs)
+            .map(|i| SparseIdGen::production_like(cfg.rows, seed ^ (i as u64 * 0x9E37)))
+            .collect();
+        ColocationSim {
+            machine,
+            graph,
+            batch,
+            n_jobs,
+            idgens,
+            activity_rng: Rng::seed_from_u64(seed ^ 0xAC71),
+        }
+    }
+
+    /// Sample how many jobs are actively issuing memory traffic right
+    /// now: this job plus Binomial(n-1, duty) co-runners.
+    fn sample_active(&mut self) -> usize {
+        if self.n_jobs == 1 {
+            return 1;
+        }
+        1 + self
+            .activity_rng
+            .binomial((self.n_jobs - 1) as u64, calib::COLOCATION_DUTY) as usize
+    }
+
+    /// Interleave `rounds` inferences per job after `warm` warm-up
+    /// rounds; returns pooled statistics.
+    pub fn run(&mut self, warm: usize, rounds: usize) -> ColocationResult {
+        for _ in 0..warm {
+            for j in 0..self.n_jobs {
+                let active = self.sample_active();
+                self.machine
+                    .run_inference(j, &self.graph, self.batch, &mut self.idgens[j], active);
+            }
+        }
+        let mut latency_ms = LatencyHistogram::new();
+        let mut mean_cat_ns: std::collections::HashMap<OpCategory, f64> = Default::default();
+        let mut counters = CacheCounters::default();
+        let mut instructions = 0u64;
+        let mut inferences = 0usize;
+        for _ in 0..rounds {
+            for j in 0..self.n_jobs {
+                let active = self.sample_active();
+                let b = self.machine.run_inference(
+                    j,
+                    &self.graph,
+                    self.batch,
+                    &mut self.idgens[j],
+                    active,
+                );
+                latency_ms.record(b.ms());
+                for (c, ns) in &b.by_cat {
+                    *mean_cat_ns.entry(*c).or_default() += ns;
+                }
+                counters.add(&b.counters);
+                instructions += b.instructions;
+                inferences += 1;
+            }
+        }
+        for v in mean_cat_ns.values_mut() {
+            *v /= inferences as f64;
+        }
+        // Normalize counters/instructions to per-inference means.
+        let n = inferences as u64;
+        counters = CacheCounters {
+            l1_hits: counters.l1_hits / n,
+            l2_hits: counters.l2_hits / n,
+            l3_hits: counters.l3_hits / n,
+            dram_accesses: counters.dram_accesses / n,
+            l2_back_invalidations: counters.l2_back_invalidations / n,
+        };
+        ColocationResult {
+            n_jobs: self.n_jobs,
+            batch: self.batch,
+            latency_ms,
+            mean_cat_ns,
+            counters,
+            inferences,
+            instructions: instructions / n,
+        }
+    }
+}
+
+/// Fig 11 harness: distribution of a standalone FC operator co-located
+/// with `n_bg` RMC1 jobs in the production environment.
+pub fn focal_fc_distribution(
+    spec: ServerSpec,
+    d_in: usize,
+    d_out: usize,
+    batch: usize,
+    n_bg: usize,
+    executions: usize,
+    seed: u64,
+) -> LatencyHistogram {
+    let bg_cfg = crate::config::rmc1_small();
+    let bg_graph = ModelGraph::from_rmc(&bg_cfg);
+    let mut machine = MachineSim::new(spec, n_bg + 1).with_production_jitter(seed);
+    let mut bg_gens: Vec<SparseIdGen> = (0..n_bg)
+        .map(|i| SparseIdGen::production_like(bg_cfg.rows, seed ^ (i as u64 * 31)))
+        .collect();
+    let mut rng = Rng::seed_from_u64(seed ^ 0xF0CA1);
+    let op = Op::Fc { d_in, d_out };
+    let mut hist = LatencyHistogram::new();
+    for _ in 0..executions {
+        // A stochastic subset of background jobs runs (pollutes L3).
+        let active = if n_bg == 0 {
+            1
+        } else {
+            1 + rng.binomial(n_bg as u64, calib::COLOCATION_DUTY) as usize
+        };
+        for j in 0..active.saturating_sub(1).min(n_bg) {
+            // Background jobs run small-batch RMC1 inferences.
+            machine.run_inference(1 + j, &bg_graph, 4, &mut bg_gens[j], active);
+        }
+        let us = machine.time_op(&op, batch, active) / 1e3;
+        hist.record(us);
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn colocation_degrades_latency() {
+        // Fig 9: 8 co-located jobs degrade per-model latency.
+        let cfg = presets::rmc2_small();
+        let solo = ColocationSim::new(ServerSpec::broadwell(), &cfg, 32, 1, 1)
+            .run(2, 4)
+            .mean_ms();
+        let co8 = ColocationSim::new(ServerSpec::broadwell(), &cfg, 32, 8, 1)
+            .run(2, 4)
+            .mean_ms();
+        assert!(co8 > 1.2 * solo, "co8 {co8} vs solo {solo}");
+    }
+
+    #[test]
+    fn rmc2_degrades_more_than_rmc3() {
+        // Fig 9: RMC2 (irregular) suffers more than RMC3 (compute).
+        let deg = |cfg: &RmcConfig| {
+            let solo = ColocationSim::new(ServerSpec::broadwell(), cfg, 32, 1, 3)
+                .run(2, 3)
+                .mean_ms();
+            let co = ColocationSim::new(ServerSpec::broadwell(), cfg, 32, 8, 3)
+                .run(2, 3)
+                .mean_ms();
+            co / solo
+        };
+        let d2 = deg(&presets::rmc2_small());
+        let d3 = deg(&presets::rmc3_small());
+        assert!(d2 > d3, "rmc2 degradation {d2} should exceed rmc3 {d3}");
+    }
+
+    #[test]
+    fn inclusive_hierarchy_degrades_more() {
+        // Takeaway 7: Broadwell (inclusive) suffers more than Skylake
+        // (exclusive) under identical co-location.
+        let cfg = presets::rmc2_small();
+        let rel = |spec: ServerSpec| {
+            let solo = ColocationSim::new(spec.clone(), &cfg, 32, 1, 5).run(2, 3).mean_ms();
+            let co = ColocationSim::new(spec, &cfg, 32, 12, 5).run(2, 3).mean_ms();
+            co / solo
+        };
+        let bdw = rel(ServerSpec::broadwell());
+        let skl = rel(ServerSpec::skylake());
+        assert!(bdw > skl, "bdw degradation {bdw} <= skl {skl}");
+    }
+
+    #[test]
+    fn focal_fc_broadwell_multimodal_skylake_unimodal() {
+        // Fig 11a: FC 512x512 (1MB weights) fits Skylake L2, only
+        // Broadwell LLC.
+        let bdw = focal_fc_distribution(ServerSpec::broadwell(), 512, 512, 1, 20, 120, 9);
+        let skl = focal_fc_distribution(ServerSpec::skylake(), 512, 512, 1, 20, 120, 9);
+        let spread = |mut h: LatencyHistogram| h.p99() / h.p5();
+        assert!(
+            spread(bdw.clone()) > spread(skl.clone()),
+            "bdw spread {} <= skl spread {}",
+            spread(bdw),
+            spread(skl)
+        );
+    }
+
+    #[test]
+    fn back_invalidations_only_on_inclusive() {
+        let cfg = presets::rmc2_small();
+        let bdw = ColocationSim::new(ServerSpec::broadwell(), &cfg, 32, 8, 2).run(1, 3);
+        let skl = ColocationSim::new(ServerSpec::skylake(), &cfg, 32, 8, 2).run(1, 3);
+        assert!(bdw.counters.l2_back_invalidations > 0);
+        assert_eq!(skl.counters.l2_back_invalidations, 0);
+    }
+}

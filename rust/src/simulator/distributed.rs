@@ -1,0 +1,201 @@
+//! Distributed (sharded) inference — the paper's §VII extension
+//! direction ("running recommendation models across many nodes
+//! (distributed inference)"): RMC2-class models exceed one node's DRAM
+//! comfort zone (≈10 GB of tables), so production shards embedding
+//! tables table-wise across nodes; a leader fans requests out, shards
+//! compute their SLS partials, and the leader runs the MLPs on the
+//! gathered vectors.
+//!
+//! This module simulates that topology on the modeled Table II servers:
+//! per-shard SLS time comes from the same trace-driven machine model,
+//! plus a network model (RTT + serialized payload). It answers the
+//! design question the paper raises: when does sharding pay?
+
+use crate::config::{RmcConfig, ServerSpec};
+use crate::model::{ModelGraph, Op, OpCategory};
+use crate::simulator::MachineSim;
+use crate::workload::SparseIdGen;
+
+/// Datacenter-network model (same-rack RDMA-ish defaults).
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// One-way latency leader <-> shard, ns.
+    pub rtt_ns: f64,
+    /// Link bandwidth, GB/s.
+    pub bw_gbs: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // 25GbE-class intra-rack: ~15us RTT, ~3 GB/s effective.
+        NetworkModel { rtt_ns: 15_000.0, bw_gbs: 3.0 }
+    }
+}
+
+/// Result of one sharded-inference simulation.
+#[derive(Debug, Clone)]
+pub struct ShardedResult {
+    pub shards: usize,
+    pub batch: usize,
+    /// End-to-end latency, ms.
+    pub total_ms: f64,
+    /// Slowest shard's SLS time, ms.
+    pub shard_sls_ms: f64,
+    /// Leader-side MLP + glue time, ms.
+    pub leader_ms: f64,
+    /// Network (fan-out + gather) time, ms.
+    pub network_ms: f64,
+    /// Aggregate embedding bytes per shard (the memory-capacity win).
+    pub shard_emb_bytes: u64,
+}
+
+/// Simulate one batch-`batch` inference of `cfg` sharded table-wise over
+/// `shards` nodes of `spec`, with the leader on an identical node.
+pub fn simulate_sharded(
+    cfg: &RmcConfig,
+    spec: &ServerSpec,
+    net: &NetworkModel,
+    shards: usize,
+    batch: usize,
+    seed: u64,
+) -> ShardedResult {
+    assert!(shards >= 1);
+    let tables_per_shard = cfg.num_tables.div_ceil(shards);
+
+    // --- shard side: SLS over its subset of tables (trace-driven). ----
+    let shard_graph = ModelGraph {
+        name: format!("{}-shard", cfg.name),
+        class: cfg.class,
+        ops: (0..tables_per_shard)
+            .map(|_| Op::Sls { rows: cfg.rows, emb_dim: cfg.emb_dim, lookups: cfg.lookups })
+            .collect(),
+    };
+    let mut shard_sim = MachineSim::new(spec.clone(), 1);
+    let mut idgen = SparseIdGen::production_like(cfg.rows, seed);
+    shard_sim.warmup(0, &shard_graph, batch, &mut idgen, 2);
+    let shard_b = shard_sim.run_inference(0, &shard_graph, batch, &mut idgen, 1);
+    let shard_sls_ns = shard_b.total_ns;
+
+    // --- leader side: bottom+top MLP, concat, sigmoid (no SLS). -------
+    let leader_graph = ModelGraph {
+        name: format!("{}-leader", cfg.name),
+        class: cfg.class,
+        ops: ModelGraph::from_rmc(cfg)
+            .ops
+            .into_iter()
+            .filter(|o| o.category() != OpCategory::Sls)
+            .collect(),
+    };
+    let mut leader_sim = MachineSim::new(spec.clone(), 1);
+    let mut idgen2 = SparseIdGen::production_like(cfg.rows, seed ^ 1);
+    leader_sim.warmup(0, &leader_graph, batch, &mut idgen2, 2);
+    let leader_ns = leader_sim.run_inference(0, &leader_graph, batch, &mut idgen2, 1).total_ns;
+
+    // --- network: scatter ids + gather embedding partials. ------------
+    let network_ns = if shards == 1 {
+        0.0 // co-located: no fan-out
+    } else {
+        let ids_bytes = (batch * tables_per_shard * cfg.lookups * 8) as f64;
+        let emb_bytes = (batch * tables_per_shard * cfg.emb_dim * 4) as f64;
+        2.0 * net.rtt_ns + (ids_bytes + emb_bytes) / net.bw_gbs
+    };
+
+    ShardedResult {
+        shards,
+        batch,
+        total_ms: (shard_sls_ns + leader_ns + network_ns) / 1e6,
+        shard_sls_ms: shard_sls_ns / 1e6,
+        leader_ms: leader_ns / 1e6,
+        network_ms: network_ns / 1e6,
+        shard_emb_bytes: tables_per_shard as u64 * cfg.rows as u64 * cfg.emb_dim as u64 * 4,
+    }
+}
+
+/// Sweep shard counts; returns one result per count.
+pub fn shard_sweep(
+    cfg: &RmcConfig,
+    spec: &ServerSpec,
+    net: &NetworkModel,
+    counts: &[usize],
+    batch: usize,
+) -> Vec<ShardedResult> {
+    counts
+        .iter()
+        .map(|&n| simulate_sharded(cfg, spec, net, n, batch, 17))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, ServerSpec};
+
+    #[test]
+    fn sharding_cuts_per_node_memory_linearly() {
+        let cfg = presets::rmc2_large();
+        let r1 = simulate_sharded(&cfg, &ServerSpec::skylake(), &NetworkModel::default(), 1, 8, 1);
+        let r8 = simulate_sharded(&cfg, &ServerSpec::skylake(), &NetworkModel::default(), 8, 8, 1);
+        assert!(r8.shard_emb_bytes <= r1.shard_emb_bytes / 7);
+        // 10GB-class model becomes ~1.3GB/node at 8 shards.
+        assert!(r8.shard_emb_bytes < 2_000_000_000);
+    }
+
+    #[test]
+    fn sharding_helps_rmc2_latency_at_moderate_counts() {
+        // RMC2 is SLS-bound: splitting 32 tables over 4 nodes should beat
+        // single-node despite the network hop.
+        let cfg = presets::rmc2_large();
+        let r = shard_sweep(
+            &cfg,
+            &ServerSpec::broadwell(),
+            &NetworkModel::default(),
+            &[1, 4],
+            32,
+        );
+        assert!(
+            r[1].total_ms < r[0].total_ms,
+            "4 shards {} !< 1 shard {}",
+            r[1].total_ms,
+            r[0].total_ms
+        );
+    }
+
+    #[test]
+    fn sharding_hurts_compute_bound_rmc3() {
+        // RMC3 has 3 tables and a huge MLP: sharding buys nothing and
+        // pays the network cost.
+        let cfg = presets::rmc3_large();
+        let r = shard_sweep(
+            &cfg,
+            &ServerSpec::broadwell(),
+            &NetworkModel::default(),
+            &[1, 3],
+            8,
+        );
+        assert!(r[1].total_ms >= r[0].total_ms * 0.95, "{r:?}");
+    }
+
+    #[test]
+    fn network_time_zero_for_single_node() {
+        let cfg = presets::rmc1_small();
+        let r = simulate_sharded(&cfg, &ServerSpec::haswell(), &NetworkModel::default(), 1, 4, 3);
+        assert_eq!(r.network_ms, 0.0);
+        assert!(r.total_ms > 0.0);
+    }
+
+    #[test]
+    fn diminishing_returns_with_more_shards() {
+        // Marginal gain from 8 -> 16 shards is smaller than 1 -> 4.
+        let cfg = presets::rmc2_large();
+        let r = shard_sweep(
+            &cfg,
+            &ServerSpec::skylake(),
+            &NetworkModel::default(),
+            &[1, 4, 8, 16],
+            32,
+        );
+        let g14 = r[0].total_ms - r[1].total_ms;
+        let g816 = r[2].total_ms - r[3].total_ms;
+        assert!(g14 > g816, "gain 1->4 {g14} should exceed 8->16 {g816}");
+    }
+}

@@ -1,0 +1,73 @@
+//! DRAM timing model: DDR3/DDR4 access latency with co-location queueing
+//! and bandwidth sharing (paper Takeaway 3: the Haswell-Broadwell gap is
+//! DDR3-1600 vs DDR4-2400; §VI: co-runners share socket bandwidth).
+
+use crate::config::ServerSpec;
+
+use super::calib;
+
+#[derive(Debug, Clone)]
+pub struct DramModel {
+    /// Idle (unloaded) access latency, ns.
+    pub lat_ns: f64,
+    /// Total socket bandwidth available to this machine's jobs, GB/s.
+    pub bw_gbs: f64,
+}
+
+impl DramModel {
+    pub fn from_spec(spec: &ServerSpec) -> Self {
+        DramModel { lat_ns: spec.dram_lat_ns, bw_gbs: spec.dram_bw_gbs }
+    }
+
+    /// Latency of one random 64B line access when `active_jobs` memory-
+    /// intensive jobs share the socket. Queueing grows linearly with
+    /// contenders (M/D/1-ish small-utilization regime).
+    pub fn access_latency_ns(&self, active_jobs: usize) -> f64 {
+        let extra = calib::DRAM_CONTENTION_ALPHA * active_jobs.saturating_sub(1) as f64;
+        self.lat_ns * (1.0 + extra)
+    }
+
+    /// Streaming time for `bytes` of sequential traffic under fair
+    /// bandwidth sharing, capped by the per-core limit.
+    pub fn stream_ns(&self, bytes: u64, active_jobs: usize) -> f64 {
+        let share =
+            (self.bw_gbs / active_jobs.max(1) as f64).min(calib::PER_CORE_DRAM_BW_GBS);
+        bytes as f64 / share // GB/s == bytes/ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServerSpec;
+
+    #[test]
+    fn contention_raises_latency() {
+        let d = DramModel::from_spec(&ServerSpec::broadwell());
+        assert!(d.access_latency_ns(8) > d.access_latency_ns(1));
+        assert_eq!(d.access_latency_ns(1), 80.0);
+    }
+
+    #[test]
+    fn haswell_slower_than_broadwell() {
+        let h = DramModel::from_spec(&ServerSpec::haswell());
+        let b = DramModel::from_spec(&ServerSpec::broadwell());
+        assert!(h.access_latency_ns(1) > b.access_latency_ns(1));
+        assert!(h.stream_ns(1 << 20, 1) >= b.stream_ns(1 << 20, 1));
+    }
+
+    #[test]
+    fn stream_respects_per_core_cap() {
+        let d = DramModel::from_spec(&ServerSpec::skylake());
+        // 1 GB at the 14 GB/s cap = ~71.4 ms even though socket has 85.
+        let ns = d.stream_ns(1_000_000_000, 1);
+        assert!((ns / 1e6 - 71.4).abs() < 1.0, "{} ms", ns / 1e6);
+    }
+
+    #[test]
+    fn sharing_divides_bandwidth() {
+        let d = DramModel::from_spec(&ServerSpec::broadwell());
+        // 11 jobs: 77/11 = 7 GB/s per job, below the cap.
+        assert!(d.stream_ns(1 << 20, 11) > 1.5 * d.stream_ns(1 << 20, 1));
+    }
+}

@@ -1,0 +1,99 @@
+//! Embedding-row software cache study — the paper's §VII future-work
+//! direction ("use cases with fewer unique IDs enable opportunities for
+//! embedding vector re-use and intelligent caching", citing Bandana):
+//! simulate a dedicated row-granular cache in front of an embedding
+//! table and measure hit rate across the Fig 14 locality spectrum.
+
+use crate::workload::SparseIdGen;
+
+use super::cache::Cache;
+
+/// Result of one cache sizing point.
+#[derive(Debug, Clone)]
+pub struct CachePoint {
+    pub cache_rows: usize,
+    pub hit_rate: f64,
+    pub lookups: usize,
+}
+
+/// Simulate an LRU row cache of `cache_rows` rows over `lookups` IDs
+/// drawn from `gen`.
+pub fn simulate_row_cache(gen: &mut SparseIdGen, cache_rows: usize, lookups: usize) -> CachePoint {
+    // Row-granular: one "line" per row (64B line size is irrelevant
+    // here; we use the Cache's line table as a row table).
+    let mut cache = Cache::new((cache_rows * 64) as u64, 16.min(cache_rows.max(1)));
+    let mut hits = 0usize;
+    for _ in 0..lookups {
+        let id = gen.next_id() as u64;
+        if cache.probe(id) {
+            hits += 1;
+        } else {
+            cache.insert(id);
+        }
+    }
+    CachePoint { cache_rows, hit_rate: hits as f64 / lookups as f64, lookups }
+}
+
+/// Sweep cache sizes (as fractions of the table) for one generator.
+pub fn sweep_cache_sizes(
+    mk_gen: impl Fn(u64) -> SparseIdGen,
+    rows: usize,
+    fractions: &[f64],
+    lookups: usize,
+) -> Vec<CachePoint> {
+    fractions
+        .iter()
+        .map(|&f| {
+            let cache_rows = ((rows as f64 * f) as usize).max(16);
+            let mut gen = mk_gen(99);
+            simulate_row_cache(&mut gen, cache_rows, lookups)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{IdDistribution, SparseIdGen};
+
+    const ROWS: usize = 1_000_000;
+
+    #[test]
+    fn hot_traces_cache_well_uniform_does_not() {
+        // The paper's caching claim: high-reuse use cases (low unique-ID
+        // fraction) get high hit rates from a small cache; uniform
+        // traffic does not.
+        let mut hot = SparseIdGen::new(
+            IdDistribution::Trace { hot_fraction: 0.001, hot_prob: 0.9 },
+            ROWS,
+            1,
+        );
+        let mut uni = SparseIdGen::new(IdDistribution::Uniform, ROWS, 1);
+        let cache_rows = ROWS / 100; // 1% of the table
+        let h = simulate_row_cache(&mut hot, cache_rows, 50_000);
+        let u = simulate_row_cache(&mut uni, cache_rows, 50_000);
+        assert!(h.hit_rate > 0.7, "hot trace hit rate {}", h.hit_rate);
+        assert!(u.hit_rate < 0.1, "uniform hit rate {}", u.hit_rate);
+    }
+
+    #[test]
+    fn hit_rate_monotone_in_cache_size() {
+        let pts = sweep_cache_sizes(
+            |seed| SparseIdGen::new(IdDistribution::Zipf { s: 1.05 }, ROWS, seed),
+            ROWS,
+            &[0.001, 0.01, 0.1],
+            30_000,
+        );
+        assert!(pts[0].hit_rate <= pts[1].hit_rate + 0.02);
+        assert!(pts[1].hit_rate <= pts[2].hit_rate + 0.02);
+        assert!(pts[2].hit_rate > pts[0].hit_rate);
+    }
+
+    #[test]
+    fn zipf_small_cache_beats_unique_fraction_baseline() {
+        // Even a 0.1% cache captures the Zipf head.
+        let mut gen = SparseIdGen::new(IdDistribution::Zipf { s: 1.05 }, ROWS, 3);
+        let p = simulate_row_cache(&mut gen, ROWS / 1000, 50_000);
+        assert!(p.hit_rate > 0.3, "zipf hit rate {}", p.hit_rate);
+    }
+}

@@ -1,0 +1,246 @@
+//! Three-level memory hierarchy with private L1/L2 per co-located
+//! instance and one shared L3, supporting the paper's two inclusion
+//! policies (§VI, Takeaway 7):
+//!
+//! * **Inclusive** (Haswell, Broadwell): every L2 line is also in L3;
+//!   an L3 eviction *back-invalidates* the owner's L1/L2 copy. Under
+//!   co-location, co-runners' L3 pressure therefore reaches into other
+//!   instances' private caches — the mechanism behind Broadwell's
+//!   latency cliffs (Figs 9-11).
+//! * **Exclusive** (Skylake): L3 is a victim cache; L2 contents are not
+//!   duplicated in L3 and cannot be back-invalidated by it.
+
+use crate::config::{CacheInclusion, ServerSpec};
+use crate::metrics::CacheCounters;
+
+use super::cache::Cache;
+
+/// Where an access was served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HitLevel {
+    L1,
+    L2,
+    L3,
+    Dram,
+}
+
+struct PrivateCaches {
+    l1: Cache,
+    l2: Cache,
+}
+
+pub struct SharedMemorySystem {
+    privates: Vec<PrivateCaches>,
+    l3: Cache,
+    inclusion: CacheInclusion,
+    /// Per-instance hit/miss accounting.
+    pub counters: Vec<CacheCounters>,
+}
+
+/// Instance tag occupies the top byte of the line address; one
+/// instance's lines can never alias another's.
+const INST_SHIFT: u32 = 56;
+
+impl SharedMemorySystem {
+    pub fn new(spec: &ServerSpec, instances: usize) -> Self {
+        assert!(instances >= 1 && instances < 256);
+        let privates = (0..instances)
+            .map(|_| PrivateCaches {
+                l1: Cache::new(spec.l1_bytes(), 8),
+                l2: Cache::new(spec.l2_bytes(), 8),
+            })
+            .collect();
+        SharedMemorySystem {
+            privates,
+            l3: Cache::new(spec.l3_bytes(), 16),
+            inclusion: spec.inclusion,
+            counters: vec![CacheCounters::default(); instances],
+        }
+    }
+
+    pub fn instances(&self) -> usize {
+        self.privates.len()
+    }
+
+    fn owner_of(line: u64) -> usize {
+        (line >> INST_SHIFT) as usize
+    }
+
+    /// Access one 64B line (byte `addr` within instance `inst`'s private
+    /// address space). Returns the level that served it.
+    pub fn access(&mut self, inst: usize, addr: u64) -> HitLevel {
+        let line = ((inst as u64) << INST_SHIFT) | (addr >> 6);
+        let p = &mut self.privates[inst];
+        if p.l1.probe(line) {
+            self.counters[inst].l1_hits += 1;
+            return HitLevel::L1;
+        }
+        if p.l2.probe(line) {
+            p.l1.insert(line);
+            self.counters[inst].l2_hits += 1;
+            return HitLevel::L2;
+        }
+        match self.inclusion {
+            CacheInclusion::Inclusive => self.access_inclusive(inst, line),
+            CacheInclusion::Exclusive => self.access_exclusive(inst, line),
+        }
+    }
+
+    fn access_inclusive(&mut self, inst: usize, line: u64) -> HitLevel {
+        let l3_hit = self.l3.probe(line);
+        if l3_hit {
+            let p = &mut self.privates[inst];
+            p.l2.insert(line);
+            p.l1.insert(line);
+            self.counters[inst].l3_hits += 1;
+            return HitLevel::L3;
+        }
+        // DRAM fill: install in all levels; L3 eviction back-invalidates
+        // the victim owner's private copies.
+        if let Some(victim) = self.l3.insert(line) {
+            let owner = Self::owner_of(victim);
+            if owner < self.privates.len() {
+                let po = &mut self.privates[owner];
+                if po.l2.invalidate(victim) {
+                    self.counters[owner].l2_back_invalidations += 1;
+                }
+                po.l1.invalidate(victim);
+            }
+        }
+        let p = &mut self.privates[inst];
+        p.l2.insert(line);
+        p.l1.insert(line);
+        self.counters[inst].dram_accesses += 1;
+        HitLevel::Dram
+    }
+
+    fn access_exclusive(&mut self, inst: usize, line: u64) -> HitLevel {
+        let l3_hit = self.l3.probe(line);
+        if l3_hit {
+            // Move from L3 into L2 (exclusive); L2 victim falls to L3.
+            self.l3.invalidate(line);
+            let p = &mut self.privates[inst];
+            if let Some(victim) = p.l2.insert(line) {
+                self.l3.insert(victim);
+            }
+            p.l1.insert(line);
+            self.counters[inst].l3_hits += 1;
+            return HitLevel::L3;
+        }
+        // DRAM fill goes to L2 only; victim falls to L3.
+        let p = &mut self.privates[inst];
+        if let Some(victim) = p.l2.insert(line) {
+            self.l3.insert(victim);
+        }
+        p.l1.insert(line);
+        self.counters[inst].dram_accesses += 1;
+        HitLevel::Dram
+    }
+
+    pub fn reset_counters(&mut self) {
+        for c in &mut self.counters {
+            *c = CacheCounters::default();
+        }
+        self.l3.reset_stats();
+        for p in &mut self.privates {
+            p.l1.reset_stats();
+            p.l2.reset_stats();
+        }
+    }
+
+    pub fn l3_stats(&self) -> super::cache::CacheStats {
+        self.l3.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServerSpec;
+
+    fn tiny_spec(inclusion: CacheInclusion) -> ServerSpec {
+        let mut s = ServerSpec::broadwell();
+        s.l1_kb = 1; // 16 lines
+        s.l2_kb = 4; // 64 lines
+        s.l3_mb = 64.0 / (1024.0 * 1024.0) * 64.0; // 64 lines
+        s.inclusion = inclusion;
+        s
+    }
+
+    #[test]
+    fn first_access_is_dram_second_is_l1() {
+        let mut m = SharedMemorySystem::new(&ServerSpec::broadwell(), 1);
+        assert_eq!(m.access(0, 0x1000), HitLevel::Dram);
+        assert_eq!(m.access(0, 0x1000), HitLevel::L1);
+        assert_eq!(m.counters[0].dram_accesses, 1);
+        assert_eq!(m.counters[0].l1_hits, 1);
+    }
+
+    #[test]
+    fn same_addr_different_instances_do_not_alias() {
+        let mut m = SharedMemorySystem::new(&ServerSpec::broadwell(), 2);
+        assert_eq!(m.access(0, 0x1000), HitLevel::Dram);
+        assert_eq!(m.access(1, 0x1000), HitLevel::Dram);
+        assert_eq!(m.access(0, 0x1000), HitLevel::L1);
+    }
+
+    #[test]
+    fn inclusive_back_invalidation_reaches_private_l2() {
+        // Instance 0 loads a line; instance 1 thrashes L3 until 0's line
+        // is evicted from L3 -> it must also vanish from 0's L2.
+        let mut m = SharedMemorySystem::new(&tiny_spec(CacheInclusion::Inclusive), 2);
+        m.access(0, 0);
+        assert_eq!(m.access(0, 0), HitLevel::L1);
+        // Thrash far more lines than L3 holds.
+        for i in 0..4096u64 {
+            m.access(1, 0x10_0000 + i * 64);
+        }
+        // Instance 0's line was back-invalidated: next access misses all
+        // levels even though its private L1/L2 saw no instance-0 traffic.
+        assert_eq!(m.access(0, 0), HitLevel::Dram);
+        assert!(m.counters[0].l2_back_invalidations > 0);
+    }
+
+    #[test]
+    fn exclusive_hierarchy_shields_private_l2() {
+        let mut m = SharedMemorySystem::new(&tiny_spec(CacheInclusion::Exclusive), 2);
+        m.access(0, 0);
+        for i in 0..4096u64 {
+            m.access(1, 0x10_0000 + i * 64);
+        }
+        // L2 copy survives the co-runner's L3 thrashing.
+        let lvl = m.access(0, 0);
+        assert!(
+            lvl == HitLevel::L1 || lvl == HitLevel::L2,
+            "expected private hit, got {lvl:?}"
+        );
+        assert_eq!(m.counters[0].l2_back_invalidations, 0);
+    }
+
+    #[test]
+    fn exclusive_l3_acts_as_victim_cache() {
+        let mut m = SharedMemorySystem::new(&tiny_spec(CacheInclusion::Exclusive), 1);
+        // Fill L2 (64 lines) and then some, so early lines spill to L3.
+        for i in 0..80u64 {
+            m.access(0, i * 64);
+        }
+        // Line 0 was evicted from L2 into L3: next access hits L3.
+        let lvl = m.access(0, 0);
+        assert!(lvl == HitLevel::L3 || lvl == HitLevel::L2, "got {lvl:?}");
+    }
+
+    #[test]
+    fn working_set_within_l2_hits_after_warmup() {
+        let mut m = SharedMemorySystem::new(&ServerSpec::skylake(), 1);
+        let lines: Vec<u64> = (0..1000).map(|i| i * 64).collect(); // 64KB
+        for &a in &lines {
+            m.access(0, a);
+        }
+        m.reset_counters();
+        for &a in &lines {
+            let lvl = m.access(0, a);
+            assert!(lvl != HitLevel::Dram);
+        }
+        assert_eq!(m.counters[0].dram_accesses, 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Architectural simulator — the substituted Intel testbed (DESIGN.md §3).
+//!
+//! Models exactly the mechanisms the paper's cross-architecture analysis
+//! names: clock frequency, AVX-2/AVX-512 throughput with batch-dependent
+//! utilization (§V), three-level set-associative caches with inclusive
+//! (back-invalidating) vs exclusive L2/L3 policies (§VI, Takeaway 7),
+//! DDR3/DDR4 latency/bandwidth (Takeaway 3), TLB reach, shared-LLC and
+//! shared-DRAM co-location contention, and framework dispatch overhead.
+//!
+//! Calibration constants live in `calib.rs`; EXPERIMENTS.md records how
+//! well the calibrated model matches every paper number.
+
+pub mod cache;
+pub mod calib;
+pub mod colocation;
+pub mod core;
+pub mod distributed;
+pub mod dram;
+pub mod embedding_cache;
+pub mod hierarchy;
+pub mod machine;
+
+pub use cache::Cache;
+pub use colocation::{ColocationResult, ColocationSim};
+pub use core::CoreModel;
+pub use dram::DramModel;
+pub use hierarchy::{HitLevel, SharedMemorySystem};
+pub use machine::{InferenceBreakdown, MachineSim};

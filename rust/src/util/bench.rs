@@ -1,0 +1,78 @@
+//! Hand-rolled bench harness — std-only stand-in for criterion
+//! (unavailable offline). Used by the `benches/` binaries (harness =
+//! false): warm-up, repeated timed runs, mean/p50/min/max reporting.
+
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.1} us/iter (median {:.1}, min {:.1}, max {:.1}; n={})",
+            self.name,
+            self.mean_ns / 1e3,
+            self.median_ns / 1e3,
+            self.min_ns / 1e3,
+            self.max_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchStats {
+        name: name.into(),
+        iters,
+        mean_ns: mean,
+        median_ns: samples[samples.len() / 2],
+        min_ns: samples[0],
+        max_ns: *samples.last().unwrap(),
+    }
+}
+
+/// Section header for bench output.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench("noop", 1, 20, || { std::hint::black_box(1 + 1); });
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+        assert!(s.mean_ns > 0.0);
+        assert_eq!(s.iters, 20);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let s = bench("myname", 0, 2, || {});
+        assert!(s.report().contains("myname"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Std-only utility layer replacing unavailable ecosystem crates (see
+//! Cargo.toml note): deterministic RNG + distributions (`rng`), a minimal
+//! JSON parser for the artifact manifest and config files (`json`), a
+//! micro property-testing helper (`prop`), and the bench timing harness
+//! (`bench`).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

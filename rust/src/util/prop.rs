@@ -1,0 +1,70 @@
+//! Micro property-testing helper — std-only stand-in for proptest
+//! (unavailable offline). Sweeps `cases` randomized inputs drawn from a
+//! seeded RNG through a checker; on failure it reports the failing seed
+//! so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `cases` property checks. `f` gets a per-case RNG and the case
+/// index; it should panic (assert) on property violation.
+pub fn check<F: FnMut(&mut Rng, usize)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Draw a usize in [lo, hi] inclusive.
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.gen_range((hi - lo + 1) as u64) as usize
+}
+
+/// Draw an f64 in [lo, hi).
+pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    lo + rng.gen_f64() * (hi - lo)
+}
+
+/// Pick one element of a slice.
+pub fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.gen_range(xs.len() as u64) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counter", 25, |_, _| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fails", 10, |rng, _| {
+            assert!(rng.gen_f64() < 2.0); // always true
+            assert!(false, "boom");
+        });
+    }
+
+    #[test]
+    fn helpers_in_bounds() {
+        check("bounds", 50, |rng, _| {
+            let u = usize_in(rng, 3, 7);
+            assert!((3..=7).contains(&u));
+            let f = f64_in(rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let p = *pick(rng, &[1, 2, 3]);
+            assert!((1..=3).contains(&p));
+        });
+    }
+}

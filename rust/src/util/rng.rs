@@ -1,0 +1,212 @@
+//! Deterministic xoshiro256++ PRNG plus the distributions the simulator
+//! and workload generators need (uniform, exponential, normal,
+//! log-normal, binomial, approximate Zipf). Std-only replacement for the
+//! rand/rand_distr crates (unavailable in the offline registry).
+
+/// xoshiro256++ seeded via splitmix64. Deterministic across platforms.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached spare normal (Box-Muller generates pairs).
+    spare_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+            spare_normal: None,
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in (0, 1] (safe for ln()).
+    pub fn gen_f64_open(&mut self) -> f64 {
+        1.0 - self.gen_f64()
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection.
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        // Lemire's method with rejection.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= (u64::MAX - n + 1) % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        -self.gen_f64_open().ln() / lambda
+    }
+
+    /// Standard normal via Box-Muller (pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.gen_f64_open();
+        let u2 = self.gen_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    /// Log-normal with ln-space mean `mu` and std `sigma`.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Binomial(n, p) — exact via Bernoulli sum (n is small here: the
+    /// co-location degree, <= ~40).
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        (0..n).filter(|_| self.gen_bool(p)).count() as u64
+    }
+
+    /// Approximate Zipf over ranks 1..=n with exponent `s` (> 0), via the
+    /// continuous inverse-CDF: exact head concentration behaviour, small
+    /// bias in the deep tail — fine for workload popularity modeling.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        assert!(n >= 1 && s > 0.0);
+        let u = self.gen_f64_open();
+        let x = if (s - 1.0).abs() < 1e-9 {
+            (n as f64).powf(u)
+        } else {
+            let one_s = 1.0 - s;
+            ((u * ((n as f64).powf(one_s) - 1.0)) + 1.0).powf(1.0 / one_s)
+        };
+        (x.floor() as u64).clamp(1, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from_u64(1);
+        let mut b = Rng::seed_from_u64(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert_ne!(
+            Rng::seed_from_u64(1).next_u64(),
+            Rng::seed_from_u64(2).next_u64()
+        );
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = Rng::seed_from_u64(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::seed_from_u64(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.gen_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::seed_from_u64(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exp(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(6);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn binomial_mean() {
+        let mut r = Rng::seed_from_u64(7);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| r.binomial(20, 0.3) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 6.0).abs() < 0.15, "mean {mean}");
+    }
+
+    #[test]
+    fn zipf_head_heavy() {
+        let mut r = Rng::seed_from_u64(8);
+        let n = 50_000;
+        let head = (0..n).filter(|_| r.zipf(1_000_000, 1.1) <= 100).count();
+        // With s=1.1 the top-100 ranks should absorb a large share.
+        assert!(head as f64 / n as f64 > 0.3, "head share {}", head as f64 / n as f64);
+        // All samples in range.
+        for _ in 0..1000 {
+            let z = r.zipf(50, 0.9);
+            assert!((1..=50).contains(&z));
+        }
+    }
+
+    #[test]
+    fn lognormal_positive_centered() {
+        let mut r = Rng::seed_from_u64(9);
+        for _ in 0..1000 {
+            let v = r.lognormal(0.0, 0.05);
+            assert!(v > 0.0 && (0.7..1.4).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Poisson arrival process for the serving experiments (open-loop load).
+
+use crate::util::Rng;
+
+/// Exponential inter-arrival generator at `rate_qps` queries/second.
+#[derive(Debug, Clone)]
+pub struct PoissonArrivals {
+    rate_qps: f64,
+    rng: Rng,
+    /// Running absolute arrival time, seconds.
+    t: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate_qps: f64, seed: u64) -> Self {
+        assert!(rate_qps > 0.0, "rate must be positive");
+        PoissonArrivals { rate_qps, rng: Rng::seed_from_u64(seed), t: 0.0 }
+    }
+
+    /// Next absolute arrival time in seconds.
+    pub fn next_arrival_s(&mut self) -> f64 {
+        self.t += self.rng.exp(self.rate_qps);
+        self.t
+    }
+
+    /// All arrivals up to `horizon_s`.
+    pub fn schedule(&mut self, horizon_s: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        loop {
+            let t = self.next_arrival_s();
+            if t > horizon_s {
+                break;
+            }
+            out.push(t);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_rate_close() {
+        let mut p = PoissonArrivals::new(1000.0, 9);
+        let arr = p.schedule(10.0);
+        let rate = arr.len() as f64 / 10.0;
+        assert!((rate - 1000.0).abs() < 100.0, "rate {rate}");
+    }
+
+    #[test]
+    fn arrivals_monotonic() {
+        let mut p = PoissonArrivals::new(50.0, 1);
+        let arr = p.schedule(5.0);
+        for w in arr.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = PoissonArrivals::new(10.0, 4).schedule(2.0);
+        let b = PoissonArrivals::new(10.0, 4).schedule(2.0);
+        assert_eq!(a, b);
+    }
+}

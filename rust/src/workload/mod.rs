@@ -1,0 +1,11 @@
+//! Workload generation: sparse-ID streams (uniform / Zipf / production-
+//! trace-like, Fig 14), Poisson request arrivals, and query types for the
+//! serving coordinator.
+
+mod arrivals;
+mod query;
+mod sparse_gen;
+
+pub use arrivals::PoissonArrivals;
+pub use query::{Query, QueryResult};
+pub use sparse_gen::{unique_fraction, IdDistribution, SparseIdGen};

@@ -1,0 +1,52 @@
+//! Query types flowing through the serving coordinator. One query ranks
+//! `items` candidate posts for one user (paper §II: requests are batched
+//! so many user-post pairs are scored at once).
+
+
+/// A ranking request: score `items` candidates with model `model`.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: u64,
+    pub model: String,
+    /// Number of user-post pairs to score (the batch contribution).
+    pub items: usize,
+    /// Arrival timestamp, seconds since run start.
+    pub arrival_s: f64,
+    /// Seed for this query's sparse-feature generation.
+    pub seed: u64,
+}
+
+impl Query {
+    pub fn new(id: u64, model: impl Into<String>, items: usize, arrival_s: f64) -> Self {
+        let model = model.into();
+        Query { id, seed: id.wrapping_mul(0x9E3779B97F4A7C15), model, items, arrival_s }
+    }
+}
+
+/// Completion record produced by a worker.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    pub id: u64,
+    pub model: String,
+    pub items: usize,
+    /// Predicted CTRs (PJRT backend) or empty (simulation backend).
+    pub ctrs: Vec<f32>,
+    pub latency_ms: f64,
+    /// Which batch bucket the query was executed in.
+    pub batch_bucket: usize,
+    /// Worker that executed it.
+    pub worker: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_derived_from_id() {
+        let a = Query::new(7, "rmc1-small", 4, 0.0);
+        let b = Query::new(7, "rmc1-small", 4, 1.0);
+        assert_eq!(a.seed, b.seed);
+        assert_ne!(Query::new(8, "m", 1, 0.0).seed, a.seed);
+    }
+}

@@ -1,0 +1,156 @@
+//! Integration tests over the serving coordinator: end-to-end PJRT
+//! serving, SLA accounting, and the heterogeneity-routing ablation on
+//! the simulated fleet (the paper's scheduling insight).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig};
+use recsys::coordinator::{Backend, Coordinator, MockBackend, PjrtBackend, SimBackend};
+use recsys::runtime::{default_artifacts_dir, ModelPool};
+use recsys::workload::{PoissonArrivals, Query};
+
+fn queries(n: usize, model: &str, items: usize, qps: f64, seed: u64) -> Vec<Query> {
+    let mut arr = PoissonArrivals::new(qps, seed);
+    (0..n)
+        .map(|i| Query::new(i as u64, model, items, arr.next_arrival_s()))
+        .collect()
+}
+
+fn deployment(pools: Vec<(ServerGen, usize)>, routing: &str, sla_ms: f64) -> DeploymentConfig {
+    DeploymentConfig {
+        sla_ms,
+        batch_timeout_us: 300,
+        max_batch: 128,
+        routing: routing.into(),
+        pools: pools
+            .into_iter()
+            .map(|(gen, machines)| ServerPoolConfig {
+                gen,
+                machines,
+                colocation: 1,
+                models: vec![],
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn pjrt_serving_end_to_end() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let pool = Arc::new(ModelPool::new(&dir).unwrap());
+    pool.preload("rmc1-small", "xla").unwrap();
+    let buckets = pool.manifest.batches.clone();
+    let backend = Arc::new(PjrtBackend::new(pool));
+    let cfg = deployment(vec![(ServerGen::Broadwell, 2)], "least-loaded", 50.0);
+    let mut c = Coordinator::new(&cfg, backend, buckets).unwrap();
+    let report = c.run_open_loop(queries(120, "rmc1-small", 4, 300.0, 7), 50.0);
+    assert_eq!(report.queries, 120);
+    assert!(report.bounded_throughput > 0.0);
+    assert!(
+        report.violation_rate < 0.35,
+        "too many SLA violations: {}",
+        report.violation_rate
+    );
+    // CTR results flow back: batching actually happened.
+    assert!(!report.bucket_histogram.is_empty());
+    c.shutdown();
+}
+
+#[test]
+fn heterogeneity_routing_beats_roundrobin_on_mixed_fleet() {
+    // The paper's Takeaway 3/4 scheduling insight, as an ablation: on a
+    // Broadwell+Skylake fleet serving batched traffic, batch-size-aware
+    // routing should not lose to round-robin on latency-bounded
+    // throughput. SimBackend sleeps the simulator-predicted latency of
+    // the modeled Intel servers.
+    let backend = Arc::new(SimBackend::new(1.0));
+    // Pre-warm the latency cache so worker timing is steady.
+    for gen in [ServerGen::Broadwell, ServerGen::Skylake] {
+        backend.latency_ms("rmc1-small", 128, gen).unwrap();
+        backend.latency_ms("rmc1-small", 8, gen).unwrap();
+        backend.latency_ms("rmc1-small", 32, gen).unwrap();
+        backend.latency_ms("rmc1-small", 1, gen).unwrap();
+    }
+    let run = |routing: &str, seed: u64| {
+        let cfg = deployment(
+            vec![(ServerGen::Broadwell, 1), (ServerGen::Skylake, 1)],
+            routing,
+            20.0,
+        );
+        let mut c = Coordinator::new(&cfg, backend.clone(), vec![1, 8, 32, 128]).unwrap();
+        // Mixed load: many large queries (batched) at moderate rate.
+        let report = c.run_open_loop(queries(60, "rmc1-small", 32, 150.0, seed), 20.0);
+        c.shutdown();
+        report
+    };
+    let het: f64 = (0..2).map(|s| run("heterogeneity", s).bounded_throughput).sum();
+    let rr: f64 = (0..2).map(|s| run("round-robin", s).bounded_throughput).sum();
+    assert!(
+        het >= 0.8 * rr,
+        "heterogeneity {het} items/s should be competitive with round-robin {rr}"
+    );
+}
+
+#[test]
+fn mock_backend_counts_every_query_under_overload() {
+    // Overload: queries arrive faster than the backend can serve. All
+    // queries still complete (no drops in the coordinator), SLA
+    // accounting marks the late ones.
+    let cfg = deployment(vec![(ServerGen::Broadwell, 1)], "round-robin", 2.0);
+    let backend = Arc::new(MockBackend { latency: Duration::from_millis(4) });
+    let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
+    let report = c.run_open_loop(queries(80, "m", 8, 5000.0, 3), 2.0);
+    assert_eq!(report.queries, 80, "no query may be lost");
+    assert!(report.violation_rate > 0.3, "overload must violate SLA");
+    c.shutdown();
+}
+
+#[test]
+fn multi_model_traffic_batches_per_model() {
+    struct RecordingBackend;
+    impl Backend for RecordingBackend {
+        fn execute(
+            &self,
+            model: &str,
+            bucket: usize,
+            queries: &[Query],
+            _gen: ServerGen,
+        ) -> anyhow::Result<Vec<Vec<f32>>> {
+            // A batch must never mix models.
+            for q in queries {
+                assert_eq!(q.model, model, "mixed-model batch!");
+            }
+            assert!(bucket >= queries.iter().map(|q| q.items).sum::<usize>().min(bucket));
+            Ok(queries.iter().map(|_| vec![]).collect())
+        }
+    }
+    let cfg = deployment(vec![(ServerGen::Broadwell, 2)], "least-loaded", 50.0);
+    let mut c = Coordinator::new(&cfg, Arc::new(RecordingBackend), vec![1, 8, 32]).unwrap();
+    let mut qs = Vec::new();
+    let mut arr = PoissonArrivals::new(2000.0, 11);
+    for i in 0..100u64 {
+        let model = if i % 3 == 0 { "rmc2-small" } else { "rmc1-small" };
+        qs.push(Query::new(i, model, 3, arr.next_arrival_s()));
+    }
+    let report = c.run_open_loop(qs, 50.0);
+    assert_eq!(report.queries, 100);
+    c.shutdown();
+}
+
+#[test]
+fn sim_backend_latencies_follow_paper_ordering() {
+    // SimBackend exposes the modeled-machine latency table the router
+    // exploits: Broadwell <= Skylake at small batch; Skylake wins at 128.
+    let backend = SimBackend::new(0.0);
+    let bdw_small = backend.latency_ms("rmc3-small", 8, ServerGen::Broadwell).unwrap();
+    let skl_small = backend.latency_ms("rmc3-small", 8, ServerGen::Skylake).unwrap();
+    let bdw_big = backend.latency_ms("rmc3-small", 128, ServerGen::Broadwell).unwrap();
+    let skl_big = backend.latency_ms("rmc3-small", 128, ServerGen::Skylake).unwrap();
+    assert!(bdw_small < skl_small);
+    assert!(skl_big < bdw_big);
+}

@@ -1,0 +1,159 @@
+//! Integration tests over the PJRT runtime: golden numerics end-to-end,
+//! Pallas-vs-XLA executable cross-checks, and batching/padding
+//! correctness. These require `make artifacts` to have run; they skip
+//! (with a note) otherwise so `cargo test` stays runnable from a fresh
+//! clone.
+
+use recsys::runtime::{
+    default_artifacts_dir, golden_dense, golden_ids, golden_lwts, golden_ncf_ids, ModelPool,
+};
+
+fn pool() -> Option<ModelPool> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ModelPool::new(&dir).expect("pool"))
+}
+
+fn run_golden_rmc(pool: &ModelPool, model: &str, impl_: &str, batch: usize) -> (Vec<f32>, Vec<f32>) {
+    let v = pool.manifest.find(model, impl_, batch).expect("variant");
+    let golden = v.golden_ctr.clone().expect("golden batch");
+    let t = v.config_usize("num_tables").unwrap();
+    let l = v.config_usize("lookups").unwrap();
+    let r = v.config_usize("rows").unwrap();
+    let d = v.config_usize("dense_dim").unwrap();
+    let compiled = pool.get(model, impl_, batch).expect("compile");
+    let got = compiled
+        .run_rmc(
+            &golden_dense(batch, d),
+            &golden_ids(t, batch, l, r),
+            &golden_lwts(t, batch, l),
+        )
+        .expect("run");
+    (got, golden)
+}
+
+#[test]
+fn all_rmc_goldens_match_python() {
+    let Some(pool) = pool() else { return };
+    for model in ["rmc1-small", "rmc2-small", "rmc3-small"] {
+        for batch in [1usize, 8] {
+            let (got, want) = run_golden_rmc(&pool, model, "xla", batch);
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 2e-4,
+                    "{model} b{batch} [{i}]: got {a}, python says {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pallas_executables_match_xla_executables() {
+    // The L1 Pallas kernels and the pure-jnp graph must be numerically
+    // interchangeable AFTER AOT compilation, not just under pytest.
+    let Some(pool) = pool() else { return };
+    for model in ["rmc1-small", "rmc2-small", "rmc3-small"] {
+        let (pallas, _) = run_golden_rmc(&pool, model, "pallas", 1);
+        let (xla, _) = run_golden_rmc(&pool, model, "xla", 1);
+        for (a, b) in pallas.iter().zip(&xla) {
+            assert!((a - b).abs() < 1e-4, "{model}: pallas {a} vs xla {b}");
+        }
+    }
+}
+
+#[test]
+fn ncf_golden_matches_python() {
+    let Some(pool) = pool() else { return };
+    let v = pool.manifest.find("ncf", "xla", 8).expect("variant");
+    let golden = v.golden_ctr.clone().unwrap();
+    let users = v.config_usize("users").unwrap();
+    let items = v.config_usize("items").unwrap();
+    let (u, i) = golden_ncf_ids(8, users, items);
+    let got = pool.get("ncf", "xla", 8).unwrap().run_ncf(&u, &i).unwrap();
+    for (a, b) in got.iter().zip(&golden) {
+        assert!((a - b).abs() < 2e-4, "ncf: {a} vs {b}");
+    }
+}
+
+#[test]
+fn padding_samples_do_not_change_real_outputs() {
+    // Run the same sample through b1 and through b8-with-padding; the
+    // real slot must agree. Padding uses lookup-weight 0.
+    let Some(pool) = pool() else { return };
+    let model = "rmc1-small";
+    let v1 = pool.manifest.find(model, "xla", 1).unwrap();
+    let t = v1.config_usize("num_tables").unwrap();
+    let l = v1.config_usize("lookups").unwrap();
+    let r = v1.config_usize("rows").unwrap();
+    let d = v1.config_usize("dense_dim").unwrap();
+
+    let dense1 = golden_dense(1, d);
+    let ids1 = golden_ids(t, 1, l, r);
+    let lwts1 = golden_lwts(t, 1, l);
+    let out1 = pool.get(model, "xla", 1).unwrap().run_rmc(&dense1, &ids1, &lwts1).unwrap();
+
+    // Build a b8 batch with the same sample in slot 0 and zero-weight
+    // padding elsewhere (ids arbitrary).
+    let b = 8;
+    let mut dense8 = vec![0f32; b * d];
+    dense8[..d].copy_from_slice(&dense1);
+    let mut ids8 = vec![0i32; t * b * l];
+    let mut lwts8 = vec![0f32; t * b * l];
+    for table in 0..t {
+        for j in 0..l {
+            ids8[(table * b) * l + j] = ids1[table * l + j];
+            lwts8[(table * b) * l + j] = 1.0;
+        }
+    }
+    let out8 = pool.get(model, "xla", b).unwrap().run_rmc(&dense8, &ids8, &lwts8).unwrap();
+    assert!(
+        (out1[0] - out8[0]).abs() < 1e-5,
+        "slot0 must be batch-invariant: {} vs {}",
+        out1[0],
+        out8[0]
+    );
+}
+
+#[test]
+fn outputs_depend_on_ids() {
+    // Sanity: perturbing one sparse ID changes the CTR (the embedding
+    // path is live, not dead-code-eliminated).
+    let Some(pool) = pool() else { return };
+    let model = "rmc2-small";
+    let v = pool.manifest.find(model, "xla", 1).unwrap();
+    let t = v.config_usize("num_tables").unwrap();
+    let l = v.config_usize("lookups").unwrap();
+    let r = v.config_usize("rows").unwrap();
+    let d = v.config_usize("dense_dim").unwrap();
+    let compiled = pool.get(model, "xla", 1).unwrap();
+    let dense = golden_dense(1, d);
+    let mut ids = golden_ids(t, 1, l, r);
+    let lwts = golden_lwts(t, 1, l);
+    let a = compiled.run_rmc(&dense, &ids, &lwts).unwrap()[0];
+    ids[0] = (ids[0] + 1) % r as i32;
+    let b = compiled.run_rmc(&dense, &ids, &lwts).unwrap()[0];
+    assert_ne!(a, b, "CTR must react to sparse IDs");
+    assert!(a > 0.0 && a < 1.0 && b > 0.0 && b < 1.0);
+}
+
+#[test]
+fn wrong_input_sizes_rejected() {
+    let Some(pool) = pool() else { return };
+    let compiled = pool.get("rmc1-small", "xla", 1).unwrap();
+    let err = compiled.run_rmc(&[0.0; 3], &[0; 3], &[0.0; 3]);
+    assert!(err.is_err(), "short inputs must be rejected before PJRT");
+}
+
+#[test]
+fn bucket_for_covers_serving_range() {
+    let Some(pool) = pool() else { return };
+    for n in 1..=200 {
+        let bucket = pool.manifest.bucket_for("rmc1-small", "xla", n).unwrap();
+        assert!(bucket >= n.min(128), "n={n} bucket={bucket}");
+    }
+}

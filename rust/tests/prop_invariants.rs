@@ -1,0 +1,240 @@
+//! Property-based tests (std-only `util::prop` harness — proptest is
+//! unavailable offline) on the coordinator and substrate invariants:
+//! batcher conservation, router eligibility, cache bounds, inclusive-
+//! hierarchy containment, JSON round-trips, and SLS padding algebra.
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use recsys::config::{CacheInclusion, ServerGen, ServerSpec};
+use recsys::coordinator::{DynamicBatcher, RoutingPolicy, WorkerInfo};
+use recsys::metrics::LatencyHistogram;
+use recsys::simulator::{Cache, SharedMemorySystem};
+use recsys::util::prop::{check, f64_in, pick, usize_in};
+use recsys::util::{Json, Rng};
+use recsys::workload::Query;
+
+// ------------------------------------------------------------ batcher --
+#[test]
+fn prop_batcher_conserves_queries() {
+    // Every pushed query comes out exactly once, in exactly one batch,
+    // and every batch respects bucket >= min(items, max_batch).
+    check("batcher-conservation", 60, |rng, _| {
+        let buckets = vec![1usize, 8, 32, 128];
+        let max_batch = *pick(rng, &[8usize, 32, 128]);
+        let mut b = DynamicBatcher::new(buckets.clone(), max_batch, Duration::from_millis(1));
+        let now = Instant::now();
+        let n = usize_in(rng, 1, 60);
+        let models = ["a", "b", "c"];
+        let mut pushed = HashSet::new();
+        let mut batches = Vec::new();
+        for id in 0..n as u64 {
+            let items = usize_in(rng, 1, 12);
+            let model = *pick(rng, &models);
+            pushed.insert(id);
+            if let Some(batch) = b.push(Query::new(id, model, items, 0.0), now) {
+                batches.push(batch);
+            }
+        }
+        batches.extend(b.drain(now));
+        let mut seen = HashSet::new();
+        for batch in &batches {
+            assert!(buckets.contains(&batch.bucket), "bucket {} unknown", batch.bucket);
+            assert!(batch.bucket <= max_batch);
+            for q in &batch.queries {
+                assert_eq!(q.model, batch.model, "model purity violated");
+                assert!(seen.insert(q.id), "query {} duplicated", q.id);
+            }
+        }
+        assert_eq!(seen, pushed, "queries lost: {:?}", pushed.difference(&seen));
+        assert_eq!(b.pending_items(), 0);
+    });
+}
+
+#[test]
+fn prop_bucket_is_minimal_cover() {
+    check("bucket-minimal", 100, |rng, _| {
+        let b = DynamicBatcher::new(vec![1, 8, 32, 128], 128, Duration::from_millis(1));
+        let n = usize_in(rng, 1, 128);
+        let bucket = b.bucket_for(n);
+        assert!(bucket >= n);
+        // No smaller AOT'd bucket also covers n.
+        for smaller in [1usize, 8, 32, 128] {
+            if smaller < bucket {
+                assert!(smaller < n, "bucket {bucket} not minimal for {n}");
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------- router --
+#[test]
+fn prop_router_picks_eligible_worker() {
+    check("router-eligible", 80, |rng, _| {
+        let n_workers = usize_in(rng, 1, 8);
+        let gens = [ServerGen::Haswell, ServerGen::Broadwell, ServerGen::Skylake];
+        let workers: Vec<WorkerInfo> = (0..n_workers)
+            .map(|id| WorkerInfo {
+                id,
+                gen: *pick(rng, &gens),
+                models: if rng.gen_bool(0.3) { vec!["special".into()] } else { vec![] },
+            })
+            .collect();
+        let outstanding: Vec<usize> =
+            (0..n_workers).map(|_| usize_in(rng, 0, 5)).collect();
+        let policy = *pick(
+            rng,
+            &[RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded, RoutingPolicy::Heterogeneity],
+        );
+        let model = *pick(rng, &["special", "other"]);
+        let bucket = *pick(rng, &[1usize, 8, 32, 128]);
+        let mut rr = usize_in(rng, 0, 100);
+        match policy.pick(&workers, model, bucket, &outstanding, &mut rr) {
+            Some(id) => {
+                let w = &workers[id];
+                assert!(w.models.is_empty() || w.models.iter().any(|m| m == model));
+            }
+            None => {
+                // Only legal if nobody serves the model.
+                assert!(workers
+                    .iter()
+                    .all(|w| !w.models.is_empty() && !w.models.iter().any(|m| m == model)));
+            }
+        }
+    });
+}
+
+// -------------------------------------------------------------- cache --
+#[test]
+fn prop_cache_occupancy_and_inclusion() {
+    check("cache-bounds", 40, |rng, _| {
+        let ways = *pick(rng, &[1usize, 2, 4, 8]);
+        let lines = usize_in(rng, ways, 128);
+        let mut c = Cache::new((lines * 64) as u64, ways);
+        let universe = usize_in(rng, 1, 4000) as u64;
+        for _ in 0..2000 {
+            let line = rng.gen_range(universe);
+            if !c.probe(line) {
+                c.insert(line);
+            }
+            // A just-inserted line is present.
+            assert!(c.contains(line));
+        }
+        assert!(c.occupancy() * 64 <= c.capacity_bytes() as usize);
+    });
+}
+
+#[test]
+fn prop_inclusive_hierarchy_containment() {
+    // Inclusive invariant: after any access stream, an L2-resident line
+    // serves without reaching DRAM (it was installed in L3 too, and L3
+    // eviction would have back-invalidated it).
+    check("inclusive-containment", 12, |rng, _| {
+        let mut spec = ServerSpec::broadwell();
+        spec.l1_kb = 1;
+        spec.l2_kb = 4;
+        spec.l3_mb = 0.0078125; // 8KB = 128 lines
+        spec.inclusion = CacheInclusion::Inclusive;
+        let insts = usize_in(rng, 1, 3);
+        let mut mem = SharedMemorySystem::new(&spec, insts);
+        let mut recent: Vec<(usize, u64)> = Vec::new();
+        for _ in 0..3000 {
+            let inst = usize_in(rng, 0, insts - 1);
+            let addr = rng.gen_range(1 << 14) * 64;
+            mem.access(inst, addr);
+            recent.push((inst, addr));
+            if recent.len() > 4 {
+                recent.remove(0);
+            }
+            // Immediately re-accessing the most recent line never goes to
+            // DRAM (it is in L1).
+            let (i2, a2) = *recent.last().unwrap();
+            let lvl = mem.access(i2, a2);
+            assert!(
+                lvl == recsys::simulator::HitLevel::L1,
+                "immediate re-access must hit L1, got {lvl:?}"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------- histogram --
+#[test]
+fn prop_quantiles_monotone_and_bounded() {
+    check("quantiles", 60, |rng, _| {
+        let mut h = LatencyHistogram::new();
+        let n = usize_in(rng, 1, 300);
+        for _ in 0..n {
+            h.record(f64_in(rng, 0.0, 1000.0));
+        }
+        let (min, p5, p50, p99, max) = (h.min(), h.p5(), h.p50(), h.p99(), h.max());
+        assert!(min <= p5 && p5 <= p50 && p50 <= p99 && p99 <= max);
+        assert!(h.mean() >= min && h.mean() <= max);
+    });
+}
+
+// --------------------------------------------------------------- json --
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_bool(0.5)),
+            2 => Json::Num((rng.gen_f64() * 2000.0 - 1000.0).round()),
+            3 => Json::Str(format!("s{}-\"q\"\n", rng.gen_range(1000))),
+            4 => Json::Arr((0..rng.gen_range(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for k in 0..rng.gen_range(4) {
+                    m.insert(format!("k{k}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    check("json-roundtrip", 80, |rng, _| {
+        let v = random_json(rng, 3);
+        let text = v.to_string_pretty();
+        let parsed = Json::parse(&text).expect("reparse");
+        assert_eq!(parsed, v, "round-trip failed for {text}");
+    });
+}
+
+// ------------------------------------------------------------ arrival --
+#[test]
+fn prop_arrivals_sorted_positive() {
+    check("arrivals", 40, |rng, _| {
+        let rate = f64_in(rng, 1.0, 5000.0);
+        let mut arr = recsys::workload::PoissonArrivals::new(rate, rng.next_u64());
+        let mut prev = 0.0;
+        for _ in 0..200 {
+            let t = arr.next_arrival_s();
+            assert!(t > prev);
+            prev = t;
+        }
+    });
+}
+
+// ------------------------------------------------------------- id gen --
+#[test]
+fn prop_idgen_in_range_and_deterministic() {
+    use recsys::workload::{IdDistribution, SparseIdGen};
+    check("idgen", 50, |rng, _| {
+        let rows = usize_in(rng, 1, 100_000);
+        let dist = match rng.gen_range(3) {
+            0 => IdDistribution::Uniform,
+            1 => IdDistribution::Zipf { s: f64_in(rng, 0.3, 1.5) },
+            _ => IdDistribution::Trace {
+                hot_fraction: f64_in(rng, 0.0005, 0.1),
+                hot_prob: f64_in(rng, 0.1, 0.99),
+            },
+        };
+        let seed = rng.next_u64();
+        let mut a = SparseIdGen::new(dist, rows, seed);
+        let mut b = SparseIdGen::new(dist, rows, seed);
+        let va = a.gen_batch(4, 16);
+        let vb = b.gen_batch(4, 16);
+        assert_eq!(va, vb);
+        assert!(va.iter().all(|&id| (id as usize) < rows));
+    });
+}
