@@ -1,63 +1,41 @@
-//! L3 hot-path micro-benchmarks: PJRT execute latency per (model,
+//! L3 hot-path micro-benchmarks: native/PJRT execute latency per (model,
 //! batch), input marshalling, batcher, and router — the profile targets
 //! of the performance pass (EXPERIMENTS.md §Perf).
 
 use std::time::{Duration, Instant};
 
 use recsys::coordinator::{DynamicBatcher, RoutingPolicy, WorkerInfo};
-use recsys::runtime::{default_artifacts_dir, golden_dense, golden_ids, golden_lwts, ModelPool};
+use recsys::runtime::{golden_dense, golden_ids, golden_lwts, NativePool};
 use recsys::util::bench::{bench, header};
 use recsys::workload::Query;
 
 fn main() -> anyhow::Result<()> {
     header("runtime hot path");
 
-    // ---- PJRT execute (the request-path kernel) -----------------------
-    let dir = default_artifacts_dir();
-    if dir.join("manifest.json").exists() {
-        let pool = ModelPool::new(&dir)?;
-        for model in ["rmc1-small", "rmc2-small", "rmc3-small"] {
-            for batch in [1usize, 8, 32, 128] {
-                let compiled = pool.get(model, "xla", batch)?;
-                let spec = &compiled.spec;
-                let t = spec.config_usize("num_tables")?;
-                let l = spec.config_usize("lookups")?;
-                let r = spec.config_usize("rows")?;
-                let d = spec.config_usize("dense_dim")?;
-                let dense = golden_dense(batch, d);
-                let ids = golden_ids(t, batch, l, r);
-                let lwts = golden_lwts(t, batch, l);
-                let iters = if batch >= 128 { 20 } else { 50 };
-                let s = bench(&format!("pjrt {model} b{batch}"), 3, iters, || {
-                    let out = compiled.run_rmc(&dense, &ids, &lwts).unwrap();
-                    assert_eq!(out.len(), batch);
-                });
-                // Per-item throughput alongside raw latency.
-                println!(
-                    "{}   ({:.1} items/ms)",
-                    s.report(),
-                    batch as f64 / (s.mean_ns / 1e6)
-                );
-            }
+    // ---- native execute (the default request-path kernel) -------------
+    let pool = NativePool::new(0);
+    for model in ["rmc1-small", "rmc2-small"] {
+        let m = pool.get(model)?;
+        let cfg = m.cfg();
+        for batch in [1usize, 8, 32, 128] {
+            let dense = golden_dense(batch, cfg.dense_dim);
+            let ids = golden_ids(cfg.num_tables, batch, cfg.lookups, m.rows());
+            let lwts = golden_lwts(cfg.num_tables, batch, cfg.lookups);
+            let iters = if batch >= 128 { 10 } else { 30 };
+            let s = bench(&format!("native {model} b{batch}"), 2, iters, || {
+                let out = m.run_rmc(&dense, &ids, &lwts).unwrap();
+                assert_eq!(out.len(), batch);
+            });
+            // Per-item throughput alongside raw latency.
+            println!(
+                "{}   ({:.1} items/ms)",
+                s.report(),
+                batch as f64 / (s.mean_ns / 1e6)
+            );
         }
-        // Pallas-variant cross-check timing (AOT'd interpret-mode kernels).
-        let compiled = pool.get("rmc1-small", "pallas", 1)?;
-        let spec = &compiled.spec;
-        let (t, l, r, d) = (
-            spec.config_usize("num_tables")?,
-            spec.config_usize("lookups")?,
-            spec.config_usize("rows")?,
-            spec.config_usize("dense_dim")?,
-        );
-        let (dense, ids, lwts) =
-            (golden_dense(1, d), golden_ids(t, 1, l, r), golden_lwts(t, 1, l));
-        let s = bench("pjrt rmc1-small b1 (pallas impl)", 2, 20, || {
-            compiled.run_rmc(&dense, &ids, &lwts).unwrap();
-        });
-        println!("{}", s.report());
-    } else {
-        println!("(artifacts not built — skipping PJRT section)");
     }
+
+    pjrt_section()?;
 
     // ---- batcher ------------------------------------------------------
     let s = bench("batcher push+flush 1k queries", 2, 50, || {
@@ -98,13 +76,70 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+// ---- PJRT execute (feature `pjrt`: the AOT-artifact request path) ----
+#[cfg(feature = "pjrt")]
+fn pjrt_section() -> anyhow::Result<()> {
+    use recsys::runtime::{default_artifacts_dir, ModelPool};
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts not built — skipping PJRT section)");
+        return Ok(());
+    }
+    let pool = ModelPool::new(&dir)?;
+    for model in ["rmc1-small", "rmc2-small", "rmc3-small"] {
+        for batch in [1usize, 8, 32, 128] {
+            let compiled = pool.get(model, "xla", batch)?;
+            let spec = &compiled.spec;
+            let t = spec.config_usize("num_tables")?;
+            let l = spec.config_usize("lookups")?;
+            let r = spec.config_usize("rows")?;
+            let d = spec.config_usize("dense_dim")?;
+            let dense = golden_dense(batch, d);
+            let ids = golden_ids(t, batch, l, r);
+            let lwts = golden_lwts(t, batch, l);
+            let iters = if batch >= 128 { 20 } else { 50 };
+            let s = bench(&format!("pjrt {model} b{batch}"), 3, iters, || {
+                let out = compiled.run_rmc(&dense, &ids, &lwts).unwrap();
+                assert_eq!(out.len(), batch);
+            });
+            println!(
+                "{}   ({:.1} items/ms)",
+                s.report(),
+                batch as f64 / (s.mean_ns / 1e6)
+            );
+        }
+    }
+    // Pallas-variant cross-check timing (AOT'd interpret-mode kernels).
+    let compiled = pool.get("rmc1-small", "pallas", 1)?;
+    let spec = &compiled.spec;
+    let (t, l, r, d) = (
+        spec.config_usize("num_tables")?,
+        spec.config_usize("lookups")?,
+        spec.config_usize("rows")?,
+        spec.config_usize("dense_dim")?,
+    );
+    let (dense, ids, lwts) =
+        (golden_dense(1, d), golden_ids(t, 1, l, r), golden_lwts(t, 1, l));
+    let s = bench("pjrt rmc1-small b1 (pallas impl)", 2, 20, || {
+        compiled.run_rmc(&dense, &ids, &lwts).unwrap();
+    });
+    println!("{}", s.report());
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section() -> anyhow::Result<()> {
+    println!("(pjrt feature disabled — native section above is the request path)");
+    Ok(())
+}
+
 // Appended by the perf pass: input-marshalling microbenchmark (the
-// PjrtBackend serving path generates per-slot dense + sparse inputs).
-#[allow(dead_code)]
+// numeric serving path generates per-slot dense + sparse inputs).
 fn marshal_bench() {
     use recsys::util::Rng;
     use recsys::workload::SparseIdGen;
-    let (tables, lookups, rows, dense_dim, bucket) = (24usize, 80usize, 10_000usize, 256usize, 128usize);
+    let (tables, lookups, rows, dense_dim, bucket) =
+        (24usize, 80usize, 10_000usize, 256usize, 128usize);
     let s = bench("marshal rmc2-small b128 inputs", 2, 20, || {
         let mut rng = Rng::seed_from_u64(42);
         let mut idgen = SparseIdGen::production_like(rows, 42);

@@ -1,31 +1,31 @@
-//! Quickstart: load an AOT-compiled recommendation model and score a
-//! handful of user-post pairs through the PJRT runtime — the minimal
-//! "hello world" of the public API.
+//! Quickstart: build a recommendation model with the native (pure-Rust)
+//! backend and score a handful of user-post pairs — the minimal
+//! "hello world" of the public API. Works from a fresh clone: no AOT
+//! artifacts, no XLA toolchain, no python.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
 
-use recsys::runtime::{default_artifacts_dir, golden_dense, golden_ids, golden_lwts, ModelPool};
+use recsys::runtime::{golden_dense, golden_ids, golden_lwts, NativePool};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the artifact manifest and compile one executable.
-    let pool = ModelPool::new(&default_artifacts_dir())?;
+    // 1. Build (deterministically initialize) one model.
+    let pool = NativePool::new(0);
     let model = "rmc1-small";
     let batch = 8;
-    let compiled = pool.get(model, "xla", batch)?;
-    println!("compiled {model} (batch {batch}) on PJRT CPU");
+    let m = pool.get(model)?;
+    println!(
+        "built {model} natively ({} MB of parameters)",
+        m.param_bytes() as f64 / 1e6
+    );
 
     // 2. Build a request: dense features + sparse embedding lookups.
-    let spec = &compiled.spec;
-    let tables = spec.config_usize("num_tables")?;
-    let lookups = spec.config_usize("lookups")?;
-    let rows = spec.config_usize("rows")?;
-    let dense_dim = spec.config_usize("dense_dim")?;
-    let dense = golden_dense(batch, dense_dim);
-    let ids = golden_ids(tables, batch, lookups, rows);
-    let lwts = golden_lwts(tables, batch, lookups);
+    let cfg = m.cfg();
+    let dense = golden_dense(batch, cfg.dense_dim);
+    let ids = golden_ids(cfg.num_tables, batch, cfg.lookups, m.rows());
+    let lwts = golden_lwts(cfg.num_tables, batch, cfg.lookups);
 
     // 3. Execute: predicted click-through-rate per user-post pair.
-    let ctrs = compiled.run_rmc(&dense, &ids, &lwts)?;
+    let ctrs = m.run_rmc(&dense, &ids, &lwts)?;
     println!("predicted CTRs:");
     for (i, ctr) in ctrs.iter().enumerate() {
         println!("  pair {i}: {ctr:.4}");

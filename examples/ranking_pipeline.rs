@@ -1,34 +1,29 @@
 //! Hierarchical ranking pipeline (paper Fig 6): content is ranked in two
 //! steps — a lightweight DNN filter (RMC1) prunes thousands of
 //! candidates to a shortlist, then a heavyweight ranker (RMC3) scores
-//! the survivors. Both stages execute real AOT artifacts through PJRT;
-//! this is the multi-model workload the coordinator's per-model batching
-//! exists for.
+//! the survivors. Both stages execute real numerics through the native
+//! backend; this is the multi-model workload the coordinator's per-model
+//! batching exists for.
 //!
-//! Run: `make artifacts && cargo run --release --example ranking_pipeline`
+//! Run: `cargo run --release --example ranking_pipeline`
 
 use std::time::Instant;
 
-use recsys::runtime::{default_artifacts_dir, golden_lwts, ModelPool};
+use recsys::config::PJRT_BATCHES;
+use recsys::runtime::{golden_lwts, NativePool};
 use recsys::util::Rng;
 use recsys::workload::SparseIdGen;
 
-/// Score `n` candidates with one model, chunking into its largest batch.
-fn score(
-    pool: &ModelPool,
-    model: &str,
-    n: usize,
-    seed: u64,
-) -> anyhow::Result<Vec<f32>> {
-    let bucket = pool.manifest.bucket_for(model, "xla", n).unwrap();
-    let compiled = pool.get(model, "xla", bucket)?;
-    let spec = &compiled.spec;
-    let (t, l, r, d) = (
-        spec.config_usize("num_tables")?,
-        spec.config_usize("lookups")?,
-        spec.config_usize("rows")?,
-        spec.config_usize("dense_dim")?,
-    );
+/// Score `n` candidates with one model, chunking into the largest batch
+/// bucket (the same bucketing the serving batcher uses).
+fn score(pool: &NativePool, model: &str, n: usize, seed: u64) -> anyhow::Result<Vec<f32>> {
+    let bucket = *PJRT_BATCHES
+        .iter()
+        .find(|&&b| b >= n)
+        .unwrap_or(PJRT_BATCHES.last().unwrap());
+    let m = pool.get(model)?;
+    let cfg = m.cfg();
+    let (t, l, r, d) = (cfg.num_tables, cfg.lookups, m.rows(), cfg.dense_dim);
     let mut rng = Rng::seed_from_u64(seed);
     let mut idgen = SparseIdGen::production_like(r, seed);
     let mut out = Vec::with_capacity(n);
@@ -56,7 +51,7 @@ fn score(
                 }
             }
         }
-        let ctrs = compiled.run_rmc(&dense, &ids, &lwts)?;
+        let ctrs = m.run_rmc(&dense, &ids, &lwts)?;
         out.extend_from_slice(&ctrs[..take]);
         remaining -= take;
     }
@@ -64,9 +59,9 @@ fn score(
 }
 
 fn main() -> anyhow::Result<()> {
-    let pool = ModelPool::new(&default_artifacts_dir())?;
-    pool.preload("rmc1-small", "xla")?;
-    pool.preload("rmc3-small", "xla")?;
+    let pool = NativePool::new(0);
+    pool.preload("rmc1-small")?;
+    pool.preload("rmc3-small")?;
 
     let candidates = 1024usize;
     let shortlist = 64usize;

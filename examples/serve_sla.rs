@@ -1,18 +1,17 @@
 //! End-to-end serving driver — the repo's E2E validation run
-//! (EXPERIMENTS.md §E2E): load the real AOT-compiled DLRM artifacts,
-//! serve open-loop Poisson traffic through the full coordinator stack
-//! (router → dynamic batcher → PJRT workers), and report the paper's
-//! headline metric, latency-bounded throughput, across an offered-load
-//! sweep.
+//! (EXPERIMENTS.md §E2E): serve open-loop Poisson traffic through the
+//! full coordinator stack (router → dynamic batcher → native-backend
+//! workers) and report the paper's headline metric, latency-bounded
+//! throughput, across an offered-load sweep. Real numerics, no AOT
+//! artifacts needed.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_sla
-//!       [model] [sla_ms]`
+//! Run: `cargo run --release --example serve_sla [model] [sla_ms]`
 
 use std::sync::Arc;
 
-use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig};
-use recsys::coordinator::{Coordinator, PjrtBackend};
-use recsys::runtime::{default_artifacts_dir, ModelPool};
+use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig, PJRT_BATCHES};
+use recsys::coordinator::{Coordinator, NativeBackend};
+use recsys::runtime::NativePool;
 use recsys::workload::{PoissonArrivals, Query};
 
 fn main() -> anyhow::Result<()> {
@@ -22,10 +21,10 @@ fn main() -> anyhow::Result<()> {
     let items = 4usize;
 
     println!("== serve_sla: {model}, SLA {sla_ms} ms, {items} items/query ==");
-    let pool = Arc::new(ModelPool::new(&default_artifacts_dir())?);
-    let n = pool.preload(&model, "xla")?;
-    println!("pre-compiled {n} batch buckets");
-    let buckets = pool.manifest.batches.clone();
+    let pool = Arc::new(NativePool::new(0));
+    pool.preload(&model)?;
+    println!("built {model} natively (deterministic params)");
+    let buckets = PJRT_BATCHES.to_vec();
 
     println!(
         "\n{:>8} {:>10} {:>10} {:>10} {:>10} {:>8}",
@@ -44,7 +43,7 @@ fn main() -> anyhow::Result<()> {
                 models: vec![],
             }],
         };
-        let backend = Arc::new(PjrtBackend::new(pool.clone()));
+        let backend = Arc::new(NativeBackend::new(pool.clone()));
         let mut coordinator = Coordinator::new(&cfg, backend, buckets.clone())?;
         let mut arr = PoissonArrivals::new(qps, 42);
         let queries: Vec<Query> = (0..(qps * 1.5).max(100.0) as usize)

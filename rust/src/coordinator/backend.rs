@@ -5,7 +5,9 @@ use std::time::Duration;
 
 use crate::config::{ServerGen, ServerSpec};
 use crate::model::ModelGraph;
-use crate::runtime::{golden_lwts, ModelPool};
+#[cfg(feature = "pjrt")]
+use crate::runtime::ModelPool;
+use crate::runtime::{golden_lwts, NativePool};
 use crate::simulator::MachineSim;
 use crate::util::Rng;
 use crate::workload::{Query, SparseIdGen};
@@ -23,9 +25,106 @@ pub trait Backend: Send + Sync {
 }
 
 // ---------------------------------------------------------------------
-/// Real numeric execution through the PJRT runtime. Inputs are derived
-/// deterministically from each query's seed (dense features + Zipf-like
-/// sparse IDs), so results are reproducible end-to-end.
+/// One padded batch's runtime inputs, in the layout both numeric
+/// backends consume: dense (B, Dd), ids (T, B, L), lwts (T, B, L),
+/// row-major; B = the AOT bucket.
+pub(crate) struct MarshalledInputs {
+    pub dense: Vec<f32>,
+    pub ids: Vec<i32>,
+    pub lwts: Vec<f32>,
+    /// Per-query (first slot, slots used) within the bucket.
+    pub slots: Vec<(usize, usize)>,
+}
+
+/// Derive batch inputs deterministically from each query's seed (dense
+/// features + Zipf-like sparse IDs), so results are reproducible
+/// end-to-end. Queries fill the batch in order; padding samples
+/// replicate slot 0 with lookup weight 0 (inert).
+pub(crate) fn marshal_inputs(
+    queries: &[Query],
+    bucket: usize,
+    tables: usize,
+    lookups: usize,
+    rows: usize,
+    dense_dim: usize,
+) -> MarshalledInputs {
+    let mut slots = Vec::with_capacity(queries.len());
+    let mut used = 0usize;
+    for q in queries {
+        let n = q.items.min(bucket - used);
+        slots.push((used, n));
+        used += n;
+    }
+
+    let mut dense = vec![0.0f32; bucket * dense_dim];
+    let mut ids = vec![0i32; tables * bucket * lookups];
+    let mut lwts = golden_lwts(tables, bucket, lookups);
+    // Zero out padding-sample weights.
+    for t in 0..tables {
+        for b in used..bucket {
+            for l in 0..lookups {
+                lwts[(t * bucket + b) * lookups + l] = 0.0;
+            }
+        }
+    }
+    for (q, (slot0, n)) in queries.iter().zip(&slots) {
+        let mut rng = Rng::seed_from_u64(q.seed);
+        let mut idgen = SparseIdGen::production_like(rows, q.seed);
+        for s in *slot0..slot0 + n {
+            for j in 0..dense_dim {
+                dense[s * dense_dim + j] = (rng.gen_f64() - 0.5) as f32;
+            }
+            for t in 0..tables {
+                for l in 0..lookups {
+                    ids[(t * bucket + s) * lookups + l] = idgen.next_id() as i32;
+                }
+            }
+        }
+    }
+    MarshalledInputs { dense, ids, lwts, slots }
+}
+
+// ---------------------------------------------------------------------
+/// Real numeric execution in pure Rust: the native DLRM forward pass
+/// (runtime::NativeModel) with deterministically-initialized parameters.
+/// Self-contained — no AOT artifacts, no XLA toolchain — which makes it
+/// the default serving backend on a fresh clone.
+pub struct NativeBackend {
+    pub pool: Arc<NativePool>,
+}
+
+impl NativeBackend {
+    pub fn new(pool: Arc<NativePool>) -> Self {
+        NativeBackend { pool }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn execute(
+        &self,
+        model: &str,
+        bucket: usize,
+        queries: &[Query],
+        _gen: ServerGen,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let m = self.pool.get(model)?;
+        let cfg = m.cfg();
+        let inputs =
+            marshal_inputs(queries, bucket, cfg.num_tables, cfg.lookups, m.rows(), cfg.dense_dim);
+        let ctrs = m.run_rmc(&inputs.dense, &inputs.ids, &inputs.lwts)?;
+        Ok(queries
+            .iter()
+            .zip(&inputs.slots)
+            .map(|(_, (s0, n))| ctrs[*s0..s0 + n].to_vec())
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------
+/// Real numeric execution through the PJRT runtime (feature `pjrt`):
+/// the AOT-compiled artifacts, with the same deterministic per-query
+/// input derivation as `NativeBackend`.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     pub pool: Arc<ModelPool>,
     /// Which kernel implementation to serve ("xla" fast path or
@@ -33,12 +132,14 @@ pub struct PjrtBackend {
     pub impl_: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     pub fn new(pool: Arc<ModelPool>) -> Self {
         PjrtBackend { pool, impl_: "xla".into() }
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Backend for PjrtBackend {
     fn execute(
         &self,
@@ -54,45 +155,11 @@ impl Backend for PjrtBackend {
         let rows = v.config_usize("rows")?;
         let dense_dim = v.config_usize("dense_dim")?;
 
-        // Slot assignment: queries fill the batch in order; padding
-        // samples replicate slot 0 with lookup weight 0 (inert).
-        let mut slot_of_query = Vec::with_capacity(queries.len());
-        let mut used = 0usize;
-        for q in queries {
-            slot_of_query.push((used, q.items.min(bucket - used)));
-            used += q.items.min(bucket - used);
-        }
-
-        let mut dense = vec![0.0f32; bucket * dense_dim];
-        let mut ids = vec![0i32; tables * bucket * lookups];
-        let mut lwts = golden_lwts(tables, bucket, lookups);
-        // Zero out padding-sample weights.
-        for t in 0..tables {
-            for b in used..bucket {
-                for l in 0..lookups {
-                    lwts[(t * bucket + b) * lookups + l] = 0.0;
-                }
-            }
-        }
-        for (q, (slot0, n)) in queries.iter().zip(&slot_of_query) {
-            let mut rng = Rng::seed_from_u64(q.seed);
-            let mut idgen = SparseIdGen::production_like(rows, q.seed);
-            for s in *slot0..slot0 + n {
-                for j in 0..dense_dim {
-                    dense[s * dense_dim + j] = (rng.gen_f64() - 0.5) as f32;
-                }
-                for t in 0..tables {
-                    for l in 0..lookups {
-                        ids[(t * bucket + s) * lookups + l] = idgen.next_id() as i32;
-                    }
-                }
-            }
-        }
-
-        let ctrs = compiled.run_rmc(&dense, &ids, &lwts)?;
+        let inputs = marshal_inputs(queries, bucket, tables, lookups, rows, dense_dim);
+        let ctrs = compiled.run_rmc(&inputs.dense, &inputs.ids, &inputs.lwts)?;
         Ok(queries
             .iter()
-            .zip(&slot_of_query)
+            .zip(&inputs.slots)
             .map(|(_, (s0, n))| ctrs[*s0..s0 + n].to_vec())
             .collect())
     }
@@ -168,5 +235,75 @@ impl Backend for MockBackend {
     ) -> anyhow::Result<Vec<Vec<f32>>> {
         std::thread::sleep(self.latency);
         Ok(queries.iter().map(|q| vec![0.5; q.items.min(bucket)]).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marshal_slots_fill_in_order_and_clamp() {
+        let queries = vec![
+            Query::new(1, "m", 3, 0.0),
+            Query::new(2, "m", 4, 0.0),
+            Query::new(3, "m", 4, 0.0), // only 1 slot left in a b8 bucket
+        ];
+        let inp = marshal_inputs(&queries, 8, 2, 5, 100, 4);
+        assert_eq!(inp.slots, vec![(0, 3), (3, 4), (7, 1)]);
+        assert_eq!(inp.dense.len(), 8 * 4);
+        assert_eq!(inp.ids.len(), 2 * 8 * 5);
+        assert_eq!(inp.lwts.len(), 2 * 8 * 5);
+        // Every real slot has weight 1 everywhere (no padding slots here).
+        assert!(inp.lwts.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn marshal_padding_slots_are_inert() {
+        let queries = vec![Query::new(7, "m", 2, 0.0)];
+        let (tables, lookups, bucket) = (3usize, 4usize, 8usize);
+        let inp = marshal_inputs(&queries, bucket, tables, lookups, 50, 2);
+        for t in 0..tables {
+            for b in 0..bucket {
+                for l in 0..lookups {
+                    let w = inp.lwts[(t * bucket + b) * lookups + l];
+                    assert_eq!(w, if b < 2 { 1.0 } else { 0.0 }, "t{t} b{b} l{l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn marshal_is_deterministic_per_query_seed() {
+        let q = vec![Query::new(42, "m", 4, 0.0)];
+        let a = marshal_inputs(&q, 8, 2, 3, 1000, 16);
+        let b = marshal_inputs(&q, 8, 2, 3, 1000, 16);
+        assert_eq!(a.dense, b.dense);
+        assert_eq!(a.ids, b.ids);
+        // A different query id yields different inputs.
+        let c = marshal_inputs(&[Query::new(43, "m", 4, 0.0)], 8, 2, 3, 1000, 16);
+        assert_ne!(a.ids, c.ids);
+    }
+
+    #[test]
+    fn native_backend_executes_batch() {
+        let pool = Arc::new(NativePool::new(1));
+        let backend = NativeBackend::new(pool);
+        let queries =
+            vec![Query::new(1, "rmc1-small", 3, 0.0), Query::new(2, "rmc1-small", 2, 0.0)];
+        let out = backend.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 3);
+        assert_eq!(out[1].len(), 2);
+        for ctr in out.iter().flatten() {
+            assert!(*ctr > 0.0 && *ctr < 1.0, "CTR {ctr} out of range");
+        }
+    }
+
+    #[test]
+    fn native_backend_unknown_model_errors() {
+        let backend = NativeBackend::new(Arc::new(NativePool::new(0)));
+        let q = vec![Query::new(1, "nope", 1, 0.0)];
+        assert!(backend.execute("nope", 1, &q, ServerGen::Broadwell).is_err());
     }
 }

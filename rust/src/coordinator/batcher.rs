@@ -2,7 +2,7 @@
 //! bucketed batches matching the AOT'd batch sizes (the paper's
 //! batching-for-throughput knob, §V).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use crate::workload::Query;
@@ -20,9 +20,17 @@ pub struct Batch {
 }
 
 struct PendingQueue {
-    queries: Vec<Query>,
+    /// Queries with their enqueue timestamps (front = oldest). Keeping
+    /// the timestamp per query means a partial flush never restarts the
+    /// age of what remains queued.
+    queries: VecDeque<(Query, Instant)>,
     items: usize,
-    oldest: Instant,
+}
+
+impl PendingQueue {
+    fn oldest(&self) -> Option<Instant> {
+        self.queries.front().map(|(_, at)| *at)
+    }
 }
 
 /// Size/age-triggered batcher. `buckets` must be the sorted AOT batch
@@ -35,40 +43,44 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// Panics if `buckets` is empty or `max_batch` is below the smallest
+    /// bucket (no compiled artifact could serve any batch).
     pub fn new(mut buckets: Vec<usize>, max_batch: usize, timeout: Duration) -> Self {
         assert!(!buckets.is_empty(), "need at least one bucket");
         buckets.sort_unstable();
+        assert!(
+            max_batch >= buckets[0],
+            "max_batch {max_batch} below the smallest AOT bucket {}",
+            buckets[0]
+        );
         DynamicBatcher { buckets, max_batch, timeout, pending: HashMap::new() }
     }
 
-    /// Smallest bucket >= n (clamped to max_batch / largest).
+    /// Smallest bucket >= n, clamped to the largest bucket <= max_batch.
+    /// Always returns one of the configured buckets — never a batch size
+    /// no compiled artifact exists for.
     pub fn bucket_for(&self, n: usize) -> usize {
-        let cap = self.max_batch.min(*self.buckets.last().unwrap());
-        *self
-            .buckets
-            .iter()
-            .filter(|&&b| b <= cap)
-            .find(|&&b| b >= n)
-            .unwrap_or(&cap)
+        let max = self.effective_max();
+        *self.buckets.iter().find(|&&b| b >= n && b <= max).unwrap_or(&max)
     }
 
+    /// The true flush capacity: the largest bucket <= min(max_batch,
+    /// largest bucket). A `max_batch` falling between buckets rounds
+    /// DOWN so the batcher never forms a batch it cannot execute.
     fn effective_max(&self) -> usize {
-        self.max_batch.min(*self.buckets.last().unwrap())
+        let cap = self.max_batch.min(*self.buckets.last().unwrap());
+        *self.buckets.iter().rev().find(|&&b| b <= cap).unwrap()
     }
 
     /// Enqueue a query; returns any batch that became ready (full).
     pub fn push(&mut self, q: Query, now: Instant) -> Option<Batch> {
         let max = self.effective_max();
-        let entry = self.pending.entry(q.model.clone()).or_insert_with(|| PendingQueue {
-            queries: Vec::new(),
-            items: 0,
-            oldest: now,
-        });
-        if entry.queries.is_empty() {
-            entry.oldest = now;
-        }
+        let entry = self
+            .pending
+            .entry(q.model.clone())
+            .or_insert_with(|| PendingQueue { queries: VecDeque::new(), items: 0 });
         entry.items += q.items;
-        entry.queries.push(q);
+        entry.queries.push_back((q, now));
         if entry.items >= max {
             return self.flush_model_inner(now, true);
         }
@@ -81,30 +93,30 @@ impl DynamicBatcher {
             .pending
             .iter()
             .filter(|(_, p)| !p.queries.is_empty())
-            .find(|(_, p)| {
-                if only_full {
-                    p.items >= max
-                } else {
-                    now.duration_since(p.oldest) >= self.timeout
-                }
+            .find(|(_, p)| match (only_full, p.oldest()) {
+                (true, _) => p.items >= max,
+                (false, Some(at)) => now.duration_since(at) >= self.timeout,
+                (false, None) => false,
             })
             .map(|(k, _)| k.clone())?;
         let p = self.pending.get_mut(&key).unwrap();
-        // Take queries until the batch is full.
+        // Take queries from the front until the batch is full. Remaining
+        // queries keep their enqueue timestamps: a partial flush must not
+        // restart the age of the queue head left behind, or its flush
+        // deadline silently slides past the configured timeout.
         let mut taken = Vec::new();
         let mut items = 0usize;
-        while let Some(q) = p.queries.first() {
+        while let Some((q, _)) = p.queries.front() {
             if !taken.is_empty() && items + q.items > max {
                 break;
             }
             items += q.items.min(max);
-            taken.push(p.queries.remove(0));
+            taken.push(p.queries.pop_front().unwrap().0);
             if items >= max {
                 break;
             }
         }
-        p.items = p.queries.iter().map(|q| q.items).sum();
-        p.oldest = now;
+        p.items = p.queries.iter().map(|(q, _)| q.items).sum();
         let bucket = self.bucket_for(items);
         Some(Batch { model: key, items, bucket, queries: taken, formed_at: now })
     }
@@ -122,8 +134,6 @@ impl DynamicBatcher {
             if !any {
                 break;
             }
-            // Age all queues artificially by using only_full = false with
-            // zero timeout via direct flush.
             let keys: Vec<String> = self
                 .pending
                 .iter()
@@ -138,19 +148,25 @@ impl DynamicBatcher {
                 }
                 let mut taken = Vec::new();
                 let mut items = 0usize;
-                while let Some(q) = p.queries.first() {
+                while let Some((q, _)) = p.queries.front() {
                     if !taken.is_empty() && items + q.items > max {
                         break;
                     }
                     items += q.items.min(max);
-                    taken.push(p.queries.remove(0));
+                    taken.push(p.queries.pop_front().unwrap().0);
                     if items >= max {
                         break;
                     }
                 }
-                p.items = p.queries.iter().map(|q| q.items).sum();
+                p.items = p.queries.iter().map(|(q, _)| q.items).sum();
                 let bucket = self.bucket_for(items);
-                out.push(Batch { model: key.clone(), items, bucket, queries: taken, formed_at: now });
+                out.push(Batch {
+                    model: key.clone(),
+                    items,
+                    bucket,
+                    queries: taken,
+                    formed_at: now,
+                });
             }
         }
         out
@@ -160,12 +176,8 @@ impl DynamicBatcher {
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.pending
             .values()
-            .filter(|p| !p.queries.is_empty())
-            .map(|p| {
-                self.timeout
-                    .checked_sub(now.duration_since(p.oldest))
-                    .unwrap_or(Duration::ZERO)
-            })
+            .filter_map(PendingQueue::oldest)
+            .map(|at| self.timeout.checked_sub(now.duration_since(at)).unwrap_or(Duration::ZERO))
             .min()
     }
 
@@ -198,6 +210,26 @@ mod tests {
     }
 
     #[test]
+    fn max_batch_between_buckets_rounds_down_to_compiled_bucket() {
+        // 20 is not an AOT'd batch size: the cap clamps DOWN to 8 so the
+        // batcher can never return a bucket no artifact exists for.
+        let b = DynamicBatcher::new(vec![1, 8, 32, 128], 20, Duration::from_millis(1));
+        for n in 1..=200 {
+            let bucket = b.bucket_for(n);
+            assert!([1usize, 8, 32, 128].contains(&bucket), "n={n}: bucket {bucket} not AOT'd");
+            assert!(bucket <= 8, "n={n}: bucket {bucket} exceeds the clamped cap");
+        }
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(10), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "below the smallest AOT bucket")]
+    fn max_batch_below_smallest_bucket_rejected() {
+        DynamicBatcher::new(vec![8, 32], 4, Duration::from_millis(1));
+    }
+
+    #[test]
     fn flush_on_size() {
         let mut b = DynamicBatcher::new(vec![1, 8], 8, Duration::from_secs(10));
         let now = Instant::now();
@@ -219,6 +251,40 @@ mod tests {
         let batch = b.poll_timeout(later).expect("timeout flush");
         assert_eq!(batch.items, 2);
         assert_eq!(batch.bucket, 8);
+    }
+
+    #[test]
+    fn partial_flush_keeps_remaining_head_age() {
+        // Regression: flushing part of a queue must NOT restart the age
+        // of the queries left behind. Build a three-query queue directly
+        // (reachable via multi-model traffic, where one model's push
+        // flushes another model's already-full queue) and verify the
+        // remaining head keeps its original enqueue time.
+        let mut b = DynamicBatcher::new(vec![4], 4, Duration::from_millis(10));
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(3);
+        let t2 = t0 + Duration::from_millis(6);
+        b.pending.insert(
+            "m".into(),
+            PendingQueue {
+                queries: VecDeque::from([
+                    (q(1, "m", 3), t0),
+                    (q(2, "m", 3), t1),
+                    (q(3, "m", 3), t2),
+                ]),
+                items: 9,
+            },
+        );
+        // Timeout flush at t0+10ms takes only q1 (3 + 3 > 4).
+        let batch = b.poll_timeout(t0 + Duration::from_millis(10)).expect("aged queue");
+        assert_eq!(batch.queries.len(), 1);
+        assert_eq!(batch.queries[0].id, 1);
+        assert_eq!(b.pending_items(), 6);
+        // q2 (enqueued at t1) is due at t1+10ms — NOT at flush-time+10ms.
+        let due = b.next_deadline(t1 + Duration::from_millis(9)).expect("pending");
+        assert!(due <= Duration::from_millis(1), "remaining head age restarted: due in {due:?}");
+        let batch = b.poll_timeout(t1 + Duration::from_millis(10)).expect("q2 aged at t1+10ms");
+        assert_eq!(batch.queries[0].id, 2);
     }
 
     #[test]

@@ -14,9 +14,11 @@
 //!                 SLA meter ◄── QueryResult ──────┘
 //! ```
 //!
-//! Backends: `PjrtBackend` (real numeric execution of the AOT
-//! artifacts), `SimBackend` (latency from the architectural simulator —
-//! used for heterogeneity-routing experiments), `MockBackend` (tests).
+//! Backends: `NativeBackend` (pure-Rust numeric execution, the default
+//! on a fresh clone), `PjrtBackend` (real numeric execution of the AOT
+//! artifacts; feature `pjrt`), `SimBackend` (latency from the
+//! architectural simulator — used for heterogeneity-routing
+//! experiments), `MockBackend` (tests).
 
 mod autotune;
 mod backend;
@@ -26,7 +28,9 @@ mod service;
 mod worker;
 
 pub use autotune::{tune, TunePoint};
-pub use backend::{Backend, MockBackend, PjrtBackend, SimBackend};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+pub use backend::{Backend, MockBackend, NativeBackend, SimBackend};
 pub use batcher::{Batch, DynamicBatcher};
 pub use router::{RoutingPolicy, WorkerInfo};
 pub use service::{Coordinator, ServeReport};

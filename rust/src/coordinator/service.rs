@@ -78,6 +78,15 @@ impl Coordinator {
     ) -> anyhow::Result<Self> {
         let policy = RoutingPolicy::parse(&cfg.routing)
             .ok_or_else(|| anyhow::anyhow!("unknown routing policy '{}'", cfg.routing))?;
+        // Validate here (user-supplied config) so a bad max_batch surfaces
+        // as a clean Err; the batcher's own assert guards programmer error.
+        anyhow::ensure!(!buckets.is_empty(), "need at least one batch bucket");
+        let min_bucket = *buckets.iter().min().unwrap();
+        anyhow::ensure!(
+            cfg.max_batch >= min_bucket,
+            "max_batch {} is below the smallest batch bucket {min_bucket}",
+            cfg.max_batch
+        );
         let (results_tx, results_rx) = mpsc::channel();
         let t0 = Instant::now();
         let mut workers = Vec::new();
@@ -264,6 +273,16 @@ mod tests {
         cfg.routing = "nope".into();
         let backend = Arc::new(MockBackend { latency: Duration::from_micros(10) });
         assert!(Coordinator::new(&cfg, backend, vec![1]).is_err());
+    }
+
+    #[test]
+    fn max_batch_below_buckets_rejected_as_error() {
+        // User-supplied config error must surface as Err, not a panic.
+        let mut cfg = deployment(1, "round-robin");
+        cfg.max_batch = 0;
+        let backend = Arc::new(MockBackend { latency: Duration::from_micros(10) });
+        assert!(Coordinator::new(&cfg, backend.clone(), vec![1, 8]).is_err());
+        assert!(Coordinator::new(&cfg, backend, Vec::new()).is_err());
     }
 
     #[test]

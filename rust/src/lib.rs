@@ -4,18 +4,24 @@
 //! A three-layer Rust + JAX + Pallas framework:
 //!
 //! * **L3 (this crate)** — serving coordinator (router / dynamic batcher /
-//!   SLA tracking / co-location scheduler), a PJRT runtime that executes the
-//!   AOT-compiled DLRM artifacts, and the architectural simulation substrate
-//!   (set-associative caches, DRAM, SIMD core models of the paper's Table II
-//!   Intel servers) that regenerates every table and figure.
+//!   SLA tracking / co-location scheduler), two numeric execution backends
+//!   (the always-available pure-Rust `runtime::NativeModel` DLRM, and — with
+//!   the `pjrt` cargo feature — a PJRT runtime that executes the
+//!   AOT-compiled DLRM artifacts), and the architectural simulation
+//!   substrate (set-associative caches, DRAM, SIMD core models of the
+//!   paper's Table II Intel servers) that regenerates every table and
+//!   figure.
 //! * **L2 (python/compile/model.py)** — the DLRM forward graph in JAX.
 //! * **L1 (python/compile/kernels/)** — Pallas SLS + MLP kernels.
 //!
-//! Python never runs on the request path: `make artifacts` lowers everything
-//! to HLO text once; the rust binary is self-contained afterwards.
+//! Python never runs on the request path. A fresh clone is fully
+//! self-contained: the native backend serves real numerics with zero
+//! external dependencies. With `--features pjrt`, `make artifacts` lowers
+//! the JAX graph to HLO text once and the rust binary executes it via the
+//! PJRT C API.
 //!
-//! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! See DESIGN.md for the layer/feature matrix and per-experiment index,
+//! and EXPERIMENTS.md for how to run everything.
 
 pub mod config;
 pub mod coordinator;

@@ -1,11 +1,14 @@
 //! `recsys` — CLI leader entrypoint.
 //!
 //! Subcommands (std-only arg parsing; clap is unavailable offline):
-//!   recsys info                         artifact + platform summary
+//!   recsys info                         model + backend summary
 //!   recsys figure <id|all> [--out-dir]  regenerate paper tables/figures
 //!   recsys serve [--config f.json] [--qps N] [--queries N] [--model M]
-//!                [--impl xla|pallas]    end-to-end PJRT serving run
-//!   recsys check                        golden-output verification
+//!                [--impl native|xla|pallas]
+//!                                       end-to-end serving run (native
+//!                                       needs no artifacts; xla/pallas
+//!                                       need the `pjrt` feature)
+//!   recsys check                        numeric self-verification
 //!   recsys simulate --model M [--gen G] [--batch B] [--jobs N]
 //!                                       one simulator measurement
 //!   recsys tune --model M [--qps N] [--sla MS]
@@ -17,9 +20,9 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use recsys::config::{DeploymentConfig, ServerGen, ServerSpec};
-use recsys::coordinator::{Coordinator, PjrtBackend};
+use recsys::coordinator::{Backend, Coordinator, NativeBackend};
 use recsys::model::ModelGraph;
-use recsys::runtime::{default_artifacts_dir, golden_dense, golden_ids, golden_lwts, ModelPool};
+use recsys::runtime::NativePool;
 use recsys::simulator::MachineSim;
 use recsys::workload::{PoissonArrivals, Query, SparseIdGen};
 
@@ -72,7 +75,20 @@ fn main() {
 }
 
 fn cmd_info() -> anyhow::Result<()> {
-    let dir = default_artifacts_dir();
+    println!("native backend models (pure-Rust DLRM, no artifacts needed):");
+    for cfg in recsys::config::all_rmc() {
+        println!(
+            "  {:<12} tables={:<3} lookups={:<3} rows(native)={:<6} emb_dim={} dense_dim={}",
+            cfg.name, cfg.num_tables, cfg.lookups, cfg.pjrt_rows, cfg.emb_dim, cfg.dense_dim
+        );
+    }
+    println!("batch buckets: {:?}", recsys::config::PJRT_BATCHES);
+    info_pjrt()
+}
+
+#[cfg(feature = "pjrt")]
+fn info_pjrt() -> anyhow::Result<()> {
+    let dir = recsys::runtime::default_artifacts_dir();
     println!("artifacts dir: {dir:?}");
     let manifest = recsys::runtime::Manifest::load(&dir)?;
     println!("manifest v{} — {} variants", manifest.version, manifest.variants.len());
@@ -87,6 +103,12 @@ fn cmd_info() -> anyhow::Result<()> {
     }
     let rt = recsys::runtime::PjrtRuntime::cpu()?;
     println!("pjrt platform: {}", rt.platform());
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn info_pjrt() -> anyhow::Result<()> {
+    println!("pjrt: disabled (build with --features pjrt for AOT-artifact execution)");
     Ok(())
 }
 
@@ -113,6 +135,44 @@ fn cmd_figure(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result
     Ok(())
 }
 
+/// Build the serving backend for `--impl`. Native is always available;
+/// xla/pallas execute the AOT artifacts and need the `pjrt` feature.
+fn make_backend(model: &str, impl_: &str) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
+    match impl_ {
+        "native" => {
+            println!("initializing native {model} (deterministic params) ...");
+            let pool = Arc::new(NativePool::new(0));
+            pool.preload(model)?;
+            let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new(pool));
+            Ok((backend, recsys::config::PJRT_BATCHES.to_vec()))
+        }
+        "xla" | "pallas" => make_pjrt_backend(model, impl_),
+        other => anyhow::bail!("unknown --impl '{other}' (expected native, xla or pallas)"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn make_pjrt_backend(model: &str, impl_: &str) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
+    use recsys::coordinator::PjrtBackend;
+    use recsys::runtime::{default_artifacts_dir, ModelPool};
+    println!("loading artifacts + compiling {model} ({impl_}) ...");
+    let pool = Arc::new(ModelPool::new(&default_artifacts_dir())?);
+    pool.preload(model, impl_)?;
+    let buckets = pool.manifest.batches.clone();
+    let mut backend = PjrtBackend::new(pool);
+    backend.impl_ = impl_.to_string();
+    let backend: Arc<dyn Backend> = Arc::new(backend);
+    Ok((backend, buckets))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn make_pjrt_backend(_model: &str, impl_: &str) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
+    anyhow::bail!(
+        "--impl {impl_} executes AOT artifacts and requires building with \
+         --features pjrt (see DESIGN.md §Feature matrix); use --impl native"
+    )
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let cfg = match flags.get("config") {
         Some(path) => DeploymentConfig::from_path(std::path::Path::new(path))?,
@@ -122,30 +182,76 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let qps: f64 = flags.get("qps").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
     let n: usize = flags.get("queries").map(|s| s.parse()).transpose()?.unwrap_or(500);
     let items: usize = flags.get("items").map(|s| s.parse()).transpose()?.unwrap_or(4);
-    let impl_ = flags.get("impl").cloned().unwrap_or_else(|| "xla".into());
+    let impl_ = flags.get("impl").cloned().unwrap_or_else(|| "native".into());
 
-    println!("loading artifacts + compiling {model} ({impl_}) ...");
-    let pool = Arc::new(ModelPool::new(&default_artifacts_dir())?);
-    pool.preload(&model, &impl_)?;
-    let buckets = pool.manifest.batches.clone();
-    let mut backend = PjrtBackend::new(pool);
-    backend.impl_ = impl_;
-    let mut coordinator = Coordinator::new(&cfg, Arc::new(backend), buckets)?;
+    let (backend, buckets) = make_backend(&model, &impl_)?;
+    let mut coordinator = Coordinator::new(&cfg, backend, buckets)?;
 
     let mut arr = PoissonArrivals::new(qps, 1234);
     let queries: Vec<Query> = (0..n)
         .map(|i| Query::new(i as u64, model.clone(), items, arr.next_arrival_s()))
         .collect();
-    println!("serving {n} queries at {qps} qps (SLA {} ms) ...", cfg.sla_ms);
+    println!("serving {n} queries at {qps} qps (SLA {} ms, impl {impl_}) ...", cfg.sla_ms);
     let report = coordinator.run_open_loop(queries, cfg.sla_ms);
     print!("{}", report.render());
     coordinator.shutdown();
     Ok(())
 }
 
-/// Verify every golden variant end-to-end through PJRT.
+/// Numeric self-verification. The native path checks determinism,
+/// output range, sparse-path liveness, and padding invariance against
+/// the deterministic golden-input formulas; with the `pjrt` feature the
+/// AOT artifacts are additionally verified against python's golden CTRs.
 fn cmd_check(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let dir = default_artifacts_dir();
+    check_native()?;
+    check_pjrt(flags)
+}
+
+fn check_native() -> anyhow::Result<()> {
+    use recsys::runtime::{golden_dense, golden_ids, golden_lwts, NativeModel};
+    for cfg in [
+        recsys::config::rmc1_small(),
+        recsys::config::rmc2_small(),
+        recsys::config::rmc3_small(),
+    ] {
+        let m = NativeModel::new(&cfg, 0);
+        let (t, l, r, d) = (cfg.num_tables, cfg.lookups, cfg.pjrt_rows, cfg.dense_dim);
+        let batch = 8usize;
+        let dense = golden_dense(batch, d);
+        let ids = golden_ids(t, batch, l, r);
+        let lwts = golden_lwts(t, batch, l);
+        let a = m.run_rmc(&dense, &ids, &lwts)?;
+        let b = m.run_rmc(&dense, &ids, &lwts)?;
+        anyhow::ensure!(a == b, "{}: non-deterministic native forward", cfg.name);
+        anyhow::ensure!(
+            a.iter().all(|&x| x > 0.0 && x < 1.0),
+            "{}: CTRs out of (0,1): {a:?}",
+            cfg.name
+        );
+        // Padding invariance: sample 0 alone must reproduce slot 0 of
+        // the batched run (golden inputs are batch-prefix-stable).
+        let one =
+            m.run_rmc(&golden_dense(1, d), &golden_ids(t, 1, l, r), &golden_lwts(t, 1, l))?;
+        anyhow::ensure!(one[0] == a[0], "{}: batch-variant numerics", cfg.name);
+        // The sparse path is live: perturbing one id changes the CTR.
+        let mut ids2 = ids.clone();
+        ids2[0] = (ids2[0] + 1) % r as i32;
+        let c = m.run_rmc(&dense, &ids2, &lwts)?;
+        anyhow::ensure!(a[0] != c[0], "{}: embedding path dead", cfg.name);
+        println!(
+            "PASS {:<12} native b{batch}: deterministic, in-range, padding-invariant",
+            cfg.name
+        );
+    }
+    println!("native self-check OK");
+    Ok(())
+}
+
+/// Verify every golden artifact variant end-to-end through PJRT.
+#[cfg(feature = "pjrt")]
+fn check_pjrt(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use recsys::runtime::{golden_dense, golden_ids, golden_lwts, ModelPool};
+    let dir = recsys::runtime::default_artifacts_dir();
     let pool = ModelPool::new(&dir)?;
     let only_impl = flags.get("impl").cloned();
     let mut checked = 0;
@@ -191,6 +297,12 @@ fn cmd_check(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         checked += 1;
     }
     println!("{checked} golden variants verified");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn check_pjrt(_flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    println!("pjrt goldens: skipped (build with --features pjrt to verify AOT artifacts)");
     Ok(())
 }
 

@@ -1,18 +1,31 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/manifest.json` +
-//! HLO text + params blob) produced by `make artifacts`, stages model
-//! parameters as device buffers ONCE, and executes inferences on the
-//! real CPU via the PJRT C API (`xla` crate). This is the numeric-truth
-//! half of the system (the simulator is the performance half); python
-//! never runs here.
+//! Execution runtimes.
+//!
+//! * `native` (always available) — the DLRM forward pass in pure Rust
+//!   (SLS gather-sum + FC GEMM + sigmoid), deterministically initialized
+//!   from the model presets. Self-contained: no artifacts, no toolchain.
+//! * `executor`/`pool` (feature `pjrt`) — loads the AOT artifacts
+//!   (`artifacts/manifest.json` + HLO text + params blob) produced by
+//!   `make artifacts`, stages model parameters as device buffers ONCE,
+//!   and executes inferences on the real CPU via the PJRT C API (`xla`
+//!   crate). Python never runs here.
+//!
+//! The artifact manifest loader (`artifacts`) and the deterministic
+//! golden-input formulas (`golden`) are shared by both paths.
 
 mod artifacts;
+#[cfg(feature = "pjrt")]
 mod executor;
 mod golden;
+mod native;
+#[cfg(feature = "pjrt")]
 mod pool;
 
 pub use artifacts::{InputSpec, Manifest, ParamSpec, VariantSpec};
+#[cfg(feature = "pjrt")]
 pub use executor::{CompiledModel, PjrtRuntime};
 pub use golden::{golden_dense, golden_ids, golden_lwts, golden_ncf_ids};
+pub use native::{fc_layer, sigmoid, sls_gather_sum, DenseLayer, NativeModel, NativePool};
+#[cfg(feature = "pjrt")]
 pub use pool::ModelPool;
 
 /// Default artifacts directory relative to the crate root.

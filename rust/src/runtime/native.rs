@@ -1,0 +1,518 @@
+//! Native execution backend: the DLRM forward pass (paper Fig 3) in pure
+//! Rust, mirroring `python/compile/kernels/{sls,mlp}.py` operator by
+//! operator — SparseLengthsWeightedSum gather-sum, FC GEMM + bias + ReLU,
+//! feature-interaction concat, sigmoid CTR head.
+//!
+//! This is the self-contained CPU reference path: no AOT artifacts, no
+//! XLA toolchain, no python. Parameters are deterministically initialized
+//! from the model presets at `pjrt_rows` scale (the same scaled-down
+//! embedding tables the AOT path uses), so a fresh clone can run every
+//! serving and scheduling experiment end-to-end. When the `pjrt` feature
+//! is enabled the PJRT runtime executes the same graph from compiled HLO;
+//! the two paths share input layout ((B, Dd) dense, (T, B, L) ids/lwts,
+//! row-major) so backends are interchangeable behind `coordinator::Backend`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail};
+
+use crate::config::RmcConfig;
+use crate::util::Rng;
+
+/// One fully-connected layer: row-major (in_dim, out_dim) weights plus
+/// bias, matching the parameter layout of `python/compile/model.py`.
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub relu: bool,
+}
+
+/// FC forward for one layer: x (B, K) @ w (K, N) + b, optional ReLU.
+/// Loop order is sample-k-n so the inner loop streams one weight row
+/// against one output row (auto-vectorizable, cache-friendly — the
+/// paper's compute-bound operator).
+pub fn fc_layer(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    relu: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), batch * in_dim);
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    debug_assert_eq!(bias.len(), out_dim);
+    let mut out = vec![0.0f32; batch * out_dim];
+    for s in 0..batch {
+        let xrow = &x[s * in_dim..(s + 1) * in_dim];
+        let orow = &mut out[s * out_dim..(s + 1) * out_dim];
+        orow.copy_from_slice(bias);
+        for (k, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[k * out_dim..(k + 1) * out_dim];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        if relu {
+            for o in orow.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// SparseLengthsWeightedSum for one table: gather `lookups` rows per
+/// sample and reduce them into one `emb_dim`-wide vector (the paper's
+/// signature memory-bound operator). `ids`/`wts` are (B, L) row-major;
+/// weight 0 marks an inert (padding) lookup and skips the gather.
+pub fn sls_gather_sum(
+    table: &[f32],
+    emb_dim: usize,
+    ids: &[i32],
+    wts: &[f32],
+    batch: usize,
+    lookups: usize,
+) -> anyhow::Result<Vec<f32>> {
+    if emb_dim == 0 || table.len() % emb_dim != 0 {
+        bail!("table length {} not a multiple of emb_dim {emb_dim}", table.len());
+    }
+    if ids.len() != batch * lookups || wts.len() != ids.len() {
+        bail!(
+            "sls input mismatch: ids {} wts {} want {}",
+            ids.len(),
+            wts.len(),
+            batch * lookups
+        );
+    }
+    let rows = table.len() / emb_dim;
+    let mut out = vec![0.0f32; batch * emb_dim];
+    for s in 0..batch {
+        let acc = &mut out[s * emb_dim..(s + 1) * emb_dim];
+        for l in 0..lookups {
+            let j = s * lookups + l;
+            let w = wts[j];
+            if w == 0.0 {
+                continue;
+            }
+            let id = ids[j];
+            if id < 0 || id as usize >= rows {
+                bail!("sls id {id} out of range (table has {rows} rows)");
+            }
+            let row = &table[id as usize * emb_dim..(id as usize + 1) * emb_dim];
+            for (a, &r) in acc.iter_mut().zip(row) {
+                *a += w * r;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Logistic CTR head.
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn init_layer(rng: &mut Rng, in_dim: usize, out_dim: usize, relu: bool) -> DenseLayer {
+    // He-ish init mirroring python/compile/model.py::init_params (same
+    // structure, not bit-identical: numpy's Philox stream is not
+    // reproducible without numpy).
+    let scale = (2.0 / in_dim as f64).sqrt();
+    let w = (0..in_dim * out_dim).map(|_| (rng.normal() * scale) as f32).collect();
+    DenseLayer { in_dim, out_dim, w, b: vec![0.0f32; out_dim], relu }
+}
+
+/// A fully-materialized DLRM with deterministically-initialized
+/// parameters, executable on the host CPU with no external runtime.
+pub struct NativeModel {
+    cfg: RmcConfig,
+    /// Embedding rows actually materialized (pjrt_rows scale — full-scale
+    /// RMC2 tables are ~10GB and belong to the simulator path).
+    rows: usize,
+    bottom: Vec<DenseLayer>,
+    top: Vec<DenseLayer>,
+    tables: Vec<Vec<f32>>,
+}
+
+impl NativeModel {
+    /// Build (initialize parameters for) a model preset. Deterministic in
+    /// (cfg, seed); tables are at `cfg.pjrt_rows` scale.
+    pub fn new(cfg: &RmcConfig, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let rows = cfg.pjrt_rows;
+
+        let mut bottom = Vec::with_capacity(cfg.bottom_mlp.len());
+        let mut prev = cfg.dense_dim;
+        for &width in &cfg.bottom_mlp {
+            bottom.push(init_layer(&mut rng, prev, width, true));
+            prev = width;
+        }
+
+        let mut top = Vec::with_capacity(cfg.top_mlp.len() + 1);
+        let mut prev = cfg.top_input_dim();
+        for &width in &cfg.top_mlp {
+            top.push(init_layer(&mut rng, prev, width, true));
+            prev = width;
+        }
+        // Final width-1 CTR layer: logit, no ReLU (sigmoid is applied in
+        // run_rmc).
+        top.push(init_layer(&mut rng, prev, 1, false));
+
+        let tables = (0..cfg.num_tables)
+            .map(|_| {
+                let scale = 1.0 / (cfg.emb_dim as f64).sqrt();
+                (0..rows * cfg.emb_dim).map(|_| (rng.normal() * scale) as f32).collect()
+            })
+            .collect();
+
+        NativeModel { cfg: cfg.clone(), rows, bottom, top, tables }
+    }
+
+    /// Build by preset name (`config::all_rmc`).
+    pub fn from_name(name: &str, seed: u64) -> anyhow::Result<Self> {
+        let cfg = crate::config::all_rmc()
+            .into_iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+        Ok(Self::new(&cfg, seed))
+    }
+
+    pub fn cfg(&self) -> &RmcConfig {
+        &self.cfg
+    }
+
+    /// Rows materialized per embedding table (pjrt_rows scale).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Total parameter footprint in bytes (fp32).
+    pub fn param_bytes(&self) -> usize {
+        let fc: usize = self
+            .bottom
+            .iter()
+            .chain(&self.top)
+            .map(|l| l.w.len() + l.b.len())
+            .sum();
+        let emb: usize = self.tables.iter().map(Vec::len).sum();
+        (fc + emb) * 4
+    }
+
+    /// Execute the DLRM forward pass. Input layout matches the PJRT path:
+    /// dense (B, Dd), ids (T, B, L), lwts (T, B, L), all row-major; the
+    /// batch size is inferred from `dense`. Returns the (B,) CTR vector.
+    pub fn run_rmc(&self, dense: &[f32], ids: &[i32], lwts: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let d = self.cfg.dense_dim;
+        if dense.is_empty() || dense.len() % d != 0 {
+            bail!("dense length {} not a positive multiple of dense_dim {d}", dense.len());
+        }
+        let batch = dense.len() / d;
+        let (t, l) = (self.cfg.num_tables, self.cfg.lookups);
+        if ids.len() != t * batch * l || lwts.len() != ids.len() {
+            bail!(
+                "input size mismatch for {}: got ids {} lwts {}, want {} (T={t} B={batch} L={l})",
+                self.cfg.name,
+                ids.len(),
+                lwts.len(),
+                t * batch * l
+            );
+        }
+
+        // Bottom MLP over the dense features.
+        let mut x = dense.to_vec();
+        for layer in &self.bottom {
+            x = fc_layer(&x, &layer.w, &layer.b, batch, layer.in_dim, layer.out_dim, layer.relu);
+        }
+
+        // One SLS gather-sum per embedding table.
+        let mut embs = Vec::with_capacity(t);
+        for table in 0..t {
+            let lo = table * batch * l;
+            let hi = lo + batch * l;
+            embs.push(sls_gather_sum(
+                &self.tables[table],
+                self.cfg.emb_dim,
+                &ids[lo..hi],
+                &lwts[lo..hi],
+                batch,
+                l,
+            )?);
+        }
+
+        // Feature interaction (paper Fig 3): concat the dense-tower
+        // output with the per-table embedding vectors.
+        let bo = *self.cfg.bottom_mlp.last().expect("bottom MLP must be non-empty");
+        let emb = self.cfg.emb_dim;
+        let zdim = self.cfg.top_input_dim();
+        let mut z = vec![0.0f32; batch * zdim];
+        for s in 0..batch {
+            let dst = &mut z[s * zdim..(s + 1) * zdim];
+            dst[..bo].copy_from_slice(&x[s * bo..(s + 1) * bo]);
+            let mut off = bo;
+            for e in &embs {
+                dst[off..off + emb].copy_from_slice(&e[s * emb..(s + 1) * emb]);
+                off += emb;
+            }
+        }
+
+        // Top MLP + sigmoid CTR head.
+        let mut y = z;
+        for layer in &self.top {
+            y = fc_layer(&y, &layer.w, &layer.b, batch, layer.in_dim, layer.out_dim, layer.relu);
+        }
+        debug_assert_eq!(y.len(), batch);
+        Ok(y.into_iter().map(sigmoid).collect())
+    }
+}
+
+type Slot = Arc<Mutex<Option<Arc<NativeModel>>>>;
+
+/// Thread-safe pool of native models, one per preset name, with
+/// single-flight construction: concurrent `get`s for the same model
+/// serialize on a per-entry mutex so parameters are initialized exactly
+/// once (same discipline as the PJRT `ModelPool`).
+pub struct NativePool {
+    seed: u64,
+    slots: Mutex<HashMap<String, Slot>>,
+    builds: AtomicUsize,
+}
+
+impl NativePool {
+    pub fn new(seed: u64) -> Self {
+        NativePool { seed, slots: Mutex::new(HashMap::new()), builds: AtomicUsize::new(0) }
+    }
+
+    /// Get (building on first use) the model for `name`.
+    pub fn get(&self, name: &str) -> anyhow::Result<Arc<NativeModel>> {
+        let slot = self
+            .slots
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone();
+        // Per-entry lock: the first caller builds while holding it; any
+        // concurrent caller for the same model waits here, then reads the
+        // cached Arc. Different models build in parallel.
+        let mut guard = slot.lock().unwrap();
+        if let Some(m) = guard.as_ref() {
+            return Ok(m.clone());
+        }
+        let built = Arc::new(NativeModel::from_name(name, self.seed)?);
+        self.builds.fetch_add(1, Ordering::SeqCst);
+        *guard = Some(built.clone());
+        Ok(built)
+    }
+
+    /// Build a model ahead of traffic (warm start).
+    pub fn preload(&self, name: &str) -> anyhow::Result<()> {
+        self.get(name).map(|_| ())
+    }
+
+    /// How many models have been constructed (not just requested).
+    pub fn built_count(&self) -> usize {
+        self.builds.load(Ordering::SeqCst)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.lock().unwrap().is_some())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelClass;
+
+    fn tiny_cfg() -> RmcConfig {
+        RmcConfig {
+            name: "tiny".into(),
+            class: ModelClass::Rmc1,
+            dense_dim: 4,
+            bottom_mlp: vec![8, 4],
+            top_mlp: vec![8],
+            num_tables: 2,
+            rows: 50,
+            pjrt_rows: 50,
+            emb_dim: 4,
+            lookups: 3,
+        }
+    }
+
+    #[test]
+    fn sls_hand_computed_fixture() {
+        // table: 3 rows x 2 dims; batch 2, 2 lookups each.
+        let table = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let ids = [0, 2, 1, 1];
+        let wts = [1.0, 0.5, 2.0, 0.0];
+        let out = sls_gather_sum(&table, 2, &ids, &wts, 2, 2).unwrap();
+        // sample 0: 1.0*[1,2] + 0.5*[5,6] = [3.5, 5.0]
+        // sample 1: 2.0*[3,4] + 0.0*(skipped) = [6.0, 8.0]
+        assert_eq!(out, vec![3.5, 5.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn sls_zero_weight_skips_out_of_range_id() {
+        // Padding lookups carry weight 0 and arbitrary ids; they must be
+        // inert, exactly like the AOT path's zeroed lookup weights.
+        let table = [1.0, 2.0];
+        let out = sls_gather_sum(&table, 2, &[99], &[0.0], 1, 1).unwrap();
+        assert_eq!(out, vec![0.0, 0.0]);
+        // A *weighted* out-of-range id is an error.
+        assert!(sls_gather_sum(&table, 2, &[99], &[1.0], 1, 1).is_err());
+        assert!(sls_gather_sum(&table, 2, &[-1], &[1.0], 1, 1).is_err());
+    }
+
+    #[test]
+    fn fc_hand_computed_fixture() {
+        // x (1, 2) @ w (2, 2) + b, ReLU.
+        let x = [1.0, 2.0];
+        let w = [1.0, -1.0, 0.5, 2.0]; // rows: [1,-1], [0.5,2]
+        let b = [0.5, -10.0];
+        // pre-ReLU: [1*1 + 2*0.5 + 0.5, 1*(-1) + 2*2 - 10] = [2.5, -7]
+        assert_eq!(fc_layer(&x, &w, &b, 1, 2, 2, false), vec![2.5, -7.0]);
+        assert_eq!(fc_layer(&x, &w, &b, 1, 2, 2, true), vec![2.5, 0.0]);
+    }
+
+    #[test]
+    fn fc_batch_rows_independent() {
+        let w = [2.0, 3.0]; // (1, 2)
+        let b = [0.0, 1.0];
+        let out = fc_layer(&[1.0, -1.0], &w, &b, 2, 1, 2, false);
+        assert_eq!(out, vec![2.0, 4.0, -2.0, -2.0]);
+    }
+
+    #[test]
+    fn sigmoid_fixture() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        let ln3 = 3.0f32.ln();
+        assert!((sigmoid(ln3) - 0.75).abs() < 1e-6);
+        assert!((sigmoid(-ln3) - 0.25).abs() < 1e-6);
+        assert!(sigmoid(40.0) > 0.999 && sigmoid(-40.0) < 0.001);
+    }
+
+    fn tiny_inputs(cfg: &RmcConfig, batch: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        let dense = super::super::golden_dense(batch, cfg.dense_dim);
+        let ids = super::super::golden_ids(cfg.num_tables, batch, cfg.lookups, cfg.pjrt_rows);
+        let lwts = super::super::golden_lwts(cfg.num_tables, batch, cfg.lookups);
+        (dense, ids, lwts)
+    }
+
+    #[test]
+    fn forward_deterministic_in_seed() {
+        let cfg = tiny_cfg();
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 4);
+        let a = NativeModel::new(&cfg, 7).run_rmc(&dense, &ids, &lwts).unwrap();
+        let b = NativeModel::new(&cfg, 7).run_rmc(&dense, &ids, &lwts).unwrap();
+        let c = NativeModel::new(&cfg, 8).run_rmc(&dense, &ids, &lwts).unwrap();
+        assert_eq!(a, b, "same seed must reproduce bit-identically");
+        assert_ne!(a, c, "different seed must change the parameters");
+        assert!(a.iter().all(|&x| x > 0.0 && x < 1.0), "CTRs must be probabilities: {a:?}");
+    }
+
+    #[test]
+    fn forward_padding_invariance() {
+        // The same sample in a b1 run and in slot 0 of a b8 run (padding
+        // slots weighted 0) must produce the identical CTR — batching
+        // must never change per-sample numerics.
+        let cfg = tiny_cfg();
+        let m = NativeModel::new(&cfg, 3);
+        let (dense1, ids1, lwts1) = tiny_inputs(&cfg, 1);
+        let out1 = m.run_rmc(&dense1, &ids1, &lwts1).unwrap();
+
+        let b = 8;
+        let (t, l, d) = (cfg.num_tables, cfg.lookups, cfg.dense_dim);
+        let mut dense8 = vec![0.0f32; b * d];
+        dense8[..d].copy_from_slice(&dense1);
+        let mut ids8 = vec![0i32; t * b * l];
+        let mut lwts8 = vec![0.0f32; t * b * l];
+        for table in 0..t {
+            for j in 0..l {
+                ids8[(table * b) * l + j] = ids1[table * l + j];
+                lwts8[(table * b) * l + j] = 1.0;
+            }
+        }
+        let out8 = m.run_rmc(&dense8, &ids8, &lwts8).unwrap();
+        assert_eq!(out1[0], out8[0], "slot 0 must be batch-invariant");
+    }
+
+    #[test]
+    fn forward_reacts_to_sparse_ids() {
+        let cfg = tiny_cfg();
+        let m = NativeModel::new(&cfg, 5);
+        let (dense, mut ids, lwts) = tiny_inputs(&cfg, 1);
+        let a = m.run_rmc(&dense, &ids, &lwts).unwrap()[0];
+        ids[0] = (ids[0] + 1) % cfg.pjrt_rows as i32;
+        let b = m.run_rmc(&dense, &ids, &lwts).unwrap()[0];
+        assert_ne!(a, b, "CTR must react to sparse IDs");
+    }
+
+    #[test]
+    fn forward_rejects_bad_inputs() {
+        let cfg = tiny_cfg();
+        let m = NativeModel::new(&cfg, 1);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 2);
+        assert!(m.run_rmc(&[], &ids, &lwts).is_err(), "empty dense");
+        assert!(m.run_rmc(&dense[..3], &ids, &lwts).is_err(), "ragged dense");
+        assert!(m.run_rmc(&dense, &ids[..5], &lwts).is_err(), "short ids");
+        assert!(m.run_rmc(&dense, &ids, &lwts[..5]).is_err(), "short lwts");
+    }
+
+    #[test]
+    fn model_shapes_follow_config() {
+        let cfg = tiny_cfg();
+        let m = NativeModel::new(&cfg, 0);
+        assert_eq!(m.bottom.len(), 2);
+        assert_eq!(m.top.len(), 2); // one hidden + the CTR layer
+        assert_eq!(m.top.last().unwrap().out_dim, 1);
+        assert_eq!(m.top[0].in_dim, cfg.top_input_dim());
+        assert_eq!(m.tables.len(), cfg.num_tables);
+        assert_eq!(m.tables[0].len(), cfg.pjrt_rows * cfg.emb_dim);
+        assert_eq!(
+            m.param_bytes(),
+            4 * (cfg.fc_params() as usize + cfg.num_tables * cfg.pjrt_rows * cfg.emb_dim)
+        );
+    }
+
+    #[test]
+    fn pool_unknown_model_errors() {
+        assert!(NativePool::new(0).get("nope").is_err());
+        assert!(NativeModel::from_name("nope", 0).is_err());
+    }
+
+    #[test]
+    fn pool_single_flight_builds_once() {
+        // N concurrent gets for the same model must construct exactly one
+        // NativeModel (the ModelPool doc-comment promise, honored here).
+        let pool = Arc::new(NativePool::new(7));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = pool.clone();
+                std::thread::spawn(move || {
+                    p.get("rmc1-small").unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.built_count(), 1, "duplicate construction");
+        assert_eq!(pool.cached_count(), 1);
+        // A second model builds independently.
+        pool.preload("rmc1-large").unwrap();
+        assert_eq!(pool.built_count(), 2);
+    }
+}

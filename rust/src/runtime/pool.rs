@@ -1,7 +1,10 @@
 //! Executable pool: lazily compiles and caches one `CompiledModel` per
 //! (model, impl, batch) key. Shared by the serving workers behind a
 //! mutex-per-entry so concurrent workers can execute different variants
-//! without serializing on a global lock.
+//! without serializing on a global lock, and so two workers requesting
+//! the SAME variant compile it exactly once (single-flight: the second
+//! caller blocks on the entry lock until the first finishes, then reads
+//! the cached executable instead of spending ~100ms recompiling).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -11,11 +14,16 @@ use anyhow::anyhow;
 use super::artifacts::Manifest;
 use super::executor::{CompiledModel, PjrtRuntime};
 
+type Key = (String, String, usize);
+type Slot = Arc<Mutex<Option<Arc<CompiledModel>>>>;
+
 /// Thread-safe pool of compiled executables.
 pub struct ModelPool {
     runtime: PjrtRuntime,
     pub manifest: Manifest,
-    cache: Mutex<HashMap<(String, String, usize), Arc<CompiledModel>>>,
+    /// Outer lock guards only the key -> slot map (held briefly); each
+    /// slot's own lock serializes compilation of that one variant.
+    cache: Mutex<HashMap<Key, Slot>>,
 }
 
 // PJRT handles are internally thread-safe (the CPU client serializes at
@@ -31,19 +39,29 @@ impl ModelPool {
     }
 
     /// Get (compiling on first use) the executable for (model, impl, batch).
-    pub fn get(&self, model: &str, impl_: &str, batch: usize) -> anyhow::Result<Arc<CompiledModel>> {
+    /// Single-flight: concurrent calls for the same key compile once.
+    pub fn get(
+        &self,
+        model: &str,
+        impl_: &str,
+        batch: usize,
+    ) -> anyhow::Result<Arc<CompiledModel>> {
         let key = (model.to_string(), impl_.to_string(), batch);
-        if let Some(m) = self.cache.lock().unwrap().get(&key) {
+        let slot = self.cache.lock().unwrap().entry(key).or_default().clone();
+        let mut guard = slot.lock().unwrap();
+        if let Some(m) = guard.as_ref() {
             return Ok(m.clone());
         }
-        // Compile outside the lock (compilation can take ~100ms+).
+        // Compile while holding only this entry's lock (compilation can
+        // take ~100ms+; other variants proceed in parallel). On error the
+        // slot stays empty so the next caller retries.
         let variant = self
             .manifest
             .find(model, impl_, batch)
             .ok_or_else(|| anyhow!("no artifact for {model}/{impl_}/b{batch}"))?;
         let compiled = Arc::new(self.runtime.load(&self.manifest, variant)?);
-        let mut cache = self.cache.lock().unwrap();
-        Ok(cache.entry(key).or_insert(compiled).clone())
+        *guard = Some(compiled.clone());
+        Ok(compiled)
     }
 
     /// Pre-compile every batch bucket for a model (warm start).
@@ -61,7 +79,13 @@ impl ModelPool {
         Ok(batches.len())
     }
 
+    /// Number of executables actually compiled and cached.
     pub fn cached_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.lock().unwrap().is_some())
+            .count()
     }
 }

@@ -6,8 +6,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig};
-use recsys::coordinator::{Backend, Coordinator, MockBackend, PjrtBackend, SimBackend};
-use recsys::runtime::{default_artifacts_dir, ModelPool};
+use recsys::coordinator::{Backend, Coordinator, MockBackend, SimBackend};
 use recsys::workload::{PoissonArrivals, Query};
 
 fn queries(n: usize, model: &str, items: usize, qps: f64, seed: u64) -> Vec<Query> {
@@ -35,8 +34,11 @@ fn deployment(pools: Vec<(ServerGen, usize)>, routing: &str, sla_ms: f64) -> Dep
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_serving_end_to_end() {
+    use recsys::coordinator::PjrtBackend;
+    use recsys::runtime::{default_artifacts_dir, ModelPool};
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");

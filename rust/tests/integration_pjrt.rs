@@ -1,8 +1,11 @@
 //! Integration tests over the PJRT runtime: golden numerics end-to-end,
 //! Pallas-vs-XLA executable cross-checks, and batching/padding
-//! correctness. These require `make artifacts` to have run; they skip
-//! (with a note) otherwise so `cargo test` stays runnable from a fresh
-//! clone.
+//! correctness. These require the `pjrt` cargo feature (the whole file
+//! compiles to nothing without it) AND `make artifacts` to have run;
+//! they skip (with a note) otherwise so `cargo test` stays runnable
+//! from a fresh clone.
+
+#![cfg(feature = "pjrt")]
 
 use recsys::runtime::{
     default_artifacts_dir, golden_dense, golden_ids, golden_lwts, golden_ncf_ids, ModelPool,
