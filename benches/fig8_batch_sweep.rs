@@ -1,4 +1,12 @@
-//! Bench + regenerator for Fig 8 (batch x server sweep).
+//! Bench + regenerator for Fig 8 (batch x server sweep), plus a native
+//! engine companion: the same batch axis executed for real by both
+//! native engines (reference baseline vs optimized), so the simulated
+//! batching-effectiveness story can be sanity-checked against measured
+//! per-item throughput on the host CPU.
+use recsys::runtime::{
+    golden_dense, golden_ids, golden_lwts, Engine, EngineKind, ExecOptions, NativePool,
+    ScratchArena,
+};
 use recsys::util::bench::{bench, header};
 
 fn main() {
@@ -10,4 +18,34 @@ fn main() {
     });
     println!("{}", s.report());
     println!("{}", recsys::figures::fig8::report());
+
+    header("Fig 8 companion — measured native engines across the batch axis");
+    let pool = NativePool::new(0);
+    let m = pool.get("rmc1-small").expect("rmc1-small preset");
+    let cfg = m.cfg();
+    let reference = Engine::new(ExecOptions { threads: 1, engine: EngineKind::Reference });
+    let optimized = Engine::new(ExecOptions { threads: 0, engine: EngineKind::Optimized });
+    let mut arena = ScratchArena::new();
+    for &batch in recsys::figures::fig8::BATCHES.iter() {
+        let dense = golden_dense(batch, cfg.dense_dim);
+        let ids = golden_ids(cfg.num_tables, batch, cfg.lookups, m.rows());
+        let lwts = golden_lwts(cfg.num_tables, batch, cfg.lookups);
+        let iters = if batch >= 128 { 5 } else { 10 };
+        let r = bench(&format!("rmc1-small b{batch} reference"), 1, iters, || {
+            let out = m.run_rmc_with(&reference, &mut arena, &dense, &ids, &lwts).unwrap();
+            assert_eq!(out.len(), batch);
+        });
+        let o = bench(&format!("rmc1-small b{batch} optimized"), 1, iters, || {
+            let out = m.run_rmc_with(&optimized, &mut arena, &dense, &ids, &lwts).unwrap();
+            assert_eq!(out.len(), batch);
+        });
+        println!("{}", r.report());
+        println!("{}", o.report());
+        println!(
+            "  b{batch}: {:.1} -> {:.1} items/ms ({:.2}x)",
+            batch as f64 / (r.mean_ns / 1e6),
+            batch as f64 / (o.mean_ns / 1e6),
+            r.mean_ns / o.mean_ns
+        );
+    }
 }

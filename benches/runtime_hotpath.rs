@@ -1,46 +1,202 @@
-//! L3 hot-path micro-benchmarks: native/PJRT execute latency per (model,
-//! batch), input marshalling, batcher, and router — the profile targets
-//! of the performance pass (EXPERIMENTS.md §Perf).
+//! L3 hot-path micro-benchmarks + perf-trajectory tracker: both native
+//! engines (reference baseline vs optimized packed/parallel) across
+//! models, batches, and thread counts, with op-level timing (SLS GB/s,
+//! FC GFLOP/s), plus batcher/router/marshal micro-sections and the PJRT
+//! path when built with that feature.
+//!
+//! Emits machine-readable `BENCH_runtime_hotpath.json` (see
+//! EXPERIMENTS.md §Microbenchmarks for the schema and runbook) so the
+//! perf trajectory is tracked from PR to PR.
+//!
+//! Flags:  --smoke        tiny iteration counts (CI emitter check);
+//!                        defaults to a separate *.smoke.json so it
+//!                        never clobbers the committed tracker
+//!         --out <path>   JSON output path (default: repo root)
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use recsys::coordinator::{DynamicBatcher, RoutingPolicy, WorkerInfo};
-use recsys::runtime::{golden_dense, golden_ids, golden_lwts, NativePool};
-use recsys::util::bench::{bench, header};
+use recsys::runtime::{
+    golden_dense, golden_ids, golden_lwts, Engine, EngineKind, ExecOptions, ForwardStats,
+    NativePool, ScratchArena,
+};
+use recsys::util::bench::{bench, header, BenchStats};
+use recsys::util::Json;
 use recsys::workload::Query;
 
-fn main() -> anyhow::Result<()> {
-    header("runtime hot path");
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
 
-    // ---- native execute (the default request-path kernel) -------------
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// One engine configuration swept by the forward-pass section.
+struct EngineCfg {
+    label: &'static str,
+    kind: EngineKind,
+    threads: usize,
+}
+
+/// Mean per-iteration numbers kept for the cross-engine summary.
+struct Measured {
+    model: String,
+    batch: usize,
+    label: &'static str,
+    mean_ns: f64,
+    sls_ns: f64,
+    fc_ns: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = match args.iter().position(|a| a == "--out") {
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => v.clone(),
+            _ => anyhow::bail!("--out requires a path argument"),
+        },
+        // Smoke runs must never clobber the committed perf tracker with
+        // throwaway 3-iteration numbers.
+        None if smoke => {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_runtime_hotpath.smoke.json").to_string()
+        }
+        None => concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_runtime_hotpath.json").to_string(),
+    };
+
+    header("runtime hot path");
+    let engines = [
+        EngineCfg { label: "reference", kind: EngineKind::Reference, threads: 1 },
+        EngineCfg { label: "optimized-t1", kind: EngineKind::Optimized, threads: 1 },
+        EngineCfg { label: "optimized-t2", kind: EngineKind::Optimized, threads: 2 },
+        EngineCfg { label: "optimized-t4", kind: EngineKind::Optimized, threads: 4 },
+    ];
+    let batches: &[usize] = if smoke { &[8] } else { &[1, 8, 64, 128] };
+
     let pool = NativePool::new(0);
+    let mut results: Vec<Json> = Vec::new();
+    let mut measured: Vec<Measured> = Vec::new();
+
     for model in ["rmc1-small", "rmc2-small"] {
         let m = pool.get(model)?;
         let cfg = m.cfg();
-        for batch in [1usize, 8, 32, 128] {
+        for &batch in batches {
             let dense = golden_dense(batch, cfg.dense_dim);
             let ids = golden_ids(cfg.num_tables, batch, cfg.lookups, m.rows());
             let lwts = golden_lwts(cfg.num_tables, batch, cfg.lookups);
-            let iters = if batch >= 128 { 10 } else { 30 };
-            let s = bench(&format!("native {model} b{batch}"), 2, iters, || {
-                let out = m.run_rmc(&dense, &ids, &lwts).unwrap();
-                assert_eq!(out.len(), batch);
-            });
-            // Per-item throughput alongside raw latency.
-            println!(
-                "{}   ({:.1} items/ms)",
-                s.report(),
-                batch as f64 / (s.mean_ns / 1e6)
-            );
+            for ec in &engines {
+                let engine = Engine::new(ExecOptions { threads: ec.threads, engine: ec.kind });
+                let mut arena = ScratchArena::new();
+                let warmup = if smoke { 1 } else { 2 };
+                let iters = if smoke {
+                    3
+                } else if batch >= 64 {
+                    10
+                } else {
+                    30
+                };
+                // Warm up outside the harness with throwaway stats, so
+                // the op-level numbers sample the same (warm) population
+                // as the harness mean.
+                let mut discard = ForwardStats::default();
+                for _ in 0..warmup {
+                    m.run_rmc_timed(&engine, &mut arena, &dense, &ids, &lwts, &mut discard)
+                        .unwrap();
+                }
+                let mut stats = ForwardStats::default();
+                let s = bench(&format!("native {model} b{batch} {}", ec.label), 0, iters, || {
+                    let out = m
+                        .run_rmc_timed(&engine, &mut arena, &dense, &ids, &lwts, &mut stats)
+                        .unwrap();
+                    assert_eq!(out.len(), batch);
+                });
+                let runs = iters as f64;
+                let (bot, sls, inter, top) = (
+                    stats.bottom_ns / runs,
+                    stats.sls_ns / runs,
+                    stats.interact_ns / runs,
+                    stats.top_ns / runs,
+                );
+                let fc_ns = bot + top;
+                let fc_gflops = m.fc_flops(batch) as f64 / fc_ns.max(1.0);
+                let sls_gbps = m.sls_traffic_bytes(&lwts) as f64 / sls_ns.max(1.0);
+                println!(
+                    "{}   ({:.1} items/ms, fc {:.2} GF/s, sls {:.2} GB/s)",
+                    s.report(),
+                    batch as f64 / (s.mean_ns / 1e6),
+                    fc_gflops,
+                    sls_gbps
+                );
+                results.push(obj(vec![
+                    ("model", Json::Str(model.into())),
+                    ("batch", num(batch as f64)),
+                    ("engine", Json::Str(ec.kind.name().into())),
+                    ("threads", num(ec.threads as f64)),
+                    ("bench", s.to_json()),
+                    ("items_per_ms", num(batch as f64 / (s.mean_ns / 1e6))),
+                    (
+                        "ops",
+                        obj(vec![
+                            ("bottom_mlp_ns", num(bot.round())),
+                            ("sls_ns", num(sls.round())),
+                            ("interaction_ns", num(inter.round())),
+                            ("top_mlp_ns", num(top.round())),
+                        ]),
+                    ),
+                    ("fc_gflops", num(fc_gflops)),
+                    ("sls_gbps", num(sls_gbps)),
+                ]));
+                measured.push(Measured {
+                    model: model.into(),
+                    batch,
+                    label: ec.label,
+                    mean_ns: s.mean_ns,
+                    sls_ns: sls,
+                    fc_ns,
+                });
+            }
         }
     }
+
+    // Cross-engine summary: single-thread speedup (packing + blocking,
+    // no parallelism) and SLS thread scaling — the two acceptance axes.
+    let mut summary: Vec<(&str, Json)> = Vec::new();
+    let sum_batch = if smoke { 8 } else { 64 };
+    let find = |model: &str, label: &str| {
+        measured
+            .iter()
+            .find(|e| e.model == model && e.batch == sum_batch && e.label == label)
+    };
+    let (rmc1_ref, rmc1_opt) =
+        (find("rmc1-small", "reference"), find("rmc1-small", "optimized-t1"));
+    if let (Some(r), Some(o1)) = (rmc1_ref, rmc1_opt) {
+        summary.push(("rmc1_fc_single_thread_speedup", num(r.fc_ns / o1.fc_ns.max(1.0))));
+        summary.push(("rmc1_forward_single_thread_speedup", num(r.mean_ns / o1.mean_ns)));
+        summary.push(("rmc1_fc_ns_reference", num(r.fc_ns.round())));
+        summary.push(("rmc1_fc_ns_optimized_t1", num(o1.fc_ns.round())));
+    }
+    if let (Some(o1), Some(o2), Some(o4)) = (
+        find("rmc2-small", "optimized-t1"),
+        find("rmc2-small", "optimized-t2"),
+        find("rmc2-small", "optimized-t4"),
+    ) {
+        summary.push(("rmc2_sls_scaling_t2", num(o1.sls_ns / o2.sls_ns.max(1.0))));
+        summary.push(("rmc2_sls_scaling_t4", num(o1.sls_ns / o4.sls_ns.max(1.0))));
+    }
+    summary.push(("summary_batch", num(sum_batch as f64)));
 
     pjrt_section()?;
 
     // ---- batcher ------------------------------------------------------
-    let s = bench("batcher push+flush 1k queries", 2, 50, || {
-        let mut b =
-            DynamicBatcher::new(vec![1, 8, 32, 128], 128, Duration::from_micros(200));
+    let mut micro: Vec<Json> = Vec::new();
+    let s = bench("batcher push+flush 1k queries", 2, if smoke { 5 } else { 50 }, || {
+        let mut b = DynamicBatcher::new(vec![1, 8, 32, 128], 128, Duration::from_micros(200));
         let now = Instant::now();
         let mut out = 0;
         for i in 0..1000u64 {
@@ -52,6 +208,7 @@ fn main() -> anyhow::Result<()> {
         assert!(out > 0);
     });
     println!("{}", s.report());
+    micro.push(s.to_json());
 
     // ---- router -------------------------------------------------------
     let workers: Vec<WorkerInfo> = (0..16)
@@ -62,7 +219,7 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let outstanding = vec![0usize; 16];
-    let s = bench("router 10k heterogeneity picks", 2, 50, || {
+    let s = bench("router 10k heterogeneity picks", 2, if smoke { 5 } else { 50 }, || {
         let mut rr = 0;
         for i in 0..10_000 {
             let b = if i % 2 == 0 { 8 } else { 128 };
@@ -72,7 +229,25 @@ fn main() -> anyhow::Result<()> {
         }
     });
     println!("{}", s.report());
-    marshal_bench();
+    micro.push(s.to_json());
+    micro.push(marshal_bench(smoke).to_json());
+
+    let doc = obj(vec![
+        ("schema", Json::Str("bench_runtime_hotpath/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "host",
+            obj(vec![(
+                "available_cores",
+                num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+            )]),
+        ),
+        ("results", Json::Arr(results)),
+        ("summary", obj(summary)),
+        ("micro", Json::Arr(micro)),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty() + "\n")?;
+    println!("\nwrote {out_path}");
     Ok(())
 }
 
@@ -133,14 +308,14 @@ fn pjrt_section() -> anyhow::Result<()> {
     Ok(())
 }
 
-// Appended by the perf pass: input-marshalling microbenchmark (the
-// numeric serving path generates per-slot dense + sparse inputs).
-fn marshal_bench() {
+// Input-marshalling microbenchmark (the numeric serving path generates
+// per-slot dense + sparse inputs).
+fn marshal_bench(smoke: bool) -> BenchStats {
     use recsys::util::Rng;
     use recsys::workload::SparseIdGen;
     let (tables, lookups, rows, dense_dim, bucket) =
         (24usize, 80usize, 10_000usize, 256usize, 128usize);
-    let s = bench("marshal rmc2-small b128 inputs", 2, 20, || {
+    let s = bench("marshal rmc2-small b128 inputs", 2, if smoke { 3 } else { 20 }, || {
         let mut rng = Rng::seed_from_u64(42);
         let mut idgen = SparseIdGen::production_like(rows, 42);
         let mut dense = vec![0.0f32; bucket * dense_dim];
@@ -158,4 +333,5 @@ fn marshal_bench() {
         std::hint::black_box((&dense, &ids));
     });
     println!("{}", s.report());
+    s
 }

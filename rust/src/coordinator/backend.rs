@@ -1,5 +1,6 @@
 //! Execution backends for the worker pool.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -7,7 +8,7 @@ use crate::config::{ServerGen, ServerSpec};
 use crate::model::ModelGraph;
 #[cfg(feature = "pjrt")]
 use crate::runtime::ModelPool;
-use crate::runtime::{golden_lwts, NativePool};
+use crate::runtime::{golden_lwts, Engine, ExecOptions, NativePool, ScratchArena};
 use crate::simulator::MachineSim;
 use crate::util::Rng;
 use crate::workload::{Query, SparseIdGen};
@@ -89,14 +90,37 @@ pub(crate) fn marshal_inputs(
 /// (runtime::NativeModel) with deterministically-initialized parameters.
 /// Self-contained — no AOT artifacts, no XLA toolchain — which makes it
 /// the default serving backend on a fresh clone.
+///
+/// One `Engine` (intra-op thread pool + kernel choice) is shared by all
+/// coordinator workers, so inter-query and intra-op parallelism compose:
+/// W workers x `ExecOptions::threads` participants per batch. Each
+/// worker thread keeps its own `ScratchArena` (thread-local), so the
+/// steady-state request path performs no kernel-side heap allocations.
 pub struct NativeBackend {
     pub pool: Arc<NativePool>,
+    engine: Engine,
 }
 
 impl NativeBackend {
+    /// Default engine: serial optimized kernels (`ExecOptions::default`).
     pub fn new(pool: Arc<NativePool>) -> Self {
-        NativeBackend { pool }
+        Self::with_options(pool, ExecOptions::default())
     }
+
+    /// Explicit engine configuration (`serve --threads N --engine ...`).
+    pub fn with_options(pool: Arc<NativePool>, opts: ExecOptions) -> Self {
+        NativeBackend { pool, engine: Engine::new(opts) }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+thread_local! {
+    /// Per-worker scratch for the native forward pass (grows to the
+    /// high-water batch size, then allocation-free).
+    static NATIVE_ARENA: RefCell<ScratchArena> = RefCell::new(ScratchArena::new());
 }
 
 impl Backend for NativeBackend {
@@ -111,12 +135,16 @@ impl Backend for NativeBackend {
         let cfg = m.cfg();
         let inputs =
             marshal_inputs(queries, bucket, cfg.num_tables, cfg.lookups, m.rows(), cfg.dense_dim);
-        let ctrs = m.run_rmc(&inputs.dense, &inputs.ids, &inputs.lwts)?;
-        Ok(queries
-            .iter()
-            .zip(&inputs.slots)
-            .map(|(_, (s0, n))| ctrs[*s0..s0 + n].to_vec())
-            .collect())
+        NATIVE_ARENA.with(|arena| {
+            let mut arena = arena.borrow_mut();
+            let ctrs =
+                m.run_rmc_into(&self.engine, &mut arena, &inputs.dense, &inputs.ids, &inputs.lwts)?;
+            Ok(queries
+                .iter()
+                .zip(&inputs.slots)
+                .map(|(_, (s0, n))| ctrs[*s0..s0 + n].to_vec())
+                .collect())
+        })
     }
 }
 
@@ -298,6 +326,21 @@ mod tests {
         for ctr in out.iter().flatten() {
             assert!(*ctr > 0.0 && *ctr < 1.0, "CTR {ctr} out of range");
         }
+    }
+
+    #[test]
+    fn native_backend_parallel_matches_serial() {
+        // Intra-op sharding must never change the served numerics
+        // (engine determinism contract, end-to-end through marshalling).
+        let pool = Arc::new(NativePool::new(3));
+        let serial = NativeBackend::new(pool.clone());
+        let parallel =
+            NativeBackend::with_options(pool, ExecOptions { threads: 4, ..Default::default() });
+        let queries =
+            vec![Query::new(5, "rmc1-small", 4, 0.0), Query::new(6, "rmc1-small", 3, 0.0)];
+        let a = serial.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        let b = parallel.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        assert_eq!(a, b, "intra-op parallelism must not change served CTRs");
     }
 
     #[test]

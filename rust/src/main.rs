@@ -4,10 +4,16 @@
 //!   recsys info                         model + backend summary
 //!   recsys figure <id|all> [--out-dir]  regenerate paper tables/figures
 //!   recsys serve [--config f.json] [--qps N] [--queries N] [--model M]
-//!                [--impl native|xla|pallas]
+//!                [--impl native|xla|pallas] [--threads N]
+//!                [--engine optimized|reference]
 //!                                       end-to-end serving run (native
 //!                                       needs no artifacts; xla/pallas
-//!                                       need the `pjrt` feature)
+//!                                       need the `pjrt` feature).
+//!                                       --threads N enables intra-op
+//!                                       parallelism per batch (0 = one
+//!                                       per core); --engine reference
+//!                                       serves on the naive baseline
+//!                                       kernels for A/B comparison
 //!   recsys check                        numeric self-verification
 //!   recsys simulate --model M [--gen G] [--batch B] [--jobs N]
 //!                                       one simulator measurement
@@ -22,7 +28,7 @@ use std::sync::Arc;
 use recsys::config::{DeploymentConfig, ServerGen, ServerSpec};
 use recsys::coordinator::{Backend, Coordinator, NativeBackend};
 use recsys::model::ModelGraph;
-use recsys::runtime::NativePool;
+use recsys::runtime::{EngineKind, ExecOptions, NativePool};
 use recsys::simulator::MachineSim;
 use recsys::workload::{PoissonArrivals, Query, SparseIdGen};
 
@@ -83,6 +89,11 @@ fn cmd_info() -> anyhow::Result<()> {
         );
     }
     println!("batch buckets: {:?}", recsys::config::PJRT_BATCHES);
+    println!(
+        "engines: optimized (packed GEMM + arena + thread pool), reference (naive baseline); \
+         available cores: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
     info_pjrt()
 }
 
@@ -137,13 +148,21 @@ fn cmd_figure(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result
 
 /// Build the serving backend for `--impl`. Native is always available;
 /// xla/pallas execute the AOT artifacts and need the `pjrt` feature.
-fn make_backend(model: &str, impl_: &str) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
+fn make_backend(
+    model: &str,
+    impl_: &str,
+    opts: ExecOptions,
+) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
     match impl_ {
         "native" => {
-            println!("initializing native {model} (deterministic params) ...");
+            println!(
+                "initializing native {model} (deterministic params, engine {}, {} thread(s)) ...",
+                opts.engine.name(),
+                if opts.threads == 0 { "auto".to_string() } else { opts.threads.to_string() }
+            );
             let pool = Arc::new(NativePool::new(0));
             pool.preload(model)?;
-            let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new(pool));
+            let backend: Arc<dyn Backend> = Arc::new(NativeBackend::with_options(pool, opts));
             Ok((backend, recsys::config::PJRT_BATCHES.to_vec()))
         }
         "xla" | "pallas" => make_pjrt_backend(model, impl_),
@@ -183,8 +202,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let n: usize = flags.get("queries").map(|s| s.parse()).transpose()?.unwrap_or(500);
     let items: usize = flags.get("items").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let impl_ = flags.get("impl").cloned().unwrap_or_else(|| "native".into());
+    let threads: usize = flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let engine = match flags.get("engine") {
+        Some(s) => EngineKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --engine '{s}' (optimized|reference)"))?,
+        None => EngineKind::Optimized,
+    };
+    // --threads / --engine configure the native execution engine only;
+    // silently ignoring them on the PJRT path would corrupt A/B numbers.
+    if impl_ != "native" && (threads != 1 || engine != EngineKind::Optimized) {
+        anyhow::bail!(
+            "--threads/--engine apply to --impl native only (got --impl {impl_}); \
+             the PJRT path executes AOT artifacts as compiled"
+        );
+    }
 
-    let (backend, buckets) = make_backend(&model, &impl_)?;
+    let (backend, buckets) = make_backend(&model, &impl_, ExecOptions { threads, engine })?;
     let mut coordinator = Coordinator::new(&cfg, backend, buckets)?;
 
     let mut arr = PoissonArrivals::new(qps, 1234);

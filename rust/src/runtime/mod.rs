@@ -3,6 +3,10 @@
 //! * `native` (always available) — the DLRM forward pass in pure Rust
 //!   (SLS gather-sum + FC GEMM + sigmoid), deterministically initialized
 //!   from the model presets. Self-contained: no artifacts, no toolchain.
+//!   Two engines: `reference` (naive scalar baseline) and `optimized`
+//!   (packed-weight GEMM + scratch arenas + intra-op thread pool).
+//! * `parallel` — the crate-internal worker thread pool (std-only rayon
+//!   stand-in) the optimized engine shards operators over.
 //! * `executor`/`pool` (feature `pjrt`) — loads the AOT artifacts
 //!   (`artifacts/manifest.json` + HLO text + params blob) produced by
 //!   `make artifacts`, stages model parameters as device buffers ONCE,
@@ -17,6 +21,7 @@ mod artifacts;
 mod executor;
 mod golden;
 mod native;
+mod parallel;
 #[cfg(feature = "pjrt")]
 mod pool;
 
@@ -24,7 +29,11 @@ pub use artifacts::{InputSpec, Manifest, ParamSpec, VariantSpec};
 #[cfg(feature = "pjrt")]
 pub use executor::{CompiledModel, PjrtRuntime};
 pub use golden::{golden_dense, golden_ids, golden_lwts, golden_ncf_ids};
-pub use native::{fc_layer, sigmoid, sls_gather_sum, DenseLayer, NativeModel, NativePool};
+pub use native::{
+    fc_layer, fc_layer_checked, sigmoid, sls_gather_sum, DenseLayer, Engine, EngineKind,
+    ExecOptions, ForwardStats, NativeModel, NativePool, PackedLayer, ScratchArena,
+};
+pub use parallel::{shard_range, ThreadPool};
 #[cfg(feature = "pjrt")]
 pub use pool::ModelPool;
 

@@ -3,21 +3,42 @@
 //! operator — SparseLengthsWeightedSum gather-sum, FC GEMM + bias + ReLU,
 //! feature-interaction concat, sigmoid CTR head.
 //!
-//! This is the self-contained CPU reference path: no AOT artifacts, no
-//! XLA toolchain, no python. Parameters are deterministically initialized
-//! from the model presets at `pjrt_rows` scale (the same scaled-down
-//! embedding tables the AOT path uses), so a fresh clone can run every
-//! serving and scheduling experiment end-to-end. When the `pjrt` feature
-//! is enabled the PJRT runtime executes the same graph from compiled HLO;
-//! the two paths share input layout ((B, Dd) dense, (T, B, L) ids/lwts,
-//! row-major) so backends are interchangeable behind `coordinator::Backend`.
+//! Two engines execute the same graph (`EngineKind`):
+//!
+//! * `Reference` — the original naive scalar kernels, one fresh `Vec`
+//!   per layer per request, strictly serial. Kept callable so speedups
+//!   are *measured* against it, never asserted.
+//! * `Optimized` — the production hot path: weights repacked at model
+//!   build time into `NR`-wide column panels, a register-tiled
+//!   `MR x NR` GEMM micro-kernel, per-worker `ScratchArena` reuse (zero
+//!   steady-state heap allocations), and intra-op sharding over a
+//!   crate-internal worker `ThreadPool` (`runtime::parallel`) — FC over
+//!   batch rows, SLS over (table x batch) tiles.
+//!
+//! Determinism contract: each output element's reduction order is fixed
+//! by the kernel (ascending k for FC, ascending lookup for SLS) and
+//! never crosses a shard boundary, so serial and parallel runs of the
+//! same engine are bit-identical at any thread count (enforced by
+//! `tests/prop_invariants.rs`). The two engines differ only in FP
+//! summation order (reference folds the bias in first), so they agree
+//! closely (tested to 1e-4 absolute on CTRs) but not bitwise.
+//!
+//! Parameters are deterministically initialized from the model presets
+//! at `pjrt_rows` scale, so a fresh clone runs every serving experiment
+//! end-to-end. With the `pjrt` feature the PJRT runtime executes the
+//! same graph from compiled HLO; both paths share input layout
+//! ((B, Dd) dense, (T, B, L) ids/lwts, row-major) behind
+//! `coordinator::Backend`.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail};
 
+use super::parallel::{shard_range, SendPtr, ThreadPool};
 use crate::config::RmcConfig;
 use crate::util::Rng;
 
@@ -35,7 +56,8 @@ pub struct DenseLayer {
 /// FC forward for one layer: x (B, K) @ w (K, N) + b, optional ReLU.
 /// Loop order is sample-k-n so the inner loop streams one weight row
 /// against one output row (auto-vectorizable, cache-friendly — the
-/// paper's compute-bound operator).
+/// paper's compute-bound operator). This is the *reference* kernel; the
+/// optimized engine uses the packed panel kernel below.
 pub fn fc_layer(
     x: &[f32],
     w: &[f32],
@@ -45,9 +67,11 @@ pub fn fc_layer(
     out_dim: usize,
     relu: bool,
 ) -> Vec<f32> {
-    debug_assert_eq!(x.len(), batch * in_dim);
-    debug_assert_eq!(w.len(), in_dim * out_dim);
-    debug_assert_eq!(bias.len(), out_dim);
+    // Real (release-mode) shape checks: a mis-sized caller must fail
+    // loudly, never index past a slice end.
+    assert_eq!(x.len(), batch * in_dim, "fc x length");
+    assert_eq!(w.len(), in_dim * out_dim, "fc w length");
+    assert_eq!(bias.len(), out_dim, "fc bias length");
     let mut out = vec![0.0f32; batch * out_dim];
     for s in 0..batch {
         let xrow = &x[s * in_dim..(s + 1) * in_dim];
@@ -68,6 +92,30 @@ pub fn fc_layer(
         }
     }
     out
+}
+
+/// Shape-checked FC forward: surfaces a mis-sized input as an `Err`
+/// (with the offending dimensions) instead of a panic. `run_rmc`'s
+/// reference path goes through this wrapper.
+pub fn fc_layer_checked(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    relu: bool,
+) -> anyhow::Result<Vec<f32>> {
+    if x.len() != batch * in_dim {
+        bail!("fc x length {} != batch {batch} * in_dim {in_dim}", x.len());
+    }
+    if w.len() != in_dim * out_dim {
+        bail!("fc w length {} != in_dim {in_dim} * out_dim {out_dim}", w.len());
+    }
+    if bias.len() != out_dim {
+        bail!("fc bias length {} != out_dim {out_dim}", bias.len());
+    }
+    Ok(fc_layer(x, w, bias, batch, in_dim, out_dim, relu))
 }
 
 /// SparseLengthsWeightedSum for one table: gather `lookups` rows per
@@ -121,6 +169,321 @@ pub fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
+// ===================================================================
+// Execution engine: options, thread pool handle, scratch arenas, and
+// the packed-weight kernels.
+// ===================================================================
+
+/// Which kernel family executes the forward pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Original naive scalar kernels (per-layer allocation, serial).
+    Reference,
+    /// Packed-weight blocked GEMM + scratch arenas + thread-pool shards.
+    Optimized,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "reference" | "ref" | "naive" => Some(EngineKind::Reference),
+            "optimized" | "opt" => Some(EngineKind::Optimized),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Reference => "reference",
+            EngineKind::Optimized => "optimized",
+        }
+    }
+}
+
+/// Execution-engine configuration, surfaced through `NativeBackend` and
+/// `serve --threads N --engine reference|optimized`.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    /// Intra-op participants per operator, caller included (0 = one per
+    /// available core). `1` disables intra-op parallelism — the right
+    /// default when the coordinator already runs one worker per core;
+    /// raise it to trade cores for per-batch latency.
+    pub threads: usize,
+    pub engine: EngineKind,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { threads: 1, engine: EngineKind::Optimized }
+    }
+}
+
+/// A live engine: resolved options plus its worker pool. Construct once,
+/// share across serving workers (intra-op and inter-query parallelism
+/// compose: N workers x T threads), and thread through `run_rmc_with`.
+pub struct Engine {
+    kind: EngineKind,
+    threads: usize,
+    pool: ThreadPool,
+}
+
+impl Engine {
+    pub fn new(opts: ExecOptions) -> Self {
+        let threads = if opts.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            opts.threads
+        };
+        // The calling thread always participates; spawn threads-1 helpers.
+        Engine { kind: opts.engine, threads, pool: ThreadPool::new(threads.saturating_sub(1)) }
+    }
+
+    /// Serial optimized engine (what plain `run_rmc` uses).
+    pub fn serial() -> Self {
+        Engine::new(ExecOptions { threads: 1, engine: EngineKind::Optimized })
+    }
+
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    /// Max data-parallel participants per operator (incl. the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+}
+
+fn serial_engine() -> &'static Engine {
+    static SERIAL: OnceLock<Engine> = OnceLock::new();
+    SERIAL.get_or_init(Engine::serial)
+}
+
+/// Per-worker scratch memory for the forward pass: ping-pong activation
+/// buffers, the SLS output block, the interaction buffer, and the CTR
+/// output. Buffers grow to the high-water mark of the (model, batch)
+/// mix they serve, then are reused — steady-state inference performs
+/// zero heap allocations. Kernels fully overwrite every element they
+/// produce, so a reused arena can never leak stale activations into a
+/// fresh batch (property-tested in `tests/prop_invariants.rs`).
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+    emb: Vec<f32>,
+    z: Vec<f32>,
+    out: Vec<f32>,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current footprint in bytes (the high-water mark so far).
+    pub fn bytes(&self) -> usize {
+        (self.ping.len() + self.pong.len() + self.emb.len() + self.z.len() + self.out.len()) * 4
+    }
+}
+
+fn ensure_len(v: &mut Vec<f32>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
+}
+
+/// Per-phase wall time of forward passes (accumulated across calls by
+/// `run_rmc_timed`; the hot-path bench divides by iterations).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ForwardStats {
+    pub bottom_ns: f64,
+    pub sls_ns: f64,
+    pub interact_ns: f64,
+    pub top_ns: f64,
+}
+
+impl ForwardStats {
+    pub fn total_ns(&self) -> f64 {
+        self.bottom_ns + self.sls_ns + self.interact_ns + self.top_ns
+    }
+}
+
+/// Micro-kernel row tile (batch rows per register block).
+const MR: usize = 4;
+/// Micro-kernel column tile == packed panel width.
+const NR: usize = 16;
+
+/// One FC layer repacked for the optimized engine, chosen at
+/// `NativeModel` build time: weights stored as `NR`-wide column panels
+/// (panel `p` holds rows k=0..K of output columns [p*NR, (p+1)*NR),
+/// row-major within the panel, zero-padded to a full `NR`) so the
+/// micro-kernel's inner loop runs over contiguous memory with no column
+/// masks.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub relu: bool,
+    b: Vec<f32>,
+    w: Vec<f32>,
+}
+
+impl PackedLayer {
+    pub fn pack(layer: &DenseLayer) -> Self {
+        let (kdim, ndim) = (layer.in_dim, layer.out_dim);
+        let panels = ndim.div_ceil(NR);
+        let mut w = vec![0.0f32; kdim * panels * NR];
+        for k in 0..kdim {
+            for n in 0..ndim {
+                let (pi, j) = (n / NR, n % NR);
+                w[(pi * kdim + k) * NR + j] = layer.w[k * ndim + n];
+            }
+        }
+        PackedLayer { in_dim: kdim, out_dim: ndim, relu: layer.relu, b: layer.b.clone(), w }
+    }
+
+    fn panels(&self) -> usize {
+        self.out_dim.div_ceil(NR)
+    }
+
+    /// Packed parameter bytes (fp32), padding included.
+    pub fn packed_bytes(&self) -> usize {
+        (self.w.len() + self.b.len()) * 4
+    }
+}
+
+/// Packed-panel GEMM for a block of `rows` batch rows:
+/// dst (rows, N) = x (rows, K) @ packed(K, N) + b, optional ReLU.
+///
+/// Register tiling: `MR` batch rows are processed against one `NR`-wide
+/// panel at a time, so each weight row is loaded once per MR samples
+/// (4x less weight traffic than the reference kernel) and the MR*NR
+/// accumulators live in vector registers across the whole k loop.
+/// Per-element reduction order is ascending k regardless of `rows` or
+/// tile grouping, so any row partition is bit-identical.
+fn fc_packed_rows(p: &PackedLayer, x: &[f32], dst: &mut [f32], rows: usize) {
+    let kdim = p.in_dim;
+    let ndim = p.out_dim;
+    debug_assert_eq!(x.len(), rows * kdim);
+    debug_assert_eq!(dst.len(), rows * ndim);
+    let panels = p.panels();
+    let mut r = 0;
+    while r < rows {
+        let mr = MR.min(rows - r);
+        for pi in 0..panels {
+            let n0 = pi * NR;
+            let nc = NR.min(ndim - n0);
+            let panel = &p.w[pi * kdim * NR..(pi + 1) * kdim * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            if mr == MR {
+                // Fully-tiled 4x16 micro-kernel.
+                let x0 = &x[r * kdim..(r + 1) * kdim];
+                let x1 = &x[(r + 1) * kdim..(r + 2) * kdim];
+                let x2 = &x[(r + 2) * kdim..(r + 3) * kdim];
+                let x3 = &x[(r + 3) * kdim..(r + 4) * kdim];
+                let mut a0 = [0.0f32; NR];
+                let mut a1 = [0.0f32; NR];
+                let mut a2 = [0.0f32; NR];
+                let mut a3 = [0.0f32; NR];
+                for k in 0..kdim {
+                    let w = &panel[k * NR..k * NR + NR];
+                    let (v0, v1, v2, v3) = (x0[k], x1[k], x2[k], x3[k]);
+                    for j in 0..NR {
+                        a0[j] += v0 * w[j];
+                        a1[j] += v1 * w[j];
+                        a2[j] += v2 * w[j];
+                        a3[j] += v3 * w[j];
+                    }
+                }
+                acc[0] = a0;
+                acc[1] = a1;
+                acc[2] = a2;
+                acc[3] = a3;
+            } else {
+                // Row remainder (rows % MR), one row at a time — same
+                // per-element k order as the tiled path.
+                for (m, a) in acc.iter_mut().enumerate().take(mr) {
+                    let xrow = &x[(r + m) * kdim..(r + m + 1) * kdim];
+                    for (k, &xv) in xrow.iter().enumerate() {
+                        let w = &panel[k * NR..k * NR + NR];
+                        for j in 0..NR {
+                            a[j] += xv * w[j];
+                        }
+                    }
+                }
+            }
+            for m in 0..mr {
+                let drow = &mut dst[(r + m) * ndim + n0..(r + m) * ndim + n0 + nc];
+                let brow = &p.b[n0..n0 + nc];
+                let a = &acc[m];
+                for j in 0..nc {
+                    drow[j] = brow[j] + a[j];
+                }
+            }
+        }
+        if p.relu {
+            for v in dst[r * ndim..(r + mr) * ndim].iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        r += mr;
+    }
+}
+
+/// Run `layers` through the ping/pong buffer pair (input starts in
+/// `ping`); returns true iff the final output landed in `ping`.
+fn mlp_ping_pong(
+    engine: &Engine,
+    layers: &[PackedLayer],
+    ping: &mut [f32],
+    pong: &mut [f32],
+    batch: usize,
+) -> bool {
+    let mut in_ping = true;
+    for layer in layers {
+        let (ni, no) = (batch * layer.in_dim, batch * layer.out_dim);
+        if in_ping {
+            fc_parallel(engine, layer, &ping[..ni], &mut pong[..no], batch);
+        } else {
+            fc_parallel(engine, layer, &pong[..ni], &mut ping[..no], batch);
+        }
+        in_ping = !in_ping;
+    }
+    in_ping
+}
+
+/// Shard one packed FC layer over batch rows. Shard boundaries are a
+/// pure function of (batch, shard count) and rows are data-independent,
+/// so output bits never depend on the thread count.
+fn fc_parallel(engine: &Engine, p: &PackedLayer, src: &[f32], dst: &mut [f32], batch: usize) {
+    debug_assert_eq!(src.len(), batch * p.in_dim);
+    debug_assert_eq!(dst.len(), batch * p.out_dim);
+    let shards = engine.threads().min(batch).max(1);
+    if shards <= 1 {
+        fc_packed_rows(p, src, dst, batch);
+        return;
+    }
+    let dstp = SendPtr(dst.as_mut_ptr());
+    engine.pool().run(shards, |sh| {
+        let (r0, r1) = shard_range(batch, shards, sh);
+        if r0 == r1 {
+            return;
+        }
+        let xs = &src[r0 * p.in_dim..r1 * p.in_dim];
+        // SAFETY: row ranges are disjoint across shards, so each shard
+        // derives a non-overlapping &mut window of dst.
+        let ds = unsafe {
+            std::slice::from_raw_parts_mut(dstp.0.add(r0 * p.out_dim), (r1 - r0) * p.out_dim)
+        };
+        fc_packed_rows(p, xs, ds, r1 - r0);
+    });
+}
+
 fn init_layer(rng: &mut Rng, in_dim: usize, out_dim: usize, relu: bool) -> DenseLayer {
     // He-ish init mirroring python/compile/model.py::init_params (same
     // structure, not bit-identical: numpy's Philox stream is not
@@ -132,6 +495,8 @@ fn init_layer(rng: &mut Rng, in_dim: usize, out_dim: usize, relu: bool) -> Dense
 
 /// A fully-materialized DLRM with deterministically-initialized
 /// parameters, executable on the host CPU with no external runtime.
+/// Holds both the reference row-major weights and the packed panel
+/// layout (picked at build time) the optimized engine consumes.
 pub struct NativeModel {
     cfg: RmcConfig,
     /// Embedding rows actually materialized (pjrt_rows scale — full-scale
@@ -139,7 +504,12 @@ pub struct NativeModel {
     rows: usize,
     bottom: Vec<DenseLayer>,
     top: Vec<DenseLayer>,
+    bottom_packed: Vec<PackedLayer>,
+    top_packed: Vec<PackedLayer>,
     tables: Vec<Vec<f32>>,
+    /// Widest activation (dense in, any MLP width, interaction width) —
+    /// sizes the arena's ping-pong buffers.
+    max_act_width: usize,
 }
 
 impl NativeModel {
@@ -173,7 +543,25 @@ impl NativeModel {
             })
             .collect();
 
-        NativeModel { cfg: cfg.clone(), rows, bottom, top, tables }
+        let bottom_packed = bottom.iter().map(PackedLayer::pack).collect();
+        let top_packed = top.iter().map(PackedLayer::pack).collect();
+        let max_act_width = [cfg.dense_dim, cfg.top_input_dim()]
+            .into_iter()
+            .chain(cfg.bottom_mlp.iter().copied())
+            .chain(cfg.top_mlp.iter().copied())
+            .max()
+            .unwrap_or(1);
+
+        NativeModel {
+            cfg: cfg.clone(),
+            rows,
+            bottom,
+            top,
+            bottom_packed,
+            top_packed,
+            tables,
+            max_act_width,
+        }
     }
 
     /// Build by preset name (`config::all_rmc`).
@@ -194,7 +582,7 @@ impl NativeModel {
         self.rows
     }
 
-    /// Total parameter footprint in bytes (fp32).
+    /// Total parameter footprint in bytes (fp32), reference layout.
     pub fn param_bytes(&self) -> usize {
         let fc: usize = self
             .bottom
@@ -206,10 +594,30 @@ impl NativeModel {
         (fc + emb) * 4
     }
 
-    /// Execute the DLRM forward pass. Input layout matches the PJRT path:
-    /// dense (B, Dd), ids (T, B, L), lwts (T, B, L), all row-major; the
-    /// batch size is inferred from `dense`. Returns the (B,) CTR vector.
-    pub fn run_rmc(&self, dense: &[f32], ids: &[i32], lwts: &[f32]) -> anyhow::Result<Vec<f32>> {
+    /// FLOPs of one forward pass at `batch` (multiply + add per weight).
+    pub fn fc_flops(&self, batch: usize) -> u64 {
+        let weights: u64 = self
+            .bottom
+            .iter()
+            .chain(&self.top)
+            .map(|l| (l.in_dim * l.out_dim) as u64)
+            .sum();
+        2 * weights * batch as u64
+    }
+
+    /// Approximate SLS memory traffic for one forward pass with these
+    /// lookup weights: gathered embedding rows (weight != 0) plus the
+    /// ids/weights input streams plus the pooled output writes.
+    pub fn sls_traffic_bytes(&self, lwts: &[f32]) -> u64 {
+        let gathered = lwts.iter().filter(|&&w| w != 0.0).count() as u64;
+        let row_bytes = (self.cfg.emb_dim * 4) as u64;
+        let io = lwts.len() as u64 * 8; // 4B id + 4B weight per lookup
+        let pooled = (lwts.len() / self.cfg.lookups.max(1)) as u64 * row_bytes;
+        gathered * row_bytes + io + pooled
+    }
+
+    /// Validate input shapes; returns the batch size.
+    fn validate(&self, dense: &[f32], ids: &[i32], lwts: &[f32]) -> anyhow::Result<usize> {
         let d = self.cfg.dense_dim;
         if dense.is_empty() || dense.len() % d != 0 {
             bail!("dense length {} not a positive multiple of dense_dim {d}", dense.len());
@@ -225,12 +633,113 @@ impl NativeModel {
                 t * batch * l
             );
         }
+        Ok(batch)
+    }
+
+    /// Execute the DLRM forward pass with the default engine (serial
+    /// optimized) and a thread-local scratch arena. Input layout matches
+    /// the PJRT path: dense (B, Dd), ids (T, B, L), lwts (T, B, L), all
+    /// row-major; the batch size is inferred from `dense`. Returns the
+    /// (B,) CTR vector.
+    pub fn run_rmc(&self, dense: &[f32], ids: &[i32], lwts: &[f32]) -> anyhow::Result<Vec<f32>> {
+        thread_local! {
+            static SCRATCH: RefCell<ScratchArena> = RefCell::new(ScratchArena::new());
+        }
+        SCRATCH.with(|s| {
+            let mut arena = s.borrow_mut();
+            self.run_rmc_with(serial_engine(), &mut arena, dense, ids, lwts)
+        })
+    }
+
+    /// Forward pass with an explicit engine + arena; returns a fresh Vec.
+    pub fn run_rmc_with(
+        &self,
+        engine: &Engine,
+        arena: &mut ScratchArena,
+        dense: &[f32],
+        ids: &[i32],
+        lwts: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        Ok(self.run_rmc_into(engine, arena, dense, ids, lwts)?.to_vec())
+    }
+
+    /// Allocation-free forward pass: the returned CTR slice borrows the
+    /// arena (valid until the arena's next use).
+    pub fn run_rmc_into<'a>(
+        &self,
+        engine: &Engine,
+        arena: &'a mut ScratchArena,
+        dense: &[f32],
+        ids: &[i32],
+        lwts: &[f32],
+    ) -> anyhow::Result<&'a [f32]> {
+        let batch = self.validate(dense, ids, lwts)?;
+        self.forward(engine, arena, dense, ids, lwts, None)?;
+        Ok(&arena.out[..batch])
+    }
+
+    /// Forward pass that accumulates per-phase wall time into `stats`
+    /// (the hot-path bench's op-level instrumentation).
+    pub fn run_rmc_timed<'a>(
+        &self,
+        engine: &Engine,
+        arena: &'a mut ScratchArena,
+        dense: &[f32],
+        ids: &[i32],
+        lwts: &[f32],
+        stats: &mut ForwardStats,
+    ) -> anyhow::Result<&'a [f32]> {
+        let batch = self.validate(dense, ids, lwts)?;
+        self.forward(engine, arena, dense, ids, lwts, Some(stats))?;
+        Ok(&arena.out[..batch])
+    }
+
+    fn forward(
+        &self,
+        engine: &Engine,
+        arena: &mut ScratchArena,
+        dense: &[f32],
+        ids: &[i32],
+        lwts: &[f32],
+        stats: Option<&mut ForwardStats>,
+    ) -> anyhow::Result<()> {
+        match engine.kind() {
+            EngineKind::Reference => self.forward_reference(arena, dense, ids, lwts, stats),
+            EngineKind::Optimized => self.forward_optimized(engine, arena, dense, ids, lwts, stats),
+        }
+    }
+
+    /// The original scalar path, verbatim: fresh Vec per layer, serial.
+    fn forward_reference(
+        &self,
+        arena: &mut ScratchArena,
+        dense: &[f32],
+        ids: &[i32],
+        lwts: &[f32],
+        mut stats: Option<&mut ForwardStats>,
+    ) -> anyhow::Result<()> {
+        let d = self.cfg.dense_dim;
+        let batch = dense.len() / d;
+        let (t, l) = (self.cfg.num_tables, self.cfg.lookups);
+        let mut t0 = Instant::now();
 
         // Bottom MLP over the dense features.
         let mut x = dense.to_vec();
         for layer in &self.bottom {
-            x = fc_layer(&x, &layer.w, &layer.b, batch, layer.in_dim, layer.out_dim, layer.relu);
+            x = fc_layer_checked(
+                &x,
+                &layer.w,
+                &layer.b,
+                batch,
+                layer.in_dim,
+                layer.out_dim,
+                layer.relu,
+            )?;
         }
+        if let Some(s) = stats.as_mut() {
+            s.bottom_ns += t0.elapsed().as_nanos() as f64;
+        }
+        t0 = Instant::now();
 
         // One SLS gather-sum per embedding table.
         let mut embs = Vec::with_capacity(t);
@@ -246,6 +755,10 @@ impl NativeModel {
                 l,
             )?);
         }
+        if let Some(s) = stats.as_mut() {
+            s.sls_ns += t0.elapsed().as_nanos() as f64;
+        }
+        t0 = Instant::now();
 
         // Feature interaction (paper Fig 3): concat the dense-tower
         // output with the per-table embedding vectors.
@@ -262,14 +775,175 @@ impl NativeModel {
                 off += emb;
             }
         }
+        if let Some(s) = stats.as_mut() {
+            s.interact_ns += t0.elapsed().as_nanos() as f64;
+        }
+        t0 = Instant::now();
 
         // Top MLP + sigmoid CTR head.
         let mut y = z;
         for layer in &self.top {
-            y = fc_layer(&y, &layer.w, &layer.b, batch, layer.in_dim, layer.out_dim, layer.relu);
+            y = fc_layer_checked(
+                &y,
+                &layer.w,
+                &layer.b,
+                batch,
+                layer.in_dim,
+                layer.out_dim,
+                layer.relu,
+            )?;
         }
         debug_assert_eq!(y.len(), batch);
-        Ok(y.into_iter().map(sigmoid).collect())
+        ensure_len(&mut arena.out, batch);
+        for (o, &v) in arena.out[..batch].iter_mut().zip(&y) {
+            *o = sigmoid(v);
+        }
+        if let Some(s) = stats.as_mut() {
+            s.top_ns += t0.elapsed().as_nanos() as f64;
+        }
+        Ok(())
+    }
+
+    /// The production path: packed kernels, arena reuse, intra-op shards.
+    fn forward_optimized(
+        &self,
+        engine: &Engine,
+        arena: &mut ScratchArena,
+        dense: &[f32],
+        ids: &[i32],
+        lwts: &[f32],
+        mut stats: Option<&mut ForwardStats>,
+    ) -> anyhow::Result<()> {
+        let batch = dense.len() / self.cfg.dense_dim;
+        let (t, l, emb) = (self.cfg.num_tables, self.cfg.lookups, self.cfg.emb_dim);
+        let zdim = self.cfg.top_input_dim();
+
+        ensure_len(&mut arena.ping, batch * self.max_act_width);
+        ensure_len(&mut arena.pong, batch * self.max_act_width);
+        ensure_len(&mut arena.emb, t * batch * emb);
+        ensure_len(&mut arena.z, batch * zdim);
+        ensure_len(&mut arena.out, batch);
+
+        let mut t0 = Instant::now();
+
+        // Bottom MLP: ping-pong through the arena.
+        arena.ping[..dense.len()].copy_from_slice(dense);
+        let in_ping =
+            mlp_ping_pong(engine, &self.bottom_packed, &mut arena.ping, &mut arena.pong, batch);
+        if let Some(s) = stats.as_mut() {
+            s.bottom_ns += t0.elapsed().as_nanos() as f64;
+        }
+        t0 = Instant::now();
+
+        // SLS phase. First a serial prescan validates sparse ids so the
+        // sharded kernels can never index out of bounds (weight-0
+        // padding lookups are exempt, matching the reference kernel's
+        // contract); it reads a tiny fraction of what the gathers
+        // stream, and counting it here keeps sls_ns honest.
+        let per_table = batch * l;
+        if per_table > 0 {
+            for (ti, (tids, twts)) in
+                ids.chunks(per_table).zip(lwts.chunks(per_table)).enumerate()
+            {
+                for (&id, &w) in tids.iter().zip(twts) {
+                    if w != 0.0 && (id < 0 || id as usize >= self.rows) {
+                        bail!("sls id {id} out of range for table {ti} ({} rows)", self.rows);
+                    }
+                }
+            }
+        }
+
+        // Gathers sharded over (table x batch) tiles. The flat tile
+        // index q = table * batch + sample maps 1:1 onto both the
+        // (T, B, L) input layout and the (T, B, E) pooled-output
+        // layout, so shard ranges are contiguous in all three buffers.
+        let flat = t * batch;
+        if flat > 0 {
+            let shards = engine.threads().min(flat).max(1);
+            let embp = SendPtr(arena.emb.as_mut_ptr());
+            engine.pool().run(shards, |sh| {
+                let (q0, q1) = shard_range(flat, shards, sh);
+                if q0 == q1 {
+                    return;
+                }
+                // SAFETY: tile ranges are disjoint; tile q exclusively
+                // owns emb[q*emb .. (q+1)*emb].
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(embp.0.add(q0 * emb), (q1 - q0) * emb)
+                };
+                self.sls_tiles(ids, lwts, batch, q0, out);
+            });
+        }
+        if let Some(s) = stats.as_mut() {
+            s.sls_ns += t0.elapsed().as_nanos() as f64;
+        }
+        t0 = Instant::now();
+
+        // Feature interaction: concat bottom output + per-table vectors.
+        let bo = *self.cfg.bottom_mlp.last().expect("bottom MLP must be non-empty");
+        {
+            let bottom_out = if in_ping { &arena.ping } else { &arena.pong };
+            let z = &mut arena.z;
+            for s in 0..batch {
+                let dst = &mut z[s * zdim..(s + 1) * zdim];
+                dst[..bo].copy_from_slice(&bottom_out[s * bo..(s + 1) * bo]);
+                for ti in 0..t {
+                    let q = ti * batch + s;
+                    dst[bo + ti * emb..bo + (ti + 1) * emb]
+                        .copy_from_slice(&arena.emb[q * emb..(q + 1) * emb]);
+                }
+            }
+        }
+        if let Some(s) = stats.as_mut() {
+            s.interact_ns += t0.elapsed().as_nanos() as f64;
+        }
+        t0 = Instant::now();
+
+        // Top MLP (z -> ping, then ping-pong) + sigmoid CTR head.
+        let first = &self.top_packed[0];
+        fc_parallel(
+            engine,
+            first,
+            &arena.z[..batch * first.in_dim],
+            &mut arena.ping[..batch * first.out_dim],
+            batch,
+        );
+        let top_in_ping =
+            mlp_ping_pong(engine, &self.top_packed[1..], &mut arena.ping, &mut arena.pong, batch);
+        let logits = if top_in_ping { &arena.ping[..batch] } else { &arena.pong[..batch] };
+        for (o, &v) in arena.out[..batch].iter_mut().zip(logits) {
+            *o = sigmoid(v);
+        }
+        if let Some(s) = stats.as_mut() {
+            s.top_ns += t0.elapsed().as_nanos() as f64;
+        }
+        Ok(())
+    }
+
+    /// SLS gather-sum for the contiguous tile range starting at flat
+    /// tile q0; `out` covers exactly those tiles. Reduction order is
+    /// ascending lookup index within each tile — identical at any shard
+    /// count.
+    fn sls_tiles(&self, ids: &[i32], lwts: &[f32], batch: usize, q0: usize, out: &mut [f32]) {
+        let emb = self.cfg.emb_dim;
+        let l = self.cfg.lookups;
+        for (qi, acc) in out.chunks_mut(emb).enumerate() {
+            let q = q0 + qi;
+            let table = &self.tables[q / batch];
+            acc.fill(0.0);
+            let base = q * l;
+            for li in 0..l {
+                let w = lwts[base + li];
+                if w == 0.0 {
+                    continue;
+                }
+                let start = ids[base + li] as usize * emb;
+                let row = &table[start..start + emb];
+                for (a, &rv) in acc.iter_mut().zip(row) {
+                    *a += w * rv;
+                }
+            }
+        }
     }
 }
 
@@ -322,12 +996,18 @@ impl NativePool {
         self.builds.load(Ordering::SeqCst)
     }
 
+    /// Completed (built) entries. Uses `try_lock` per slot so a stat
+    /// call never stalls behind an in-flight model construction — a
+    /// slot whose build is still running simply doesn't count yet.
+    /// Best-effort by design: a slot whose lock is momentarily held by
+    /// a concurrent `get` reader is also skipped for that call, so
+    /// treat this as a monitoring gauge, not an exact census.
     pub fn cached_count(&self) -> usize {
         self.slots
             .lock()
             .unwrap()
             .values()
-            .filter(|s| s.lock().unwrap().is_some())
+            .filter(|s| s.try_lock().map(|g| g.is_some()).unwrap_or(false))
             .count()
     }
 }
@@ -396,6 +1076,46 @@ mod tests {
     }
 
     #[test]
+    fn fc_checked_rejects_mis_sized_inputs() {
+        let x = [1.0f32, 2.0];
+        let w = [1.0f32, -1.0, 0.5, 2.0];
+        let b = [0.5f32, -10.0];
+        assert!(fc_layer_checked(&x, &w, &b, 1, 2, 2, false).is_ok());
+        assert!(fc_layer_checked(&x[..1], &w, &b, 1, 2, 2, false).is_err(), "short x");
+        assert!(fc_layer_checked(&x, &w[..3], &b, 1, 2, 2, false).is_err(), "short w");
+        assert!(fc_layer_checked(&x, &w, &b[..1], 1, 2, 2, false).is_err(), "short bias");
+        // The unchecked kernel panics (not silent OOB) on the same abuse.
+        let r = std::panic::catch_unwind(|| fc_layer(&x[..1], &w, &b, 1, 2, 2, false));
+        assert!(r.is_err(), "fc_layer must assert shapes in release builds");
+    }
+
+    #[test]
+    fn packed_kernel_matches_reference_closely() {
+        // Dims chosen to hit every edge: out_dim not a multiple of NR,
+        // batch not a multiple of MR, plus the width-1 CTR shape.
+        let mut rng = Rng::seed_from_u64(42);
+        for (batch, k, n, relu) in
+            [(1usize, 5usize, 3usize, false), (6, 17, 16, true), (7, 8, 33, true), (5, 9, 1, false)]
+        {
+            let mut layer = init_layer(&mut rng, k, n, relu);
+            for b in layer.b.iter_mut() {
+                *b = (rng.gen_f64() - 0.5) as f32;
+            }
+            let x: Vec<f32> = (0..batch * k).map(|_| (rng.gen_f64() - 0.5) as f32).collect();
+            let reference = fc_layer(&x, &layer.w, &layer.b, batch, k, n, relu);
+            let packed = PackedLayer::pack(&layer);
+            let mut out = vec![0.0f32; batch * n];
+            fc_packed_rows(&packed, &x, &mut out, batch);
+            for (i, (a, b)) in reference.iter().zip(&out).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5 * a.abs().max(1.0),
+                    "b{batch} k{k} n{n} elem {i}: reference {a} packed {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn sigmoid_fixture() {
         assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
         let ln3 = 3.0f32.ln();
@@ -450,6 +1170,57 @@ mod tests {
     }
 
     #[test]
+    fn engines_agree_closely() {
+        // Reference and optimized differ only in FP summation order —
+        // outputs must match to tight tolerance on every sample.
+        let cfg = tiny_cfg();
+        let m = NativeModel::new(&cfg, 9);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 6);
+        let reference = Engine::new(ExecOptions { threads: 1, engine: EngineKind::Reference });
+        let mut arena = ScratchArena::new();
+        let a = m.run_rmc_with(&reference, &mut arena, &dense, &ids, &lwts).unwrap();
+        let b = m.run_rmc(&dense, &ids, &lwts).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "engines diverged: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let cfg = tiny_cfg();
+        let m = NativeModel::new(&cfg, 5);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 7);
+        let serial = m.run_rmc(&dense, &ids, &lwts).unwrap();
+        for threads in [2usize, 4, 8] {
+            let engine = Engine::new(ExecOptions { threads, engine: EngineKind::Optimized });
+            let mut arena = ScratchArena::new();
+            let par = m.run_rmc_with(&engine, &mut arena, &dense, &ids, &lwts).unwrap();
+            assert_eq!(serial, par, "threads={threads} must be bit-identical to serial");
+        }
+    }
+
+    #[test]
+    fn arena_reuse_never_leaks_stale_state() {
+        // Run a big batch through an arena, then a small one: the small
+        // result must be bit-identical to a fresh-arena run.
+        let cfg = tiny_cfg();
+        let m = NativeModel::new(&cfg, 2);
+        let engine = Engine::serial();
+        let (dense8, ids8, lwts8) = tiny_inputs(&cfg, 8);
+        let (dense1, ids1, lwts1) = tiny_inputs(&cfg, 1);
+
+        let mut dirty = ScratchArena::new();
+        m.run_rmc_with(&engine, &mut dirty, &dense8, &ids8, &lwts8).unwrap();
+        let reused = m.run_rmc_with(&engine, &mut dirty, &dense1, &ids1, &lwts1).unwrap();
+
+        let mut fresh = ScratchArena::new();
+        let clean = m.run_rmc_with(&engine, &mut fresh, &dense1, &ids1, &lwts1).unwrap();
+        assert_eq!(reused, clean, "stale scratch leaked into a fresh batch");
+        assert!(dirty.bytes() >= fresh.bytes());
+    }
+
+    #[test]
     fn forward_reacts_to_sparse_ids() {
         let cfg = tiny_cfg();
         let m = NativeModel::new(&cfg, 5);
@@ -469,6 +1240,11 @@ mod tests {
         assert!(m.run_rmc(&dense[..3], &ids, &lwts).is_err(), "ragged dense");
         assert!(m.run_rmc(&dense, &ids[..5], &lwts).is_err(), "short ids");
         assert!(m.run_rmc(&dense, &ids, &lwts[..5]).is_err(), "short lwts");
+        // Weighted out-of-range id is rejected by the optimized engine's
+        // prescan, same as the reference kernel.
+        let mut bad_ids = ids.clone();
+        bad_ids[0] = cfg.pjrt_rows as i32 + 7;
+        assert!(m.run_rmc(&dense, &bad_ids, &lwts).is_err(), "oob id");
     }
 
     #[test]
@@ -485,6 +1261,20 @@ mod tests {
             m.param_bytes(),
             4 * (cfg.fc_params() as usize + cfg.num_tables * cfg.pjrt_rows * cfg.emb_dim)
         );
+        // Packed layout mirrors the reference layers 1:1.
+        assert_eq!(m.bottom_packed.len(), m.bottom.len());
+        assert_eq!(m.top_packed.len(), m.top.len());
+        assert_eq!(m.max_act_width, cfg.top_input_dim().max(cfg.dense_dim));
+        assert!(m.fc_flops(2) == 2 * m.fc_flops(1) && m.fc_flops(1) > 0);
+    }
+
+    #[test]
+    fn sls_traffic_counts_only_live_lookups() {
+        let cfg = tiny_cfg();
+        let m = NativeModel::new(&cfg, 0);
+        let live = m.sls_traffic_bytes(&[1.0, 1.0, 0.5, 1.0, 1.0, 1.0]);
+        let padded = m.sls_traffic_bytes(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(live > padded, "padding lookups must not count as gathers");
     }
 
     #[test]

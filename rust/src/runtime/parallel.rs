@@ -1,0 +1,341 @@
+//! Crate-internal worker thread pool for intra-operator data
+//! parallelism — a std-only stand-in for rayon (unavailable in the
+//! offline registry). The native execution engine uses it to shard FC
+//! over batch rows and SLS over (table x batch) tiles.
+//!
+//! Design: a fixed set of persistent workers block on a condvar; each
+//! `run(shards, f)` call publishes one broadcast job (a type-erased
+//! pointer to the caller's closure), every participant — the caller
+//! included — claims shard indices from a shared atomic counter, and the
+//! caller blocks until all shards complete. Because the caller always
+//! participates, a job makes progress even with zero workers (the serial
+//! engine is a pool of size 0), and because shard -> data ranges are a
+//! pure function of (shard index, shard count), results are bit-identical
+//! no matter which thread executes which shard.
+//!
+//! Determinism contract (see DESIGN.md §2): shards must write disjoint
+//! output ranges and must not communicate; reduction order *within* a
+//! shard is fixed by the kernel. Under that contract, serial and
+//! parallel execution produce bit-identical results.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One broadcast job: `task` is a type-erased thin pointer to the
+/// caller's `&dyn Fn(usize)` (a fat reference living on the caller's
+/// stack for the whole job — `ThreadPool::run` blocks until every shard
+/// has finished before returning).
+struct Job {
+    task: *const (),
+    shards: usize,
+    /// Next shard index to claim.
+    next: AtomicUsize,
+    /// Completed-shard count; the caller waits on it reaching `shards`.
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    /// First panic payload from any shard, re-raised in the caller so
+    /// the original message/location is preserved.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// SAFETY: `task` is only dereferenced while the posting caller is blocked
+// inside `run` (guarded by the shard-claim counter: once every shard is
+// claimed, `next >= shards` and the pointer is never read again).
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and execute shards until none remain.
+    fn run_shards(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.shards {
+                break;
+            }
+            // SAFETY: `i < shards` implies not every shard has completed,
+            // so the caller is still parked in `run` and the pointed-to
+            // closure reference is alive.
+            let f: &&(dyn Fn(usize) + Sync) =
+                unsafe { &*(self.task as *const &(dyn Fn(usize) + Sync)) };
+            if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+            {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let mut d = self.done.lock().unwrap();
+            *d += 1;
+            if *d == self.shards {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn wait(&self) {
+        let mut d = self.done.lock().unwrap();
+        while *d < self.shards {
+            d = self.done_cv.wait(d).unwrap();
+        }
+    }
+}
+
+struct PoolState {
+    /// Active jobs with (possibly) unclaimed shards. Multiple entries
+    /// exist when concurrent callers share the pool (e.g. several
+    /// coordinator workers over one engine); workers drain them in
+    /// publish order, so every caller's job gets helper threads rather
+    /// than only the most recent one.
+    jobs: Vec<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                // Prune exhausted jobs, then grab the oldest one that
+                // still has unclaimed shards.
+                st.jobs.retain(|j| j.next.load(Ordering::Relaxed) < j.shards);
+                if let Some(j) = st.jobs.first() {
+                    break j.clone();
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        job.run_shards();
+    }
+}
+
+/// Persistent data-parallel worker pool. `ThreadPool::new(0)` is the
+/// serial pool: `run` executes every shard on the calling thread.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `workers` helper threads (the caller of `run` is always an
+    /// additional participant, so total parallelism is `workers + 1`).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { jobs: Vec::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("exec-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        ThreadPool { shared, workers: handles }
+    }
+
+    /// Helper threads in the pool (not counting the caller).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute `f(0..shards)` across the pool, blocking until every shard
+    /// has completed. Shards must touch disjoint data. Concurrent `run`
+    /// calls from different threads are safe: jobs queue in publish order
+    /// and idle workers drain the oldest first, while each caller always
+    /// participates in its own job — so every job completes (and gets
+    /// helper threads as they free up) even under concurrent callers.
+    pub fn run<F: Fn(usize) + Sync>(&self, shards: usize, f: F) {
+        if shards == 0 {
+            return;
+        }
+        if self.workers.is_empty() || shards == 1 {
+            for i in 0..shards {
+                f(i);
+            }
+            return;
+        }
+        let task_ref: &(dyn Fn(usize) + Sync) = &f;
+        let job = Arc::new(Job {
+            task: (&task_ref as *const &(dyn Fn(usize) + Sync)) as *const (),
+            shards,
+            next: AtomicUsize::new(0),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.push(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        job.run_shards();
+        job.wait();
+        {
+            // Remove the finished job so the type-erased pointer does
+            // not linger in shared state (workers may have pruned it
+            // already).
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Deterministic even partition of `0..n` into `shards` contiguous
+/// ranges: shard `i` gets `[start, end)`; the first `n % shards` shards
+/// get one extra element. Pure in (n, shards, i) — the scheduling of
+/// shards onto threads can never move a data element between shards.
+pub fn shard_range(n: usize, shards: usize, i: usize) -> (usize, usize) {
+    debug_assert!(i < shards);
+    let base = n / shards;
+    let rem = n % shards;
+    let start = i * base + i.min(rem);
+    let len = base + usize::from(i < rem);
+    (start, start + len)
+}
+
+/// A raw mutable pointer that may cross thread boundaries. Used to hand
+/// each shard its disjoint sub-slice of a shared output buffer; every
+/// use site is responsible for disjointness (see the SAFETY comments at
+/// the `from_raw_parts_mut` calls in `native.rs`).
+#[derive(Clone, Copy)]
+pub struct SendPtr(pub *mut f32);
+
+// SAFETY: SendPtr is a capability to *derive* disjoint &mut sub-slices in
+// shard closures; aliasing discipline is enforced at each use site.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        for n in [0usize, 1, 2, 3, 7, 8, 64, 127] {
+            for shards in [1usize, 2, 3, 4, 8] {
+                let mut covered = Vec::new();
+                let mut prev_end = 0;
+                for i in 0..shards {
+                    let (s, e) = shard_range(n, shards, i);
+                    assert_eq!(s, prev_end, "gap/overlap at shard {i} (n={n})");
+                    assert!(e >= s);
+                    covered.extend(s..e);
+                    prev_end = e;
+                }
+                assert_eq!(prev_end, n, "partition must cover 0..{n}");
+                assert_eq!(covered, (0..n).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_on_caller() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let hits = AtomicUsize::new(0);
+        pool.run(5, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn every_shard_runs_exactly_once() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let shards = 1 + round % 13;
+            let flags: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(shards, |i| {
+                flags[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, f) in flags.iter().enumerate() {
+                assert_eq!(f.load(Ordering::SeqCst), 1, "shard {i} ran wrong count");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_via_sendptr() {
+        let pool = ThreadPool::new(2);
+        let n = 1000usize;
+        let shards = 4;
+        let mut out = vec![0.0f32; n];
+        let ptr = SendPtr(out.as_mut_ptr());
+        pool.run(shards, |sh| {
+            let (s, e) = shard_range(n, shards, sh);
+            // SAFETY: shard ranges are disjoint by construction.
+            let slice = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(s), e - s) };
+            for (k, v) in slice.iter_mut().enumerate() {
+                *v = (s + k) as f32;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_both_complete() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = pool.clone();
+                std::thread::spawn(move || {
+                    let count = AtomicUsize::new(0);
+                    for _ in 0..20 {
+                        p.run(7, |_| {
+                            count.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                    assert_eq!(count.load(Ordering::SeqCst), 140);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shard_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, |i| {
+                assert!(i != 2, "boom");
+            });
+        }));
+        assert!(r.is_err(), "panic in a shard must propagate");
+        // The pool survives a panicked job.
+        let ok = AtomicUsize::new(0);
+        pool.run(3, |_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
+    }
+}

@@ -4,6 +4,8 @@
 
 use std::time::Instant;
 
+use super::json::Json;
+
 /// Result of one timed benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
@@ -26,6 +28,18 @@ impl BenchStats {
             self.max_ns / 1e3,
             self.iters
         )
+    }
+
+    /// Machine-readable form for the committed BENCH_*.json trackers.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("iters".into(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".into(), Json::Num(self.mean_ns.round()));
+        m.insert("median_ns".into(), Json::Num(self.median_ns.round()));
+        m.insert("min_ns".into(), Json::Num(self.min_ns.round()));
+        m.insert("max_ns".into(), Json::Num(self.max_ns.round()));
+        Json::Obj(m)
     }
 }
 
@@ -74,5 +88,16 @@ mod tests {
     fn report_contains_name() {
         let s = bench("myname", 0, 2, || {});
         assert!(s.report().contains("myname"));
+    }
+
+    #[test]
+    fn json_form_carries_fields() {
+        let s = bench("jname", 0, 3, || {
+            std::hint::black_box(2 + 2);
+        });
+        let j = s.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("jname"));
+        assert_eq!(j.get("iters").unwrap().as_usize(), Some(3));
+        assert!(j.get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

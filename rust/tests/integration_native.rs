@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig, PJRT_BATCHES};
 use recsys::coordinator::{Coordinator, NativeBackend};
-use recsys::runtime::{NativeModel, NativePool};
+use recsys::runtime::{EngineKind, ExecOptions, NativeModel, NativePool};
 use recsys::workload::{PoissonArrivals, Query};
 
 fn deployment(workers: usize, routing: &str, sla_ms: f64) -> DeploymentConfig {
@@ -98,6 +98,44 @@ fn native_serving_never_fails_a_batch() {
     // (infinite-latency markers would show up as violations at 100% —
     // latency itself is wall-clock and may differ).
     assert!(a.p99_ms.is_finite() && b.p99_ms.is_finite());
+}
+
+#[test]
+fn native_serving_with_intra_op_parallelism() {
+    // Inter-query (2 coordinator workers) and intra-op (2 engine
+    // threads) parallelism compose; every query completes and the run
+    // stays SLA-healthy. Numeric equivalence of parallel execution is
+    // proven bitwise in prop_invariants; this exercises the full stack.
+    let pool = Arc::new(NativePool::new(0));
+    pool.preload("rmc1-small").unwrap();
+    let backend = Arc::new(NativeBackend::with_options(
+        pool,
+        ExecOptions { threads: 2, engine: EngineKind::Optimized },
+    ));
+    let cfg = deployment(2, "least-loaded", 100.0);
+    let mut c = Coordinator::new(&cfg, backend, PJRT_BATCHES.to_vec()).unwrap();
+    let report = c.run_open_loop(queries(80, "rmc1-small", 4, 400.0, 9), 100.0);
+    assert_eq!(report.queries, 80, "every query must complete");
+    assert!(report.p99_ms.is_finite(), "no batch may fail under the parallel engine");
+    c.shutdown();
+}
+
+#[test]
+fn native_serving_reference_engine_still_serves() {
+    // The baseline kernels stay callable behind the engine flag (the
+    // speedup in BENCH_runtime_hotpath.json is measured, not asserted).
+    let pool = Arc::new(NativePool::new(0));
+    pool.preload("rmc1-small").unwrap();
+    let backend = Arc::new(NativeBackend::with_options(
+        pool,
+        ExecOptions { threads: 1, engine: EngineKind::Reference },
+    ));
+    let cfg = deployment(1, "round-robin", 200.0);
+    let mut c = Coordinator::new(&cfg, backend, PJRT_BATCHES.to_vec()).unwrap();
+    let report = c.run_open_loop(queries(30, "rmc1-small", 2, 300.0, 4), 200.0);
+    assert_eq!(report.queries, 30);
+    assert!(report.p99_ms.is_finite());
+    c.shutdown();
 }
 
 #[test]

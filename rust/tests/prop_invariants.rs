@@ -6,9 +6,13 @@
 use std::collections::HashSet;
 use std::time::{Duration, Instant};
 
-use recsys::config::{CacheInclusion, ServerGen, ServerSpec};
+use recsys::config::{CacheInclusion, RmcConfig, ServerGen, ServerSpec, PJRT_BATCHES};
 use recsys::coordinator::{DynamicBatcher, RoutingPolicy, WorkerInfo};
 use recsys::metrics::LatencyHistogram;
+use recsys::runtime::{
+    golden_dense, golden_ids, golden_lwts, Engine, EngineKind, ExecOptions, NativeModel,
+    ScratchArena,
+};
 use recsys::simulator::{Cache, SharedMemorySystem};
 use recsys::util::prop::{check, f64_in, pick, usize_in};
 use recsys::util::{Json, Rng};
@@ -213,6 +217,128 @@ fn prop_arrivals_sorted_positive() {
             prev = t;
         }
     });
+}
+
+// -------------------------------------------------------- exec engine --
+fn rmc_inputs(cfg: &RmcConfig, batch: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    (
+        golden_dense(batch, cfg.dense_dim),
+        golden_ids(cfg.num_tables, batch, cfg.lookups, cfg.pjrt_rows),
+        golden_lwts(cfg.num_tables, batch, cfg.lookups),
+    )
+}
+
+#[test]
+fn prop_parallel_serial_bit_identical_all_presets() {
+    // The engine determinism contract (DESIGN.md §2): serial and 2/4/8-
+    // thread optimized runs must agree bitwise on every model preset —
+    // shard boundaries partition output elements, they never split a
+    // reduction.
+    let serial = Engine::serial();
+    let engines: Vec<Engine> = [2usize, 4, 8]
+        .into_iter()
+        .map(|threads| Engine::new(ExecOptions { threads, engine: EngineKind::Optimized }))
+        .collect();
+    for cfg in recsys::config::all_rmc() {
+        let m = NativeModel::new(&cfg, 13);
+        let (dense, ids, lwts) = rmc_inputs(&cfg, 3);
+        let mut arena = ScratchArena::new();
+        let want = m.run_rmc_with(&serial, &mut arena, &dense, &ids, &lwts).unwrap();
+        for e in &engines {
+            let got = m.run_rmc_with(e, &mut arena, &dense, &ids, &lwts).unwrap();
+            assert_eq!(want, got, "{}: t={} diverged from serial", cfg.name, e.threads());
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_serial_bit_identical_batch_buckets() {
+    // Same contract across every AOT batch bucket (the sizes the dynamic
+    // batcher actually emits), through reused arenas on both sides.
+    let cfg = recsys::config::rmc1_small();
+    let m = NativeModel::new(&cfg, 7);
+    let serial = Engine::serial();
+    let par = Engine::new(ExecOptions { threads: 4, engine: EngineKind::Optimized });
+    let mut a1 = ScratchArena::new();
+    let mut a2 = ScratchArena::new();
+    for &batch in PJRT_BATCHES.iter() {
+        let (dense, ids, lwts) = rmc_inputs(&cfg, batch);
+        let want = m.run_rmc_with(&serial, &mut a1, &dense, &ids, &lwts).unwrap();
+        let got = m.run_rmc_with(&par, &mut a2, &dense, &ids, &lwts).unwrap();
+        assert_eq!(want, got, "bucket {batch} diverged");
+    }
+}
+
+#[test]
+fn prop_parallel_serial_bit_identical_random_batches() {
+    // Randomized batches (including non-bucket, non-multiple-of-tile
+    // sizes) keep the bitwise guarantee.
+    let cfg = recsys::config::rmc1_small();
+    let m = NativeModel::new(&cfg, 3);
+    let serial = Engine::serial();
+    let par2 = Engine::new(ExecOptions { threads: 2, engine: EngineKind::Optimized });
+    let par8 = Engine::new(ExecOptions { threads: 8, engine: EngineKind::Optimized });
+    let mut arena = ScratchArena::new();
+    check("engine-bit-equivalence", 10, |rng, _| {
+        let batch = usize_in(rng, 1, 17);
+        let (dense, ids, lwts) = rmc_inputs(&cfg, batch);
+        let want = m.run_rmc_with(&serial, &mut arena, &dense, &ids, &lwts).unwrap();
+        for e in [&par2, &par8] {
+            let got = m.run_rmc_with(e, &mut arena, &dense, &ids, &lwts).unwrap();
+            assert_eq!(want, got, "b{batch} t={} diverged", e.threads());
+        }
+    });
+}
+
+#[test]
+fn prop_padding_invariance_survives_arena_reuse() {
+    // Pollute an arena with a big batch, then assert (a) b1 equals slot 0
+    // of a weight-0-padded b8 run and (b) the reused-arena b1 equals a
+    // fresh-arena b1 — all bitwise, under 4-thread parallel shards.
+    // Stale scratch must never leak into a fresh batch.
+    let cfg = recsys::config::rmc1_small();
+    let m = NativeModel::new(&cfg, 21);
+    let par = Engine::new(ExecOptions { threads: 4, engine: EngineKind::Optimized });
+    let mut arena = ScratchArena::new();
+    let (dense32, ids32, lwts32) = rmc_inputs(&cfg, 32);
+    m.run_rmc_with(&par, &mut arena, &dense32, &ids32, &lwts32).unwrap();
+
+    let (dense1, ids1, lwts1) = rmc_inputs(&cfg, 1);
+    let out1 = m.run_rmc_with(&par, &mut arena, &dense1, &ids1, &lwts1).unwrap();
+
+    let (t, l, d) = (cfg.num_tables, cfg.lookups, cfg.dense_dim);
+    let b = 8usize;
+    let mut dense8 = vec![0.0f32; b * d];
+    dense8[..d].copy_from_slice(&dense1);
+    let mut ids8 = vec![0i32; t * b * l];
+    let mut lwts8 = vec![0.0f32; t * b * l];
+    for table in 0..t {
+        for j in 0..l {
+            ids8[(table * b) * l + j] = ids1[table * l + j];
+            lwts8[(table * b) * l + j] = 1.0;
+        }
+    }
+    let out8 = m.run_rmc_with(&par, &mut arena, &dense8, &ids8, &lwts8).unwrap();
+    assert_eq!(out1[0], out8[0], "padding slots leaked into slot 0");
+
+    let fresh = m.run_rmc_with(&par, &mut ScratchArena::new(), &dense1, &ids1, &lwts1).unwrap();
+    assert_eq!(out1, fresh, "arena reuse changed numerics");
+}
+
+#[test]
+fn prop_reference_and_optimized_agree() {
+    // The two engines differ only in FP summation order; CTRs must match
+    // to tight tolerance sample-by-sample.
+    let cfg = recsys::config::rmc1_small();
+    let m = NativeModel::new(&cfg, 9);
+    let reference = Engine::new(ExecOptions { threads: 1, engine: EngineKind::Reference });
+    let mut arena = ScratchArena::new();
+    let (dense, ids, lwts) = rmc_inputs(&cfg, 8);
+    let a = m.run_rmc_with(&reference, &mut arena, &dense, &ids, &lwts).unwrap();
+    let b = m.run_rmc(&dense, &ids, &lwts).unwrap();
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!((x - y).abs() < 1e-4, "sample {i}: reference {x} vs optimized {y}");
+    }
 }
 
 // ------------------------------------------------------------- id gen --
