@@ -1,0 +1,219 @@
+//! Measured co-location experiment (paper §VI, the serving-side
+//! companion to the Fig-11 `simulator::ColocationSim` predictions):
+//! multi-tenant open-loop serving through the real coordinator + native
+//! engine, sweeping tenant count × workers × intra-op threads, with the
+//! same tenant set served two ways —
+//!
+//!   * **isolated**  (`--routing dedicated`): workers partitioned per
+//!     tenant by traffic share; a tenant can only use its own slice.
+//!   * **co-located** (`--routing least-loaded`): every worker serves
+//!     every tenant; batches from all models contend on one shared
+//!     engine, thread pool, and scratch arenas.
+//!
+//! Emits machine-readable `BENCH_colocation.json` (see EXPERIMENTS.md
+//! §Co-location sweep for the schema and runbook), so the measured
+//! curves can sit next to the simulator's Fig-11 predictions.
+//!
+//! Flags:  --smoke        tiny run counts (CI emitter check); defaults
+//!                        to a separate *.smoke.json so it never
+//!                        clobbers the committed tracker
+//!         --out <path>   JSON output path (default: repo root)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig, PJRT_BATCHES};
+use recsys::coordinator::{Coordinator, NativeBackend, ServeReport};
+use recsys::runtime::{EngineKind, ExecOptions, NativePool};
+use recsys::util::json::{num, obj};
+use recsys::util::Json;
+use recsys::workload::TrafficMix;
+
+/// Tenant sets swept: the Fig-1 RMC shares, truncated and renormalized.
+const MIXES: [(usize, &str); 3] = [
+    (1, "rmc1:1.0"),
+    (2, "rmc1:0.6,rmc2:0.4"),
+    (3, "rmc1:0.46,rmc2:0.31,rmc3:0.23"),
+];
+
+/// Offered load shared by every run in the sweep.
+struct Load {
+    sla_ms: f64,
+    queries: usize,
+    qps: f64,
+}
+
+fn run_once(
+    pool: &Arc<NativePool>,
+    mix: &TrafficMix,
+    workers: usize,
+    threads: usize,
+    routing: &str,
+    load: &Load,
+) -> anyhow::Result<ServeReport> {
+    let cfg = DeploymentConfig {
+        sla_ms: load.sla_ms,
+        batch_timeout_us: 300,
+        max_batch: 128,
+        routing: routing.into(),
+        pools: vec![ServerPoolConfig {
+            gen: ServerGen::Broadwell,
+            machines: workers,
+            colocation: 1,
+            models: vec![],
+        }],
+    };
+    let backend = Arc::new(NativeBackend::with_options(
+        pool.clone(),
+        ExecOptions { threads, engine: EngineKind::Optimized },
+    ));
+    let mut c = Coordinator::new_with_mix(&cfg, backend, PJRT_BATCHES.to_vec(), mix)?;
+    let queries = mix.generate(load.queries, load.qps, 99);
+    let report = c.run_open_loop(queries, load.sla_ms);
+    c.shutdown();
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = match args.iter().position(|a| a == "--out") {
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => v.clone(),
+            _ => anyhow::bail!("--out requires a path argument"),
+        },
+        // Smoke runs must never clobber the committed tracker with
+        // throwaway short-run numbers.
+        None if smoke => {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_colocation.smoke.json").to_string()
+        }
+        None => concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_colocation.json").to_string(),
+    };
+
+    // Full-mode load is chosen to stress the *partitioned* pool: at
+    // 3000 qps the heaviest tenant's isolated share-weighted slice runs
+    // near saturation while the fully-shared pool stays comfortable —
+    // the regime where co-location wins latency-bounded throughput
+    // (paper §VI). Smoke mode only proves the emitter end-to-end.
+    let load = if smoke {
+        Load { sla_ms: 25.0, queries: 80, qps: 400.0 }
+    } else {
+        Load { sla_ms: 25.0, queries: 2400, qps: 3000.0 }
+    };
+    let workers_sweep: &[usize] = if smoke { &[2] } else { &[2, 4] };
+    let threads_sweep: &[usize] = if smoke { &[1] } else { &[1, 2] };
+    let mixes: &[(usize, &str)] = if smoke { &MIXES[..2] } else { &MIXES };
+
+    // One shared pool across every run: models build once
+    // (deterministic params), runs differ only in scheduling.
+    let pool = Arc::new(NativePool::new(0));
+    for (_, spec) in mixes {
+        for model in TrafficMix::parse(spec)?.models() {
+            pool.preload(&model)?;
+        }
+    }
+
+    println!(
+        "colocation sweep: {} tenant sets x workers {:?} x threads {:?} x {{dedicated, shared}} \
+         ({} queries @ {} qps, SLA {} ms)",
+        mixes.len(),
+        workers_sweep,
+        threads_sweep,
+        load.queries,
+        load.qps,
+        load.sla_ms
+    );
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut summary: Vec<Json> = Vec::new();
+    for (tenants, spec) in mixes {
+        let mix = TrafficMix::parse(spec)?;
+        for &workers in workers_sweep {
+            for &threads in threads_sweep {
+                // Isolated (dedicated partition) vs co-located (shared).
+                let mut by_mode: BTreeMap<&str, ServeReport> = BTreeMap::new();
+                for routing in ["dedicated", "least-loaded"] {
+                    let mode = if routing == "dedicated" { "isolated" } else { "colocated" };
+                    let r = run_once(&pool, &mix, workers, threads, routing, &load)?;
+                    println!(
+                        "t{tenants} w{workers} thr{threads} {mode:<9} -> {:>7.0} items/s \
+                         p99 {:>7.3} ms viol {:>5.1}%",
+                        r.bounded_throughput,
+                        r.p99_ms,
+                        r.violation_rate * 100.0
+                    );
+                    results.push(obj(vec![
+                        ("tenants", num(*tenants as f64)),
+                        ("mix", Json::Str((*spec).into())),
+                        ("workers", num(workers as f64)),
+                        ("threads", num(threads as f64)),
+                        ("mode", Json::Str(mode.into())),
+                        ("routing", Json::Str(routing.into())),
+                        ("sla_ms", num(load.sla_ms)),
+                        ("qps_target", num(load.qps)),
+                        ("report", r.to_json()),
+                    ]));
+                    by_mode.insert(mode, r);
+                }
+                if let (Some(iso), Some(co)) =
+                    (by_mode.get("isolated"), by_mode.get("colocated"))
+                {
+                    // An incomplete run (worker death) covers only
+                    // completed work, and a fully-violating isolated run
+                    // has a zero denominator — either way the ratio
+                    // would be fabricated, so it is emitted as null.
+                    let incomplete = iso.incomplete || co.incomplete;
+                    let gain = if incomplete || iso.bounded_throughput <= 0.0 {
+                        Json::Null
+                    } else {
+                        num(co.bounded_throughput / iso.bounded_throughput)
+                    };
+                    if incomplete {
+                        eprintln!(
+                            "WARNING: t{tenants} w{workers} thr{threads}: incomplete run; \
+                             colocation_gain omitted"
+                        );
+                    }
+                    summary.push(obj(vec![
+                        ("tenants", num(*tenants as f64)),
+                        ("workers", num(workers as f64)),
+                        ("threads", num(threads as f64)),
+                        ("incomplete", Json::Bool(incomplete)),
+                        ("isolated_items_per_s", num(iso.bounded_throughput)),
+                        ("colocated_items_per_s", num(co.bounded_throughput)),
+                        ("colocation_gain", gain),
+                        ("isolated_p99_ms", num(iso.p99_ms)),
+                        ("colocated_p99_ms", num(co.p99_ms)),
+                    ]));
+                }
+            }
+        }
+    }
+
+    let doc = obj(vec![
+        ("schema", Json::Str("bench_colocation/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            obj(vec![
+                ("sla_ms", num(load.sla_ms)),
+                ("queries", num(load.queries as f64)),
+                ("qps", num(load.qps)),
+                ("batch_timeout_us", num(300.0)),
+                ("max_batch", num(128.0)),
+            ]),
+        ),
+        (
+            "host",
+            obj(vec![(
+                "available_cores",
+                num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+            )]),
+        ),
+        ("results", Json::Arr(results)),
+        ("summary", Json::Arr(summary)),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty() + "\n")?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

@@ -13,7 +13,6 @@
 //!                        never clobbers the committed tracker
 //!         --out <path>   JSON output path (default: repo root)
 
-use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use recsys::coordinator::{DynamicBatcher, RoutingPolicy, WorkerInfo};
@@ -22,20 +21,9 @@ use recsys::runtime::{
     NativePool, ScratchArena,
 };
 use recsys::util::bench::{bench, header, BenchStats};
+use recsys::util::json::{num, obj};
 use recsys::util::Json;
 use recsys::workload::Query;
-
-fn num(x: f64) -> Json {
-    Json::Num(x)
-}
-
-fn obj(fields: Vec<(&str, Json)>) -> Json {
-    let mut m = BTreeMap::new();
-    for (k, v) in fields {
-        m.insert(k.to_string(), v);
-    }
-    Json::Obj(m)
-}
 
 /// One engine configuration swept by the forward-pass section.
 struct EngineCfg {

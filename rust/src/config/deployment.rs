@@ -40,18 +40,14 @@ pub struct DeploymentConfig {
     pub batch_timeout_us: u64,
     /// Maximum batch bucket (must be one of the AOT'd batch sizes).
     pub max_batch: usize,
-    /// Routing policy: "round-robin" | "least-loaded" | "heterogeneity".
+    /// Routing policy: "round-robin" | "least-loaded" | "heterogeneity"
+    /// | "dedicated" (per-tenant worker partitioning; see router.rs).
     pub routing: String,
     pub pools: Vec<ServerPoolConfig>,
 }
 
 fn parse_gen(s: &str) -> crate::Result<ServerGen> {
-    match s {
-        "Haswell" | "haswell" => Ok(ServerGen::Haswell),
-        "Broadwell" | "broadwell" => Ok(ServerGen::Broadwell),
-        "Skylake" | "skylake" => Ok(ServerGen::Skylake),
-        other => anyhow::bail!("unknown server gen '{other}'"),
-    }
+    ServerGen::parse(s).ok_or_else(|| anyhow::anyhow!("unknown server gen '{s}'"))
 }
 
 impl DeploymentConfig {

@@ -66,6 +66,19 @@ impl ServerGen {
             ServerGen::Skylake => "Skylake",
         }
     }
+
+    /// Parse a generation name (case-insensitive). Returns `None` on an
+    /// unknown value — callers must surface the error rather than fall
+    /// back to a default, or a typo like `skylake2` silently benchmarks
+    /// the wrong machine.
+    pub fn parse(s: &str) -> Option<ServerGen> {
+        match s.to_ascii_lowercase().as_str() {
+            "haswell" => Some(ServerGen::Haswell),
+            "broadwell" => Some(ServerGen::Broadwell),
+            "skylake" => Some(ServerGen::Skylake),
+            _ => None,
+        }
+    }
 }
 
 /// One server model — Table II columns plus documented constants.

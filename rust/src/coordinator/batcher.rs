@@ -186,6 +186,93 @@ impl DynamicBatcher {
     }
 }
 
+/// Per-tenant batching parameters (a tenant with a tight SLA wants a
+/// short flush timeout; a throughput tenant wants a long one).
+#[derive(Debug, Clone)]
+pub struct TenantBatchCfg {
+    pub model: String,
+    pub max_batch: usize,
+    pub timeout: Duration,
+}
+
+/// Multi-tenant batching front-end: one `DynamicBatcher` instance per
+/// configured tenant (so batching knobs are per-model) plus a fallback
+/// instance for models outside the tenant set, behind one unified flush
+/// scheduler — `next_deadline` is the minimum over every tenant, so the
+/// coordinator's wait slice always wakes for the most urgent flush
+/// regardless of which tenant owns it.
+pub struct TenantBatchers {
+    /// (model, batcher) per configured tenant. Each inner batcher only
+    /// ever holds queries for its own model.
+    tenants: Vec<(String, DynamicBatcher)>,
+    fallback: DynamicBatcher,
+}
+
+impl TenantBatchers {
+    /// Uniform configuration (the single-tenant path): everything goes
+    /// through the fallback batcher, exactly as before.
+    pub fn uniform(buckets: Vec<usize>, max_batch: usize, timeout: Duration) -> Self {
+        TenantBatchers {
+            tenants: Vec::new(),
+            fallback: DynamicBatcher::new(buckets, max_batch, timeout),
+        }
+    }
+
+    /// Add a dedicated batcher for `cfg.model`. Panics (like
+    /// `DynamicBatcher::new`) on an unusable max_batch/bucket combo.
+    pub fn add_tenant(&mut self, buckets: Vec<usize>, cfg: &TenantBatchCfg) {
+        assert!(
+            !self.tenants.iter().any(|(m, _)| *m == cfg.model),
+            "duplicate tenant batcher for {}",
+            cfg.model
+        );
+        self.tenants.push((
+            cfg.model.clone(),
+            DynamicBatcher::new(buckets, cfg.max_batch, cfg.timeout),
+        ));
+    }
+
+    fn all_mut(&mut self) -> impl Iterator<Item = &mut DynamicBatcher> {
+        self.tenants
+            .iter_mut()
+            .map(|(_, b)| b)
+            .chain(std::iter::once(&mut self.fallback))
+    }
+
+    pub fn push(&mut self, q: Query, now: Instant) -> Option<Batch> {
+        // Resolve the tenant index before consuming `q` — no per-query
+        // allocation on the submit path.
+        match self.tenants.iter().position(|(m, _)| *m == q.model) {
+            Some(i) => self.tenants[i].1.push(q, now),
+            None => self.fallback.push(q, now),
+        }
+    }
+
+    /// Flush the first over-age queue across all tenants.
+    pub fn poll_timeout(&mut self, now: Instant) -> Option<Batch> {
+        self.all_mut().find_map(|b| b.poll_timeout(now))
+    }
+
+    pub fn drain(&mut self, now: Instant) -> Vec<Batch> {
+        self.all_mut().flat_map(|b| b.drain(now)).collect()
+    }
+
+    /// Unified flush schedule: the soonest deadline over every tenant.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.tenants
+            .iter()
+            .map(|(_, b)| b)
+            .chain(std::iter::once(&self.fallback))
+            .filter_map(|b| b.next_deadline(now))
+            .min()
+    }
+
+    pub fn pending_items(&self) -> usize {
+        let tenant_items: usize = self.tenants.iter().map(|(_, b)| b.pending_items()).sum();
+        tenant_items + self.fallback.pending_items()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,5 +415,104 @@ mod tests {
         b.push(q(1, "m", 1), t0);
         let d = b.next_deadline(t0 + Duration::from_millis(4)).unwrap();
         assert!(d <= Duration::from_millis(6));
+    }
+
+    // ------------------------------------------------- multi-tenant ---
+    fn two_tenant() -> TenantBatchers {
+        let buckets = vec![1usize, 8, 32, 128];
+        let mut tb = TenantBatchers::uniform(buckets.clone(), 128, Duration::from_millis(50));
+        tb.add_tenant(
+            buckets.clone(),
+            &TenantBatchCfg {
+                model: "rmc1-small".into(),
+                max_batch: 8,
+                timeout: Duration::from_millis(2),
+            },
+        );
+        tb.add_tenant(
+            buckets,
+            &TenantBatchCfg {
+                model: "rmc3-small".into(),
+                max_batch: 128,
+                timeout: Duration::from_millis(20),
+            },
+        );
+        tb
+    }
+
+    #[test]
+    fn tenant_batchers_respect_per_tenant_max_batch() {
+        let mut tb = two_tenant();
+        let now = Instant::now();
+        // rmc1 flushes at its own 8-item cap even though the fleet-wide
+        // cap is 128.
+        for i in 0..7 {
+            assert!(tb.push(q(i, "rmc1-small", 1), now).is_none());
+        }
+        let b = tb.push(q(7, "rmc1-small", 1), now).expect("tenant cap hit");
+        assert_eq!(b.model, "rmc1-small");
+        assert_eq!(b.bucket, 8);
+        // rmc3 keeps filling toward 128.
+        for i in 100..110 {
+            assert!(tb.push(q(i, "rmc3-small", 4), now).is_none());
+        }
+        assert_eq!(tb.pending_items(), 40);
+    }
+
+    #[test]
+    fn unified_deadline_is_min_across_tenants() {
+        let mut tb = two_tenant();
+        let t0 = Instant::now();
+        tb.push(q(1, "rmc3-small", 1), t0); // due at +20ms
+        let d = tb.next_deadline(t0).unwrap();
+        assert!(d > Duration::from_millis(15) && d <= Duration::from_millis(20));
+        tb.push(q(2, "rmc1-small", 1), t0); // due at +2ms — the urgent one
+        let d = tb.next_deadline(t0).unwrap();
+        assert!(d <= Duration::from_millis(2), "unified deadline must track rmc1: {d:?}");
+        // At +3ms only rmc1 is over-age.
+        let b = tb.poll_timeout(t0 + Duration::from_millis(3)).expect("rmc1 flush");
+        assert_eq!(b.model, "rmc1-small");
+        assert!(tb.poll_timeout(t0 + Duration::from_millis(3)).is_none());
+        // rmc3 flushes on its own schedule.
+        let b = tb.poll_timeout(t0 + Duration::from_millis(21)).expect("rmc3 flush");
+        assert_eq!(b.model, "rmc3-small");
+    }
+
+    #[test]
+    fn fallback_serves_models_outside_tenant_set() {
+        let mut tb = two_tenant();
+        let t0 = Instant::now();
+        tb.push(q(1, "rmc2-small", 3), t0);
+        assert_eq!(tb.pending_items(), 3);
+        let batches = tb.drain(t0);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].model, "rmc2-small");
+        assert_eq!(tb.pending_items(), 0);
+    }
+
+    #[test]
+    fn tenant_drain_flushes_every_tenant() {
+        let mut tb = two_tenant();
+        let t0 = Instant::now();
+        tb.push(q(1, "rmc1-small", 2), t0);
+        tb.push(q(2, "rmc3-small", 2), t0);
+        tb.push(q(3, "other", 2), t0);
+        let batches = tb.drain(t0);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(tb.pending_items(), 0);
+        assert!(tb.next_deadline(t0).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate tenant")]
+    fn duplicate_tenant_batcher_rejected() {
+        let mut tb = TenantBatchers::uniform(vec![8], 8, Duration::from_millis(1));
+        let cfg = TenantBatchCfg {
+            model: "m".into(),
+            max_batch: 8,
+            timeout: Duration::from_millis(1),
+        };
+        tb.add_tenant(vec![8], &cfg);
+        tb.add_tenant(vec![8], &cfg);
     }
 }

@@ -1,17 +1,23 @@
-//! L3 serving coordinator: request router, dynamic batcher (bucketed to
-//! the AOT'd batch sizes), worker pool, and SLA accounting — the
-//! vLLM-router-shaped layer of the stack.
+//! L3 serving coordinator: request router, per-tenant dynamic batchers
+//! (bucketed to the AOT'd batch sizes) behind a unified flush scheduler,
+//! worker pool, and per-tenant SLA accounting — the vLLM-router-shaped
+//! layer of the stack, multi-tenant since the co-location rework.
 //!
 //! Built on std::thread + mpsc channels (the offline registry has no
 //! tokio; see Cargo.toml note). The data path is:
 //!
 //! ```text
-//! submit(Query) ──► router thread ──(policy)──► per-worker queue
-//!                      │  dynamic batcher:          │
-//!                      │  flush on size/timeout     ▼
-//!                      │                      worker thread
-//!                      ▼                      backend.execute(batch)
-//!                 SLA meter ◄── QueryResult ──────┘
+//! TrafficMix ──► submit(Query) ──► per-MODEL DynamicBatcher ─┐
+//!  (tenant set:                    (per-tenant timeout/cap)  │ unified
+//!   shares, items,                                           │ flush
+//!   SLAs)                router ◄────────────────────────────┘
+//!                   (policy: shared co-location or
+//!                    dedicated per-tenant partition)
+//!                          │
+//!                          ▼
+//!                   per-worker queue ──► worker thread ──► backend.execute
+//!                          ▲                                    │
+//!   per-tenant SLA meters ◄┴──────────── QueryResult ◄──────────┘
 //! ```
 //!
 //! Backends: `NativeBackend` (pure-Rust numeric execution, the default
@@ -31,7 +37,7 @@ pub use autotune::{tune, TunePoint};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{Backend, MockBackend, NativeBackend, SimBackend};
-pub use batcher::{Batch, DynamicBatcher};
-pub use router::{RoutingPolicy, WorkerInfo};
-pub use service::{Coordinator, ServeReport};
+pub use batcher::{Batch, DynamicBatcher, TenantBatchCfg, TenantBatchers};
+pub use router::{partition_by_share, RoutingPolicy, WorkerInfo};
+pub use service::{Coordinator, ServeReport, TenantReport};
 pub use worker::WorkerHandle;

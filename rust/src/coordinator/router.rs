@@ -21,6 +21,12 @@ impl WorkerInfo {
     fn serves(&self, model: &str) -> bool {
         self.models.is_empty() || self.models.iter().any(|m| m == model)
     }
+
+    /// Explicitly dedicated to `model` (a non-empty partition list that
+    /// names it) — stronger than `serves`, which also admits generalists.
+    fn dedicated_to(&self, model: &str) -> bool {
+        !self.models.is_empty() && self.models.iter().any(|m| m == model)
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,6 +35,12 @@ pub enum RoutingPolicy {
     LeastLoaded,
     /// Batch-size-aware heterogeneous routing (the paper's insight).
     Heterogeneity,
+    /// Tenant-partitioned routing: prefer workers whose partition list
+    /// names the batch's model (isolated per-model serving); fall back
+    /// to generalists only when no dedicated worker exists. The
+    /// measured counterpart of "isolated" in the co-location experiment
+    /// — `least-loaded` over an unpartitioned pool is "co-located".
+    Dedicated,
 }
 
 impl RoutingPolicy {
@@ -37,6 +49,7 @@ impl RoutingPolicy {
             "round-robin" => Some(RoutingPolicy::RoundRobin),
             "least-loaded" => Some(RoutingPolicy::LeastLoaded),
             "heterogeneity" => Some(RoutingPolicy::Heterogeneity),
+            "dedicated" => Some(RoutingPolicy::Dedicated),
             _ => None,
         }
     }
@@ -87,8 +100,70 @@ impl RoutingPolicy {
                     .min_by_key(|w| (pref(w.gen), outstanding[w.id], w.id))
                     .map(|w| w.id)
             }
+            RoutingPolicy::Dedicated => eligible()
+                .min_by_key(|w| (!w.dedicated_to(model), outstanding[w.id], w.id))
+                .map(|w| w.id),
         }
     }
+}
+
+/// Share-weighted dedicated partition: assign each of `n_workers`
+/// workers a model list so every tenant owns a worker-count
+/// proportional to its traffic share (largest-remainder rounding, every
+/// tenant guaranteed at least one worker when `n_workers >= tenants`).
+/// With fewer workers than tenants, tenants are struck round-robin
+/// across workers, so some workers serve several models but every model
+/// has a home. Returns one model list per worker, in worker-id order.
+pub fn partition_by_share(n_workers: usize, tenants: &[(String, f64)]) -> Vec<Vec<String>> {
+    assert!(!tenants.is_empty(), "cannot partition for an empty tenant set");
+    let mut out: Vec<Vec<String>> = vec![Vec::new(); n_workers];
+    if n_workers == 0 {
+        return out;
+    }
+    if n_workers < tenants.len() {
+        for (i, (model, _)) in tenants.iter().enumerate() {
+            out[i % n_workers].push(model.clone());
+        }
+        return out;
+    }
+    let total: f64 = tenants.iter().map(|(_, s)| s).sum();
+    // Floor quotas with a 1-worker floor per tenant, then hand out the
+    // remaining workers by largest fractional remainder.
+    let mut quotas: Vec<usize> = Vec::with_capacity(tenants.len());
+    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(tenants.len());
+    for (i, (_, share)) in tenants.iter().enumerate() {
+        let exact = share / total * n_workers as f64;
+        let floor = (exact.floor() as usize).max(1);
+        quotas.push(floor);
+        fracs.push((i, exact - exact.floor()));
+    }
+    let mut assigned: usize = quotas.iter().sum();
+    // Over-assignment can only come from the 1-worker floors; reclaim
+    // from the largest quotas first.
+    while assigned > n_workers {
+        let (i, _) = quotas
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.cmp(b))
+            .unwrap();
+        quotas[i] -= 1;
+        assigned -= 1;
+    }
+    fracs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut fi = 0;
+    while assigned < n_workers {
+        quotas[fracs[fi % fracs.len()].0] += 1;
+        fi += 1;
+        assigned += 1;
+    }
+    let mut w = 0;
+    for (i, (model, _)) in tenants.iter().enumerate() {
+        for _ in 0..quotas[i] {
+            out[w].push(model.clone());
+            w += 1;
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -177,6 +252,93 @@ mod tests {
     fn parse_policies() {
         assert_eq!(RoutingPolicy::parse("round-robin"), Some(RoutingPolicy::RoundRobin));
         assert_eq!(RoutingPolicy::parse("heterogeneity"), Some(RoutingPolicy::Heterogeneity));
+        assert_eq!(RoutingPolicy::parse("dedicated"), Some(RoutingPolicy::Dedicated));
         assert_eq!(RoutingPolicy::parse("nope"), None);
+    }
+
+    // ------------------------------------------------ dedicated -------
+    fn partitioned_pool() -> Vec<WorkerInfo> {
+        // Workers 0/1 dedicated to rmc1, worker 2 to rmc2, worker 3 a
+        // generalist (empty list = any model).
+        vec![
+            WorkerInfo { id: 0, gen: ServerGen::Broadwell, models: vec!["rmc1-small".into()] },
+            WorkerInfo { id: 1, gen: ServerGen::Broadwell, models: vec!["rmc1-small".into()] },
+            WorkerInfo { id: 2, gen: ServerGen::Broadwell, models: vec!["rmc2-small".into()] },
+            WorkerInfo { id: 3, gen: ServerGen::Broadwell, models: vec![] },
+        ]
+    }
+
+    #[test]
+    fn dedicated_respects_partitions_under_multi_model_mix() {
+        let w = partitioned_pool();
+        let mut rr = 0;
+        // Even with worker 3 idle, rmc1 traffic stays on its partition.
+        let pick = RoutingPolicy::Dedicated
+            .pick(&w, "rmc1-small", 8, &[5, 2, 0, 0], &mut rr)
+            .unwrap();
+        assert_eq!(pick, 1, "least-loaded within the rmc1 partition");
+        let pick = RoutingPolicy::Dedicated
+            .pick(&w, "rmc2-small", 8, &[0, 0, 9, 0], &mut rr)
+            .unwrap();
+        assert_eq!(pick, 2, "rmc2 stays on its dedicated worker even when loaded");
+    }
+
+    #[test]
+    fn dedicated_falls_back_to_generalists_for_unpartitioned_models() {
+        let w = partitioned_pool();
+        let mut rr = 0;
+        let pick = RoutingPolicy::Dedicated
+            .pick(&w, "rmc3-small", 8, &[0, 0, 0, 4], &mut rr)
+            .unwrap();
+        assert_eq!(pick, 3, "only the generalist serves an unpartitioned model");
+    }
+
+    #[test]
+    fn dedicated_without_any_eligible_worker_is_none() {
+        let w = vec![WorkerInfo {
+            id: 0,
+            gen: ServerGen::Broadwell,
+            models: vec!["rmc1-small".into()],
+        }];
+        let mut rr = 0;
+        assert_eq!(RoutingPolicy::Dedicated.pick(&w, "rmc2-small", 8, &[0], &mut rr), None);
+    }
+
+    #[test]
+    fn partition_by_share_is_share_proportional() {
+        let tenants = vec![
+            ("rmc1-small".to_string(), 0.46),
+            ("rmc2-small".to_string(), 0.31),
+            ("rmc3-small".to_string(), 0.23),
+        ];
+        let parts = partition_by_share(10, &tenants);
+        assert_eq!(parts.len(), 10);
+        let count = |m: &str| parts.iter().filter(|p| p.iter().any(|x| x == m)).count();
+        assert_eq!(count("rmc1-small") + count("rmc2-small") + count("rmc3-small"), 10);
+        assert!((4..=5).contains(&count("rmc1-small")), "rmc1 {}", count("rmc1-small"));
+        assert!((3..=4).contains(&count("rmc2-small")));
+        assert!((2..=3).contains(&count("rmc3-small")));
+        // Every worker serves exactly one model in this regime.
+        assert!(parts.iter().all(|p| p.len() == 1));
+    }
+
+    #[test]
+    fn partition_by_share_minority_tenant_keeps_a_worker() {
+        let tenants = vec![("big".to_string(), 0.99), ("small".to_string(), 0.01)];
+        let parts = partition_by_share(4, &tenants);
+        assert!(parts.iter().any(|p| p.contains(&"small".to_string())));
+        assert!(parts.iter().any(|p| p.contains(&"big".to_string())));
+    }
+
+    #[test]
+    fn partition_by_share_more_tenants_than_workers() {
+        let tenants: Vec<(String, f64)> =
+            ["a", "b", "c"].iter().map(|m| (m.to_string(), 1.0)).collect();
+        let parts = partition_by_share(2, &tenants);
+        assert_eq!(parts.len(), 2);
+        // Every tenant lands somewhere; workers may serve several.
+        for m in ["a", "b", "c"] {
+            assert!(parts.iter().any(|p| p.contains(&m.to_string())), "{m} unassigned");
+        }
     }
 }

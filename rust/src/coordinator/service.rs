@@ -2,27 +2,66 @@
 //! runs complete serving experiments (open-loop Poisson load against a
 //! deployment config), producing the paper's latency-bounded-throughput
 //! report.
+//!
+//! The coordinator is multi-tenant: one instance serves a *tenant set*
+//! (a `TrafficMix`), with a per-model `DynamicBatcher` behind a unified
+//! flush scheduler, per-tenant SLA accounting, and — under the
+//! `dedicated` routing policy — share-weighted worker partitioning, so
+//! isolated-vs-co-located serving is a measured experiment rather than
+//! only a simulated one (paper §VI, Fig 11).
 
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::config::DeploymentConfig;
-use crate::metrics::{LatencyHistogram, SlaMeter};
-use crate::workload::{Query, QueryResult};
+use crate::metrics::MultiSlaMeter;
+use crate::util::Json;
+use crate::workload::{Query, QueryResult, TrafficMix};
 
 use super::backend::Backend;
-use super::batcher::DynamicBatcher;
-use super::router::{RoutingPolicy, WorkerInfo};
+use super::batcher::{TenantBatchCfg, TenantBatchers};
+use super::router::{partition_by_share, RoutingPolicy, WorkerInfo};
 use super::worker::WorkerHandle;
+
+/// Per-tenant slice of a serving run.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub model: String,
+    pub sla_ms: f64,
+    /// Completed queries / items for this tenant.
+    pub queries: u64,
+    pub items: u64,
+    /// Items ranked per second within THIS tenant's SLA.
+    pub bounded_throughput: f64,
+    pub violation_rate: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
 
 /// Outcome of a serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Queries offered by the workload schedule.
+    pub queries_offered: u64,
+    /// Queries that actually completed (== offered unless a worker died).
     pub queries: u64,
+    pub items_offered: u64,
+    /// Items that actually produced results. Reporting offered items
+    /// after a worker death would overstate throughput, and a failed
+    /// batch produces no CTRs, so neither is counted here.
     pub items: u64,
+    /// Items whose batch errored in the backend (counted as SLA
+    /// violations, excluded from `items`).
+    pub items_failed: u64,
+    /// True when the drain loop gave up before every query completed
+    /// (worker death / hang) — the run's numbers only cover what
+    /// finished.
+    pub incomplete: bool,
     pub elapsed_s: f64,
     pub qps_offered: f64,
-    /// Items ranked per second within SLA (the headline metric, §III).
+    /// Items ranked per second within SLA, aggregated over tenants, each
+    /// judged against its own bound (the headline metric, §III).
     pub bounded_throughput: f64,
     pub violation_rate: f64,
     pub mean_ms: f64,
@@ -30,15 +69,36 @@ pub struct ServeReport {
     pub p99_ms: f64,
     /// Batches per bucket size (batching effectiveness).
     pub bucket_histogram: Vec<(usize, u64)>,
+    /// Per-tenant breakdown, model-name order. One entry per model that
+    /// completed at least one query.
+    pub per_tenant: Vec<TenantReport>,
 }
 
 impl ServeReport {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "queries={} items={} elapsed={:.2}s offered={:.0}qps\n",
-            self.queries, self.items, self.elapsed_s, self.qps_offered
+            "queries={}/{} items={}/{} elapsed={:.2}s offered={:.0}qps\n",
+            self.queries,
+            self.queries_offered,
+            self.items,
+            self.items_offered,
+            self.elapsed_s,
+            self.qps_offered
         ));
+        if self.incomplete {
+            s.push_str(
+                "WARNING: run incomplete — a worker died or stalled; metrics cover completed \
+                 queries only\n",
+            );
+        }
+        if self.items_failed > 0 {
+            s.push_str(&format!(
+                "WARNING: {} items failed in the backend (counted as violations, excluded \
+                 from completed items)\n",
+                self.items_failed
+            ));
+        }
         s.push_str(&format!(
             "latency-bounded throughput: {:.0} items/s (violations {:.1}%)\n",
             self.bounded_throughput,
@@ -48,12 +108,84 @@ impl ServeReport {
             "latency ms: mean {:.3} p50 {:.3} p99 {:.3}\n",
             self.mean_ms, self.p50_ms, self.p99_ms
         ));
+        if self.per_tenant.len() > 1 {
+            s.push_str(&format!(
+                "{:<12} {:>8} {:>8} {:>10} {:>8} {:>8} {:>8} {:>9}\n",
+                "tenant", "queries", "items", "items/s", "p50 ms", "p99 ms", "sla ms", "viol %"
+            ));
+            for t in &self.per_tenant {
+                s.push_str(&format!(
+                    "{:<12} {:>8} {:>8} {:>10.0} {:>8.3} {:>8.3} {:>8.1} {:>8.1}%\n",
+                    t.model,
+                    t.queries,
+                    t.items,
+                    t.bounded_throughput,
+                    t.p50_ms,
+                    t.p99_ms,
+                    t.sla_ms,
+                    t.violation_rate * 100.0
+                ));
+            }
+        }
         s.push_str("batch buckets: ");
         for (b, n) in &self.bucket_histogram {
             s.push_str(&format!("b{b}x{n} "));
         }
         s.push('\n');
         s
+    }
+
+    /// Machine-readable form (the `serve --json` / colocation-bench
+    /// emitter).
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("queries_offered", num(self.queries_offered as f64)),
+            ("queries_completed", num(self.queries as f64)),
+            ("items_offered", num(self.items_offered as f64)),
+            ("items_completed", num(self.items as f64)),
+            ("items_failed", num(self.items_failed as f64)),
+            ("incomplete", Json::Bool(self.incomplete)),
+            ("elapsed_s", num(self.elapsed_s)),
+            ("qps_offered", num(self.qps_offered)),
+            ("bounded_throughput", num(self.bounded_throughput)),
+            ("violation_rate", num(self.violation_rate)),
+            ("mean_ms", num(self.mean_ms)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            (
+                "bucket_histogram",
+                Json::Arr(
+                    self.bucket_histogram
+                        .iter()
+                        .map(|(b, n)| {
+                            obj(vec![("bucket", num(*b as f64)), ("batches", num(*n as f64))])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "per_tenant",
+                Json::Arr(
+                    self.per_tenant
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("model", Json::Str(t.model.clone())),
+                                ("sla_ms", num(t.sla_ms)),
+                                ("queries", num(t.queries as f64)),
+                                ("items", num(t.items as f64)),
+                                ("bounded_throughput", num(t.bounded_throughput)),
+                                ("violation_rate", num(t.violation_rate)),
+                                ("mean_ms", num(t.mean_ms)),
+                                ("p50_ms", num(t.p50_ms)),
+                                ("p99_ms", num(t.p99_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -62,19 +194,50 @@ pub struct Coordinator {
     workers: Vec<WorkerHandle>,
     infos: Vec<WorkerInfo>,
     policy: RoutingPolicy,
-    batcher: DynamicBatcher,
+    batcher: TenantBatchers,
+    /// Resolved per-tenant SLA bounds (model, ms) for the meter; models
+    /// outside the set fall back to the run's default SLA.
+    tenant_slas: Vec<(String, f64)>,
     results_rx: mpsc::Receiver<QueryResult>,
     rr_state: usize,
+    /// Models already warned about as unroutable (no worker serves
+    /// them) — warn once per model, not once per batch.
+    unroutable_warned: std::collections::HashSet<String>,
     t0: Instant,
 }
 
 impl Coordinator {
     /// Build from a deployment config and a backend factory (one backend
-    /// instance shared across workers).
+    /// instance shared across workers). Single-tenant batching defaults;
+    /// use [`Coordinator::new_with_mix`] for a tenant set.
     pub fn new(
         cfg: &DeploymentConfig,
         backend: Arc<dyn Backend>,
         buckets: Vec<usize>,
+    ) -> anyhow::Result<Self> {
+        Self::build(cfg, backend, buckets, None)
+    }
+
+    /// Multi-tenant construction: a per-model `DynamicBatcher` per
+    /// tenant (flush timeout capped at a quarter of the tenant's SLA,
+    /// so a tight-SLA tenant never queues away its whole latency
+    /// budget), per-tenant SLA accounting, and — when `cfg.routing` is
+    /// `"dedicated"` and the pools don't pin models themselves —
+    /// share-weighted worker partitioning.
+    pub fn new_with_mix(
+        cfg: &DeploymentConfig,
+        backend: Arc<dyn Backend>,
+        buckets: Vec<usize>,
+        mix: &TrafficMix,
+    ) -> anyhow::Result<Self> {
+        Self::build(cfg, backend, buckets, Some(mix))
+    }
+
+    fn build(
+        cfg: &DeploymentConfig,
+        backend: Arc<dyn Backend>,
+        buckets: Vec<usize>,
+        mix: Option<&TrafficMix>,
     ) -> anyhow::Result<Self> {
         let policy = RoutingPolicy::parse(&cfg.routing)
             .ok_or_else(|| anyhow::anyhow!("unknown routing policy '{}'", cfg.routing))?;
@@ -108,12 +271,53 @@ impl Coordinator {
         if workers.is_empty() {
             anyhow::bail!("deployment has no workers");
         }
-        let batcher = DynamicBatcher::new(
-            buckets,
-            cfg.max_batch,
-            Duration::from_micros(cfg.batch_timeout_us),
-        );
-        Ok(Coordinator { workers, infos, policy, batcher, results_rx, rr_state: 0, t0 })
+        // Dedicated routing with an unpartitioned pool: carve the
+        // workers into share-weighted per-tenant partitions. Pools that
+        // pin models explicitly keep their configuration.
+        if let Some(mix) = mix {
+            if policy == RoutingPolicy::Dedicated && infos.iter().all(|w| w.models.is_empty()) {
+                let shares: Vec<(String, f64)> =
+                    mix.tenants.iter().map(|t| (t.model.clone(), t.share)).collect();
+                let parts = partition_by_share(workers.len(), &shares);
+                for (info, models) in infos.iter_mut().zip(parts) {
+                    info.models = models;
+                }
+            }
+        }
+        let default_timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let mut batcher = TenantBatchers::uniform(buckets.clone(), cfg.max_batch, default_timeout);
+        let mut tenant_slas = Vec::new();
+        if let Some(mix) = mix {
+            for t in &mix.tenants {
+                let sla_ms = t.sla_ms.unwrap_or(cfg.sla_ms);
+                let timeout = default_timeout.min(Duration::from_secs_f64(sla_ms / 4.0 / 1e3));
+                batcher.add_tenant(
+                    buckets.clone(),
+                    &TenantBatchCfg {
+                        model: t.model.clone(),
+                        max_batch: cfg.max_batch,
+                        timeout,
+                    },
+                );
+                tenant_slas.push((t.model.clone(), sla_ms));
+            }
+        }
+        Ok(Coordinator {
+            workers,
+            infos,
+            policy,
+            batcher,
+            tenant_slas,
+            results_rx,
+            rr_state: 0,
+            unroutable_warned: Default::default(),
+            t0,
+        })
+    }
+
+    /// Worker partition view (post-`dedicated` assignment) — test/debug.
+    pub fn worker_models(&self) -> Vec<Vec<String>> {
+        self.infos.iter().map(|w| w.models.clone()).collect()
     }
 
     fn dispatch(&mut self, batch: super::batcher::Batch) {
@@ -122,22 +326,47 @@ impl Coordinator {
         let picked = self
             .policy
             .pick(&self.infos, &batch.model, batch.bucket, &outstanding, &mut self.rr_state)
-            .unwrap_or(0);
+            .unwrap_or_else(|| {
+                // No worker serves this model (reachable when every
+                // worker is pinned to other tenants). Serve it anyway on
+                // the least-loaded worker — dropping completed-count
+                // accounting would hang the drain loop — but say so: in
+                // a partitioned experiment this contaminates a tenant's
+                // isolation.
+                if self.unroutable_warned.insert(batch.model.clone()) {
+                    eprintln!(
+                        "coordinator: no worker serves model '{}'; routing its batches to the \
+                         least-loaded worker (partition isolation not guaranteed)",
+                        batch.model
+                    );
+                }
+                outstanding
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(id, out)| (**out, *id))
+                    .map(|(id, _)| id)
+                    .unwrap_or(0)
+            });
         self.workers[picked].submit(batch);
     }
 
     /// Run an open-loop experiment: submit `queries` (pre-scheduled
     /// arrivals) pacing to wall-clock, wait for completion, report.
+    /// `sla_ms` is the default latency bound; tenants configured through
+    /// [`Coordinator::new_with_mix`] are judged against their own.
     pub fn run_open_loop(&mut self, queries: Vec<Query>, sla_ms: f64) -> ServeReport {
         let n = queries.len() as u64;
-        let total_items: u64 = queries.iter().map(|q| q.items as u64).sum();
+        let items_offered: u64 = queries.iter().map(|q| q.items as u64).sum();
         let offered_horizon = queries.last().map(|q| q.arrival_s).unwrap_or(0.0);
 
         let mut submitted = 0u64;
-        let mut meter = SlaMeter::new(sla_ms);
-        let mut latencies = LatencyHistogram::new();
+        let mut meter = MultiSlaMeter::new(sla_ms);
+        for (model, sla) in &self.tenant_slas {
+            meter.set_tenant_sla(model, *sla);
+        }
         let mut buckets: std::collections::BTreeMap<usize, u64> = Default::default();
         let mut completed = 0u64;
+        let mut incomplete = false;
 
         for q in queries {
             // Pace to the arrival schedule.
@@ -153,8 +382,7 @@ impl Coordinator {
                         .min(deadline - Instant::now());
                     if let Ok(r) = self.results_rx.recv_timeout(slice.max(Duration::from_micros(50))) {
                         completed += 1;
-                        meter.record(r.latency_ms, r.items as u64);
-                        latencies.record(r.latency_ms);
+                        meter.record(&r.model, r.latency_ms, r.items as u64);
                         *buckets.entry(r.batch_bucket).or_default() += 1;
                     }
                     while let Some(b) = self.batcher.poll_timeout(Instant::now()) {
@@ -178,26 +406,51 @@ impl Coordinator {
             match self.results_rx.recv_timeout(Duration::from_secs(30)) {
                 Ok(r) => {
                     completed += 1;
-                    meter.record(r.latency_ms, r.items as u64);
-                    latencies.record(r.latency_ms);
+                    meter.record(&r.model, r.latency_ms, r.items as u64);
                     *buckets.entry(r.batch_bucket).or_default() += 1;
                 }
-                Err(_) => break, // worker died; report what we have
+                Err(_) => {
+                    // Worker died or stalled: report what actually
+                    // completed and say so, rather than crediting the
+                    // run with offered-but-unserved work.
+                    incomplete = true;
+                    break;
+                }
             }
         }
         let elapsed = self.t0.elapsed().as_secs_f64();
         meter.set_elapsed(elapsed);
+        let mut pooled = meter.pooled_latencies();
+        let per_tenant: Vec<TenantReport> = meter
+            .tenants_mut()
+            .map(|(model, m)| TenantReport {
+                model: model.clone(),
+                sla_ms: m.sla_ms,
+                queries: m.queries(),
+                items: m.items_served(),
+                bounded_throughput: m.bounded_throughput(),
+                violation_rate: m.violation_rate(),
+                mean_ms: m.mean_ms(),
+                p50_ms: m.p50_ms(),
+                p99_ms: m.p99_ms(),
+            })
+            .collect();
         ServeReport {
+            queries_offered: n,
             queries: completed,
-            items: total_items,
+            items_offered,
+            items: meter.items_served(),
+            items_failed: meter.items_failed(),
+            incomplete,
             elapsed_s: elapsed,
             qps_offered: if offered_horizon > 0.0 { n as f64 / offered_horizon } else { 0.0 },
             bounded_throughput: meter.bounded_throughput(),
             violation_rate: meter.violation_rate(),
-            mean_ms: latencies.mean(),
-            p50_ms: latencies.p50(),
-            p99_ms: latencies.p99(),
+            mean_ms: pooled.mean(),
+            p50_ms: pooled.p50(),
+            p99_ms: pooled.p99(),
             bucket_histogram: buckets.into_iter().collect(),
+            per_tenant,
         }
     }
 
@@ -244,6 +497,9 @@ mod tests {
         let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
         let report = c.run_open_loop(queries(40, 2000.0), 50.0);
         assert_eq!(report.queries, 40);
+        assert_eq!(report.queries_offered, 40);
+        assert_eq!(report.items, report.items_offered, "all items completed");
+        assert!(!report.incomplete);
         assert!(report.bounded_throughput > 0.0);
         assert!(report.violation_rate < 0.2, "violations {}", report.violation_rate);
         c.shutdown();
@@ -294,5 +550,59 @@ mod tests {
         let report = c.run_open_loop(queries(10, 10_000.0), 0.5);
         assert!(report.violation_rate > 0.5);
         c.shutdown();
+    }
+
+    #[test]
+    fn multi_tenant_mock_run_reports_per_tenant() {
+        let mix = TrafficMix::parse("rmc1-small:0.5:40,rmc2-small:0.5").unwrap();
+        let cfg = deployment(2, "least-loaded");
+        let backend = Arc::new(MockBackend { latency: Duration::from_micros(200) });
+        let mut c = Coordinator::new_with_mix(&cfg, backend, vec![1, 8], &mix).unwrap();
+        let qs = mix.generate(60, 3000.0, 5);
+        let report = c.run_open_loop(qs, 50.0);
+        assert_eq!(report.queries, 60);
+        assert_eq!(report.per_tenant.len(), 2, "one report slice per tenant");
+        let rmc1 = report.per_tenant.iter().find(|t| t.model == "rmc1-small").unwrap();
+        let rmc2 = report.per_tenant.iter().find(|t| t.model == "rmc2-small").unwrap();
+        assert_eq!(rmc1.sla_ms, 40.0, "explicit per-tenant SLA");
+        assert_eq!(rmc2.sla_ms, 50.0, "default SLA");
+        assert_eq!(rmc1.queries + rmc2.queries, 60);
+        assert_eq!(rmc1.items + rmc2.items, report.items);
+        // Aggregate bounded throughput is the sum of tenant slices.
+        assert!(
+            (report.bounded_throughput
+                - (rmc1.bounded_throughput + rmc2.bounded_throughput))
+                .abs()
+                < 1e-6
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn dedicated_policy_partitions_unpinned_workers() {
+        let mix = TrafficMix::parse("rmc1-small:0.75,rmc2-small:0.25").unwrap();
+        let cfg = deployment(4, "dedicated");
+        let backend = Arc::new(MockBackend { latency: Duration::from_micros(50) });
+        let c = Coordinator::new_with_mix(&cfg, backend, vec![1, 8], &mix).unwrap();
+        let parts = c.worker_models();
+        assert_eq!(parts.len(), 4);
+        assert!(parts.iter().all(|p| p.len() == 1), "every worker pinned: {parts:?}");
+        let rmc1 = parts.iter().filter(|p| p[0] == "rmc1-small").count();
+        assert_eq!(rmc1, 3, "share-weighted partition (0.75 of 4): {parts:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn serve_report_json_roundtrips() {
+        let cfg = deployment(1, "round-robin");
+        let backend = Arc::new(MockBackend { latency: Duration::from_micros(100) });
+        let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
+        let report = c.run_open_loop(queries(10, 5000.0), 50.0);
+        c.shutdown();
+        let text = report.to_json().to_string_pretty();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("queries_completed").and_then(Json::as_usize), Some(10));
+        assert_eq!(v.get("incomplete").and_then(Json::as_bool), Some(false));
+        assert!(v.get("per_tenant").and_then(Json::as_arr).is_some());
     }
 }

@@ -4,11 +4,25 @@
 //!   recsys info                         model + backend summary
 //!   recsys figure <id|all> [--out-dir]  regenerate paper tables/figures
 //!   recsys serve [--config f.json] [--qps N] [--queries N] [--model M]
+//!                [--mix m:share[,m:share...]] [--routing POLICY]
+//!                [--json out.json]
 //!                [--impl native|xla|pallas] [--threads N]
 //!                [--engine optimized|reference]
 //!                                       end-to-end serving run (native
 //!                                       needs no artifacts; xla/pallas
 //!                                       need the `pjrt` feature).
+//!                                       --mix serves a multi-tenant
+//!                                       model set (per-query model
+//!                                       drawn from the shares, e.g.
+//!                                       rmc1:0.46,rmc2:0.31,rmc3:0.23;
+//!                                       an optional :SLA_MS third field
+//!                                       sets a per-tenant bound) and
+//!                                       reports per-tenant p50/p99/
+//!                                       violations plus the aggregate;
+//!                                       --routing dedicated partitions
+//!                                       workers per tenant (isolated)
+//!                                       instead of sharing them all
+//!                                       (co-located).
 //!                                       --threads N enables intra-op
 //!                                       parallelism per batch (0 = one
 //!                                       per core); --engine reference
@@ -30,7 +44,7 @@ use recsys::coordinator::{Backend, Coordinator, NativeBackend};
 use recsys::model::ModelGraph;
 use recsys::runtime::{EngineKind, ExecOptions, NativePool};
 use recsys::simulator::MachineSim;
-use recsys::workload::{PoissonArrivals, Query, SparseIdGen};
+use recsys::workload::{PoissonArrivals, Query, SparseIdGen, TrafficMix};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -51,6 +65,18 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
         }
     }
     (pos, flags)
+}
+
+/// Shared `--gen` parsing for simulate/tune/shard. Unknown values are
+/// errors, not a silent Broadwell fallback — a typo like `--gen
+/// skylake2` must not quietly benchmark the wrong machine.
+fn parse_gen_flag(flags: &HashMap<String, String>) -> anyhow::Result<ServerGen> {
+    match flags.get("gen") {
+        None => Ok(ServerGen::Broadwell),
+        Some(s) => ServerGen::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --gen '{s}' (expected haswell, broadwell or skylake)")
+        }),
+    }
 }
 
 fn main() {
@@ -146,37 +172,47 @@ fn cmd_figure(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result
     Ok(())
 }
 
-/// Build the serving backend for `--impl`. Native is always available;
-/// xla/pallas execute the AOT artifacts and need the `pjrt` feature.
+/// Build the serving backend for `--impl`, preloading every model in
+/// the tenant set (all tenants share one pool/engine, so co-located
+/// batches contend on the same intra-op thread pool and scratch
+/// arenas). Native is always available; xla/pallas execute the AOT
+/// artifacts and need the `pjrt` feature.
 fn make_backend(
-    model: &str,
+    models: &[String],
     impl_: &str,
     opts: ExecOptions,
 ) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
     match impl_ {
         "native" => {
             println!(
-                "initializing native {model} (deterministic params, engine {}, {} thread(s)) ...",
+                "initializing native {models:?} (deterministic params, engine {}, {} thread(s)) ...",
                 opts.engine.name(),
                 if opts.threads == 0 { "auto".to_string() } else { opts.threads.to_string() }
             );
             let pool = Arc::new(NativePool::new(0));
-            pool.preload(model)?;
+            for model in models {
+                pool.preload(model)?;
+            }
             let backend: Arc<dyn Backend> = Arc::new(NativeBackend::with_options(pool, opts));
             Ok((backend, recsys::config::PJRT_BATCHES.to_vec()))
         }
-        "xla" | "pallas" => make_pjrt_backend(model, impl_),
+        "xla" | "pallas" => make_pjrt_backend(models, impl_),
         other => anyhow::bail!("unknown --impl '{other}' (expected native, xla or pallas)"),
     }
 }
 
 #[cfg(feature = "pjrt")]
-fn make_pjrt_backend(model: &str, impl_: &str) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
+fn make_pjrt_backend(
+    models: &[String],
+    impl_: &str,
+) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
     use recsys::coordinator::PjrtBackend;
     use recsys::runtime::{default_artifacts_dir, ModelPool};
-    println!("loading artifacts + compiling {model} ({impl_}) ...");
+    println!("loading artifacts + compiling {models:?} ({impl_}) ...");
     let pool = Arc::new(ModelPool::new(&default_artifacts_dir())?);
-    pool.preload(model, impl_)?;
+    for model in models {
+        pool.preload(model, impl_)?;
+    }
     let buckets = pool.manifest.batches.clone();
     let mut backend = PjrtBackend::new(pool);
     backend.impl_ = impl_.to_string();
@@ -185,7 +221,10 @@ fn make_pjrt_backend(model: &str, impl_: &str) -> anyhow::Result<(Arc<dyn Backen
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn make_pjrt_backend(_model: &str, impl_: &str) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
+fn make_pjrt_backend(
+    _models: &[String],
+    impl_: &str,
+) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
     anyhow::bail!(
         "--impl {impl_} executes AOT artifacts and requires building with \
          --features pjrt (see DESIGN.md §Feature matrix); use --impl native"
@@ -193,10 +232,13 @@ fn make_pjrt_backend(_model: &str, impl_: &str) -> anyhow::Result<(Arc<dyn Backe
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let cfg = match flags.get("config") {
+    let mut cfg = match flags.get("config") {
         Some(path) => DeploymentConfig::from_path(std::path::Path::new(path))?,
         None => DeploymentConfig::single_node(),
     };
+    if let Some(routing) = flags.get("routing") {
+        cfg.routing = routing.clone();
+    }
     let model = flags.get("model").cloned().unwrap_or_else(|| "rmc1-small".into());
     let qps: f64 = flags.get("qps").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
     let n: usize = flags.get("queries").map(|s| s.parse()).transpose()?.unwrap_or(500);
@@ -216,17 +258,56 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
              the PJRT path executes AOT artifacts as compiled"
         );
     }
+    anyhow::ensure!(
+        !(flags.contains_key("mix") && flags.contains_key("model")),
+        "--mix and --model are mutually exclusive (the mix names its models)"
+    );
+    anyhow::ensure!(
+        !(flags.contains_key("mix") && flags.contains_key("items")),
+        "--items applies to single-model serving only; a mix draws per-tenant item counts \
+         from each tenant's distribution"
+    );
 
-    let (backend, buckets) = make_backend(&model, &impl_, ExecOptions { threads, engine })?;
-    let mut coordinator = Coordinator::new(&cfg, backend, buckets)?;
+    // Tenant set: --mix serves a weighted multi-model mix; --model (or
+    // the default) degenerates to a single-tenant mix of that model.
+    let mix = match flags.get("mix") {
+        Some(spec) => TrafficMix::parse(spec)?,
+        None => TrafficMix::single(&model, items),
+    };
+    let opts = ExecOptions { threads, engine };
+    let (backend, buckets) = make_backend(&mix.models(), &impl_, opts)?;
+    // Only an explicit --mix opts into per-tenant batching (and its
+    // SLA/4 flush-timeout cap); the single-model path keeps the
+    // uniform batcher and whatever batch_timeout_us the config asked
+    // for, exactly as before.
+    let mut coordinator = if flags.contains_key("mix") {
+        Coordinator::new_with_mix(&cfg, backend, buckets, &mix)?
+    } else {
+        Coordinator::new(&cfg, backend, buckets)?
+    };
 
-    let mut arr = PoissonArrivals::new(qps, 1234);
-    let queries: Vec<Query> = (0..n)
-        .map(|i| Query::new(i as u64, model.clone(), items, arr.next_arrival_s()))
-        .collect();
-    println!("serving {n} queries at {qps} qps (SLA {} ms, impl {impl_}) ...", cfg.sla_ms);
+    let queries: Vec<Query> = if flags.contains_key("mix") {
+        mix.generate(n, qps, 1234)
+    } else {
+        // Single-model path keeps its historical fixed item count (and
+        // therefore its historical numbers).
+        let mut arr = PoissonArrivals::new(qps, 1234);
+        (0..n)
+            .map(|i| Query::new(i as u64, model.clone(), items, arr.next_arrival_s()))
+            .collect()
+    };
+    println!(
+        "serving {n} queries at {qps} qps (SLA {} ms, impl {impl_}, routing {}, tenants {:?}) ...",
+        cfg.sla_ms,
+        cfg.routing,
+        mix.models()
+    );
     let report = coordinator.run_open_loop(queries, cfg.sla_ms);
     print!("{}", report.render());
+    if let Some(path) = flags.get("json") {
+        std::fs::write(path, report.to_json().to_string_pretty() + "\n")?;
+        println!("wrote {path}");
+    }
     coordinator.shutdown();
     Ok(())
 }
@@ -341,11 +422,7 @@ fn check_pjrt(_flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let model = flags.get("model").cloned().unwrap_or_else(|| "rmc2-small".into());
-    let gen = match flags.get("gen").map(String::as_str) {
-        Some("haswell") => ServerGen::Haswell,
-        Some("skylake") => ServerGen::Skylake,
-        _ => ServerGen::Broadwell,
-    };
+    let gen = parse_gen_flag(flags)?;
     let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let jobs: usize = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let cfg = recsys::config::all_rmc()
@@ -386,11 +463,7 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let sla_ms: f64 = flags.get("sla").map(|s| s.parse()).transpose()?.unwrap_or(10.0);
     let timeout_ms: f64 =
         flags.get("timeout-ms").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
-    let gen = match flags.get("gen").map(String::as_str) {
-        Some("haswell") => ServerGen::Haswell,
-        Some("skylake") => ServerGen::Skylake,
-        _ => ServerGen::Broadwell,
-    };
+    let gen = parse_gen_flag(flags)?;
     let backend = recsys::coordinator::SimBackend::new(0.0);
     let buckets = [1usize, 8, 32, 128];
     let lat = |b: usize| backend.latency_ms(&model, b, gen).unwrap();
@@ -424,11 +497,7 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_shard(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let model = flags.get("model").cloned().unwrap_or_else(|| "rmc2-large".into());
     let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(32);
-    let gen = match flags.get("gen").map(String::as_str) {
-        Some("haswell") => ServerGen::Haswell,
-        Some("skylake") => ServerGen::Skylake,
-        _ => ServerGen::Broadwell,
-    };
+    let gen = parse_gen_flag(flags)?;
     let cfg = recsys::config::all_rmc()
         .into_iter()
         .find(|c| c.name == model)

@@ -8,4 +8,4 @@ mod sla_meter;
 
 pub use counters::{CacheCounters, MpkiReport};
 pub use histogram::LatencyHistogram;
-pub use sla_meter::SlaMeter;
+pub use sla_meter::{MultiSlaMeter, SlaMeter};

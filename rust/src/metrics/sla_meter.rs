@@ -14,8 +14,11 @@ pub struct SlaMeter {
     latencies: LatencyHistogram,
     items_ok: u64,
     items_late: u64,
+    /// Items whose batch errored (no CTRs produced); a subset of late.
+    items_failed: u64,
     queries_ok: u64,
     queries_late: u64,
+    queries_failed: u64,
     elapsed_s: f64,
 }
 
@@ -26,19 +29,31 @@ impl SlaMeter {
             latencies: LatencyHistogram::new(),
             items_ok: 0,
             items_late: 0,
+            items_failed: 0,
             queries_ok: 0,
             queries_late: 0,
+            queries_failed: 0,
             elapsed_s: 0.0,
         }
     }
 
-    /// Record one completed query of `items` ranked items.
+    /// Record one completed query of `items` ranked items. A non-finite
+    /// latency (a worker reported the batch failed) counts as an SLA
+    /// violation AND as a failure — no results were produced — and is
+    /// kept out of the latency distribution, so the percentiles stay
+    /// meaningful.
     pub fn record(&mut self, latency_ms: f64, items: u64) {
-        self.latencies.record(latency_ms);
-        if latency_ms <= self.sla_ms {
+        if latency_ms.is_finite() && latency_ms <= self.sla_ms {
+            self.latencies.record(latency_ms);
             self.items_ok += items;
             self.queries_ok += 1;
         } else {
+            if latency_ms.is_finite() {
+                self.latencies.record(latency_ms);
+            } else {
+                self.items_failed += items;
+                self.queries_failed += 1;
+            }
             self.items_late += items;
             self.queries_late += 1;
         }
@@ -69,8 +84,157 @@ impl SlaMeter {
         self.queries_ok + self.queries_late
     }
 
+    pub fn queries_late(&self) -> u64 {
+        self.queries_late
+    }
+
+    /// Items completed (within SLA or late), including failures.
+    pub fn items(&self) -> u64 {
+        self.items_ok + self.items_late
+    }
+
+    /// Items that actually produced results (failed batches excluded).
+    pub fn items_served(&self) -> u64 {
+        self.items_ok + self.items_late - self.items_failed
+    }
+
+    pub fn items_failed(&self) -> u64 {
+        self.items_failed
+    }
+
+    pub fn queries_failed(&self) -> u64 {
+        self.queries_failed
+    }
+
+    /// Items completed within SLA.
+    pub fn items_ok(&self) -> u64 {
+        self.items_ok
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.latencies.mean()
+    }
+
+    pub fn p50_ms(&mut self) -> f64 {
+        self.latencies.p50()
+    }
+
+    pub fn p99_ms(&mut self) -> f64 {
+        self.latencies.p99()
+    }
+
+    pub fn latencies(&self) -> &LatencyHistogram {
+        &self.latencies
+    }
+
     pub fn latencies_mut(&mut self) -> &mut LatencyHistogram {
         &mut self.latencies
+    }
+}
+
+/// Per-tenant SLA accounting for multi-model serving: one `SlaMeter`
+/// per model (each with its own SLA bound) plus derived aggregates.
+/// The aggregate bounded throughput counts an item iff it met *its own
+/// tenant's* SLA — there is no single fleet-wide latency bound once the
+/// tenant set is heterogeneous (paper §III: per-service SLAs differ).
+#[derive(Debug, Clone)]
+pub struct MultiSlaMeter {
+    default_sla_ms: f64,
+    /// (model, sla_ms) overrides applied when a tenant's meter is first
+    /// created.
+    overrides: Vec<(String, f64)>,
+    tenants: std::collections::BTreeMap<String, SlaMeter>,
+    elapsed_s: f64,
+}
+
+impl MultiSlaMeter {
+    pub fn new(default_sla_ms: f64) -> Self {
+        MultiSlaMeter {
+            default_sla_ms,
+            overrides: Vec::new(),
+            tenants: Default::default(),
+            elapsed_s: 0.0,
+        }
+    }
+
+    /// Set a per-tenant SLA bound (before any `record` for that model).
+    pub fn set_tenant_sla(&mut self, model: &str, sla_ms: f64) {
+        self.overrides.push((model.to_string(), sla_ms));
+    }
+
+    pub fn sla_for(&self, model: &str) -> f64 {
+        self.overrides
+            .iter()
+            .rev()
+            .find(|(m, _)| m == model)
+            .map(|(_, s)| *s)
+            .unwrap_or(self.default_sla_ms)
+    }
+
+    pub fn record(&mut self, model: &str, latency_ms: f64, items: u64) {
+        let sla = self.sla_for(model);
+        self.tenants
+            .entry(model.to_string())
+            .or_insert_with(|| SlaMeter::new(sla))
+            .record(latency_ms, items);
+    }
+
+    pub fn set_elapsed(&mut self, secs: f64) {
+        self.elapsed_s = secs;
+        for m in self.tenants.values_mut() {
+            m.set_elapsed(secs);
+        }
+    }
+
+    /// Aggregate items/s within each tenant's own SLA.
+    pub fn bounded_throughput(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            return 0.0;
+        }
+        self.tenants.values().map(|m| m.items_ok()).sum::<u64>() as f64 / self.elapsed_s
+    }
+
+    pub fn violation_rate(&self) -> f64 {
+        let total: u64 = self.tenants.values().map(SlaMeter::queries).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.tenants.values().map(SlaMeter::queries_late).sum::<u64>() as f64 / total as f64
+    }
+
+    pub fn queries(&self) -> u64 {
+        self.tenants.values().map(SlaMeter::queries).sum()
+    }
+
+    pub fn items(&self) -> u64 {
+        self.tenants.values().map(SlaMeter::items).sum()
+    }
+
+    /// Items that actually produced results (failed batches excluded).
+    pub fn items_served(&self) -> u64 {
+        self.tenants.values().map(SlaMeter::items_served).sum()
+    }
+
+    pub fn items_failed(&self) -> u64 {
+        self.tenants.values().map(SlaMeter::items_failed).sum()
+    }
+
+    /// Pooled latency distribution across tenants (aggregate p50/p99).
+    pub fn pooled_latencies(&self) -> LatencyHistogram {
+        let mut all = LatencyHistogram::new();
+        for m in self.tenants.values() {
+            all.merge(m.latencies());
+        }
+        all
+    }
+
+    /// Per-tenant meters in deterministic (model-name) order.
+    pub fn tenants_mut(&mut self) -> impl Iterator<Item = (&String, &mut SlaMeter)> {
+        self.tenants.iter_mut()
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
     }
 }
 
@@ -102,5 +266,49 @@ mod tests {
     fn zero_elapsed_guard() {
         let m = SlaMeter::new(1.0);
         assert_eq!(m.bounded_throughput(), 0.0);
+    }
+
+    #[test]
+    fn infinite_latency_counts_late_and_failed_but_not_in_percentiles() {
+        let mut m = SlaMeter::new(10.0);
+        m.record(5.0, 10);
+        m.record(12.0, 10); // late but served
+        m.record(f64::INFINITY, 10); // failed batch marker from a worker
+        m.set_elapsed(1.0);
+        assert_eq!(m.violation_rate(), 2.0 / 3.0);
+        assert_eq!(m.bounded_throughput(), 10.0);
+        assert_eq!(m.items(), 30);
+        assert_eq!(m.items_served(), 20, "failed items are not served items");
+        assert_eq!(m.items_failed(), 10);
+        assert_eq!(m.queries_failed(), 1);
+        assert!(m.p99_ms().is_finite());
+    }
+
+    #[test]
+    fn multi_meter_per_tenant_slas() {
+        let mut m = MultiSlaMeter::new(50.0);
+        m.set_tenant_sla("rmc1-small", 5.0);
+        // 8ms: late for rmc1 (SLA 5), fine for rmc3 (default 50).
+        m.record("rmc1-small", 8.0, 10);
+        m.record("rmc3-small", 8.0, 20);
+        m.set_elapsed(1.0);
+        assert_eq!(m.queries(), 2);
+        assert_eq!(m.items(), 30);
+        assert_eq!(m.bounded_throughput(), 20.0); // only rmc3's items count
+        assert_eq!(m.violation_rate(), 0.5);
+        assert_eq!(m.tenant_count(), 2);
+        let per: Vec<(String, f64)> =
+            m.tenants_mut().map(|(k, v)| (k.clone(), v.violation_rate())).collect();
+        assert_eq!(per, vec![("rmc1-small".into(), 1.0), ("rmc3-small".into(), 0.0)]);
+    }
+
+    #[test]
+    fn multi_meter_pooled_latencies() {
+        let mut m = MultiSlaMeter::new(10.0);
+        m.record("a", 2.0, 1);
+        m.record("b", 4.0, 1);
+        let mut pooled = m.pooled_latencies();
+        assert_eq!(pooled.len(), 2);
+        assert_eq!(pooled.p50(), 3.0);
     }
 }

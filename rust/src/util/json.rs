@@ -152,6 +152,26 @@ impl Json {
     }
 }
 
+/// Emitter helper: a finite number, or null — percentiles of an empty
+/// slice are NaN, and `NaN` is not valid JSON. One policy, used by
+/// every report/bench emitter.
+pub fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Emitter helper: build an object from (key, value) pairs.
+pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {

@@ -1,11 +1,14 @@
 //! Workload generation: sparse-ID streams (uniform / Zipf / production-
-//! trace-like, Fig 14), Poisson request arrivals, and query types for the
-//! serving coordinator.
+//! trace-like, Fig 14), Poisson request arrivals, query types for the
+//! serving coordinator, and the multi-tenant traffic mix (per-query
+//! model identity drawn from the Fig-1 fleet shares).
 
 mod arrivals;
 mod query;
 mod sparse_gen;
+mod traffic_mix;
 
 pub use arrivals::PoissonArrivals;
 pub use query::{Query, QueryResult};
 pub use sparse_gen::{unique_fraction, IdDistribution, SparseIdGen};
+pub use traffic_mix::{TenantSpec, TrafficMix};

@@ -1,0 +1,258 @@
+//! Multi-tenant traffic generation: per-query model identity drawn from
+//! the Fig-1 fleet shares, with per-tenant item-count distributions and
+//! SLA targets. This is the workload half of the co-location experiment
+//! (paper §VI): production machines never serve one model — they serve
+//! the fleet mix, and the scheduler's job is to keep *every* tenant
+//! inside its own latency bound.
+
+use crate::fleet::{SHARE_RMC1, SHARE_RMC2, SHARE_RMC3};
+use crate::util::Rng;
+
+use super::{PoissonArrivals, Query};
+
+/// One tenant (model class) in the served mix.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Full preset name (e.g. "rmc1-small").
+    pub model: String,
+    /// Fraction of queries belonging to this tenant (normalized so the
+    /// mix sums to 1; the tenant's arrival rate is `share × total qps`).
+    pub share: f64,
+    /// Mean candidate items per query; drawn uniform in [1, 2·mean-1].
+    pub items_mean: usize,
+    /// Per-tenant latency bound, ms. `None` = the deployment default.
+    pub sla_ms: Option<f64>,
+}
+
+/// A weighted tenant set plus the generator that interleaves their
+/// Poisson arrivals into one open-loop query schedule.
+#[derive(Debug, Clone)]
+pub struct TrafficMix {
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// Default mean items per query for a model class: the filtering-stage
+/// models (RMC1/2) score few candidates per request, the heavy ranking
+/// model (RMC3) scores more (paper §III.A two-stage funnel).
+fn default_items_mean(model: &str) -> usize {
+    if model.starts_with("rmc3") {
+        8
+    } else {
+        4
+    }
+}
+
+/// Resolve a spec name against the model presets: exact preset name, or
+/// a class shorthand ("rmc1" → "rmc1-small").
+fn resolve_model(name: &str) -> anyhow::Result<String> {
+    let presets = crate::config::all_rmc();
+    if presets.iter().any(|c| c.name == name) {
+        return Ok(name.to_string());
+    }
+    let small = format!("{name}-small");
+    if presets.iter().any(|c| c.name == small) {
+        return Ok(small);
+    }
+    anyhow::bail!(
+        "unknown model '{name}' in mix (known: {:?})",
+        presets.iter().map(|c| c.name.clone()).collect::<Vec<_>>()
+    )
+}
+
+impl TrafficMix {
+    /// Parse `model:share[,model:share]...` (e.g. the Fig-1 RMC split
+    /// `rmc1:0.46,rmc2:0.31,rmc3:0.23`). An optional third field sets a
+    /// per-tenant SLA in ms: `rmc1:0.46:20`. Shares are normalized;
+    /// unknown models, non-positive shares, and duplicates are errors.
+    pub fn parse(spec: &str) -> anyhow::Result<TrafficMix> {
+        let mut tenants: Vec<TenantSpec> = Vec::new();
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let fields: Vec<&str> = part.split(':').collect();
+            anyhow::ensure!(
+                fields.len() == 2 || fields.len() == 3,
+                "bad mix entry '{part}' (expected model:share or model:share:sla_ms)"
+            );
+            let model = resolve_model(fields[0].trim())?;
+            let share: f64 = fields[1]
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad share '{}' in '{part}'", fields[1]))?;
+            anyhow::ensure!(share > 0.0 && share.is_finite(), "share must be > 0 in '{part}'");
+            let sla_ms = match fields.get(2) {
+                Some(s) => {
+                    let v: f64 = s
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad sla '{s}' in '{part}'"))?;
+                    anyhow::ensure!(v > 0.0, "sla must be > 0 in '{part}'");
+                    Some(v)
+                }
+                None => None,
+            };
+            anyhow::ensure!(
+                !tenants.iter().any(|t| t.model == model),
+                "duplicate tenant '{model}' in mix"
+            );
+            tenants.push(TenantSpec {
+                items_mean: default_items_mean(&model),
+                model,
+                share,
+                sla_ms,
+            });
+        }
+        anyhow::ensure!(!tenants.is_empty(), "empty traffic mix");
+        let total: f64 = tenants.iter().map(|t| t.share).sum();
+        for t in &mut tenants {
+            t.share /= total;
+        }
+        Ok(TrafficMix { tenants })
+    }
+
+    /// The Fig-1 fleet mix restricted to the three RMC classes, with
+    /// shares renormalized (0.30/0.20/0.15 → 0.46/0.31/0.23).
+    pub fn fleet_default() -> TrafficMix {
+        let total = SHARE_RMC1 + SHARE_RMC2 + SHARE_RMC3;
+        let mk = |model: &str, share: f64| TenantSpec {
+            model: model.into(),
+            share: share / total,
+            items_mean: default_items_mean(model),
+            sla_ms: None,
+        };
+        TrafficMix {
+            tenants: vec![
+                mk("rmc1-small", SHARE_RMC1),
+                mk("rmc2-small", SHARE_RMC2),
+                mk("rmc3-small", SHARE_RMC3),
+            ],
+        }
+    }
+
+    /// A single-tenant mix (the pre-multi-tenant serving path).
+    pub fn single(model: &str, items_mean: usize) -> TrafficMix {
+        TrafficMix {
+            tenants: vec![TenantSpec {
+                model: model.into(),
+                share: 1.0,
+                items_mean,
+                sla_ms: None,
+            }],
+        }
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.tenants.iter().map(|t| t.model.clone()).collect()
+    }
+
+    /// Generate `n` open-loop queries at aggregate rate `qps`: one
+    /// merged Poisson arrival process, per-query tenant drawn from the
+    /// mix shares, per-query items drawn from the tenant's distribution.
+    /// Fully deterministic given `seed`.
+    pub fn generate(&self, n: usize, qps: f64, seed: u64) -> Vec<Query> {
+        let mut arr = PoissonArrivals::new(qps, seed);
+        let mut rng = Rng::seed_from_u64(seed ^ 0x7E41_A7C0_FFEE_D00D);
+        (0..n)
+            .map(|i| {
+                let t = self.draw_tenant(&mut rng);
+                // Uniform in [1, 2·mean-1] — mean items_mean, never 0.
+                let span = (2 * t.items_mean).saturating_sub(1).max(1) as u64;
+                let items = 1 + rng.gen_range(span) as usize;
+                Query::new(i as u64, t.model.clone(), items, arr.next_arrival_s())
+            })
+            .collect()
+    }
+
+    fn draw_tenant(&self, rng: &mut Rng) -> &TenantSpec {
+        let x = rng.gen_f64();
+        let mut acc = 0.0;
+        for t in &self.tenants {
+            acc += t.share;
+            if x < acc {
+                return t;
+            }
+        }
+        self.tenants.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_fig1_mix() {
+        let mix = TrafficMix::parse("rmc1:0.46,rmc2:0.31,rmc3:0.23").unwrap();
+        assert_eq!(mix.models(), vec!["rmc1-small", "rmc2-small", "rmc3-small"]);
+        let total: f64 = mix.tenants.iter().map(|t| t.share).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!((mix.tenants[0].share - 0.46).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_normalizes_unnormalized_shares() {
+        let mix = TrafficMix::parse("rmc1-small:3,rmc2-small:1").unwrap();
+        assert!((mix.tenants[0].share - 0.75).abs() < 1e-12);
+        assert!((mix.tenants[1].share - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_per_tenant_sla() {
+        let mix = TrafficMix::parse("rmc1:0.5:20,rmc3:0.5").unwrap();
+        assert_eq!(mix.tenants[0].sla_ms, Some(20.0));
+        assert_eq!(mix.tenants[1].sla_ms, None);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(TrafficMix::parse("").is_err());
+        assert!(TrafficMix::parse("nope:0.5").is_err());
+        assert!(TrafficMix::parse("rmc1:0").is_err());
+        assert!(TrafficMix::parse("rmc1:-1").is_err());
+        assert!(TrafficMix::parse("rmc1:x").is_err());
+        assert!(TrafficMix::parse("rmc1:0.5,rmc1:0.5").is_err());
+        assert!(TrafficMix::parse("rmc1:0.5:0").is_err());
+        assert!(TrafficMix::parse("rmc1").is_err());
+    }
+
+    #[test]
+    fn fleet_default_matches_fig1_renormalization() {
+        let mix = TrafficMix::fleet_default();
+        assert_eq!(mix.tenants.len(), 3);
+        assert!((mix.tenants[0].share - 0.30 / 0.65).abs() < 1e-12);
+        let total: f64 = mix.tenants.iter().map(|t| t.share).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_share_accurate() {
+        let mix = TrafficMix::parse("rmc1:0.46,rmc2:0.31,rmc3:0.23").unwrap();
+        let a = mix.generate(4000, 1000.0, 7);
+        let b = mix.generate(4000, 1000.0, 7);
+        assert_eq!(a.len(), 4000);
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.model == y.model && x.items == y.items && x.arrival_s == y.arrival_s));
+        // Arrivals are the merged Poisson process: strictly increasing.
+        assert!(a.windows(2).all(|w| w[1].arrival_s > w[0].arrival_s));
+        // Empirical shares track the configured ones.
+        for t in &mix.tenants {
+            let got =
+                a.iter().filter(|q| q.model == t.model).count() as f64 / a.len() as f64;
+            assert!((got - t.share).abs() < 0.04, "{}: got {got}, want {}", t.model, t.share);
+        }
+    }
+
+    #[test]
+    fn generate_item_counts_track_tenant_means() {
+        let mix = TrafficMix::parse("rmc1:0.5,rmc3:0.5").unwrap();
+        let qs = mix.generate(4000, 1000.0, 3);
+        let mean = |model: &str| {
+            let v: Vec<usize> =
+                qs.iter().filter(|q| q.model == model).map(|q| q.items).collect();
+            v.iter().sum::<usize>() as f64 / v.len() as f64
+        };
+        assert!((mean("rmc1-small") - 4.0).abs() < 0.5);
+        assert!((mean("rmc3-small") - 8.0).abs() < 1.0);
+        assert!(qs.iter().all(|q| q.items >= 1));
+    }
+}

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig, PJRT_BATCHES};
 use recsys::coordinator::{Coordinator, NativeBackend};
 use recsys::runtime::{EngineKind, ExecOptions, NativeModel, NativePool};
-use recsys::workload::{PoissonArrivals, Query};
+use recsys::workload::{PoissonArrivals, Query, TrafficMix};
 
 fn deployment(workers: usize, routing: &str, sla_ms: f64) -> DeploymentConfig {
     DeploymentConfig {
@@ -136,6 +136,66 @@ fn native_serving_reference_engine_still_serves() {
     assert_eq!(report.queries, 30);
     assert!(report.p99_ms.is_finite());
     c.shutdown();
+}
+
+#[test]
+fn multi_tenant_colocated_serving_end_to_end() {
+    // Two tenants co-located on one shared pool + engine: both complete,
+    // both stay inside a loose SLA, and the report carries a per-tenant
+    // breakdown whose slices sum to the aggregate.
+    let pool = Arc::new(NativePool::new(0));
+    pool.preload("rmc1-small").unwrap();
+    pool.preload("rmc2-small").unwrap();
+    let backend = Arc::new(NativeBackend::new(pool));
+    let cfg = deployment(2, "least-loaded", 150.0);
+    let mix = TrafficMix::parse("rmc1-small:0.6,rmc2-small:0.4").unwrap();
+    let mut c = Coordinator::new_with_mix(&cfg, backend, PJRT_BATCHES.to_vec(), &mix).unwrap();
+    let report = c.run_open_loop(mix.generate(100, 250.0, 21), 150.0);
+    c.shutdown();
+    assert_eq!(report.queries, 100, "every query must complete");
+    assert!(!report.incomplete);
+    assert_eq!(report.items, report.items_offered, "completed items == offered items");
+    assert_eq!(report.per_tenant.len(), 2, "one slice per tenant");
+    let mut tenant_queries = 0u64;
+    let mut tenant_items = 0u64;
+    for t in &report.per_tenant {
+        assert!(t.queries >= 10, "{}: starved ({} queries)", t.model, t.queries);
+        assert!(t.violation_rate < 0.35, "{}: violations {}", t.model, t.violation_rate);
+        assert!(t.p99_ms.is_finite(), "{}: a batch failed", t.model);
+        assert_eq!(t.sla_ms, 150.0);
+        tenant_queries += t.queries;
+        tenant_items += t.items;
+    }
+    assert_eq!(tenant_queries, report.queries, "tenant slices must cover the run");
+    assert_eq!(tenant_items, report.items);
+    let tenant_throughput: f64 =
+        report.per_tenant.iter().map(|t| t.bounded_throughput).sum();
+    assert!((report.bounded_throughput - tenant_throughput).abs() < 1e-6);
+}
+
+#[test]
+fn multi_tenant_dedicated_partition_serving() {
+    // `dedicated` routing share-partitions an unpinned pool and still
+    // serves the whole mix: rmc1 gets 3 of 4 workers (share 0.75), rmc2
+    // the rest, and both tenants' traffic completes on their partition.
+    let pool = Arc::new(NativePool::new(0));
+    pool.preload("rmc1-small").unwrap();
+    pool.preload("rmc2-small").unwrap();
+    let backend = Arc::new(NativeBackend::new(pool));
+    let cfg = deployment(4, "dedicated", 150.0);
+    let mix = TrafficMix::parse("rmc1-small:0.75,rmc2-small:0.25").unwrap();
+    let mut c = Coordinator::new_with_mix(&cfg, backend, PJRT_BATCHES.to_vec(), &mix).unwrap();
+    let parts = c.worker_models();
+    assert_eq!(parts.iter().filter(|p| p == &&vec!["rmc1-small".to_string()]).count(), 3);
+    assert_eq!(parts.iter().filter(|p| p == &&vec!["rmc2-small".to_string()]).count(), 1);
+    let report = c.run_open_loop(mix.generate(80, 250.0, 33), 150.0);
+    c.shutdown();
+    assert_eq!(report.queries, 80);
+    assert!(!report.incomplete);
+    assert_eq!(report.per_tenant.len(), 2);
+    for t in &report.per_tenant {
+        assert!(t.p99_ms.is_finite(), "{}: a batch failed on its partition", t.model);
+    }
 }
 
 #[test]

@@ -341,6 +341,53 @@ fn prop_reference_and_optimized_agree() {
     }
 }
 
+#[test]
+fn prop_multi_tenant_shared_engine_determinism() {
+    // The co-location contract: multiple tenants' models interleaved
+    // through ONE shared parallel engine, reusing one scratch arena
+    // across models (exactly what a coordinator worker does under a
+    // multi-model mix), must reproduce the serial per-model outputs
+    // bitwise — no batch of tenant A may perturb tenant B's numerics.
+    let cfg1 = recsys::config::rmc1_small();
+    let cfg2 = recsys::config::rmc2_small();
+    let m1 = NativeModel::new(&cfg1, 13);
+    let m2 = NativeModel::new(&cfg2, 13);
+    let serial = Engine::serial();
+    let shared = Engine::new(ExecOptions { threads: 4, engine: EngineKind::Optimized });
+    let batches = [1usize, 8, 32];
+
+    // Serial goldens, fresh arena per run.
+    let golden = |m: &NativeModel, cfg: &RmcConfig, batch: usize| {
+        let (dense, ids, lwts) = rmc_inputs(cfg, batch);
+        m.run_rmc_with(&serial, &mut ScratchArena::new(), &dense, &ids, &lwts).unwrap()
+    };
+    let want1: Vec<Vec<f32>> = batches.iter().map(|&b| golden(&m1, &cfg1, b)).collect();
+    let want2: Vec<Vec<f32>> = batches.iter().map(|&b| golden(&m2, &cfg2, b)).collect();
+
+    // Interleave tenants through the shared engine + one reused arena,
+    // in alternating order across two rounds.
+    let mut arena = ScratchArena::new();
+    for round in 0..2 {
+        for (i, &batch) in batches.iter().enumerate() {
+            let order: [(&NativeModel, &RmcConfig, &[f32]); 2] = if (round + i) % 2 == 0 {
+                [(&m1, &cfg1, &want1[i]), (&m2, &cfg2, &want2[i])]
+            } else {
+                [(&m2, &cfg2, &want2[i]), (&m1, &cfg1, &want1[i])]
+            };
+            for (m, cfg, want) in order {
+                let (dense, ids, lwts) = rmc_inputs(cfg, batch);
+                let got = m.run_rmc_with(&shared, &mut arena, &dense, &ids, &lwts).unwrap();
+                assert_eq!(
+                    got.as_slice(),
+                    want,
+                    "{} b{batch} diverged under shared-engine interleaving (round {round})",
+                    cfg.name
+                );
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------------- id gen --
 #[test]
 fn prop_idgen_in_range_and_deterministic() {
