@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig, PJRT_BATCHES};
 use recsys::coordinator::{Coordinator, NativeBackend, ServeReport};
-use recsys::runtime::{EngineKind, ExecOptions, NativePool};
+use recsys::runtime::{ExecOptions, NativePool};
 use recsys::util::json::{num, obj};
 use recsys::util::Json;
 use recsys::workload::TrafficMix;
@@ -65,7 +65,7 @@ fn run_once(
     };
     let backend = Arc::new(NativeBackend::with_options(
         pool.clone(),
-        ExecOptions { threads, engine: EngineKind::Optimized },
+        ExecOptions { threads, ..Default::default() },
     ));
     let mut c = Coordinator::new_with_mix(&cfg, backend, PJRT_BATCHES.to_vec(), mix)?;
     let queries = mix.generate(load.queries, load.qps, 99);

@@ -23,8 +23,12 @@ fn main() {
     let pool = NativePool::new(0);
     let m = pool.get("rmc1-small").expect("rmc1-small preset");
     let cfg = m.cfg();
-    let reference = Engine::new(ExecOptions { threads: 1, engine: EngineKind::Reference });
-    let optimized = Engine::new(ExecOptions { threads: 0, engine: EngineKind::Optimized });
+    let reference = Engine::new(ExecOptions {
+        threads: 1,
+        engine: EngineKind::Reference,
+        ..Default::default()
+    });
+    let optimized = Engine::new(ExecOptions { threads: 0, ..Default::default() });
     let mut arena = ScratchArena::new();
     for &batch in recsys::figures::fig8::BATCHES.iter() {
         let dense = golden_dense(batch, cfg.dense_dim);

@@ -79,7 +79,11 @@ fn main() -> anyhow::Result<()> {
             let ids = golden_ids(cfg.num_tables, batch, cfg.lookups, m.rows());
             let lwts = golden_lwts(cfg.num_tables, batch, cfg.lookups);
             for ec in &engines {
-                let engine = Engine::new(ExecOptions { threads: ec.threads, engine: ec.kind });
+                let engine = Engine::new(ExecOptions {
+                    threads: ec.threads,
+                    engine: ec.kind,
+                    ..Default::default()
+                });
                 let mut arena = ScratchArena::new();
                 let warmup = if smoke { 1 } else { 2 };
                 let iters = if smoke {

@@ -1,0 +1,284 @@
+//! Measured scale-out sweep (paper §VII, the serving-side companion to
+//! `simulator::distributed` and `simulator::embedding_cache`): the real
+//! `ShardedEmbeddingService` — table-sharded SLS executors that own
+//! their table slices + optional leader hot-row cache — swept over
+//! shard counts x cache sizes x the Fig-14 locality spectrum, with the
+//! per-stage breakdown (shard SLS / gather / leader MLP) and measured
+//! cache hit rates emitted next to the simulator's predictions on
+//! identical seeded ID streams.
+//!
+//! Every sweep point asserts bitwise conformance against single-node
+//! `NativeModel::run_rmc` before timing (the determinism contract is a
+//! precondition of the numbers being comparable at all).
+//!
+//! Emits machine-readable `BENCH_sharded.json` (see EXPERIMENTS.md
+//! §Sharded scale-out sweep for the schema and runbook).
+//!
+//! Flags:  --smoke        tiny run (CI emitter check); defaults to a
+//!                        separate *.smoke.json so it never clobbers
+//!                        the committed tracker
+//!         --out <path>   JSON output path (default: repo root)
+
+use std::time::Instant;
+
+use recsys::config::RmcConfig;
+use recsys::runtime::{ExecOptions, NativeModel, ScratchArena, ShardedEmbeddingService};
+use recsys::simulator::embedding_cache::simulate_row_cache;
+use recsys::util::json::{num, obj};
+use recsys::util::Json;
+use recsys::workload::{IdDistribution, SparseIdGen};
+
+/// Parameter seed shared by the single-node golden model and every
+/// service (bitwise comparability).
+const SEED: u64 = 0;
+/// Per-table ID stream seed base (prediction re-creates the exact
+/// streams the measured run consumed).
+const STREAM_SEED: u64 = 1000;
+
+struct Load {
+    model: &'static str,
+    batch: usize,
+    warmup: usize,
+    iters: usize,
+}
+
+/// One locality point on the Fig-14 spectrum.
+fn localities() -> Vec<(&'static str, IdDistribution)> {
+    vec![
+        ("uniform", IdDistribution::Uniform),
+        ("zipf-1.05", IdDistribution::Zipf { s: 1.05 }),
+        ("trace-h0.001-p0.9", IdDistribution::Trace { hot_fraction: 0.001, hot_prob: 0.9 }),
+    ]
+}
+
+/// Fresh per-table generators for one sweep point (deterministic, so
+/// every (shards, cache) config sees the identical stream).
+fn table_gens(dist: IdDistribution, cfg: &RmcConfig, rows: usize) -> Vec<SparseIdGen> {
+    (0..cfg.num_tables)
+        .map(|t| SparseIdGen::new(dist, rows, STREAM_SEED + t as u64))
+        .collect()
+}
+
+/// One iteration's (T, B, L) id tensor drawn from the per-table streams.
+fn draw_ids(gens: &mut [SparseIdGen], batch: usize, lookups: usize) -> Vec<i32> {
+    let mut ids = Vec::with_capacity(gens.len() * batch * lookups);
+    for gen in gens.iter_mut() {
+        ids.extend(gen.gen_batch(batch, lookups).into_iter().map(|id| id as i32));
+    }
+    ids
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = match args.iter().position(|a| a == "--out") {
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => v.clone(),
+            _ => anyhow::bail!("--out requires a path argument"),
+        },
+        // Smoke runs must never clobber the committed tracker with
+        // throwaway short-run numbers.
+        None if smoke => {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_sharded.smoke.json").to_string()
+        }
+        None => concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_sharded.json").to_string(),
+    };
+
+    // rmc2-small is the capacity-motivated class (most tables); smoke
+    // proves the emitter on the cheapest preset.
+    let load = if smoke {
+        Load { model: "rmc1-small", batch: 8, warmup: 1, iters: 2 }
+    } else {
+        Load { model: "rmc2-small", batch: 32, warmup: 3, iters: 30 }
+    };
+    let shards_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let cache_sweep: &[f64] = if smoke { &[0.0, 0.1] } else { &[0.0, 0.01, 0.1] };
+
+    let cfg = recsys::config::all_rmc()
+        .into_iter()
+        .find(|c| c.name == load.model)
+        .expect("known preset");
+    let single = NativeModel::new(&cfg, SEED);
+    let rows = single.rows();
+    let dense = recsys::runtime::golden_dense(load.batch, cfg.dense_dim);
+    let lwts = recsys::runtime::golden_lwts(cfg.num_tables, load.batch, cfg.lookups);
+    let total_table_bytes = cfg.num_tables * rows * cfg.emb_dim * 4;
+
+    println!(
+        "sharded sweep: {} b{} | shards {:?} x cache {:?} x {} localities \
+         ({} warmup + {} measured iters)",
+        load.model,
+        load.batch,
+        shards_sweep,
+        cache_sweep,
+        localities().len(),
+        load.warmup,
+        load.iters
+    );
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut cache_tracking: Vec<Json> = Vec::new();
+    let mut capacity_split: Vec<Json> = Vec::new();
+    for &shards in shards_sweep {
+        for &cache_frac in cache_sweep {
+            let svc = ShardedEmbeddingService::new(
+                &cfg,
+                SEED,
+                ExecOptions { shards, cache_rows: cache_frac, ..Default::default() },
+            )?;
+            if cache_frac == 0.0 {
+                capacity_split.push(obj(vec![
+                    ("shards", num(svc.shards() as f64)),
+                    (
+                        "max_shard_bytes",
+                        num(svc.shard_bytes().iter().copied().max().unwrap_or(0) as f64),
+                    ),
+                    ("total_table_bytes", num(total_table_bytes as f64)),
+                    ("leader_param_bytes", num(svc.leader_param_bytes() as f64)),
+                ]));
+            }
+            for (loc_name, dist) in localities() {
+                svc.reset_stats();
+                // Pre-draw every iteration's ids (deterministic) so
+                // the timed loop measures serving only — generator
+                // cost differs across locality families and must not
+                // contaminate the latency comparison.
+                let mut gens = table_gens(dist, &cfg, rows);
+                let warm_ids: Vec<Vec<i32>> = (0..load.warmup)
+                    .map(|_| draw_ids(&mut gens, load.batch, cfg.lookups))
+                    .collect();
+                let timed_ids: Vec<Vec<i32>> = (0..load.iters)
+                    .map(|_| draw_ids(&mut gens, load.batch, cfg.lookups))
+                    .collect();
+                let mut arena = ScratchArena::new();
+                let mut conformance_ok = true;
+                // Warmup (cache fill) — iteration 0 doubles as the
+                // bitwise conformance check against single-node.
+                for (w, ids) in warm_ids.iter().enumerate() {
+                    let got = svc.run_rmc_into(&mut arena, &dense, ids, &lwts)?.to_vec();
+                    if w == 0 {
+                        let want = single.run_rmc(&dense, ids, &lwts)?;
+                        conformance_ok = want == got;
+                        assert!(
+                            conformance_ok,
+                            "{loc_name} shards={shards} cache={cache_frac}: sharded output \
+                             diverged from single-node"
+                        );
+                    }
+                }
+                let t0 = Instant::now();
+                for ids in &timed_ids {
+                    svc.run_rmc_into(&mut arena, &dense, ids, &lwts)?;
+                }
+                let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / load.iters as f64;
+                let stats = svc.stats();
+                let total_ns = stats.total_ns().max(1.0);
+
+                // Simulator prediction on the identical streams: each
+                // table's stream through an even split of the cache
+                // capacity (see EXPERIMENTS.md for the methodology).
+                let (measured_hit, predicted_hit) = if cache_frac > 0.0 {
+                    let per_table_lookups = (load.warmup + load.iters) * load.batch * cfg.lookups;
+                    let per_table_cap =
+                        (stats.cache_capacity_rows / cfg.num_tables).max(1);
+                    let mut acc = 0.0;
+                    for t in 0..cfg.num_tables {
+                        let mut gen = SparseIdGen::new(dist, rows, STREAM_SEED + t as u64);
+                        acc +=
+                            simulate_row_cache(&mut gen, per_table_cap, per_table_lookups).hit_rate;
+                    }
+                    (num(stats.hit_rate()), num(acc / cfg.num_tables as f64))
+                } else {
+                    (Json::Null, Json::Null)
+                };
+
+                println!(
+                    "{loc_name:<18} shards={} cache={:<4} -> {:>7.3} ms/iter | sls {:>4.1}% \
+                     gather {:>4.1}% mlp {:>4.1}%{}",
+                    svc.shards(),
+                    cache_frac,
+                    mean_ms,
+                    100.0 * stats.shard_sls_ns / total_ns,
+                    100.0 * stats.gather_ns / total_ns,
+                    100.0 * stats.leader_mlp_ns / total_ns,
+                    if cache_frac > 0.0 {
+                        format!(" | hit {:.3}", stats.hit_rate())
+                    } else {
+                        String::new()
+                    }
+                );
+                if cache_frac > 0.0 {
+                    if let (Json::Num(m), Json::Num(p)) = (&measured_hit, &predicted_hit) {
+                        cache_tracking.push(obj(vec![
+                            ("locality", Json::Str(loc_name.into())),
+                            ("shards", num(svc.shards() as f64)),
+                            ("cache_fraction", num(cache_frac)),
+                            ("measured_hit_rate", num(*m)),
+                            ("predicted_hit_rate", num(*p)),
+                            ("abs_err", num((m - p).abs())),
+                        ]));
+                    }
+                }
+                results.push(obj(vec![
+                    ("model", Json::Str(load.model.into())),
+                    ("locality", Json::Str(loc_name.into())),
+                    ("shards", num(svc.shards() as f64)),
+                    ("cache_fraction", num(cache_frac)),
+                    ("cache_capacity_rows", num(stats.cache_capacity_rows as f64)),
+                    ("batch", num(load.batch as f64)),
+                    ("warmup_iters", num(load.warmup as f64)),
+                    ("iters", num(load.iters as f64)),
+                    ("mean_ms", num(mean_ms)),
+                    ("shard_sls_pct", num(100.0 * stats.shard_sls_ns / total_ns)),
+                    ("gather_pct", num(100.0 * stats.gather_ns / total_ns)),
+                    ("leader_mlp_pct", num(100.0 * stats.leader_mlp_ns / total_ns)),
+                    ("measured_hit_rate", measured_hit),
+                    ("predicted_hit_rate", predicted_hit),
+                    ("rows_fetched", num(stats.rows_fetched as f64)),
+                    (
+                        "max_shard_bytes",
+                        num(svc.shard_bytes().iter().copied().max().unwrap_or(0) as f64),
+                    ),
+                    ("conformance_ok", Json::Bool(conformance_ok)),
+                ]));
+            }
+        }
+    }
+
+    let doc = obj(vec![
+        ("schema", Json::Str("bench_sharded/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            obj(vec![
+                ("model", Json::Str(load.model.into())),
+                ("batch", num(load.batch as f64)),
+                ("warmup_iters", num(load.warmup as f64)),
+                ("iters", num(load.iters as f64)),
+                ("rows_per_table", num(rows as f64)),
+                ("num_tables", num(cfg.num_tables as f64)),
+                ("lookups", num(cfg.lookups as f64)),
+                ("seed", num(SEED as f64)),
+                ("stream_seed", num(STREAM_SEED as f64)),
+            ]),
+        ),
+        (
+            "host",
+            obj(vec![(
+                "available_cores",
+                num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+            )]),
+        ),
+        ("results", Json::Arr(results)),
+        (
+            "summary",
+            obj(vec![
+                ("capacity_split", Json::Arr(capacity_split)),
+                ("cache_tracking", Json::Arr(cache_tracking)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty() + "\n")?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

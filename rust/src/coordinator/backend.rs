@@ -1,14 +1,18 @@
 //! Execution backends for the worker pool.
 
 use std::cell::RefCell;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::config::{ServerGen, ServerSpec};
 use crate::model::ModelGraph;
 #[cfg(feature = "pjrt")]
 use crate::runtime::ModelPool;
-use crate::runtime::{golden_lwts, Engine, ExecOptions, NativePool, ScratchArena};
+use crate::runtime::{
+    golden_lwts, Engine, ExecOptions, NativeModel, NativePool, ScratchArena,
+    ShardedEmbeddingService, ShardedStats,
+};
 use crate::simulator::MachineSim;
 use crate::util::Rng;
 use crate::workload::{Query, SparseIdGen};
@@ -96,9 +100,29 @@ pub(crate) fn marshal_inputs(
 /// W workers x `ExecOptions::threads` participants per batch. Each
 /// worker thread keeps its own `ScratchArena` (thread-local), so the
 /// steady-state request path performs no kernel-side heap allocations.
+///
+/// With `ExecOptions::sharded()` set (`serve --shards N --cache-rows
+/// F`), batches execute through a per-model `ShardedEmbeddingService`
+/// instead: table-sharded SLS executors own the embedding memory and
+/// the leader optionally fronts them with a hot-row cache. The service
+/// is bit-identical to single-node execution (the engine determinism
+/// contract extends across the shard channels), so routing, batching,
+/// and co-location behave exactly as before — only the placement of
+/// table bytes and the per-stage timing change.
+type SvcSlot = Arc<Mutex<Option<Arc<ShardedEmbeddingService>>>>;
+
 pub struct NativeBackend {
     pub pool: Arc<NativePool>,
-    engine: Engine,
+    /// Shared across workers AND across sharded services (their leader
+    /// dense stacks), so a multi-tenant mix never multiplies intra-op
+    /// thread pools.
+    engine: Arc<Engine>,
+    opts: ExecOptions,
+    /// Lazily-built sharded services, one per model (only populated
+    /// when `opts.sharded()`). Per-entry single-flight slots, same
+    /// discipline as `NativePool`: a slow model build never blocks
+    /// other models' serving.
+    sharded: Mutex<HashMap<String, SvcSlot>>,
 }
 
 impl NativeBackend {
@@ -107,13 +131,80 @@ impl NativeBackend {
         Self::with_options(pool, ExecOptions::default())
     }
 
-    /// Explicit engine configuration (`serve --threads N --engine ...`).
+    /// Explicit engine configuration (`serve --threads N --engine ...
+    /// --shards N --cache-rows F`).
     pub fn with_options(pool: Arc<NativePool>, opts: ExecOptions) -> Self {
-        NativeBackend { pool, engine: Engine::new(opts) }
+        NativeBackend {
+            pool,
+            engine: Arc::new(Engine::new(opts)),
+            opts,
+            sharded: Mutex::new(HashMap::new()),
+        }
     }
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// Warm the execution path for `model` ahead of traffic: the
+    /// sharded service when `opts.sharded()` (so the model pool never
+    /// holds a second, leader-resident copy of the tables), the native
+    /// pool otherwise.
+    pub fn preload(&self, model: &str) -> anyhow::Result<()> {
+        if self.opts.sharded() {
+            self.sharded_service(model).map(|_| ())
+        } else {
+            self.pool.preload(model)
+        }
+    }
+
+    /// Get (building on first use) the sharded service for `model`,
+    /// parameter-identical to the pool's single-node model (same
+    /// seed). Construction is single-flight on a per-entry mutex: the
+    /// first caller builds while holding its model's slot, concurrent
+    /// callers for the same model wait on it, and other models proceed
+    /// untouched.
+    fn sharded_service(&self, model: &str) -> anyhow::Result<Arc<ShardedEmbeddingService>> {
+        let slot = self
+            .sharded
+            .lock()
+            .unwrap()
+            .entry(model.to_string())
+            .or_default()
+            .clone();
+        let mut guard = slot.lock().unwrap();
+        if let Some(svc) = guard.as_ref() {
+            return Ok(svc.clone());
+        }
+        let svc = Arc::new(ShardedEmbeddingService::from_model_with_engine(
+            NativeModel::from_name(model, self.pool.seed())?,
+            self.opts,
+            self.engine.clone(),
+        )?);
+        *guard = Some(svc.clone());
+        Ok(svc)
+    }
+
+    /// Per-model sharded breakdown snapshots (model-name order), empty
+    /// when serving single-node. The serve CLI attaches this to the
+    /// `ServeReport`. Entries still mid-build are skipped (their stats
+    /// would be empty anyway).
+    pub fn sharded_breakdown(&self) -> Vec<(String, ShardedStats)> {
+        let slots: Vec<(String, SvcSlot)> = self
+            .sharded
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        let mut out: Vec<(String, ShardedStats)> = slots
+            .into_iter()
+            .filter_map(|(k, s)| {
+                s.try_lock().ok().and_then(|g| g.as_ref().map(|svc| (k, svc.stats())))
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 }
 
@@ -131,6 +222,31 @@ impl Backend for NativeBackend {
         queries: &[Query],
         _gen: ServerGen,
     ) -> anyhow::Result<Vec<Vec<f32>>> {
+        if self.opts.sharded() {
+            // Scale-out path: table-sharded executors + optional leader
+            // hot-row cache, bit-identical to the single-node branch
+            // below (prop-tested).
+            let svc = self.sharded_service(model)?;
+            let cfg = svc.cfg();
+            let inputs = marshal_inputs(
+                queries,
+                bucket,
+                cfg.num_tables,
+                cfg.lookups,
+                svc.rows(),
+                cfg.dense_dim,
+            );
+            return NATIVE_ARENA.with(|arena| {
+                let mut arena = arena.borrow_mut();
+                let ctrs =
+                    svc.run_rmc_into(&mut arena, &inputs.dense, &inputs.ids, &inputs.lwts)?;
+                Ok(queries
+                    .iter()
+                    .zip(&inputs.slots)
+                    .map(|(_, (s0, n))| ctrs[*s0..s0 + n].to_vec())
+                    .collect())
+            });
+        }
         let m = self.pool.get(model)?;
         let cfg = m.cfg();
         let inputs =
@@ -348,5 +464,41 @@ mod tests {
         let backend = NativeBackend::new(Arc::new(NativePool::new(0)));
         let q = vec![Query::new(1, "nope", 1, 0.0)];
         assert!(backend.execute("nope", 1, &q, ServerGen::Broadwell).is_err());
+        // The sharded path surfaces unknown models the same way.
+        let sharded = NativeBackend::with_options(
+            Arc::new(NativePool::new(0)),
+            ExecOptions { shards: 2, ..Default::default() },
+        );
+        assert!(sharded.execute("nope", 1, &q, ServerGen::Broadwell).is_err());
+    }
+
+    #[test]
+    fn native_backend_sharded_matches_single_node() {
+        // Served CTRs through the sharded service (with a warm-capable
+        // hot-row cache) are bit-identical to single-node execution —
+        // the backend-level face of the determinism contract.
+        let pool = Arc::new(NativePool::new(3));
+        let single = NativeBackend::new(pool.clone());
+        let sharded = NativeBackend::with_options(
+            pool,
+            ExecOptions { shards: 2, cache_rows: 0.05, ..Default::default() },
+        );
+        sharded.preload("rmc1-small").unwrap();
+        let queries =
+            vec![Query::new(5, "rmc1-small", 4, 0.0), Query::new(6, "rmc1-small", 3, 0.0)];
+        let a = single.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        let b = sharded.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        let c = sharded.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        assert_eq!(a, b, "cold sharded run must match single-node bitwise");
+        assert_eq!(a, c, "warm-cache sharded run must match single-node bitwise");
+        let breakdown = sharded.sharded_breakdown();
+        assert_eq!(breakdown.len(), 1);
+        let (model, s) = &breakdown[0];
+        assert_eq!(model, "rmc1-small");
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.shards, 2);
+        assert!(s.cache_hits > 0, "second identical batch must hit the row cache");
+        // Single-node serving never built a service.
+        assert!(single.sharded_breakdown().is_empty());
     }
 }

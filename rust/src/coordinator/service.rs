@@ -72,6 +72,12 @@ pub struct ServeReport {
     /// Per-tenant breakdown, model-name order. One entry per model that
     /// completed at least one query.
     pub per_tenant: Vec<TenantReport>,
+    /// Per-model sharded-execution breakdown (shard SLS / gather /
+    /// leader MLP / cache hit-rate), model-name order. Empty for
+    /// single-node serving; the serve CLI attaches it from
+    /// `NativeBackend::sharded_breakdown` after the run (the
+    /// coordinator itself is backend-agnostic).
+    pub sharded: Vec<(String, crate::runtime::ShardedStats)>,
 }
 
 impl ServeReport {
@@ -127,6 +133,29 @@ impl ServeReport {
                 ));
             }
         }
+        for (model, st) in &self.sharded {
+            if st.batches == 0 {
+                continue;
+            }
+            let total = st.total_ns().max(1.0);
+            s.push_str(&format!(
+                "sharded[{model}]: shards={} | shard-sls {:.1}% gather {:.1}% \
+                 leader-mlp {:.1}%",
+                st.shards,
+                100.0 * st.shard_sls_ns / total,
+                100.0 * st.gather_ns / total,
+                100.0 * st.leader_mlp_ns / total,
+            ));
+            if st.cache_capacity_rows > 0 {
+                s.push_str(&format!(
+                    " | cache {} rows, hit-rate {:.1}% ({} rows fetched)",
+                    st.cache_capacity_rows,
+                    100.0 * st.hit_rate(),
+                    st.rows_fetched
+                ));
+            }
+            s.push('\n');
+        }
         s.push_str("batch buckets: ");
         for (b, n) in &self.bucket_histogram {
             s.push_str(&format!("b{b}x{n} "));
@@ -160,6 +189,21 @@ impl ServeReport {
                         .iter()
                         .map(|(b, n)| {
                             obj(vec![("bucket", num(*b as f64)), ("batches", num(*n as f64))])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "sharded",
+                Json::Arr(
+                    self.sharded
+                        .iter()
+                        .map(|(model, st)| {
+                            let mut o = st.to_json();
+                            if let Json::Obj(m) = &mut o {
+                                m.insert("model".into(), Json::Str(model.clone()));
+                            }
+                            o
                         })
                         .collect(),
                 ),
@@ -451,6 +495,7 @@ impl Coordinator {
             p99_ms: pooled.p99(),
             bucket_histogram: buckets.into_iter().collect(),
             per_tenant,
+            sharded: Vec::new(),
         }
     }
 
@@ -597,12 +642,37 @@ mod tests {
         let cfg = deployment(1, "round-robin");
         let backend = Arc::new(MockBackend { latency: Duration::from_micros(100) });
         let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
-        let report = c.run_open_loop(queries(10, 5000.0), 50.0);
+        let mut report = c.run_open_loop(queries(10, 5000.0), 50.0);
         c.shutdown();
+        // Attach a sharded breakdown the way the serve CLI does.
+        report.sharded = vec![(
+            "rmc1-small".into(),
+            crate::runtime::ShardedStats {
+                shards: 2,
+                cache_capacity_rows: 100,
+                batches: 5,
+                shard_sls_ns: 1000.0,
+                gather_ns: 500.0,
+                leader_mlp_ns: 1500.0,
+                cache_hits: 30,
+                cache_misses: 10,
+                rows_fetched: 10,
+            },
+        )];
         let text = report.to_json().to_string_pretty();
         let v = Json::parse(&text).unwrap();
         assert_eq!(v.get("queries_completed").and_then(Json::as_usize), Some(10));
         assert_eq!(v.get("incomplete").and_then(Json::as_bool), Some(false));
         assert!(v.get("per_tenant").and_then(Json::as_arr).is_some());
+        let sharded = v.get("sharded").and_then(Json::as_arr).unwrap();
+        assert_eq!(sharded.len(), 1);
+        assert_eq!(sharded[0].get("model").and_then(Json::as_str), Some("rmc1-small"));
+        assert_eq!(sharded[0].get("shards").and_then(Json::as_usize), Some(2));
+        let hr = sharded[0].get("cache_hit_rate").and_then(Json::as_f64).unwrap();
+        assert!((hr - 0.75).abs() < 1e-9);
+        // The rendered table carries the per-stage percentages.
+        let rendered = report.render();
+        assert!(rendered.contains("sharded[rmc1-small]"), "{rendered}");
+        assert!(rendered.contains("hit-rate 75.0%"), "{rendered}");
     }
 }

@@ -8,6 +8,7 @@
 //!                [--json out.json]
 //!                [--impl native|xla|pallas] [--threads N]
 //!                [--engine optimized|reference]
+//!                [--shards N] [--cache-rows F]
 //!                                       end-to-end serving run (native
 //!                                       needs no artifacts; xla/pallas
 //!                                       need the `pjrt` feature).
@@ -27,7 +28,20 @@
 //!                                       parallelism per batch (0 = one
 //!                                       per core); --engine reference
 //!                                       serves on the naive baseline
-//!                                       kernels for A/B comparison
+//!                                       kernels for A/B comparison.
+//!                                       --shards N serves through the
+//!                                       real table-sharded embedding
+//!                                       service (per-shard executors
+//!                                       own the table memory; output
+//!                                       is bit-identical to
+//!                                       single-node); --cache-rows F
+//!                                       adds a leader hot-row cache
+//!                                       sized as that fraction of
+//!                                       table rows — the report then
+//!                                       carries the per-stage
+//!                                       shard-SLS/gather/leader-MLP
+//!                                       breakdown and measured cache
+//!                                       hit rates
 //!   recsys check                        numeric self-verification
 //!   recsys simulate --model M [--gen G] [--batch B] [--jobs N]
 //!                                       one simulator measurement
@@ -181,22 +195,36 @@ fn make_backend(
     models: &[String],
     impl_: &str,
     opts: ExecOptions,
-) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>)> {
+) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>, Option<Arc<NativeBackend>>)> {
     match impl_ {
         "native" => {
             println!(
-                "initializing native {models:?} (deterministic params, engine {}, {} thread(s)) ...",
+                "initializing native {models:?} (deterministic params, engine {}, {} thread(s){}) ...",
                 opts.engine.name(),
-                if opts.threads == 0 { "auto".to_string() } else { opts.threads.to_string() }
+                if opts.threads == 0 { "auto".to_string() } else { opts.threads.to_string() },
+                if opts.sharded() {
+                    format!(
+                        ", {} embedding shard(s), cache {} of rows",
+                        opts.shards, opts.cache_rows
+                    )
+                } else {
+                    String::new()
+                }
             );
             let pool = Arc::new(NativePool::new(0));
+            let native = Arc::new(NativeBackend::with_options(pool, opts));
             for model in models {
-                pool.preload(model)?;
+                // Sharded mode preloads the services (shard executors
+                // own the tables); single-node preloads the pool.
+                native.preload(model)?;
             }
-            let backend: Arc<dyn Backend> = Arc::new(NativeBackend::with_options(pool, opts));
-            Ok((backend, recsys::config::PJRT_BATCHES.to_vec()))
+            let backend: Arc<dyn Backend> = native.clone();
+            Ok((backend, recsys::config::PJRT_BATCHES.to_vec(), Some(native)))
         }
-        "xla" | "pallas" => make_pjrt_backend(models, impl_),
+        "xla" | "pallas" => {
+            let (backend, buckets) = make_pjrt_backend(models, impl_)?;
+            Ok((backend, buckets, None))
+        }
         other => anyhow::bail!("unknown --impl '{other}' (expected native, xla or pallas)"),
     }
 }
@@ -250,12 +278,29 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown --engine '{s}' (optimized|reference)"))?,
         None => EngineKind::Optimized,
     };
-    // --threads / --engine configure the native execution engine only;
-    // silently ignoring them on the PJRT path would corrupt A/B numbers.
-    if impl_ != "native" && (threads != 1 || engine != EngineKind::Optimized) {
+    let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let cache_rows: f64 =
+        flags.get("cache-rows").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cache_rows),
+        "--cache-rows is a fraction of table rows in [0, 1] (got {cache_rows})"
+    );
+    // --threads / --engine / --shards / --cache-rows configure the
+    // native execution engine only; silently ignoring them on the PJRT
+    // path would corrupt A/B numbers.
+    if impl_ != "native"
+        && (threads != 1 || engine != EngineKind::Optimized || shards != 1 || cache_rows != 0.0)
+    {
         anyhow::bail!(
-            "--threads/--engine apply to --impl native only (got --impl {impl_}); \
-             the PJRT path executes AOT artifacts as compiled"
+            "--threads/--engine/--shards/--cache-rows apply to --impl native only \
+             (got --impl {impl_}); the PJRT path executes AOT artifacts as compiled"
+        );
+    }
+    if engine == EngineKind::Reference && (shards != 1 || cache_rows != 0.0) {
+        anyhow::bail!(
+            "--shards/--cache-rows run the optimized leader stack; --engine reference \
+             is the single-node A/B baseline"
         );
     }
     anyhow::ensure!(
@@ -274,8 +319,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(spec) => TrafficMix::parse(spec)?,
         None => TrafficMix::single(&model, items),
     };
-    let opts = ExecOptions { threads, engine };
-    let (backend, buckets) = make_backend(&mix.models(), &impl_, opts)?;
+    let opts = ExecOptions { threads, engine, shards, cache_rows };
+    let (backend, buckets, native_backend) = make_backend(&mix.models(), &impl_, opts)?;
     // Only an explicit --mix opts into per-tenant batching (and its
     // SLA/4 flush-timeout cap); the single-model path keeps the
     // uniform batcher and whatever batch_timeout_us the config asked
@@ -302,7 +347,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         cfg.routing,
         mix.models()
     );
-    let report = coordinator.run_open_loop(queries, cfg.sla_ms);
+    let mut report = coordinator.run_open_loop(queries, cfg.sla_ms);
+    if let Some(nb) = &native_backend {
+        // Sharded serving: attach the per-model per-stage breakdown
+        // (empty vec for single-node, which renders nothing).
+        report.sharded = nb.sharded_breakdown();
+    }
     print!("{}", report.render());
     if let Some(path) = flags.get("json") {
         std::fs::write(path, report.to_json().to_string_pretty() + "\n")?;

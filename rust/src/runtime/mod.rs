@@ -7,6 +7,12 @@
 //!   (packed-weight GEMM + scratch arenas + intra-op thread pool).
 //! * `parallel` — the crate-internal worker thread pool (std-only rayon
 //!   stand-in) the optimized engine shards operators over.
+//! * `sharded` — the scale-out topology: table-sharded SLS across
+//!   thread-pinned shard executors that *own* their table slices, a
+//!   fan-out/gather leader running the dense stack, and an optional
+//!   hot-row cache (`row_cache`) that short-circuits remote lookups —
+//!   measured counterparts of `simulator::{distributed,
+//!   embedding_cache}`.
 //! * `executor`/`pool` (feature `pjrt`) — loads the AOT artifacts
 //!   (`artifacts/manifest.json` + HLO text + params blob) produced by
 //!   `make artifacts`, stages model parameters as device buffers ONCE,
@@ -24,6 +30,8 @@ mod native;
 mod parallel;
 #[cfg(feature = "pjrt")]
 mod pool;
+mod row_cache;
+mod sharded;
 
 pub use artifacts::{InputSpec, Manifest, ParamSpec, VariantSpec};
 #[cfg(feature = "pjrt")]
@@ -36,6 +44,8 @@ pub use native::{
 pub use parallel::{shard_range, ThreadPool};
 #[cfg(feature = "pjrt")]
 pub use pool::ModelPool;
+pub use row_cache::{row_key, EmbeddingCache};
+pub use sharded::{ShardedEmbeddingService, ShardedStats};
 
 /// Default artifacts directory relative to the crate root.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

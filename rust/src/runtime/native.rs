@@ -169,6 +169,21 @@ pub fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
+/// The SLS inner accumulation step — `acc += w * row`, ascending
+/// element order — shared by every pooled-reduction site on the
+/// optimized path: single-node tiles (`sls_tiles`), shard executors,
+/// and the leader's cache-path pooling (`runtime::sharded`). Keeping
+/// all three loops on this one function makes the bitwise determinism
+/// contract structural: reassociating this sum (SIMD, FMA, unrolling)
+/// would break sharded-vs-single-node bit-identity everywhere at once,
+/// not silently in one copy.
+#[inline(always)]
+pub(crate) fn sls_axpy(acc: &mut [f32], w: f32, row: &[f32]) {
+    for (a, &rv) in acc.iter_mut().zip(row) {
+        *a += w * rv;
+    }
+}
+
 // ===================================================================
 // Execution engine: options, thread pool handle, scratch arenas, and
 // the packed-weight kernels.
@@ -201,7 +216,8 @@ impl EngineKind {
 }
 
 /// Execution-engine configuration, surfaced through `NativeBackend` and
-/// `serve --threads N --engine reference|optimized`.
+/// `serve --threads N --engine reference|optimized --shards N
+/// --cache-rows F`.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecOptions {
     /// Intra-op participants per operator, caller included (0 = one per
@@ -210,11 +226,28 @@ pub struct ExecOptions {
     /// raise it to trade cores for per-batch latency.
     pub threads: usize,
     pub engine: EngineKind,
+    /// Table-wise embedding shard executors (`runtime::sharded`). `1`
+    /// keeps SLS in-process on the leader; `> 1` moves each shard's
+    /// table slice onto its own thread (the per-node capacity win is
+    /// real — the leader no longer owns the tables).
+    pub shards: usize,
+    /// Leader-side hot-row cache capacity as a fraction of total table
+    /// rows (`0.0` disables the cache). Any positive value routes
+    /// execution through the sharded service even at `shards == 1`.
+    pub cache_rows: f64,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { threads: 1, engine: EngineKind::Optimized }
+        ExecOptions { threads: 1, engine: EngineKind::Optimized, shards: 1, cache_rows: 0.0 }
+    }
+}
+
+impl ExecOptions {
+    /// True when execution must go through the sharded embedding
+    /// service (table-sharded SLS and/or the leader hot-row cache).
+    pub fn sharded(&self) -> bool {
+        self.shards > 1 || self.cache_rows > 0.0
     }
 }
 
@@ -240,7 +273,7 @@ impl Engine {
 
     /// Serial optimized engine (what plain `run_rmc` uses).
     pub fn serial() -> Self {
-        Engine::new(ExecOptions { threads: 1, engine: EngineKind::Optimized })
+        Engine::new(ExecOptions::default())
     }
 
     pub fn kind(&self) -> EngineKind {
@@ -271,11 +304,11 @@ fn serial_engine() -> &'static Engine {
 /// fresh batch (property-tested in `tests/prop_invariants.rs`).
 #[derive(Debug, Default)]
 pub struct ScratchArena {
-    ping: Vec<f32>,
-    pong: Vec<f32>,
-    emb: Vec<f32>,
-    z: Vec<f32>,
-    out: Vec<f32>,
+    pub(crate) ping: Vec<f32>,
+    pub(crate) pong: Vec<f32>,
+    pub(crate) emb: Vec<f32>,
+    pub(crate) z: Vec<f32>,
+    pub(crate) out: Vec<f32>,
 }
 
 impl ScratchArena {
@@ -507,6 +540,10 @@ pub struct NativeModel {
     bottom_packed: Vec<PackedLayer>,
     top_packed: Vec<PackedLayer>,
     tables: Vec<Vec<f32>>,
+    /// True once `take_tables` moved the embedding tables out (the
+    /// model then serves as a sharded service's leader: MLPs +
+    /// interaction only; its own SLS path refuses to run).
+    tables_stripped: bool,
     /// Widest activation (dense in, any MLP width, interaction width) —
     /// sizes the arena's ping-pong buffers.
     max_act_width: usize,
@@ -560,6 +597,7 @@ impl NativeModel {
             bottom_packed,
             top_packed,
             tables,
+            tables_stripped: false,
             max_act_width,
         }
     }
@@ -616,8 +654,25 @@ impl NativeModel {
         gathered * row_bytes + io + pooled
     }
 
+    /// Move the embedding tables out (table index order preserved),
+    /// leaving this model as a sharded service's *leader*: bottom/top
+    /// MLPs, interaction, and CTR head only. The move is what makes the
+    /// sharded capacity win real — after this, only the shard executors
+    /// hold table memory, and `param_bytes` shrinks to the MLP weights.
+    /// The stripped model's own forward pass refuses to run (its SLS
+    /// would index empty tables).
+    pub(crate) fn take_tables(&mut self) -> Vec<Vec<f32>> {
+        self.tables_stripped = true;
+        std::mem::take(&mut self.tables)
+    }
+
     /// Validate input shapes; returns the batch size.
-    fn validate(&self, dense: &[f32], ids: &[i32], lwts: &[f32]) -> anyhow::Result<usize> {
+    pub(crate) fn validate(
+        &self,
+        dense: &[f32],
+        ids: &[i32],
+        lwts: &[f32],
+    ) -> anyhow::Result<usize> {
         let d = self.cfg.dense_dim;
         if dense.is_empty() || dense.len() % d != 0 {
             bail!("dense length {} not a positive multiple of dense_dim {d}", dense.len());
@@ -703,6 +758,13 @@ impl NativeModel {
         lwts: &[f32],
         stats: Option<&mut ForwardStats>,
     ) -> anyhow::Result<()> {
+        if self.tables_stripped {
+            bail!(
+                "{}: embedding tables were moved into a ShardedEmbeddingService; \
+                 run inference through the service, not the leader model",
+                self.cfg.name
+            );
+        }
         match engine.kind() {
             EngineKind::Reference => self.forward_reference(arena, dense, ids, lwts, stats),
             EngineKind::Optimized => self.forward_optimized(engine, arena, dense, ids, lwts, stats),
@@ -804,7 +866,11 @@ impl NativeModel {
         Ok(())
     }
 
-    /// The production path: packed kernels, arena reuse, intra-op shards.
+    /// The production path: packed kernels, arena reuse, intra-op
+    /// shards. Split into phase helpers (`ensure_forward_buffers`,
+    /// `bottom_mlp_into`, `prescan_ids`, `interact_and_top`) so the
+    /// sharded embedding service can run the identical leader stack
+    /// around remotely-gathered pooled embeddings.
     fn forward_optimized(
         &self,
         engine: &Engine,
@@ -815,69 +881,128 @@ impl NativeModel {
         mut stats: Option<&mut ForwardStats>,
     ) -> anyhow::Result<()> {
         let batch = dense.len() / self.cfg.dense_dim;
-        let (t, l, emb) = (self.cfg.num_tables, self.cfg.lookups, self.cfg.emb_dim);
-        let zdim = self.cfg.top_input_dim();
-
-        ensure_len(&mut arena.ping, batch * self.max_act_width);
-        ensure_len(&mut arena.pong, batch * self.max_act_width);
-        ensure_len(&mut arena.emb, t * batch * emb);
-        ensure_len(&mut arena.z, batch * zdim);
-        ensure_len(&mut arena.out, batch);
+        self.ensure_forward_buffers(arena, batch);
 
         let mut t0 = Instant::now();
 
         // Bottom MLP: ping-pong through the arena.
-        arena.ping[..dense.len()].copy_from_slice(dense);
-        let in_ping =
-            mlp_ping_pong(engine, &self.bottom_packed, &mut arena.ping, &mut arena.pong, batch);
+        let in_ping = self.bottom_mlp_into(engine, arena, dense, batch);
         if let Some(s) = stats.as_mut() {
             s.bottom_ns += t0.elapsed().as_nanos() as f64;
         }
         t0 = Instant::now();
 
-        // SLS phase. First a serial prescan validates sparse ids so the
-        // sharded kernels can never index out of bounds (weight-0
-        // padding lookups are exempt, matching the reference kernel's
-        // contract); it reads a tiny fraction of what the gathers
-        // stream, and counting it here keeps sls_ns honest.
-        let per_table = batch * l;
-        if per_table > 0 {
-            for (ti, (tids, twts)) in
-                ids.chunks(per_table).zip(lwts.chunks(per_table)).enumerate()
-            {
-                for (&id, &w) in tids.iter().zip(twts) {
-                    if w != 0.0 && (id < 0 || id as usize >= self.rows) {
-                        bail!("sls id {id} out of range for table {ti} ({} rows)", self.rows);
-                    }
-                }
-            }
-        }
-
-        // Gathers sharded over (table x batch) tiles. The flat tile
-        // index q = table * batch + sample maps 1:1 onto both the
-        // (T, B, L) input layout and the (T, B, E) pooled-output
-        // layout, so shard ranges are contiguous in all three buffers.
-        let flat = t * batch;
-        if flat > 0 {
-            let shards = engine.threads().min(flat).max(1);
-            let embp = SendPtr(arena.emb.as_mut_ptr());
-            engine.pool().run(shards, |sh| {
-                let (q0, q1) = shard_range(flat, shards, sh);
-                if q0 == q1 {
-                    return;
-                }
-                // SAFETY: tile ranges are disjoint; tile q exclusively
-                // owns emb[q*emb .. (q+1)*emb].
-                let out = unsafe {
-                    std::slice::from_raw_parts_mut(embp.0.add(q0 * emb), (q1 - q0) * emb)
-                };
-                self.sls_tiles(ids, lwts, batch, q0, out);
-            });
-        }
+        // SLS phase. The serial prescan validates sparse ids so the
+        // sharded kernels can never index out of bounds; it reads a
+        // tiny fraction of what the gathers stream, and counting it
+        // here keeps sls_ns honest.
+        self.prescan_ids(ids, lwts, batch)?;
+        self.sls_into_arena(engine, arena, ids, lwts, batch);
         if let Some(s) = stats.as_mut() {
             s.sls_ns += t0.elapsed().as_nanos() as f64;
         }
-        t0 = Instant::now();
+
+        // Feature interaction + top MLP + CTR head.
+        self.interact_and_top(engine, arena, in_ping, batch, stats);
+        Ok(())
+    }
+
+    /// Size every arena buffer for a `batch`-sample forward pass.
+    pub(crate) fn ensure_forward_buffers(&self, arena: &mut ScratchArena, batch: usize) {
+        let (t, emb) = (self.cfg.num_tables, self.cfg.emb_dim);
+        ensure_len(&mut arena.ping, batch * self.max_act_width);
+        ensure_len(&mut arena.pong, batch * self.max_act_width);
+        ensure_len(&mut arena.emb, t * batch * emb);
+        ensure_len(&mut arena.z, batch * self.cfg.top_input_dim());
+        ensure_len(&mut arena.out, batch);
+    }
+
+    /// Bottom MLP through the arena's ping/pong pair (input copied into
+    /// `ping`); returns true iff the tower output landed in `ping`.
+    /// Buffers must already be sized (`ensure_forward_buffers`).
+    pub(crate) fn bottom_mlp_into(
+        &self,
+        engine: &Engine,
+        arena: &mut ScratchArena,
+        dense: &[f32],
+        batch: usize,
+    ) -> bool {
+        arena.ping[..dense.len()].copy_from_slice(dense);
+        mlp_ping_pong(engine, &self.bottom_packed, &mut arena.ping, &mut arena.pong, batch)
+    }
+
+    /// Serial prescan: every weighted lookup id must be a valid row
+    /// index (weight-0 padding lookups are exempt, matching the
+    /// reference kernel's contract), so downstream gathers — local
+    /// tiles or remote shard executors — can never index out of bounds.
+    pub(crate) fn prescan_ids(
+        &self,
+        ids: &[i32],
+        lwts: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<()> {
+        let per_table = batch * self.cfg.lookups;
+        if per_table == 0 {
+            return Ok(());
+        }
+        for (ti, (tids, twts)) in ids.chunks(per_table).zip(lwts.chunks(per_table)).enumerate() {
+            for (&id, &w) in tids.iter().zip(twts) {
+                if w != 0.0 && (id < 0 || id as usize >= self.rows) {
+                    bail!("sls id {id} out of range for table {ti} ({} rows)", self.rows);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Local SLS: gathers sharded over (table x batch) tiles into
+    /// `arena.emb`. The flat tile index q = table * batch + sample maps
+    /// 1:1 onto both the (T, B, L) input layout and the (T, B, E)
+    /// pooled-output layout, so shard ranges are contiguous in all
+    /// three buffers.
+    fn sls_into_arena(
+        &self,
+        engine: &Engine,
+        arena: &mut ScratchArena,
+        ids: &[i32],
+        lwts: &[f32],
+        batch: usize,
+    ) {
+        let (t, emb) = (self.cfg.num_tables, self.cfg.emb_dim);
+        let flat = t * batch;
+        if flat == 0 {
+            return;
+        }
+        let shards = engine.threads().min(flat).max(1);
+        let embp = SendPtr(arena.emb.as_mut_ptr());
+        engine.pool().run(shards, |sh| {
+            let (q0, q1) = shard_range(flat, shards, sh);
+            if q0 == q1 {
+                return;
+            }
+            // SAFETY: tile ranges are disjoint; tile q exclusively
+            // owns emb[q*emb .. (q+1)*emb].
+            let out =
+                unsafe { std::slice::from_raw_parts_mut(embp.0.add(q0 * emb), (q1 - q0) * emb) };
+            self.sls_tiles(ids, lwts, batch, q0, out);
+        });
+    }
+
+    /// Feature interaction (bottom-tower output + the (T, B, E) pooled
+    /// block already in `arena.emb`) followed by the top MLP and the
+    /// sigmoid CTR head into `arena.out`. `in_ping` says where
+    /// `bottom_mlp_into` left the tower output.
+    pub(crate) fn interact_and_top(
+        &self,
+        engine: &Engine,
+        arena: &mut ScratchArena,
+        in_ping: bool,
+        batch: usize,
+        mut stats: Option<&mut ForwardStats>,
+    ) {
+        let (t, emb) = (self.cfg.num_tables, self.cfg.emb_dim);
+        let zdim = self.cfg.top_input_dim();
+        let mut t0 = Instant::now();
 
         // Feature interaction: concat bottom output + per-table vectors.
         let bo = *self.cfg.bottom_mlp.last().expect("bottom MLP must be non-empty");
@@ -917,7 +1042,6 @@ impl NativeModel {
         if let Some(s) = stats.as_mut() {
             s.top_ns += t0.elapsed().as_nanos() as f64;
         }
-        Ok(())
     }
 
     /// SLS gather-sum for the contiguous tile range starting at flat
@@ -938,10 +1062,7 @@ impl NativeModel {
                     continue;
                 }
                 let start = ids[base + li] as usize * emb;
-                let row = &table[start..start + emb];
-                for (a, &rv) in acc.iter_mut().zip(row) {
-                    *a += w * rv;
-                }
+                sls_axpy(acc, w, &table[start..start + emb]);
             }
         }
     }
@@ -989,6 +1110,13 @@ impl NativePool {
     /// Build a model ahead of traffic (warm start).
     pub fn preload(&self, name: &str) -> anyhow::Result<()> {
         self.get(name).map(|_| ())
+    }
+
+    /// The parameter seed every model in this pool is initialized with
+    /// (a sharded service built for the same (model, seed) is
+    /// parameter-identical, hence bitwise-comparable).
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     /// How many models have been constructed (not just requested).
@@ -1176,7 +1304,11 @@ mod tests {
         let cfg = tiny_cfg();
         let m = NativeModel::new(&cfg, 9);
         let (dense, ids, lwts) = tiny_inputs(&cfg, 6);
-        let reference = Engine::new(ExecOptions { threads: 1, engine: EngineKind::Reference });
+        let reference = Engine::new(ExecOptions {
+            threads: 1,
+            engine: EngineKind::Reference,
+            ..Default::default()
+        });
         let mut arena = ScratchArena::new();
         let a = m.run_rmc_with(&reference, &mut arena, &dense, &ids, &lwts).unwrap();
         let b = m.run_rmc(&dense, &ids, &lwts).unwrap();
@@ -1193,7 +1325,7 @@ mod tests {
         let (dense, ids, lwts) = tiny_inputs(&cfg, 7);
         let serial = m.run_rmc(&dense, &ids, &lwts).unwrap();
         for threads in [2usize, 4, 8] {
-            let engine = Engine::new(ExecOptions { threads, engine: EngineKind::Optimized });
+            let engine = Engine::new(ExecOptions { threads, ..Default::default() });
             let mut arena = ScratchArena::new();
             let par = m.run_rmc_with(&engine, &mut arena, &dense, &ids, &lwts).unwrap();
             assert_eq!(serial, par, "threads={threads} must be bit-identical to serial");
@@ -1275,6 +1407,22 @@ mod tests {
         let live = m.sls_traffic_bytes(&[1.0, 1.0, 0.5, 1.0, 1.0, 1.0]);
         let padded = m.sls_traffic_bytes(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
         assert!(live > padded, "padding lookups must not count as gathers");
+    }
+
+    #[test]
+    fn stripped_model_refuses_to_run() {
+        // take_tables turns the model into a sharded leader: the tables
+        // are really gone (capacity win), and the local SLS path must
+        // fail loudly instead of indexing empty tables.
+        let cfg = tiny_cfg();
+        let mut m = NativeModel::new(&cfg, 1);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 2);
+        let tables = m.take_tables();
+        assert_eq!(tables.len(), cfg.num_tables);
+        assert_eq!(tables[0].len(), cfg.pjrt_rows * cfg.emb_dim);
+        assert!(m.run_rmc(&dense, &ids, &lwts).is_err(), "stripped model must refuse");
+        // The leader footprint is MLP-only once the tables moved out.
+        assert_eq!(m.param_bytes(), 4 * cfg.fc_params() as usize);
     }
 
     #[test]

@@ -1,0 +1,723 @@
+//! Sharded embedding service — *measured* scale-out inference (paper
+//! §VII's "distributed inference" direction, grounded in Lui et al.'s
+//! capacity-driven scale-out study): RMC2-class tables exceed one
+//! node's DRAM comfort zone, so production shards embedding tables
+//! table-wise across nodes; a leader fans SLS requests out, shards
+//! compute pooled partials over the tables they own, and the leader
+//! runs the dense/interaction/top-MLP stack on the gathered vectors.
+//!
+//! This module is the real-execution counterpart of
+//! `simulator::distributed`: N in-process shard executors, each pinned
+//! to its own thread and *owning* its table slice (`NativeModel::
+//! take_tables` moves the rows out of the leader, so the per-node
+//! capacity split is real memory, not a modeled number), with channel
+//! fan-out/gather standing in for the network. An optional hot-row
+//! [`EmbeddingCache`] on the leader (`runtime::row_cache`) short-
+//! circuits remote lookups for hot rows — viable exactly because of
+//! the paper's Fig-14 locality spectrum — and reports measured hit
+//! rates next to `simulator::embedding_cache`'s predictions.
+//!
+//! # Determinism contract
+//!
+//! A sharded run is bit-identical to the single-node `run_rmc` at any
+//! shard count, with or without the cache (enforced by
+//! `tests/prop_invariants.rs`):
+//!
+//! * Tables are partitioned whole — a per-row pooled reduction never
+//!   crosses a shard boundary, and within each (table, sample) tile
+//!   every executor accumulates in ascending lookup order, exactly
+//!   like the single-node `sls_tiles` kernel.
+//! * A cache hit returns a byte-exact copy of the row the shard would
+//!   have gathered, and the leader's cache-path pooling runs the same
+//!   ascending-lookup f32 accumulation — so caching changes *where*
+//!   bytes come from, never which bytes are summed or in what order.
+//! * The leader's bottom/interaction/top stack is the single-node
+//!   optimized engine itself (`bottom_mlp_into` / `interact_and_top`),
+//!   which is bit-stable in its thread count by the engine contract.
+//!
+//! Overlap: the leader computes the bottom MLP while shards gather, so
+//! scale-out latency hides the dense tower behind the SLS fan-out.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure};
+
+use super::native::{sls_axpy, Engine, EngineKind, ExecOptions, NativeModel, ScratchArena};
+use super::parallel::shard_range;
+use super::row_cache::{row_key, EmbeddingCache};
+use crate::config::RmcConfig;
+use crate::util::json::{num, obj};
+use crate::util::Json;
+
+/// Cumulative per-stage breakdown of a service's lifetime (snapshot via
+/// [`ShardedEmbeddingService::stats`]); the measured analogue of
+/// `simulator::distributed::ShardedResult`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardedStats {
+    /// Shard executors (config, filled on snapshot).
+    pub shards: usize,
+    /// Hot-row cache capacity in rows (0 = cache disabled).
+    pub cache_capacity_rows: usize,
+    /// Forward passes served.
+    pub batches: u64,
+    /// Sum over batches of the *slowest* shard's gather/pool compute
+    /// time (the critical-path shard, like the simulator's
+    /// `shard_sls_ms`).
+    pub shard_sls_ns: f64,
+    /// Leader-side fan-out serialization, result copy/pooling, and
+    /// non-overlapped wait slack — the stand-in for the simulator's
+    /// `network_ms`. Disjoint from `shard_sls_ns`: the portion of the
+    /// reply wait that is just the critical-path shard still computing
+    /// (beyond what the bottom MLP overlapped) is charged to the shard,
+    /// not double-counted here.
+    pub gather_ns: f64,
+    /// Leader bottom-MLP + interaction + top-MLP + CTR head time.
+    pub leader_mlp_ns: f64,
+    /// Hot-row cache lookups that short-circuited a remote fetch.
+    pub cache_hits: u64,
+    /// Weighted lookups that needed their row from a shard.
+    pub cache_misses: u64,
+    /// Rows actually shipped leader <- shards (deduplicated per batch).
+    pub rows_fetched: u64,
+}
+
+impl ShardedStats {
+    pub fn total_ns(&self) -> f64 {
+        self.shard_sls_ns + self.gather_ns + self.leader_mlp_ns
+    }
+
+    /// Cache hit rate over weighted lookups (0 when no cache traffic).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.cache_hits as f64, self.cache_misses as f64);
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+
+    /// Machine-readable form (serve --json / benches/sharded.rs).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("shards", num(self.shards as f64)),
+            ("cache_capacity_rows", num(self.cache_capacity_rows as f64)),
+            ("batches", num(self.batches as f64)),
+            ("shard_sls_ns", num(self.shard_sls_ns)),
+            ("gather_ns", num(self.gather_ns)),
+            ("leader_mlp_ns", num(self.leader_mlp_ns)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("cache_misses", num(self.cache_misses as f64)),
+            ("cache_hit_rate", num(self.hit_rate())),
+            ("rows_fetched", num(self.rows_fetched as f64)),
+        ])
+    }
+}
+
+/// Tables owned by one shard executor (moved out of the leader model).
+struct ShardTables {
+    /// Global index of the first owned table.
+    t0: usize,
+    tables: Vec<Vec<f32>>,
+    emb_dim: usize,
+    lookups: usize,
+}
+
+/// One fan-out request. Ids/weights arrive pre-sliced to the shard's
+/// own table range, laid out (owned_tables, B, L) row-major.
+enum ShardJob {
+    /// Pool every owned table's lookups; reply with the
+    /// (owned_tables, B, E) pooled block.
+    Pool { ids: Vec<i32>, lwts: Vec<f32>, batch: usize, reply: mpsc::Sender<PoolReply> },
+    /// Fetch raw rows for cache-miss fills; reply rows in request
+    /// order, `emb_dim` floats each.
+    Rows { wants: Vec<(usize, i32)>, reply: mpsc::Sender<RowsReply> },
+}
+
+struct PoolReply {
+    pooled: Vec<f32>,
+    compute_ns: u64,
+}
+
+struct RowsReply {
+    rows: Vec<f32>,
+    compute_ns: u64,
+}
+
+/// Shard executor loop: owns its table slice for the service's
+/// lifetime; exits when the leader drops its sender.
+fn shard_loop(st: ShardTables, rx: mpsc::Receiver<ShardJob>) {
+    let emb = st.emb_dim;
+    while let Ok(job) = rx.recv() {
+        match job {
+            ShardJob::Pool { ids, lwts, batch, reply } => {
+                let t0c = Instant::now();
+                let l = st.lookups;
+                let mut pooled = vec![0.0f32; st.tables.len() * batch * emb];
+                for (ti, table) in st.tables.iter().enumerate() {
+                    for s in 0..batch {
+                        let q = ti * batch + s;
+                        let acc = &mut pooled[q * emb..(q + 1) * emb];
+                        let base = q * l;
+                        // Ascending-lookup accumulation through the
+                        // shared sls_axpy step — byte-for-byte the
+                        // single-node sls_tiles reduction (ids are
+                        // leader-prescanned, so indexing is in-bounds).
+                        for li in 0..l {
+                            let w = lwts[base + li];
+                            if w == 0.0 {
+                                continue;
+                            }
+                            let start = ids[base + li] as usize * emb;
+                            sls_axpy(acc, w, &table[start..start + emb]);
+                        }
+                    }
+                }
+                let _ = reply
+                    .send(PoolReply { pooled, compute_ns: t0c.elapsed().as_nanos() as u64 });
+            }
+            ShardJob::Rows { wants, reply } => {
+                let t0c = Instant::now();
+                let mut rows = vec![0.0f32; wants.len() * emb];
+                for (k, (t, id)) in wants.iter().enumerate() {
+                    let table = &st.tables[*t - st.t0];
+                    let start = *id as usize * emb;
+                    rows[k * emb..(k + 1) * emb].copy_from_slice(&table[start..start + emb]);
+                }
+                let _ =
+                    reply.send(RowsReply { rows, compute_ns: t0c.elapsed().as_nanos() as u64 });
+            }
+        }
+    }
+}
+
+/// Table-sharded SLS execution with an optional leader hot-row cache;
+/// see the module docs for topology and the determinism contract.
+pub struct ShardedEmbeddingService {
+    /// MLPs + interaction only — `take_tables` moved the rows out.
+    leader: NativeModel,
+    /// Leader intra-op engine for the dense stack (shared with the
+    /// owning backend when co-located services would otherwise
+    /// multiply thread pools).
+    engine: Arc<Engine>,
+    senders: Vec<mpsc::Sender<ShardJob>>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    /// Global table range [lo, hi) per shard.
+    ranges: Vec<(usize, usize)>,
+    /// Owned embedding bytes per shard (the measured capacity split).
+    shard_bytes: Vec<usize>,
+    /// Shard index serving each global table.
+    table_shard: Vec<usize>,
+    cache: Option<EmbeddingCache>,
+    stats: Mutex<ShardedStats>,
+}
+
+impl ShardedEmbeddingService {
+    /// Build the (cfg, seed) model — parameter-identical to
+    /// `NativeModel::new(cfg, seed)` — and partition its tables across
+    /// `opts.shards` executors. `opts.cache_rows > 0` adds the leader
+    /// hot-row cache sized as that fraction of total table rows.
+    pub fn new(cfg: &RmcConfig, seed: u64, opts: ExecOptions) -> anyhow::Result<Self> {
+        Self::from_model(NativeModel::new(cfg, seed), opts)
+    }
+
+    /// Build by preset name (`config::all_rmc`).
+    pub fn from_name(name: &str, seed: u64, opts: ExecOptions) -> anyhow::Result<Self> {
+        Self::from_model(NativeModel::from_name(name, seed)?, opts)
+    }
+
+    /// Consume a built model: move its tables out to the shard
+    /// executors and keep the MLP stack as the leader (the service
+    /// spawns its own leader engine; see `from_model_with_engine` to
+    /// share one).
+    pub fn from_model(model: NativeModel, opts: ExecOptions) -> anyhow::Result<Self> {
+        let engine =
+            Arc::new(Engine::new(ExecOptions { threads: opts.threads, ..Default::default() }));
+        Self::from_model_with_engine(model, opts, engine)
+    }
+
+    /// Like `from_model` but running the leader's dense stack on an
+    /// already-constructed engine — `NativeBackend` passes its own, so
+    /// a multi-tenant mix of sharded services contends on one intra-op
+    /// pool instead of spawning one per model.
+    pub fn from_model_with_engine(
+        mut model: NativeModel,
+        opts: ExecOptions,
+        engine: Arc<Engine>,
+    ) -> anyhow::Result<Self> {
+        ensure!(
+            opts.engine == EngineKind::Optimized,
+            "the sharded service runs the optimized leader stack; \
+             --engine reference is a single-node A/B baseline"
+        );
+        ensure!(
+            engine.kind() == EngineKind::Optimized,
+            "the sharded leader stack requires an optimized engine"
+        );
+        ensure!(opts.shards >= 1, "need at least one shard executor");
+        ensure!(
+            (0.0..=1.0).contains(&opts.cache_rows),
+            "--cache-rows is a fraction of table rows (got {})",
+            opts.cache_rows
+        );
+        let cfg = model.cfg().clone();
+        ensure!(cfg.num_tables > 0, "{}: no embedding tables to shard", cfg.name);
+        let rows = model.rows();
+        // More shards than tables would leave executors with nothing to
+        // own; clamp (table-wise partitioning is the unit of scale-out).
+        let shards = opts.shards.min(cfg.num_tables);
+
+        let mut table_iter = model.take_tables().into_iter();
+        let mut senders = Vec::with_capacity(shards);
+        let mut joins = Vec::with_capacity(shards);
+        let mut ranges = Vec::with_capacity(shards);
+        let mut shard_bytes = Vec::with_capacity(shards);
+        let mut table_shard = vec![0usize; cfg.num_tables];
+        for i in 0..shards {
+            let (lo, hi) = shard_range(cfg.num_tables, shards, i);
+            let own: Vec<Vec<f32>> =
+                (lo..hi).map(|_| table_iter.next().expect("table count")).collect();
+            shard_bytes.push(own.iter().map(|t| t.len() * 4).sum());
+            table_shard[lo..hi].fill(i);
+            ranges.push((lo, hi));
+            let st =
+                ShardTables { t0: lo, tables: own, emb_dim: cfg.emb_dim, lookups: cfg.lookups };
+            let (tx, rx) = mpsc::channel();
+            let join = std::thread::Builder::new()
+                .name(format!("emb-shard-{i}"))
+                .spawn(move || shard_loop(st, rx))
+                .expect("spawn shard executor");
+            senders.push(tx);
+            joins.push(join);
+        }
+
+        let cache = if opts.cache_rows > 0.0 {
+            let total_rows = cfg.num_tables * rows;
+            let cap = ((total_rows as f64 * opts.cache_rows) as usize).max(16);
+            Some(EmbeddingCache::new(cap, cfg.emb_dim))
+        } else {
+            None
+        };
+        Ok(ShardedEmbeddingService {
+            leader: model,
+            engine,
+            senders,
+            joins,
+            ranges,
+            shard_bytes,
+            table_shard,
+            cache,
+            stats: Mutex::new(ShardedStats::default()),
+        })
+    }
+
+    pub fn cfg(&self) -> &RmcConfig {
+        self.leader.cfg()
+    }
+
+    /// Rows materialized per embedding table.
+    pub fn rows(&self) -> usize {
+        self.leader.rows()
+    }
+
+    /// Shard executors actually running (post table-count clamp).
+    pub fn shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Global table range [lo, hi) owned by each shard.
+    pub fn shard_table_ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Embedding bytes owned by each shard — the per-node capacity the
+    /// leader no longer pays.
+    pub fn shard_bytes(&self) -> &[usize] {
+        &self.shard_bytes
+    }
+
+    /// Leader-resident parameter bytes (MLPs only; tables moved out).
+    pub fn leader_param_bytes(&self) -> usize {
+        self.leader.param_bytes()
+    }
+
+    pub fn cache(&self) -> Option<&EmbeddingCache> {
+        self.cache.as_ref()
+    }
+
+    /// Snapshot of the cumulative per-stage breakdown.
+    pub fn stats(&self) -> ShardedStats {
+        let mut s = *self.stats.lock().unwrap();
+        s.shards = self.shards();
+        s.cache_capacity_rows = self.cache.as_ref().map_or(0, |c| c.capacity_rows());
+        s
+    }
+
+    /// Zero the breakdown and drop cached rows (bench hygiene between
+    /// sweep points).
+    pub fn reset_stats(&self) {
+        *self.stats.lock().unwrap() = ShardedStats::default();
+        if let Some(c) = &self.cache {
+            c.clear();
+        }
+    }
+
+    /// Forward pass through the sharded topology with a thread-local
+    /// scratch arena. Input layout matches `NativeModel::run_rmc`:
+    /// dense (B, Dd), ids (T, B, L), lwts (T, B, L), row-major.
+    pub fn run_rmc(&self, dense: &[f32], ids: &[i32], lwts: &[f32]) -> anyhow::Result<Vec<f32>> {
+        thread_local! {
+            static SCRATCH: RefCell<ScratchArena> = RefCell::new(ScratchArena::new());
+        }
+        SCRATCH.with(|s| {
+            let mut arena = s.borrow_mut();
+            self.run_rmc_into(&mut arena, dense, ids, lwts).map(|o| o.to_vec())
+        })
+    }
+
+    /// Allocation-lean forward pass: the returned CTR slice borrows the
+    /// arena (valid until the arena's next use).
+    pub fn run_rmc_into<'a>(
+        &self,
+        arena: &'a mut ScratchArena,
+        dense: &[f32],
+        ids: &[i32],
+        lwts: &[f32],
+    ) -> anyhow::Result<&'a [f32]> {
+        let batch = self.leader.validate(dense, ids, lwts)?;
+        // Prescan on the leader: shard executors then gather
+        // unconditionally (an out-of-range id never crosses a channel).
+        self.leader.prescan_ids(ids, lwts, batch)?;
+        self.leader.ensure_forward_buffers(arena, batch);
+
+        let emb = self.cfg().emb_dim;
+        let per_table = batch * self.cfg().lookups;
+        let mut delta = ShardedStats::default();
+
+        // --- fan out ---------------------------------------------------
+        let t_fan = Instant::now();
+        let pending = match &self.cache {
+            None => self.fan_out_pooled(ids, lwts, batch, per_table)?,
+            Some(cache) => self.fan_out_cached(cache, ids, lwts, batch, per_table, &mut delta)?,
+        };
+        delta.gather_ns += t_fan.elapsed().as_nanos() as f64;
+
+        // --- leader bottom MLP overlaps the shard gathers --------------
+        let t_mlp = Instant::now();
+        let in_ping = self.leader.bottom_mlp_into(&self.engine, arena, dense, batch);
+        let bottom_ns = t_mlp.elapsed().as_nanos() as f64;
+        delta.leader_mlp_ns += bottom_ns;
+
+        // --- gather ----------------------------------------------------
+        let t_gather = Instant::now();
+        let mut max_shard_ns = 0u64;
+        match pending {
+            Pending::Pooled(rxs) => {
+                for (i, rx) in rxs.into_iter().enumerate() {
+                    let reply = rx
+                        .recv()
+                        .map_err(|_| anyhow!("embedding shard {i} died mid-request"))?;
+                    let (lo, hi) = self.ranges[i];
+                    arena.emb[lo * batch * emb..hi * batch * emb]
+                        .copy_from_slice(&reply.pooled);
+                    max_shard_ns = max_shard_ns.max(reply.compute_ns);
+                }
+            }
+            Pending::Rows { mut rowmap, requests } => {
+                for req in requests {
+                    let reply = req.reply_rx.recv().map_err(|_| {
+                        anyhow!("embedding shard {} died mid-request", req.shard)
+                    })?;
+                    let cache = self.cache.as_ref().expect("cache mode");
+                    for (k, (t, id)) in req.wants.iter().enumerate() {
+                        let row = &reply.rows[k * emb..(k + 1) * emb];
+                        let key = row_key(*t, *id as u32);
+                        cache.insert(key, row);
+                        rowmap.insert(key, row.to_vec());
+                    }
+                    delta.rows_fetched += req.wants.len() as u64;
+                    max_shard_ns = max_shard_ns.max(reply.compute_ns);
+                }
+                // Leader-side pooling from resolved rows — the same
+                // ascending-lookup sls_axpy accumulation as sls_tiles,
+                // so cached execution stays bit-identical.
+                for t in 0..self.cfg().num_tables {
+                    for s in 0..batch {
+                        let q = t * batch + s;
+                        let acc = &mut arena.emb[q * emb..(q + 1) * emb];
+                        acc.fill(0.0);
+                        let base = q * self.cfg().lookups;
+                        for li in 0..self.cfg().lookups {
+                            let w = lwts[base + li];
+                            if w == 0.0 {
+                                continue;
+                            }
+                            let key = row_key(t, ids[base + li] as u32);
+                            let row = &rowmap[&key];
+                            // A leftover empty placeholder would pool
+                            // zeros silently; every queued want must
+                            // have been resolved by the fetch loop.
+                            debug_assert_eq!(row.len(), emb, "unresolved cache miss pooled");
+                            sls_axpy(acc, w, row);
+                        }
+                    }
+                }
+            }
+        }
+        delta.shard_sls_ns += max_shard_ns as f64;
+        // Keep gather disjoint from shard compute (the simulator keeps
+        // shard_sls_ms and network_ms disjoint the same way): the part
+        // of the reply wait where the critical-path shard was still
+        // computing — beyond what the bottom MLP already overlapped —
+        // is shard time, not fan-out/gather overhead.
+        let gather_elapsed = t_gather.elapsed().as_nanos() as f64;
+        let waited_on_compute = (max_shard_ns as f64 - bottom_ns).clamp(0.0, gather_elapsed);
+        delta.gather_ns += gather_elapsed - waited_on_compute;
+
+        // --- leader interaction + top MLP + CTR head -------------------
+        let t_top = Instant::now();
+        self.leader.interact_and_top(&self.engine, arena, in_ping, batch, None);
+        delta.leader_mlp_ns += t_top.elapsed().as_nanos() as f64;
+
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.batches += 1;
+            s.shard_sls_ns += delta.shard_sls_ns;
+            s.gather_ns += delta.gather_ns;
+            s.leader_mlp_ns += delta.leader_mlp_ns;
+            s.cache_hits += delta.cache_hits;
+            s.cache_misses += delta.cache_misses;
+            s.rows_fetched += delta.rows_fetched;
+        }
+        Ok(&arena.out[..batch])
+    }
+
+    /// Cache-off fan-out: every shard pools its own tables remotely.
+    fn fan_out_pooled(
+        &self,
+        ids: &[i32],
+        lwts: &[f32],
+        batch: usize,
+        per_table: usize,
+    ) -> anyhow::Result<Pending> {
+        let mut rxs = Vec::with_capacity(self.senders.len());
+        for (i, tx) in self.senders.iter().enumerate() {
+            let (lo, hi) = self.ranges[i];
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(ShardJob::Pool {
+                ids: ids[lo * per_table..hi * per_table].to_vec(),
+                lwts: lwts[lo * per_table..hi * per_table].to_vec(),
+                batch,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("embedding shard {i} died"))?;
+            rxs.push(reply_rx);
+        }
+        Ok(Pending::Pooled(rxs))
+    }
+
+    /// Cache-on fan-out: probe the hot-row cache per weighted lookup in
+    /// sequential order (a row missed earlier in the batch counts as a
+    /// hit on re-encounter, matching the simulator's probe-then-insert
+    /// stream), then request only the missing rows from their shards.
+    fn fan_out_cached(
+        &self,
+        cache: &EmbeddingCache,
+        ids: &[i32],
+        lwts: &[f32],
+        batch: usize,
+        per_table: usize,
+        delta: &mut ShardedStats,
+    ) -> anyhow::Result<Pending> {
+        let emb = self.cfg().emb_dim;
+        let mut rowmap: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut wants: Vec<Vec<(usize, i32)>> = vec![Vec::new(); self.senders.len()];
+        let mut rowbuf = vec![0.0f32; emb];
+        for t in 0..self.cfg().num_tables {
+            let shard = self.table_shard[t];
+            let base_t = t * per_table;
+            for (&id, &w) in
+                ids[base_t..base_t + per_table].iter().zip(&lwts[base_t..base_t + per_table])
+            {
+                if w == 0.0 {
+                    continue;
+                }
+                let key = row_key(t, id as u32);
+                if rowmap.contains_key(&key) {
+                    // Resolved earlier in this batch (cache hit, or a
+                    // miss already queued): sequentially it would be
+                    // resident by now.
+                    delta.cache_hits += 1;
+                } else if cache.probe_into(key, &mut rowbuf) {
+                    delta.cache_hits += 1;
+                    rowmap.insert(key, rowbuf.clone());
+                } else {
+                    delta.cache_misses += 1;
+                    wants[shard].push((t, id));
+                    // Placeholder marks the fetch as queued; the gather
+                    // overwrites it with the shard's bytes.
+                    rowmap.insert(key, Vec::new());
+                }
+            }
+        }
+        let mut requests = Vec::new();
+        for (i, want) in wants.into_iter().enumerate() {
+            if want.is_empty() {
+                continue;
+            }
+            let (reply_tx, reply_rx) = mpsc::channel();
+            self.senders[i]
+                .send(ShardJob::Rows { wants: want.clone(), reply: reply_tx })
+                .map_err(|_| anyhow!("embedding shard {i} died"))?;
+            requests.push(RowsRequest { shard: i, wants: want, reply_rx });
+        }
+        Ok(Pending::Rows { rowmap, requests })
+    }
+}
+
+/// One outstanding cache-miss row fetch (cache-mode fan-out).
+struct RowsRequest {
+    shard: usize,
+    wants: Vec<(usize, i32)>,
+    reply_rx: mpsc::Receiver<RowsReply>,
+}
+
+/// In-flight fan-out state between send and gather.
+enum Pending {
+    Pooled(Vec<mpsc::Receiver<PoolReply>>),
+    Rows { rowmap: HashMap<u64, Vec<f32>>, requests: Vec<RowsRequest> },
+}
+
+impl Drop for ShardedEmbeddingService {
+    fn drop(&mut self) {
+        // Closing the channels ends each executor loop.
+        self.senders.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelClass;
+
+    fn tiny_cfg() -> RmcConfig {
+        RmcConfig {
+            name: "tiny".into(),
+            class: ModelClass::Rmc1,
+            dense_dim: 4,
+            bottom_mlp: vec![8, 4],
+            top_mlp: vec![8],
+            num_tables: 3,
+            rows: 60,
+            pjrt_rows: 60,
+            emb_dim: 4,
+            lookups: 5,
+        }
+    }
+
+    fn tiny_inputs(cfg: &RmcConfig, batch: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        (
+            super::super::golden_dense(batch, cfg.dense_dim),
+            super::super::golden_ids(cfg.num_tables, batch, cfg.lookups, cfg.pjrt_rows),
+            super::super::golden_lwts(cfg.num_tables, batch, cfg.lookups),
+        )
+    }
+
+    fn opts(shards: usize, cache_rows: f64) -> ExecOptions {
+        ExecOptions { shards, cache_rows, ..Default::default() }
+    }
+
+    #[test]
+    fn sharded_matches_single_node_bitwise() {
+        let cfg = tiny_cfg();
+        let single = NativeModel::new(&cfg, 7);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 6);
+        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+        for shards in [1usize, 2, 3, 5] {
+            let svc = ShardedEmbeddingService::new(&cfg, 7, opts(shards, 0.0)).unwrap();
+            assert_eq!(svc.shards(), shards.min(cfg.num_tables), "table-count clamp");
+            let got = svc.run_rmc(&dense, &ids, &lwts).unwrap();
+            assert_eq!(want, got, "shards={shards} diverged from single-node");
+        }
+    }
+
+    #[test]
+    fn cache_mode_is_bitwise_identical_and_hits_on_reuse() {
+        let cfg = tiny_cfg();
+        let single = NativeModel::new(&cfg, 9);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 4);
+        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+        let svc = ShardedEmbeddingService::new(&cfg, 9, opts(2, 0.5)).unwrap();
+        let cold = svc.run_rmc(&dense, &ids, &lwts).unwrap();
+        let warm = svc.run_rmc(&dense, &ids, &lwts).unwrap();
+        assert_eq!(want, cold, "cold cache diverged");
+        assert_eq!(want, warm, "warm cache diverged");
+        let s = svc.stats();
+        assert_eq!(s.batches, 2);
+        assert!(s.cache_hits > 0, "repeat batch must hit: {s:?}");
+        // The repeat batch's rows were all resolved leader-side.
+        assert!(s.rows_fetched <= s.cache_misses, "fetches are deduplicated misses");
+    }
+
+    #[test]
+    fn capacity_split_is_real_and_covers_the_model() {
+        let cfg = tiny_cfg();
+        let svc = ShardedEmbeddingService::new(&cfg, 1, opts(2, 0.0)).unwrap();
+        let table_bytes = cfg.pjrt_rows * cfg.emb_dim * 4;
+        assert_eq!(svc.shard_bytes().iter().sum::<usize>(), cfg.num_tables * table_bytes);
+        // 3 tables over 2 shards: 2 + 1.
+        assert_eq!(svc.shard_bytes(), &[2 * table_bytes, table_bytes]);
+        assert_eq!(svc.shard_table_ranges(), &[(0, 2), (2, 3)]);
+        // The leader really let go of the rows.
+        assert_eq!(svc.leader_param_bytes(), 4 * cfg.fc_params() as usize);
+    }
+
+    #[test]
+    fn stats_accumulate_per_stage() {
+        let cfg = tiny_cfg();
+        let svc = ShardedEmbeddingService::new(&cfg, 3, opts(2, 0.0)).unwrap();
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 2);
+        svc.run_rmc(&dense, &ids, &lwts).unwrap();
+        let s = svc.stats();
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.shards, 2);
+        assert_eq!(s.cache_capacity_rows, 0);
+        assert!(s.gather_ns > 0.0 && s.leader_mlp_ns > 0.0);
+        assert_eq!(s.cache_hits + s.cache_misses, 0, "no cache traffic when disabled");
+        svc.reset_stats();
+        assert_eq!(svc.stats().batches, 0);
+    }
+
+    #[test]
+    fn rejects_bad_options_and_inputs() {
+        let cfg = tiny_cfg();
+        assert!(
+            ShardedEmbeddingService::new(&cfg, 0, opts(0, 0.0)).is_err(),
+            "zero shards"
+        );
+        assert!(
+            ShardedEmbeddingService::new(&cfg, 0, opts(2, 1.5)).is_err(),
+            "cache fraction > 1"
+        );
+        assert!(
+            ShardedEmbeddingService::new(
+                &cfg,
+                0,
+                ExecOptions { engine: EngineKind::Reference, shards: 2, ..Default::default() }
+            )
+            .is_err(),
+            "reference engine"
+        );
+        let svc = ShardedEmbeddingService::new(&cfg, 0, opts(2, 0.0)).unwrap();
+        let (dense, mut ids, lwts) = tiny_inputs(&cfg, 2);
+        assert!(svc.run_rmc(&dense[..3], &ids, &lwts).is_err(), "ragged dense");
+        ids[0] = cfg.pjrt_rows as i32 + 1;
+        assert!(svc.run_rmc(&dense, &ids, &lwts).is_err(), "oob id caught on the leader");
+        assert!(ShardedEmbeddingService::from_name("nope", 0, opts(2, 0.0)).is_err());
+    }
+}

@@ -43,6 +43,12 @@ pub struct SparseIdGen {
     /// see EXPERIMENTS.md §Perf). Monotone in u; interpolation error is
     /// immaterial for workload popularity modeling.
     zipf_table: Vec<f64>,
+    /// Trace hot-set size, hoisted to construction: `next_id` used to
+    /// recompute `(rows * hot_fraction) as u64` from floats on every
+    /// sample. The value is a pure function of (rows, hot_fraction), so
+    /// hoisting cannot change the stream (pinned by
+    /// `trace_stream_golden_values`). Zero for non-Trace distributions.
+    hot_rows: u64,
 }
 
 const ZIPF_TABLE: usize = 1024;
@@ -66,7 +72,13 @@ impl SparseIdGen {
                 })
                 .collect();
         }
-        SparseIdGen { dist, rows, rng: Rng::seed_from_u64(seed), zipf_table }
+        let hot_rows = match dist {
+            IdDistribution::Trace { hot_fraction, .. } => {
+                ((rows as f64 * hot_fraction) as u64).max(1)
+            }
+            _ => 0,
+        };
+        SparseIdGen { dist, rows, rng: Rng::seed_from_u64(seed), zipf_table, hot_rows }
     }
 
     /// The paper's default: production popularity is power-law; s ~= 1.05
@@ -93,10 +105,9 @@ impl SparseIdGen {
                 // ~25% of sampling cost).
                 reduce(scatter(rank), self.rows) as u32
             }
-            IdDistribution::Trace { hot_fraction, hot_prob } => {
-                let hot_rows = ((self.rows as f64 * hot_fraction) as u64).max(1);
+            IdDistribution::Trace { hot_prob, .. } => {
                 if self.rng.gen_bool(hot_prob) {
-                    let r = self.rng.gen_range(hot_rows);
+                    let r = self.rng.gen_range(self.hot_rows);
                     reduce(scatter(r), self.rows) as u32
                 } else {
                     self.rng.gen_range(self.rows as u64) as u32
@@ -197,6 +208,55 @@ mod tests {
         assert_eq!(unique_fraction(&[]), 0.0);
         assert_eq!(unique_fraction(&[1, 1, 1, 1]), 0.25);
         assert_eq!(unique_fraction(&[1, 2, 3, 4]), 1.0);
+    }
+
+    #[test]
+    fn trace_stream_golden_values() {
+        // Regression pin for the hot_rows hoist: the first samples of
+        // every distribution arm must stay bit-for-bit what they were
+        // when hot_rows was recomputed per sample (values captured from
+        // the pre-hoist implementation; the Trace arms are the ones the
+        // hoist touches, the others pin the shared Rng plumbing).
+        let rows = 1_000_000;
+        let mut g = SparseIdGen::new(
+            IdDistribution::Trace { hot_fraction: 0.001, hot_prob: 0.9 },
+            rows,
+            42,
+        );
+        assert_eq!(
+            g.gen_lookups(12),
+            [
+                317431, 701135, 82212, 688479, 187157, 282332, 325468, 154098, 730590,
+                121399, 786344, 678234
+            ],
+            "trace(0.001, 0.9) seed 42 stream drifted"
+        );
+        let mut g = SparseIdGen::new(
+            IdDistribution::Trace { hot_fraction: 0.02, hot_prob: 0.5 },
+            rows,
+            7,
+        );
+        assert_eq!(
+            g.gen_lookups(12),
+            [
+                850426, 427209, 465703, 329839, 73283, 348446, 113085, 72917, 766480,
+                456175, 416650, 530866
+            ],
+            "trace(0.02, 0.5) seed 7 stream drifted"
+        );
+        // (No Zipf golden: its inverse-CDF table goes through powf,
+        // whose last-ulp rounding is libm-specific — the hoist doesn't
+        // touch that arm, and `deterministic_given_seed` already covers
+        // its within-platform stability.)
+        let mut g = SparseIdGen::new(IdDistribution::Uniform, rows, 42);
+        assert_eq!(
+            g.gen_lookups(12),
+            [
+                814305, 318821, 983894, 701135, 793504, 588098, 125352, 605122, 207717,
+                933347, 559539, 850029
+            ],
+            "uniform seed 42 stream drifted"
+        );
     }
 
     #[test]

@@ -110,7 +110,7 @@ fn native_serving_with_intra_op_parallelism() {
     pool.preload("rmc1-small").unwrap();
     let backend = Arc::new(NativeBackend::with_options(
         pool,
-        ExecOptions { threads: 2, engine: EngineKind::Optimized },
+        ExecOptions { threads: 2, ..Default::default() },
     ));
     let cfg = deployment(2, "least-loaded", 100.0);
     let mut c = Coordinator::new(&cfg, backend, PJRT_BATCHES.to_vec()).unwrap();
@@ -128,7 +128,7 @@ fn native_serving_reference_engine_still_serves() {
     pool.preload("rmc1-small").unwrap();
     let backend = Arc::new(NativeBackend::with_options(
         pool,
-        ExecOptions { threads: 1, engine: EngineKind::Reference },
+        ExecOptions { threads: 1, engine: EngineKind::Reference, ..Default::default() },
     ));
     let cfg = deployment(1, "round-robin", 200.0);
     let mut c = Coordinator::new(&cfg, backend, PJRT_BATCHES.to_vec()).unwrap();
@@ -195,6 +195,56 @@ fn multi_tenant_dedicated_partition_serving() {
     assert_eq!(report.per_tenant.len(), 2);
     for t in &report.per_tenant {
         assert!(t.p99_ms.is_finite(), "{}: a batch failed on its partition", t.model);
+    }
+}
+
+#[test]
+fn multi_tenant_sharded_backend_serving() {
+    // ISSUE 4 satellite: a multi-tenant --mix through the *sharded*
+    // backend — table-sharded SLS executors + leader hot-row cache —
+    // composes with PR 3's co-location path. Every query completes on
+    // the shared pool, per-tenant reports stay honest (slices cover the
+    // run, completed == offered), and each tenant's service actually
+    // served batches through shards and cache.
+    let pool = Arc::new(NativePool::new(0));
+    let backend = Arc::new(NativeBackend::with_options(
+        pool,
+        ExecOptions { shards: 2, cache_rows: 0.05, ..Default::default() },
+    ));
+    backend.preload("rmc1-small").unwrap();
+    backend.preload("rmc3-small").unwrap();
+    let cfg = deployment(2, "least-loaded", 200.0);
+    let mix = TrafficMix::parse("rmc1-small:0.6,rmc3-small:0.4").unwrap();
+    let mut c =
+        Coordinator::new_with_mix(&cfg, backend.clone(), PJRT_BATCHES.to_vec(), &mix).unwrap();
+    let report = c.run_open_loop(mix.generate(80, 250.0, 17), 200.0);
+    c.shutdown();
+
+    assert_eq!(report.queries, 80, "every query must complete through the sharded backend");
+    assert!(!report.incomplete);
+    assert_eq!(report.items, report.items_offered, "completion accounting must stay honest");
+    assert_eq!(report.per_tenant.len(), 2, "one slice per tenant");
+    let (mut tq, mut ti) = (0u64, 0u64);
+    for t in &report.per_tenant {
+        assert!(t.queries > 0, "{}: starved", t.model);
+        assert!(t.p99_ms.is_finite(), "{}: a sharded batch failed", t.model);
+        tq += t.queries;
+        ti += t.items;
+    }
+    assert_eq!(tq, report.queries, "tenant slices must cover the run");
+    assert_eq!(ti, report.items);
+
+    let breakdown = backend.sharded_breakdown();
+    assert_eq!(breakdown.len(), 2, "one sharded service per tenant model");
+    for (model, s) in &breakdown {
+        assert!(s.batches > 0, "{model}: service saw no batches");
+        assert_eq!(s.shards, 2, "{model}: expected 2 shard executors");
+        assert!(s.cache_capacity_rows > 0, "{model}: cache must be sized");
+        assert!(
+            s.cache_hits + s.cache_misses > 0,
+            "{model}: cache must have seen lookup traffic"
+        );
+        assert!(s.gather_ns > 0.0 && s.leader_mlp_ns > 0.0, "{model}: empty breakdown");
     }
 }
 

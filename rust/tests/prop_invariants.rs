@@ -11,7 +11,7 @@ use recsys::coordinator::{DynamicBatcher, RoutingPolicy, WorkerInfo};
 use recsys::metrics::LatencyHistogram;
 use recsys::runtime::{
     golden_dense, golden_ids, golden_lwts, Engine, EngineKind, ExecOptions, NativeModel,
-    ScratchArena,
+    ScratchArena, ShardedEmbeddingService,
 };
 use recsys::simulator::{Cache, SharedMemorySystem};
 use recsys::util::prop::{check, f64_in, pick, usize_in};
@@ -237,7 +237,7 @@ fn prop_parallel_serial_bit_identical_all_presets() {
     let serial = Engine::serial();
     let engines: Vec<Engine> = [2usize, 4, 8]
         .into_iter()
-        .map(|threads| Engine::new(ExecOptions { threads, engine: EngineKind::Optimized }))
+        .map(|threads| Engine::new(ExecOptions { threads, ..Default::default() }))
         .collect();
     for cfg in recsys::config::all_rmc() {
         let m = NativeModel::new(&cfg, 13);
@@ -258,7 +258,7 @@ fn prop_parallel_serial_bit_identical_batch_buckets() {
     let cfg = recsys::config::rmc1_small();
     let m = NativeModel::new(&cfg, 7);
     let serial = Engine::serial();
-    let par = Engine::new(ExecOptions { threads: 4, engine: EngineKind::Optimized });
+    let par = Engine::new(ExecOptions { threads: 4, ..Default::default() });
     let mut a1 = ScratchArena::new();
     let mut a2 = ScratchArena::new();
     for &batch in PJRT_BATCHES.iter() {
@@ -276,8 +276,8 @@ fn prop_parallel_serial_bit_identical_random_batches() {
     let cfg = recsys::config::rmc1_small();
     let m = NativeModel::new(&cfg, 3);
     let serial = Engine::serial();
-    let par2 = Engine::new(ExecOptions { threads: 2, engine: EngineKind::Optimized });
-    let par8 = Engine::new(ExecOptions { threads: 8, engine: EngineKind::Optimized });
+    let par2 = Engine::new(ExecOptions { threads: 2, ..Default::default() });
+    let par8 = Engine::new(ExecOptions { threads: 8, ..Default::default() });
     let mut arena = ScratchArena::new();
     check("engine-bit-equivalence", 10, |rng, _| {
         let batch = usize_in(rng, 1, 17);
@@ -298,7 +298,7 @@ fn prop_padding_invariance_survives_arena_reuse() {
     // Stale scratch must never leak into a fresh batch.
     let cfg = recsys::config::rmc1_small();
     let m = NativeModel::new(&cfg, 21);
-    let par = Engine::new(ExecOptions { threads: 4, engine: EngineKind::Optimized });
+    let par = Engine::new(ExecOptions { threads: 4, ..Default::default() });
     let mut arena = ScratchArena::new();
     let (dense32, ids32, lwts32) = rmc_inputs(&cfg, 32);
     m.run_rmc_with(&par, &mut arena, &dense32, &ids32, &lwts32).unwrap();
@@ -331,7 +331,11 @@ fn prop_reference_and_optimized_agree() {
     // to tight tolerance sample-by-sample.
     let cfg = recsys::config::rmc1_small();
     let m = NativeModel::new(&cfg, 9);
-    let reference = Engine::new(ExecOptions { threads: 1, engine: EngineKind::Reference });
+    let reference = Engine::new(ExecOptions {
+        threads: 1,
+        engine: EngineKind::Reference,
+        ..Default::default()
+    });
     let mut arena = ScratchArena::new();
     let (dense, ids, lwts) = rmc_inputs(&cfg, 8);
     let a = m.run_rmc_with(&reference, &mut arena, &dense, &ids, &lwts).unwrap();
@@ -353,7 +357,7 @@ fn prop_multi_tenant_shared_engine_determinism() {
     let m1 = NativeModel::new(&cfg1, 13);
     let m2 = NativeModel::new(&cfg2, 13);
     let serial = Engine::serial();
-    let shared = Engine::new(ExecOptions { threads: 4, engine: EngineKind::Optimized });
+    let shared = Engine::new(ExecOptions { threads: 4, ..Default::default() });
     let batches = [1usize, 8, 32];
 
     // Serial goldens, fresh arena per run.
@@ -383,6 +387,83 @@ fn prop_multi_tenant_shared_engine_determinism() {
                     "{} b{batch} diverged under shared-engine interleaving (round {round})",
                     cfg.name
                 );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- sharded exec --
+#[test]
+fn prop_sharded_conformance_bitwise_across_presets() {
+    // The scale-out determinism contract (ISSUE 4 / DESIGN.md §2): for
+    // every model preset, shard counts {1, 2, 4}, with and without the
+    // leader hot-row cache, the ShardedEmbeddingService output is
+    // bitwise-equal to single-node run_rmc — on deterministic batch
+    // sizes, on randomized batch sizes, and on a repeated batch (warm
+    // cache, rows served from the leader instead of the shards).
+    // Small presets keep tier-1 (debug-mode) model-build time sane
+    // while still covering all three RMC classes.
+    for cfg in [
+        recsys::config::rmc1_small(),
+        recsys::config::rmc2_small(),
+        recsys::config::rmc3_small(),
+    ] {
+        let single = NativeModel::new(&cfg, 31);
+        for shards in [1usize, 2, 4] {
+            for cache_rows in [0.0f64, 0.05] {
+                let svc = ShardedEmbeddingService::new(
+                    &cfg,
+                    31,
+                    ExecOptions { shards, cache_rows, ..Default::default() },
+                )
+                .unwrap();
+                let mut arena = ScratchArena::new();
+                for &batch in &[1usize, 3, 8] {
+                    let (dense, ids, lwts) = rmc_inputs(&cfg, batch);
+                    let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+                    let got = svc.run_rmc_into(&mut arena, &dense, &ids, &lwts).unwrap();
+                    assert_eq!(
+                        want.as_slice(),
+                        got,
+                        "{} shards={shards} cache={cache_rows} b{batch} diverged",
+                        cfg.name
+                    );
+                }
+                // Randomized batch sizes through the same (reused)
+                // arena and (warm) cache.
+                check("sharded-conformance", 4, |rng, _| {
+                    let batch = usize_in(rng, 1, 13);
+                    let (dense, ids, lwts) = rmc_inputs(&cfg, batch);
+                    let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+                    let got = svc.run_rmc_into(&mut arena, &dense, &ids, &lwts).unwrap();
+                    assert_eq!(
+                        want.as_slice(),
+                        got,
+                        "{} shards={shards} cache={cache_rows} random b{batch} diverged",
+                        cfg.name
+                    );
+                });
+                // Repeat one batch: with the cache enabled every row is
+                // now leader-resident — bits must not move.
+                let (dense, ids, lwts) = rmc_inputs(&cfg, 8);
+                let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+                for round in 0..2 {
+                    let got = svc.run_rmc_into(&mut arena, &dense, &ids, &lwts).unwrap();
+                    assert_eq!(
+                        want.as_slice(),
+                        got,
+                        "{} shards={shards} cache={cache_rows} warm round {round} diverged",
+                        cfg.name
+                    );
+                }
+                if cache_rows > 0.0 {
+                    let stats = svc.stats();
+                    assert!(
+                        stats.cache_hits > 0,
+                        "{} shards={shards}: warm repeats must hit the row cache",
+                        cfg.name
+                    );
+                }
             }
         }
     }
