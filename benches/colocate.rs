@@ -68,8 +68,9 @@ fn run_once(
         ExecOptions { threads, ..Default::default() },
     ));
     let mut c = Coordinator::new_with_mix(&cfg, backend, PJRT_BATCHES.to_vec(), mix)?;
-    let queries = mix.generate(load.queries, load.qps, 99);
-    let report = c.run_open_loop(queries, load.sla_ms);
+    // Streaming schedule: the open-loop client paces straight off the
+    // iterator (O(1) queries in memory at any run length).
+    let report = c.run_open_loop(mix.stream(load.queries, load.qps, 99), load.sla_ms);
     c.shutdown();
     Ok(report)
 }

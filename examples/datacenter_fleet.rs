@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig, ServerSpec};
-use recsys::coordinator::{Coordinator, SimBackend};
+use recsys::coordinator::{Coordinator, ServerBuilder, SimBackend};
 use recsys::fleet::FleetModel;
 use recsys::workload::{PoissonArrivals, Query};
 
@@ -68,17 +68,22 @@ fn main() -> anyhow::Result<()> {
         "policy", "items/s", "p50 ms", "p99 ms", "viol%"
     );
     for policy in ["round-robin", "least-loaded", "heterogeneity"] {
-        let mut cfg = base.clone();
-        cfg.routing = policy.into();
-        let mut c = Coordinator::new(&cfg, backend.clone(), vec![1, 8, 32, 128])?;
+        // Every knob lands on one validated builder; the simulated-
+        // latency backend slots in like any other.
+        let server = ServerBuilder::new()
+            .deployment(&base)
+            .routing(policy)
+            .backend(backend.clone())
+            .buckets(vec![1, 8, 32, 128])
+            .build()?;
+        let mut c = Coordinator::from_server(server);
+        // Streaming mixed load: 70% small + 30% large, paced lazily.
         let mut arr = PoissonArrivals::new(800.0, 9);
-        let queries: Vec<Query> = (0..1200u64)
-            .map(|i| {
-                let items = if i % 10 < 7 { 2 } else { 64 };
-                Query::new(i, "rmc1-small", items, arr.next_arrival_s())
-            })
-            .collect();
-        let r = c.run_open_loop(queries, cfg.sla_ms);
+        let queries = (0..1200u64).map(move |i| {
+            let items = if i % 10 < 7 { 2 } else { 64 };
+            Query::new(i, "rmc1-small", items, arr.next_arrival_s())
+        });
+        let r = c.run_open_loop(queries, base.sla_ms);
         println!(
             "{:<16} {:>12.0} {:>10.2} {:>10.2} {:>7.1}%",
             policy,

@@ -1,18 +1,22 @@
 //! Quickstart: build a recommendation model with the native (pure-Rust)
-//! backend and score a handful of user-post pairs — the minimal
-//! "hello world" of the public API. Works from a fresh clone: no AOT
-//! artifacts, no XLA toolchain, no python.
+//! backend, score a handful of user-post pairs, then serve a live query
+//! through the Server/ticket session API — the minimal "hello world" of
+//! the public API. Works from a fresh clone: no AOT artifacts, no XLA
+//! toolchain, no python.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use recsys::runtime::{golden_dense, golden_ids, golden_lwts, NativePool};
+use recsys::coordinator::{NativeBackend, ServerBuilder};
+use recsys::runtime::{golden_dense, golden_ids, golden_lwts, ExecOptions};
+use recsys::workload::{Query, TrafficMix};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Build (deterministically initialize) one model.
-    let pool = NativePool::new(0);
+    // 1. Build (deterministically initialize) one model — the same
+    //    backend serves it live in step 5, so it builds exactly once.
     let model = "rmc1-small";
     let batch = 8;
-    let m = pool.get(model)?;
+    let backend = NativeBackend::for_models(&[model.to_string()], ExecOptions::default())?;
+    let m = backend.pool.get(model)?;
     println!(
         "built {model} natively ({} MB of parameters)",
         m.param_bytes() as f64 / 1e6
@@ -35,5 +39,26 @@ fn main() -> anyhow::Result<()> {
     let mut ranked: Vec<(usize, f32)> = ctrs.iter().copied().enumerate().collect();
     ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     println!("top-3 posts: {:?}", &ranked[..3.min(ranked.len())]);
+
+    // 5. Serve it live: one validated builder produces a running server
+    //    (reusing the step-1 backend); a session handle submits and a
+    //    ticket delivers the completion.
+    let server = ServerBuilder::new()
+        .mix(TrafficMix::single(model, 4))
+        .workers(1)
+        .sla_ms(50.0)
+        .backend(backend.clone())
+        .build()?;
+    let handle = server.handle();
+    let ticket = handle.submit_live(Query::new(0, model, 3, 0.0));
+    let outcome = ticket.wait();
+    let done = outcome.completed().expect("query completed");
+    println!(
+        "served 1 query live: {} CTRs in {:.3} ms (batch bucket {})",
+        done.ctrs.len(),
+        done.latency_ms,
+        done.batch_bucket
+    );
+    let _ = server.shutdown();
     Ok(())
 }

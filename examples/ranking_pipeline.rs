@@ -1,76 +1,97 @@
 //! Hierarchical ranking pipeline (paper Fig 6): content is ranked in two
 //! steps — a lightweight DNN filter (RMC1) prunes thousands of
 //! candidates to a shortlist, then a heavyweight ranker (RMC3) scores
-//! the survivors. Both stages execute real numerics through the native
-//! backend; this is the multi-model workload the coordinator's per-model
-//! batching exists for.
+//! the survivors. Both stages execute real numerics through ONE live
+//! multi-tenant server: client threads submit scoring queries through
+//! `ServerHandle` sessions and collect per-query CTRs from tickets —
+//! the multi-model workload the per-model batching exists for.
 //!
 //! Run: `cargo run --release --example ranking_pipeline`
 
 use std::time::Instant;
 
-use recsys::config::PJRT_BATCHES;
-use recsys::runtime::{golden_lwts, NativePool};
-use recsys::util::Rng;
-use recsys::workload::SparseIdGen;
+use recsys::coordinator::{ServerBuilder, ServerHandle, Ticket};
+use recsys::runtime::ExecOptions;
+use recsys::workload::{Query, TrafficMix};
 
-/// Score `n` candidates with one model, chunking into the largest batch
-/// bucket (the same bucketing the serving batcher uses).
-fn score(pool: &NativePool, model: &str, n: usize, seed: u64) -> anyhow::Result<Vec<f32>> {
-    let bucket = *PJRT_BATCHES
-        .iter()
-        .find(|&&b| b >= n)
-        .unwrap_or(PJRT_BATCHES.last().unwrap());
-    let m = pool.get(model)?;
-    let cfg = m.cfg();
-    let (t, l, r, d) = (cfg.num_tables, cfg.lookups, m.rows(), cfg.dense_dim);
-    let mut rng = Rng::seed_from_u64(seed);
-    let mut idgen = SparseIdGen::production_like(r, seed);
-    let mut out = Vec::with_capacity(n);
-    let mut remaining = n;
-    while remaining > 0 {
-        let take = remaining.min(bucket);
-        let mut dense = vec![0f32; bucket * d];
-        let mut ids = vec![0i32; t * bucket * l];
-        let mut lwts = golden_lwts(t, bucket, l);
-        for s in 0..bucket {
-            if s < take {
-                for j in 0..d {
-                    dense[s * d + j] = (rng.gen_f64() - 0.5) as f32;
-                }
-                for table in 0..t {
-                    for j in 0..l {
-                        ids[(table * bucket + s) * l + j] = idgen.next_id() as i32;
-                    }
-                }
-            } else {
-                for table in 0..t {
-                    for j in 0..l {
-                        lwts[(table * bucket + s) * l + j] = 0.0; // padding
-                    }
-                }
-            }
-        }
-        let ctrs = m.run_rmc(&dense, &ids, &lwts)?;
-        out.extend_from_slice(&ctrs[..take]);
-        remaining -= take;
+/// Items per scoring query (each query scores a slice of candidates;
+/// the server's batcher then packs queries into AOT batch buckets).
+const CHUNK: usize = 16;
+
+/// Score `n` candidates with `model` by submitting chunked queries from
+/// `clients` concurrent session threads, then reassembling the CTRs in
+/// candidate order from the tickets. `base_id` keeps query seeds unique
+/// across stages.
+fn score(
+    handle: &ServerHandle,
+    model: &str,
+    n: usize,
+    base_id: u64,
+    clients: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let queries: Vec<Query> = (0..n.div_ceil(CHUNK))
+        .map(|c| {
+            let items = CHUNK.min(n - c * CHUNK);
+            Query::new(base_id + c as u64, model, items, 0.0)
+        })
+        .collect();
+    // Fan the submissions out over client threads — every thread clones
+    // its own handle, exactly like independent frontend sessions.
+    let tickets: Vec<Ticket> = std::thread::scope(|s| {
+        let handles: Vec<_> = queries
+            .chunks(queries.len().div_ceil(clients.max(1)))
+            .map(|chunk| {
+                let h = handle.clone();
+                let chunk = chunk.to_vec();
+                s.spawn(move || {
+                    chunk.into_iter().map(|q| h.submit_live(q)).collect::<Vec<Ticket>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let mut out = vec![0f32; n];
+    for t in tickets {
+        let outcome = t.wait();
+        let done = outcome
+            .completed()
+            .ok_or_else(|| anyhow::anyhow!("query {} did not complete", t.query_id))?;
+        let c = (done.id - base_id) as usize;
+        // A backend-failed batch resolves Completed with no CTRs —
+        // surface it instead of silently ranking those candidates 0.0.
+        anyhow::ensure!(
+            done.ctrs.len() == done.items,
+            "query {}: batch failed in the backend ({} of {} CTRs)",
+            t.query_id,
+            done.ctrs.len(),
+            done.items
+        );
+        out[c * CHUNK..c * CHUNK + done.ctrs.len()].copy_from_slice(&done.ctrs);
     }
     Ok(out)
 }
 
 fn main() -> anyhow::Result<()> {
-    let pool = NativePool::new(0);
-    pool.preload("rmc1-small")?;
-    pool.preload("rmc3-small")?;
+    // One server co-locates both pipeline stages (filter + ranker) on a
+    // shared pool — per-model batchers keep their batches separate.
+    let server = ServerBuilder::new()
+        .mix(TrafficMix::parse("rmc1-small:0.9,rmc3-small:0.1")?)
+        .workers(2)
+        .routing("least-loaded")
+        .sla_ms(500.0)
+        .native(ExecOptions::default())
+        .build()?;
+    let handle = server.handle();
 
     let candidates = 1024usize;
     let shortlist = 64usize;
     let top_k = 10usize;
     println!("== two-stage ranking: {candidates} candidates -> {shortlist} -> top {top_k} ==");
+    println!("(both stages served live through one multi-tenant server, 4 client sessions)");
 
     // Stage 1: lightweight filtering with RMC1.
     let t0 = Instant::now();
-    let filter_scores = score(&pool, "rmc1-small", candidates, 7)?;
+    let filter_scores = score(&handle, "rmc1-small", candidates, 0, 4)?;
     let t_filter = t0.elapsed();
     let mut order: Vec<usize> = (0..candidates).collect();
     order.sort_by(|&a, &b| filter_scores[b].partial_cmp(&filter_scores[a]).unwrap());
@@ -78,7 +99,7 @@ fn main() -> anyhow::Result<()> {
 
     // Stage 2: heavyweight ranking of the shortlist with RMC3.
     let t1 = Instant::now();
-    let rank_scores = score(&pool, "rmc3-small", shortlist, 11)?;
+    let rank_scores = score(&handle, "rmc3-small", shortlist, 100_000, 4)?;
     let t_rank = t1.elapsed();
     let mut ranked: Vec<(usize, f32)> = survivors
         .iter()
@@ -101,12 +122,14 @@ fn main() -> anyhow::Result<()> {
     for (cand, s) in ranked.iter().take(top_k) {
         println!("  candidate {cand:>4}: CTR {s:.4}");
     }
+    let report = server.shutdown().expect("server report");
     println!(
-        "\nFig 6's asymmetry: the filter is cheap per item, the ranker is {}x \
-         costlier per item — which is why the funnel exists.",
-        ((t_rank.as_secs_f64() / shortlist as f64)
-            / (t_filter.as_secs_f64() / candidates as f64))
-            .round()
+        "\nserver report: {} queries, {} items, p99 {:.2} ms, buckets {:?}",
+        report.queries, report.items, report.p99_ms, report.bucket_histogram
+    );
+    println!(
+        "Fig 6's asymmetry: the filter is cheap per item, the ranker costlier per item — \
+         which is why the funnel exists."
     );
     Ok(())
 }

@@ -1,18 +1,16 @@
 //! End-to-end serving driver — the repo's E2E validation run
 //! (EXPERIMENTS.md §E2E): serve open-loop Poisson traffic through the
-//! full coordinator stack (router → dynamic batcher → native-backend
-//! workers) and report the paper's headline metric, latency-bounded
-//! throughput, across an offered-load sweep. Real numerics, no AOT
-//! artifacts needed.
+//! full live-server stack (ServerBuilder → dispatcher → dynamic batcher
+//! → native-backend workers) and report the paper's headline metric,
+//! latency-bounded throughput, across an offered-load sweep. Real
+//! numerics, no AOT artifacts needed. The load is paced straight off a
+//! streaming query iterator — nothing is pre-materialized.
 //!
 //! Run: `cargo run --release --example serve_sla [model] [sla_ms]`
 
-use std::sync::Arc;
-
-use recsys::config::{DeploymentConfig, ServerGen, ServerPoolConfig, PJRT_BATCHES};
-use recsys::coordinator::{Coordinator, NativeBackend};
-use recsys::runtime::NativePool;
-use recsys::workload::{PoissonArrivals, Query};
+use recsys::coordinator::{Coordinator, NativeBackend, ServerBuilder};
+use recsys::runtime::ExecOptions;
+use recsys::workload::TrafficMix;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -21,35 +19,29 @@ fn main() -> anyhow::Result<()> {
     let items = 4usize;
 
     println!("== serve_sla: {model}, SLA {sla_ms} ms, {items} items/query ==");
-    let pool = Arc::new(NativePool::new(0));
-    pool.preload(&model)?;
-    println!("built {model} natively (deterministic params)");
-    let buckets = PJRT_BATCHES.to_vec();
+    println!("(one tenant through the live ServerBuilder/ticket API per load point)");
 
     println!(
         "\n{:>8} {:>10} {:>10} {:>10} {:>10} {:>8}",
         "qps", "items/s", "mean ms", "p50 ms", "p99 ms", "viol%"
     );
+    let mix = TrafficMix::single(&model, items);
+    // One shared backend across every load point: the model builds once
+    // (deterministic params); runs differ only in offered load.
+    let backend = NativeBackend::for_models(&mix.models(), ExecOptions::default())?;
     for qps in [50.0, 100.0, 200.0, 400.0, 800.0, 1600.0] {
-        let cfg = DeploymentConfig {
-            sla_ms,
-            batch_timeout_us: 400,
-            max_batch: 128,
-            routing: "least-loaded".into(),
-            pools: vec![ServerPoolConfig {
-                gen: ServerGen::Broadwell,
-                machines: 2,
-                colocation: 1,
-                models: vec![],
-            }],
-        };
-        let backend = Arc::new(NativeBackend::new(pool.clone()));
-        let mut coordinator = Coordinator::new(&cfg, backend, buckets.clone())?;
-        let mut arr = PoissonArrivals::new(qps, 42);
-        let queries: Vec<Query> = (0..(qps * 1.5).max(100.0) as usize)
-            .map(|i| Query::new(i as u64, model.clone(), items, arr.next_arrival_s()))
-            .collect();
-        let r = coordinator.run_open_loop(queries, sla_ms);
+        let server = ServerBuilder::new()
+            .mix(mix.clone())
+            .workers(2)
+            .routing("least-loaded")
+            .sla_ms(sla_ms)
+            .batch_timeout_us(400)
+            .max_batch(128)
+            .backend(backend.clone())
+            .build()?;
+        let mut coordinator = Coordinator::from_server(server);
+        let n = (qps * 1.5).max(100.0) as usize;
+        let r = coordinator.run_open_loop(mix.stream(n, qps, 42), sla_ms);
         println!(
             "{:>8.0} {:>10.0} {:>10.3} {:>10.3} {:>10.3} {:>7.1}%",
             qps,

@@ -142,6 +142,19 @@ impl NativeBackend {
         }
     }
 
+    /// One-call construction for the serving builder: a fresh
+    /// deterministic pool (seed 0, matching the CLI) with every model in
+    /// `models` pre-warmed — the sharded services when `opts.sharded()`,
+    /// the native pool otherwise. Models outside the list still build
+    /// lazily on first request.
+    pub fn for_models(models: &[String], opts: ExecOptions) -> anyhow::Result<Arc<NativeBackend>> {
+        let backend = Arc::new(NativeBackend::with_options(Arc::new(NativePool::new(0)), opts));
+        for model in models {
+            backend.preload(model)?;
+        }
+        Ok(backend)
+    }
+
     pub fn engine(&self) -> &Engine {
         &self.engine
     }

@@ -184,6 +184,12 @@ impl DynamicBatcher {
     pub fn pending_items(&self) -> usize {
         self.pending.values().map(|p| p.items).sum()
     }
+
+    /// Any query queued at all (cheaper than `pending_items() > 0` —
+    /// the dispatcher asks this once per wakeup).
+    pub fn has_pending(&self) -> bool {
+        self.pending.values().any(|p| !p.queries.is_empty())
+    }
 }
 
 /// Per-tenant batching parameters (a tenant with a tight SLA wants a
@@ -270,6 +276,10 @@ impl TenantBatchers {
     pub fn pending_items(&self) -> usize {
         let tenant_items: usize = self.tenants.iter().map(|(_, b)| b.pending_items()).sum();
         tenant_items + self.fallback.pending_items()
+    }
+
+    pub fn has_pending(&self) -> bool {
+        self.tenants.iter().any(|(_, b)| b.has_pending()) || self.fallback.has_pending()
     }
 }
 
@@ -482,12 +492,15 @@ mod tests {
     fn fallback_serves_models_outside_tenant_set() {
         let mut tb = two_tenant();
         let t0 = Instant::now();
+        assert!(!tb.has_pending());
         tb.push(q(1, "rmc2-small", 3), t0);
+        assert!(tb.has_pending());
         assert_eq!(tb.pending_items(), 3);
         let batches = tb.drain(t0);
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].model, "rmc2-small");
         assert_eq!(tb.pending_items(), 0);
+        assert!(!tb.has_pending());
     }
 
     #[test]

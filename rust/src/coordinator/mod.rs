@@ -1,24 +1,30 @@
-//! L3 serving coordinator: request router, per-tenant dynamic batchers
-//! (bucketed to the AOT'd batch sizes) behind a unified flush scheduler,
-//! worker pool, and per-tenant SLA accounting — the vLLM-router-shaped
-//! layer of the stack, multi-tenant since the co-location rework.
+//! L3 serving coordinator: the live serving API (`ServerBuilder` →
+//! `Server` → `ServerHandle` sessions), request router, per-tenant
+//! dynamic batchers (bucketed to the AOT'd batch sizes) behind a
+//! dispatcher-owned flush scheduler, worker pool, bounded admission
+//! control, and per-tenant SLA accounting — the vLLM-router-shaped
+//! layer of the stack.
 //!
 //! Built on std::thread + mpsc channels (the offline registry has no
 //! tokio; see Cargo.toml note). The data path is:
 //!
 //! ```text
-//! TrafficMix ──► submit(Query) ──► per-MODEL DynamicBatcher ─┐
-//!  (tenant set:                    (per-tenant timeout/cap)  │ unified
-//!   shares, items,                                           │ flush
-//!   SLAs)                router ◄────────────────────────────┘
-//!                   (policy: shared co-location or
-//!                    dedicated per-tenant partition)
-//!                          │
-//!                          ▼
-//!                   per-worker queue ──► worker thread ──► backend.execute
-//!                          ▲                                    │
-//!   per-tenant SLA meters ◄┴──────────── QueryResult ◄──────────┘
+//! client threads ──► ServerHandle::submit(Query) ─► Ticket (wait/try_wait)
+//!   (any number;         │ admission: inflight cap ─► Rejected (shed)
+//!    clone per thread)   ▼
+//!              ┌─ dispatcher thread ─────────────────────────────┐
+//!              │ per-MODEL DynamicBatcher (per-tenant timeout/cap│
+//!              │ behind one flush schedule)  ──► router ──► per- │
+//!              │ worker queue                                    │
+//!              │ QueryResult ──► SLA meters + ticket resolution  │
+//!              └──────────────────────────────────────────────────┘
+//!                               ▲                    │
+//!                    worker threads ◄── backend.execute (batches)
 //! ```
+//!
+//! `Coordinator::run_open_loop` is a thin open-loop *client* of the
+//! same API (pacing a streaming schedule through a `ServerHandle`) —
+//! there is no separate experiment-harness code path.
 //!
 //! Backends: `NativeBackend` (pure-Rust numeric execution, the default
 //! on a fresh clone), `PjrtBackend` (real numeric execution of the AOT
@@ -30,6 +36,7 @@ mod autotune;
 mod backend;
 mod batcher;
 mod router;
+mod server;
 mod service;
 mod worker;
 
@@ -38,6 +45,7 @@ pub use autotune::{tune, TunePoint};
 pub use backend::PjrtBackend;
 pub use backend::{Backend, MockBackend, NativeBackend, SimBackend};
 pub use batcher::{Batch, DynamicBatcher, TenantBatchCfg, TenantBatchers};
-pub use router::{partition_by_share, RoutingPolicy, WorkerInfo};
+pub use router::{partition_by_share, Router, RoutingPolicy, WorkerInfo};
+pub use server::{CompletedQuery, Server, ServerBuilder, ServerHandle, Ticket, TicketOutcome};
 pub use service::{Coordinator, ServeReport, TenantReport};
 pub use worker::WorkerHandle;

@@ -107,6 +107,58 @@ impl RoutingPolicy {
     }
 }
 
+/// Routing state for a worker pool: the policy plus everything `pick`
+/// threads through it (round-robin cursor, warn-once set). Owned by the
+/// server's dispatcher thread — routing decisions are made in exactly
+/// one place, whichever client submitted the query.
+pub struct Router {
+    policy: RoutingPolicy,
+    infos: Vec<WorkerInfo>,
+    rr_state: usize,
+    /// Models already warned about as unroutable (no worker serves
+    /// them) — warn once per model, not once per batch.
+    unroutable_warned: std::collections::HashSet<String>,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy, infos: Vec<WorkerInfo>) -> Self {
+        Router { policy, infos, rr_state: 0, unroutable_warned: Default::default() }
+    }
+
+    pub fn infos(&self) -> &[WorkerInfo] {
+        &self.infos
+    }
+
+    /// Worker partition view (post-`dedicated` assignment) — test/debug.
+    pub fn worker_models(&self) -> Vec<Vec<String>> {
+        self.infos.iter().map(|w| w.models.clone()).collect()
+    }
+
+    /// Pick the worker for a `bucket`-sized batch of `model` given the
+    /// current per-worker load. Never fails: when no worker serves the
+    /// model (reachable when every worker is pinned to other tenants)
+    /// it warns once and falls back to the least-loaded worker —
+    /// dropping the batch would strand its completion handles.
+    pub fn route(&mut self, model: &str, bucket: usize, outstanding: &[usize]) -> usize {
+        self.policy
+            .pick(&self.infos, model, bucket, outstanding, &mut self.rr_state)
+            .unwrap_or_else(|| {
+                if self.unroutable_warned.insert(model.to_string()) {
+                    eprintln!(
+                        "coordinator: no worker serves model '{model}'; routing its batches to \
+                         the least-loaded worker (partition isolation not guaranteed)"
+                    );
+                }
+                outstanding
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(id, out)| (**out, *id))
+                    .map(|(id, _)| id)
+                    .unwrap_or(0)
+            })
+    }
+}
+
 /// Share-weighted dedicated partition: assign each of `n_workers`
 /// workers a model list so every tenant owns a worker-count
 /// proportional to its traffic share (largest-remainder rounding, every
@@ -302,6 +354,21 @@ mod tests {
         }];
         let mut rr = 0;
         assert_eq!(RoutingPolicy::Dedicated.pick(&w, "rmc2-small", 8, &[0], &mut rr), None);
+    }
+
+    #[test]
+    fn router_falls_back_to_least_loaded_when_unroutable() {
+        // Every worker pinned to another tenant: the batch still routes
+        // (least-loaded) instead of stranding its ticket.
+        let infos = vec![
+            WorkerInfo { id: 0, gen: ServerGen::Broadwell, models: vec!["rmc1-small".into()] },
+            WorkerInfo { id: 1, gen: ServerGen::Broadwell, models: vec!["rmc1-small".into()] },
+        ];
+        let mut r = Router::new(RoutingPolicy::Dedicated, infos);
+        assert_eq!(r.route("rmc2-small", 8, &[3, 1]), 1);
+        // Routable models keep their partition semantics.
+        assert_eq!(r.route("rmc1-small", 8, &[3, 1]), 1);
+        assert_eq!(r.worker_models(), vec![vec!["rmc1-small"], vec!["rmc1-small"]]);
     }
 
     #[test]

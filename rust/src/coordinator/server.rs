@@ -1,0 +1,1121 @@
+//! The live serving API (ISSUE 5): `ServerBuilder` → `Server` →
+//! `ServerHandle` sessions.
+//!
+//! The paper's latency-bounded-throughput results (§V–§VI) are about
+//! *live* servers under open-loop load, so the public entry point is a
+//! real server, not a run-to-completion harness:
+//!
+//! * [`ServerBuilder`] — one validated configuration surface (tenant
+//!   mix, routing policy, worker pools, batch buckets, execution
+//!   options, SLA set, admission cap, drain deadline) that produces a
+//!   running [`Server`].
+//! * [`ServerHandle`] — a cloneable per-client session handle:
+//!   `submit(Query) -> Ticket`, callable concurrently from many client
+//!   threads (clone one handle per thread). A [`Ticket`] is a
+//!   completion handle: `wait()` / `try_wait()` return the per-query
+//!   [`TicketOutcome`] (latency, batch bucket, tenant, CTRs).
+//! * A dedicated **dispatcher thread** owns batcher flush scheduling
+//!   and result routing. Flush timeouts fire on their own schedule,
+//!   decoupled from arrival pacing — a batch never waits on the load
+//!   generator being awake.
+//! * **Admission control**: a configurable inflight cap sheds load at
+//!   submit time with an explicit [`TicketOutcome::Rejected`], counted
+//!   in [`ServeReport`](super::ServeReport) as offered-but-shed rather
+//!   than silently dropped or blocking forever.
+//!
+//! `Coordinator::run_open_loop` is a thin client of this API (no second
+//! code path): it paces a streaming query source, submits through a
+//! handle, quiesces, and reads the server's report.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::{DeploymentConfig, ServerGen, ServerPoolConfig, PJRT_BATCHES};
+use crate::metrics::MultiSlaMeter;
+use crate::runtime::ExecOptions;
+use crate::workload::{Query, QueryResult, TrafficMix};
+
+use super::backend::{Backend, NativeBackend};
+use super::batcher::{TenantBatchCfg, TenantBatchers};
+use super::router::{partition_by_share, Router, RoutingPolicy, WorkerInfo};
+use super::service::{ServeReport, TenantReport};
+use super::worker::WorkerHandle;
+
+// ---------------------------------------------------------------- tickets --
+
+/// Final disposition of one submitted query. Every submission resolves
+/// to exactly one outcome — the shed-accounting invariant the overload
+/// tests pin.
+#[derive(Debug, Clone)]
+pub enum TicketOutcome {
+    /// Executed by a worker. Late or backend-failed queries are still
+    /// `Completed` (a failed batch carries `latency_ms = ∞` and no
+    /// CTRs), matching the SLA meter's accounting.
+    Completed(CompletedQuery),
+    /// Shed by admission control before batching (inflight cap hit).
+    Rejected,
+    /// The server shut down (or died) before the query executed.
+    Abandoned,
+}
+
+impl TicketOutcome {
+    pub fn completed(&self) -> Option<&CompletedQuery> {
+        match self {
+            TicketOutcome::Completed(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, TicketOutcome::Rejected)
+    }
+}
+
+/// Per-query completion record delivered through a [`Ticket`].
+#[derive(Debug, Clone)]
+pub struct CompletedQuery {
+    /// Caller-supplied query id.
+    pub id: u64,
+    /// Model (tenant) that served the query.
+    pub tenant: String,
+    pub items: usize,
+    /// Predicted CTRs (empty for latency-only backends or failed
+    /// batches).
+    pub ctrs: Vec<f32>,
+    /// Arrival-to-completion latency; `∞` when the batch failed in the
+    /// backend.
+    pub latency_ms: f64,
+    /// AOT batch bucket the query executed in.
+    pub batch_bucket: usize,
+    /// Worker that executed it.
+    pub worker: usize,
+}
+
+#[derive(Default)]
+struct TicketState {
+    outcome: Mutex<Option<TicketOutcome>>,
+    cv: Condvar,
+}
+
+impl TicketState {
+    /// First resolution wins; later calls are no-ops (a ticket can race
+    /// shutdown-abandonment against a late worker result).
+    fn resolve(&self, o: TicketOutcome) {
+        let mut g = self.outcome.lock().unwrap();
+        if g.is_none() {
+            *g = Some(o);
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+/// Completion handle for one submitted query.
+pub struct Ticket {
+    state: Arc<TicketState>,
+    /// Caller-supplied query id (`Query::id`).
+    pub query_id: u64,
+    /// Server-assigned submission id, unique across all clients.
+    pub ticket_id: u64,
+}
+
+impl Ticket {
+    /// Block until the query resolves.
+    pub fn wait(&self) -> TicketOutcome {
+        let mut g = self.state.outcome.lock().unwrap();
+        while g.is_none() {
+            g = self.state.cv.wait(g).unwrap();
+        }
+        g.clone().unwrap()
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<TicketOutcome> {
+        self.state.outcome.lock().unwrap().clone()
+    }
+
+    /// Block up to `dur`; `None` if the query is still in flight.
+    pub fn wait_timeout(&self, dur: Duration) -> Option<TicketOutcome> {
+        let deadline = Instant::now() + dur;
+        let mut g = self.state.outcome.lock().unwrap();
+        while g.is_none() {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, _) = self.state.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+        g.clone()
+    }
+}
+
+// -------------------------------------------------------------- admission --
+
+/// Bounded-admission state shared between client handles (which admit or
+/// shed at submit time) and the dispatcher (which releases on completion
+/// and folds shed counts into the report).
+struct Admission {
+    /// Inflight cap; `usize::MAX` = uncapped.
+    cap: usize,
+    /// Queries admitted but not yet completed (queued in a batcher, in a
+    /// worker queue, or executing).
+    inflight: AtomicUsize,
+    peak: AtomicUsize,
+    /// Shed accounting: totals and the per-tenant breakdown live behind
+    /// one lock so a snapshot always sees them agreeing exactly (the
+    /// report asserts the breakdown sums to the totals).
+    shed: Mutex<ShedCounts>,
+}
+
+#[derive(Default, Clone)]
+struct ShedCounts {
+    queries: u64,
+    items: u64,
+    by_tenant: BTreeMap<String, (u64, u64)>,
+}
+
+impl Admission {
+    fn new(cap: usize) -> Self {
+        Admission {
+            cap,
+            inflight: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            shed: Mutex::new(ShedCounts::default()),
+        }
+    }
+
+    /// Reserve one inflight slot, or refuse when the cap is reached.
+    /// Capped servers use a compare-exchange (not a blind add) so
+    /// concurrent submitters can never overshoot the cap — the
+    /// bounded-inflight property the overload test asserts on
+    /// `peak_inflight`. Uncapped servers skip the CAS retry loop.
+    fn try_admit(&self) -> bool {
+        if self.cap == usize::MAX {
+            let cur = self.inflight.fetch_add(1, Ordering::SeqCst);
+            self.peak.fetch_max(cur + 1, Ordering::SeqCst);
+            return true;
+        }
+        loop {
+            let cur = self.inflight.load(Ordering::SeqCst);
+            if cur >= self.cap {
+                return false;
+            }
+            if self
+                .inflight
+                .compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.peak.fetch_max(cur + 1, Ordering::SeqCst);
+                return true;
+            }
+        }
+    }
+
+    fn release(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    fn record_shed(&self, model: &str, items: u64) {
+        let mut shed = self.shed.lock().unwrap();
+        shed.queries += 1;
+        shed.items += items;
+        let e = shed.by_tenant.entry(model.to_string()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += items;
+    }
+
+    fn shed_snapshot(&self) -> ShedCounts {
+        self.shed.lock().unwrap().clone()
+    }
+
+    fn reset_shed(&self) {
+        *self.shed.lock().unwrap() = ShedCounts::default();
+        self.peak.store(self.inflight.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+}
+
+// ----------------------------------------------------------------- events --
+
+/// Everything the dispatcher thread reacts to, on one channel so worker
+/// results and client submissions interleave in arrival order.
+enum Event {
+    Submit { q: Query, ticket: Arc<TicketState> },
+    Result(QueryResult),
+    /// Clear accounting (meter, histogram, shed counters) for a fresh
+    /// measurement window; optionally change the default SLA bound.
+    Reset { default_sla_ms: Option<f64>, done: mpsc::Sender<()> },
+    /// Force-flush pending batches and reply `true` once inflight drains
+    /// to zero, `false` if `deadline` passes first (sets `incomplete` +
+    /// `drain_deadline_hit` in the report).
+    Quiesce { deadline: Instant, reply: mpsc::Sender<bool> },
+    Report { reply: mpsc::Sender<ServeReport> },
+    Shutdown { reply: mpsc::Sender<ServeReport> },
+}
+
+impl From<QueryResult> for Event {
+    fn from(r: QueryResult) -> Event {
+        Event::Result(r)
+    }
+}
+
+// ---------------------------------------------------------------- builder --
+
+enum BackendChoice {
+    /// Build a `NativeBackend` internally (pool seed 0, tenant models
+    /// preloaded) — the `serve --impl native` path.
+    Native(ExecOptions),
+    /// Caller-supplied backend (PJRT, simulator, mocks).
+    Custom(Arc<dyn Backend>),
+}
+
+/// One validated configuration surface for the whole serving stack.
+///
+/// ```no_run
+/// use recsys::coordinator::ServerBuilder;
+/// use recsys::workload::TrafficMix;
+///
+/// let server = ServerBuilder::new()
+///     .mix(TrafficMix::parse("rmc1:0.6,rmc2:0.4").unwrap())
+///     .workers(2)
+///     .routing("least-loaded")
+///     .sla_ms(25.0)
+///     .inflight_cap(64)
+///     .build()
+///     .unwrap();
+/// let handle = server.handle();
+/// # drop(handle);
+/// ```
+pub struct ServerBuilder {
+    cfg: DeploymentConfig,
+    mix: Option<TrafficMix>,
+    buckets: Vec<usize>,
+    backend: BackendChoice,
+    /// Extra models to pre-warm beyond the mix (native backend only).
+    preload: Vec<String>,
+    /// 0 = uncapped.
+    inflight_cap: usize,
+    drain_deadline: Duration,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerBuilder {
+    /// Defaults: one Broadwell worker, 10 ms SLA, round-robin routing,
+    /// the AOT batch buckets, native optimized serial engine, uncapped
+    /// admission, 30 s drain deadline.
+    pub fn new() -> Self {
+        ServerBuilder {
+            cfg: DeploymentConfig::single_node(),
+            mix: None,
+            buckets: PJRT_BATCHES.to_vec(),
+            backend: BackendChoice::Native(ExecOptions::default()),
+            preload: Vec::new(),
+            inflight_cap: 0,
+            drain_deadline: Duration::from_secs(30),
+        }
+    }
+
+    /// Replace the whole deployment config (SLA, batching knobs,
+    /// routing, pools) — the JSON-config path.
+    pub fn deployment(mut self, cfg: &DeploymentConfig) -> Self {
+        self.cfg = cfg.clone();
+        self
+    }
+
+    /// Default per-query latency bound, ms (tenants with their own SLA
+    /// in the mix override it).
+    pub fn sla_ms(mut self, sla_ms: f64) -> Self {
+        self.cfg.sla_ms = sla_ms;
+        self
+    }
+
+    pub fn batch_timeout_us(mut self, us: u64) -> Self {
+        self.cfg.batch_timeout_us = us;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.max_batch = max_batch;
+        self
+    }
+
+    /// Routing policy name (validated at `build`).
+    pub fn routing(mut self, policy: &str) -> Self {
+        self.cfg.routing = policy.to_string();
+        self
+    }
+
+    /// Replace the pools with `n` single-tenant-capable Broadwell
+    /// machines (the common test/example fleet).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.pools = vec![ServerPoolConfig {
+            gen: ServerGen::Broadwell,
+            machines: n,
+            colocation: 1,
+            models: vec![],
+        }];
+        self
+    }
+
+    /// Append a pool of `machines` workers of `gen`.
+    pub fn pool(mut self, gen: ServerGen, machines: usize, colocation: usize) -> Self {
+        self.cfg.pools.push(ServerPoolConfig { gen, machines, colocation, models: vec![] });
+        self
+    }
+
+    /// Clear the inherited pools (use before `pool` to build a fleet
+    /// from scratch).
+    pub fn no_pools(mut self) -> Self {
+        self.cfg.pools.clear();
+        self
+    }
+
+    /// Tenant set: per-model batchers (flush timeout capped at SLA/4),
+    /// per-tenant SLA accounting, share-weighted partitioning under
+    /// `dedicated` routing, and — with the native backend — model
+    /// preloading.
+    pub fn mix(mut self, mix: TrafficMix) -> Self {
+        self.mix = Some(mix);
+        self
+    }
+
+    /// AOT batch buckets the batcher may form.
+    pub fn buckets(mut self, buckets: Vec<usize>) -> Self {
+        self.buckets = buckets;
+        self
+    }
+
+    /// Native execution options (threads / engine / shards / cache).
+    pub fn native(mut self, opts: ExecOptions) -> Self {
+        self.backend = BackendChoice::Native(opts);
+        self
+    }
+
+    /// Pre-warm these models in addition to the mix's (native backend
+    /// only) — the single-model serve path uses this so the first live
+    /// query never pays a model build.
+    pub fn preload(mut self, models: Vec<String>) -> Self {
+        self.preload = models;
+        self
+    }
+
+    /// Explicit backend (PJRT, `SimBackend`, mocks). Combine with
+    /// `buckets` when the backend's compiled batch sizes differ from
+    /// the defaults.
+    pub fn backend(mut self, backend: Arc<dyn Backend>) -> Self {
+        self.backend = BackendChoice::Custom(backend);
+        self
+    }
+
+    /// Admission control: maximum queries inflight (admitted but not
+    /// completed) before `submit` sheds with `TicketOutcome::Rejected`.
+    /// 0 = uncapped.
+    pub fn inflight_cap(mut self, cap: usize) -> Self {
+        self.inflight_cap = cap;
+        self
+    }
+
+    /// How long `quiesce` (and therefore `run_open_loop`'s drain) waits
+    /// for inflight work before giving up and reporting `incomplete`.
+    pub fn drain_deadline(mut self, d: Duration) -> Self {
+        self.drain_deadline = d;
+        self
+    }
+
+    /// Validate the whole configuration and start the server: workers
+    /// spawn, the dispatcher thread starts, and the returned `Server`
+    /// is ready for `handle().submit(..)`.
+    pub fn build(self) -> anyhow::Result<Server> {
+        let ServerBuilder { cfg, mix, buckets, backend, preload, inflight_cap, drain_deadline } =
+            self;
+        let policy = RoutingPolicy::parse(&cfg.routing)
+            .ok_or_else(|| anyhow::anyhow!("unknown routing policy '{}'", cfg.routing))?;
+        anyhow::ensure!(!buckets.is_empty(), "need at least one batch bucket");
+        let min_bucket = *buckets.iter().min().unwrap();
+        anyhow::ensure!(
+            cfg.max_batch >= min_bucket,
+            "max_batch {} is below the smallest batch bucket {min_bucket}",
+            cfg.max_batch
+        );
+        anyhow::ensure!(drain_deadline > Duration::ZERO, "drain deadline must be positive");
+
+        // Resolve the backend. Native construction preloads the tenant
+        // set (plus any explicit preload list) so the first live query
+        // never pays a model build.
+        let mut models: Vec<String> = mix.as_ref().map(|m| m.models()).unwrap_or_default();
+        for m in preload {
+            if !models.contains(&m) {
+                models.push(m);
+            }
+        }
+        let (backend, native): (Arc<dyn Backend>, Option<Arc<NativeBackend>>) = match backend {
+            BackendChoice::Native(opts) => {
+                let nb = NativeBackend::for_models(&models, opts)?;
+                let dynamic: Arc<dyn Backend> = nb.clone();
+                (dynamic, Some(nb))
+            }
+            BackendChoice::Custom(b) => (b, None),
+        };
+
+        let (events_tx, events_rx) = mpsc::channel::<Event>();
+        let t0 = Instant::now();
+        let mut workers = Vec::new();
+        let mut infos = Vec::new();
+        let mut id = 0usize;
+        for pool in &cfg.pools {
+            for _ in 0..pool.machines * pool.colocation {
+                infos.push(WorkerInfo { id, gen: pool.gen, models: pool.models.clone() });
+                workers.push(WorkerHandle::spawn(
+                    id,
+                    pool.gen,
+                    backend.clone(),
+                    events_tx.clone(),
+                    t0,
+                ));
+                id += 1;
+            }
+        }
+        if workers.is_empty() {
+            anyhow::bail!("deployment has no workers");
+        }
+        // Dedicated routing with an unpartitioned pool: carve the
+        // workers into share-weighted per-tenant partitions. Pools that
+        // pin models explicitly keep their configuration.
+        if let Some(mix) = &mix {
+            if policy == RoutingPolicy::Dedicated && infos.iter().all(|w| w.models.is_empty()) {
+                let shares: Vec<(String, f64)> =
+                    mix.tenants.iter().map(|t| (t.model.clone(), t.share)).collect();
+                let parts = partition_by_share(workers.len(), &shares);
+                for (info, models) in infos.iter_mut().zip(parts) {
+                    info.models = models;
+                }
+            }
+        }
+        let worker_models: Vec<Vec<String>> = infos.iter().map(|w| w.models.clone()).collect();
+
+        // Per-tenant batchers behind the unified flush schedule, with a
+        // fallback batcher for models outside the set.
+        let default_timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let mut batchers = TenantBatchers::uniform(buckets.clone(), cfg.max_batch, default_timeout);
+        let mut tenant_slas = Vec::new();
+        if let Some(mix) = &mix {
+            for t in &mix.tenants {
+                let sla_ms = t.sla_ms.unwrap_or(cfg.sla_ms);
+                let timeout = default_timeout.min(Duration::from_secs_f64(sla_ms / 4.0 / 1e3));
+                batchers.add_tenant(
+                    buckets.clone(),
+                    &TenantBatchCfg { model: t.model.clone(), max_batch: cfg.max_batch, timeout },
+                );
+                tenant_slas.push((t.model.clone(), sla_ms));
+            }
+        }
+
+        let admission = Arc::new(Admission::new(if inflight_cap == 0 {
+            usize::MAX
+        } else {
+            inflight_cap
+        }));
+        let mut meter = MultiSlaMeter::new(cfg.sla_ms);
+        for (m, s) in &tenant_slas {
+            meter.set_tenant_sla(m, *s);
+        }
+        let dispatcher = Dispatcher {
+            workers,
+            router: Router::new(policy, infos),
+            batchers,
+            meter,
+            default_sla_ms: cfg.sla_ms,
+            tenant_slas,
+            pending: HashMap::new(),
+            bucket_hist: BTreeMap::new(),
+            admission: admission.clone(),
+            queries_admitted: 0,
+            items_admitted: 0,
+            queries_completed: 0,
+            max_arrival_s: 0.0,
+            incomplete: false,
+            drain_deadline_hit: false,
+            quiesce: None,
+            t0,
+            window_t0: t0,
+        };
+        let join = std::thread::Builder::new()
+            .name("dispatcher".into())
+            .spawn(move || dispatcher.run(events_rx))
+            .expect("spawn dispatcher");
+        Ok(Server {
+            handle: ServerHandle {
+                events: events_tx,
+                admission,
+                seq: Arc::new(AtomicU64::new(1)),
+                t0,
+            },
+            join: Some(join),
+            drain_deadline,
+            worker_models,
+            native,
+        })
+    }
+}
+
+// ----------------------------------------------------------------- server --
+
+/// A running serving instance: worker pool + dispatcher thread. Create
+/// with [`ServerBuilder`]; talk to it through [`ServerHandle`]s.
+pub struct Server {
+    handle: ServerHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+    drain_deadline: Duration,
+    worker_models: Vec<Vec<String>>,
+    native: Option<Arc<NativeBackend>>,
+}
+
+impl Server {
+    /// A new client session handle (clone one per client thread).
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Worker partition view (post-`dedicated` assignment) — test/debug.
+    pub fn worker_models(&self) -> Vec<Vec<String>> {
+        self.worker_models.clone()
+    }
+
+    /// The internally-built native backend, when the builder constructed
+    /// one (`ServerBuilder::native`) — the serve CLI reads its sharded
+    /// breakdown after a run.
+    pub fn native_backend(&self) -> Option<Arc<NativeBackend>> {
+        self.native.clone()
+    }
+
+    pub fn drain_deadline(&self) -> Duration {
+        self.drain_deadline
+    }
+
+    /// Service epoch: `Query::arrival_s` is measured from this instant.
+    pub fn t0(&self) -> Instant {
+        self.handle.t0
+    }
+
+    /// Stop the server: pending (unexecuted) submissions resolve as
+    /// `Abandoned`, workers drain their queues and join, and the final
+    /// report comes back. `None` only if the dispatcher already died.
+    pub fn shutdown(mut self) -> Option<ServeReport> {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> Option<ServeReport> {
+        let join = self.join.take()?;
+        let (tx, rx) = mpsc::channel();
+        let report = if self.handle.events.send(Event::Shutdown { reply: tx }).is_ok() {
+            rx.recv().ok()
+        } else {
+            None
+        };
+        let _ = join.join();
+        report
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.shutdown_inner();
+    }
+}
+
+/// Cloneable client session handle. Each client thread clones its own
+/// handle; `submit` is safe to call concurrently across clones.
+#[derive(Clone)]
+pub struct ServerHandle {
+    events: mpsc::Sender<Event>,
+    admission: Arc<Admission>,
+    /// Ticket-id source, shared across clones (starts at 1 — ticket 0
+    /// means "never submitted").
+    seq: Arc<AtomicU64>,
+    t0: Instant,
+}
+
+impl ServerHandle {
+    /// Submit one query, honoring its `arrival_s` as the latency epoch
+    /// (the open-loop replay client paces to the schedule and uses this
+    /// directly). Live clients should use [`ServerHandle::submit_live`].
+    ///
+    /// Never blocks: over the inflight cap the ticket resolves
+    /// immediately as `Rejected` and the shed is counted per tenant.
+    pub fn submit(&self, mut q: Query) -> Ticket {
+        let ticket_id = self.seq.fetch_add(1, Ordering::Relaxed);
+        q.ticket = ticket_id;
+        let state = Arc::new(TicketState::default());
+        let ticket = Ticket { state: state.clone(), query_id: q.id, ticket_id };
+        if !self.admission.try_admit() {
+            self.admission.record_shed(&q.model, q.items as u64);
+            state.resolve(TicketOutcome::Rejected);
+            return ticket;
+        }
+        if self.events.send(Event::Submit { q, ticket: state.clone() }).is_err() {
+            // Server shut down between handle creation and submit.
+            self.admission.release();
+            state.resolve(TicketOutcome::Abandoned);
+        }
+        ticket
+    }
+
+    /// Submit stamping the arrival time to *now* — what a real client
+    /// session does (latency measures service time, not schedule skew).
+    pub fn submit_live(&self, mut q: Query) -> Ticket {
+        q.arrival_s = self.now_s();
+        self.submit(q)
+    }
+
+    /// Seconds since the server's epoch (`Server::t0`).
+    pub fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Queries admitted but not yet completed.
+    pub fn inflight(&self) -> usize {
+        self.admission.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot the server's accounting as a [`ServeReport`].
+    pub fn report(&self) -> anyhow::Result<ServeReport> {
+        let (tx, rx) = mpsc::channel();
+        self.events
+            .send(Event::Report { reply: tx })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dispatcher died"))
+    }
+
+    /// Force-flush pending batches and wait (up to `deadline` from now)
+    /// for every admitted query to complete. Returns `Ok(true)` when
+    /// fully drained; `Ok(false)` marks the report `incomplete` +
+    /// `drain_deadline_hit`.
+    pub fn quiesce(&self, deadline: Duration) -> anyhow::Result<bool> {
+        let (tx, rx) = mpsc::channel();
+        self.events
+            .send(Event::Quiesce { deadline: Instant::now() + deadline, reply: tx })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dispatcher died"))
+    }
+
+    /// Clear accounting (meter, histogram, shed counters) for a fresh
+    /// measurement window; optionally change the default SLA bound.
+    /// Call while idle — results of earlier queries still inflight land
+    /// in the new window. Blocks until the dispatcher applies it, so a
+    /// following `submit` is guaranteed to be counted in the new window.
+    pub fn reset_accounting(&self, default_sla_ms: Option<f64>) -> anyhow::Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.events
+            .send(Event::Reset { default_sla_ms, done: tx })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dispatcher died"))
+    }
+}
+
+// ------------------------------------------------------------- dispatcher --
+
+/// Idle wakeup when no flush deadline is pending (keeps the loop
+/// responsive to a quiesce deadline arriving with an empty batcher).
+const IDLE_SLICE: Duration = Duration::from_millis(100);
+
+struct Dispatcher {
+    workers: Vec<WorkerHandle>,
+    router: Router,
+    batchers: TenantBatchers,
+    meter: MultiSlaMeter,
+    default_sla_ms: f64,
+    tenant_slas: Vec<(String, f64)>,
+    /// Unresolved completion handles by ticket id.
+    pending: HashMap<u64, Arc<TicketState>>,
+    bucket_hist: BTreeMap<usize, u64>,
+    admission: Arc<Admission>,
+    queries_admitted: u64,
+    items_admitted: u64,
+    queries_completed: u64,
+    /// Largest arrival_s seen (offered-load horizon for qps_offered).
+    max_arrival_s: f64,
+    incomplete: bool,
+    drain_deadline_hit: bool,
+    quiesce: Option<(Instant, mpsc::Sender<bool>)>,
+    /// Latency epoch (arrival_s is measured from here) — fixed for the
+    /// server's lifetime.
+    t0: Instant,
+    /// Accounting-window start: `t0` until a `Reset`, then the reset
+    /// instant — so elapsed/throughput denominators cover the window
+    /// being measured, not the server's whole uptime.
+    window_t0: Instant,
+}
+
+impl Dispatcher {
+    fn run(mut self, rx: mpsc::Receiver<Event>) {
+        loop {
+            let now = Instant::now();
+            // Flush every over-age queue — this fires on the dispatcher's
+            // own schedule, regardless of whether any client is pacing.
+            while let Some(b) = self.batchers.poll_timeout(now) {
+                self.dispatch(b);
+            }
+            if self.quiesce.is_some() {
+                // Draining: partial batches flush immediately (including
+                // submissions that raced in after the quiesce started).
+                if self.batchers.has_pending() {
+                    for b in self.batchers.drain(now) {
+                        self.dispatch(b);
+                    }
+                }
+                let deadline = self.quiesce.as_ref().unwrap().0;
+                if self.admission.inflight.load(Ordering::SeqCst) == 0 {
+                    let (_, reply) = self.quiesce.take().unwrap();
+                    let _ = reply.send(true);
+                } else if now >= deadline {
+                    // Worker died or stalled: report what actually
+                    // completed and say so, rather than crediting the
+                    // run with offered-but-unserved work.
+                    self.incomplete = true;
+                    self.drain_deadline_hit = true;
+                    let (_, reply) = self.quiesce.take().unwrap();
+                    let _ = reply.send(false);
+                }
+            }
+            let now = Instant::now();
+            let mut timeout = self.batchers.next_deadline(now).unwrap_or(IDLE_SLICE);
+            if let Some((deadline, _)) = &self.quiesce {
+                timeout = timeout.min(deadline.saturating_duration_since(now));
+            }
+            match rx.recv_timeout(timeout.max(Duration::from_micros(1))) {
+                Ok(Event::Submit { q, ticket }) => {
+                    self.queries_admitted += 1;
+                    self.items_admitted += q.items as u64;
+                    if q.arrival_s > self.max_arrival_s {
+                        self.max_arrival_s = q.arrival_s;
+                    }
+                    self.pending.insert(q.ticket, ticket);
+                    if let Some(b) = self.batchers.push(q, Instant::now()) {
+                        self.dispatch(b);
+                    }
+                }
+                Ok(Event::Result(r)) => self.complete(r),
+                Ok(Event::Reset { default_sla_ms, done }) => {
+                    self.reset(default_sla_ms);
+                    let _ = done.send(());
+                }
+                Ok(Event::Quiesce { deadline, reply }) => {
+                    // A newer quiesce supersedes an in-progress one.
+                    if let Some((_, old)) = self.quiesce.take() {
+                        let _ = old.send(false);
+                    }
+                    self.quiesce = Some((deadline, reply));
+                }
+                Ok(Event::Report { reply }) => {
+                    let report = self.build_report();
+                    let _ = reply.send(report);
+                }
+                Ok(Event::Shutdown { reply }) => {
+                    // Abandoned work is unserved work: the final report
+                    // must not read as a clean run (offered stays >
+                    // completed + shed, and `incomplete` says why).
+                    if !self.pending.is_empty() {
+                        self.incomplete = true;
+                    }
+                    for (_, t) in self.pending.drain() {
+                        t.resolve(TicketOutcome::Abandoned);
+                    }
+                    let report = self.build_report();
+                    let _ = reply.send(report);
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    for (_, t) in self.pending.drain() {
+                        t.resolve(TicketOutcome::Abandoned);
+                    }
+                    break;
+                }
+            }
+        }
+        // Dropping the workers closes their queues and joins them (they
+        // drain queued batches first; late results go nowhere).
+    }
+
+    fn dispatch(&mut self, batch: super::batcher::Batch) {
+        let outstanding: Vec<usize> = self.workers.iter().map(|w| w.outstanding()).collect();
+        let picked = self.router.route(&batch.model, batch.bucket, &outstanding);
+        self.workers[picked].submit(batch);
+    }
+
+    fn complete(&mut self, r: QueryResult) {
+        self.meter.record(&r.model, r.latency_ms, r.items as u64);
+        *self.bucket_hist.entry(r.batch_bucket).or_default() += 1;
+        self.queries_completed += 1;
+        if let Some(t) = self.pending.remove(&r.ticket) {
+            t.resolve(TicketOutcome::Completed(CompletedQuery {
+                id: r.id,
+                tenant: r.model,
+                items: r.items,
+                ctrs: r.ctrs,
+                latency_ms: r.latency_ms,
+                batch_bucket: r.batch_bucket,
+                worker: r.worker,
+            }));
+        }
+        self.admission.release();
+    }
+
+    fn reset(&mut self, default_sla_ms: Option<f64>) {
+        if let Some(s) = default_sla_ms {
+            self.default_sla_ms = s;
+        }
+        let mut meter = MultiSlaMeter::new(self.default_sla_ms);
+        for (m, s) in &self.tenant_slas {
+            meter.set_tenant_sla(m, *s);
+        }
+        self.meter = meter;
+        self.bucket_hist.clear();
+        self.queries_admitted = 0;
+        self.items_admitted = 0;
+        self.queries_completed = 0;
+        self.max_arrival_s = 0.0;
+        self.incomplete = false;
+        self.drain_deadline_hit = false;
+        self.admission.reset_shed();
+        self.window_t0 = Instant::now();
+    }
+
+    fn sla_for(&self, model: &str) -> f64 {
+        self.tenant_slas
+            .iter()
+            .rev()
+            .find(|(m, _)| m == model)
+            .map(|(_, s)| *s)
+            .unwrap_or(self.default_sla_ms)
+    }
+
+    fn build_report(&mut self) -> ServeReport {
+        let elapsed = self.window_t0.elapsed().as_secs_f64();
+        self.meter.set_elapsed(elapsed);
+        let shed = self.admission.shed_snapshot();
+        let mut pooled = self.meter.pooled_latencies();
+        let mut per_tenant: Vec<TenantReport> = self
+            .meter
+            .tenants_mut()
+            .map(|(model, m)| TenantReport {
+                model: model.clone(),
+                sla_ms: m.sla_ms,
+                queries: m.queries(),
+                items: m.items_served(),
+                shed_queries: 0,
+                shed_items: 0,
+                bounded_throughput: m.bounded_throughput(),
+                violation_rate: m.violation_rate(),
+                mean_ms: m.mean_ms(),
+                p50_ms: m.p50_ms(),
+                p99_ms: m.p99_ms(),
+            })
+            .collect();
+        // Fold shed counts into the tenant slices; a tenant whose every
+        // query was shed still appears (zero completions, honest sheds).
+        for (model, (sq, si)) in &shed.by_tenant {
+            match per_tenant.iter_mut().find(|t| &t.model == model) {
+                Some(t) => {
+                    t.shed_queries = *sq;
+                    t.shed_items = *si;
+                }
+                None => per_tenant.push(TenantReport {
+                    model: model.clone(),
+                    sla_ms: self.sla_for(model),
+                    queries: 0,
+                    items: 0,
+                    shed_queries: *sq,
+                    shed_items: *si,
+                    bounded_throughput: 0.0,
+                    violation_rate: 0.0,
+                    mean_ms: 0.0,
+                    p50_ms: 0.0,
+                    p99_ms: 0.0,
+                }),
+            }
+        }
+        per_tenant.sort_by(|a, b| a.model.cmp(&b.model));
+        let queries_offered = self.queries_admitted + shed.queries;
+        // Offered rate over the window-relative arrival horizon
+        // (arrival_s is epoch-anchored; subtract the window start). A
+        // degenerate schedule (single query, or every arrival at t=0)
+        // falls back to wall time so the summary is never a
+        // nonsensical 0.
+        let horizon =
+            self.max_arrival_s - self.window_t0.duration_since(self.t0).as_secs_f64();
+        let qps_offered = if horizon > 0.0 {
+            queries_offered as f64 / horizon
+        } else if elapsed > 0.0 {
+            queries_offered as f64 / elapsed
+        } else {
+            0.0
+        };
+        ServeReport {
+            queries_offered,
+            queries: self.queries_completed,
+            items_offered: self.items_admitted + shed.items,
+            items: self.meter.items_served(),
+            items_failed: self.meter.items_failed(),
+            queries_shed: shed.queries,
+            items_shed: shed.items,
+            inflight_cap: if self.admission.cap == usize::MAX {
+                None
+            } else {
+                Some(self.admission.cap)
+            },
+            peak_inflight: self.admission.peak.load(Ordering::SeqCst) as u64,
+            incomplete: self.incomplete,
+            drain_deadline_hit: self.drain_deadline_hit,
+            elapsed_s: elapsed,
+            qps_offered,
+            bounded_throughput: self.meter.bounded_throughput(),
+            violation_rate: self.meter.violation_rate(),
+            mean_ms: pooled.mean(),
+            p50_ms: pooled.p50(),
+            p99_ms: pooled.p99(),
+            bucket_histogram: self.bucket_hist.iter().map(|(b, n)| (*b, *n)).collect(),
+            per_tenant,
+            sharded: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockBackend;
+
+    fn mock_server(workers: usize, cap: usize, latency: Duration) -> Server {
+        ServerBuilder::new()
+            .workers(workers)
+            .routing("least-loaded")
+            .sla_ms(50.0)
+            .buckets(vec![1, 8])
+            .backend(Arc::new(MockBackend { latency }))
+            .inflight_cap(cap)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_validates_configuration() {
+        let b = |f: fn(ServerBuilder) -> ServerBuilder| f(ServerBuilder::new()).build();
+        assert!(b(|b| b.routing("nope")).is_err(), "unknown policy");
+        assert!(b(|b| b.buckets(vec![])).is_err(), "empty buckets");
+        assert!(b(|b| b.max_batch(0)).is_err(), "max_batch below smallest bucket");
+        assert!(b(|b| b.no_pools()).is_err(), "no workers");
+        assert!(b(|b| b.drain_deadline(Duration::ZERO)).is_err(), "zero drain deadline");
+    }
+
+    #[test]
+    fn preload_prewarms_models_without_a_mix() {
+        // The single-model serve path sets no mix; an explicit preload
+        // list must still warm the pool before the first live query.
+        let server = ServerBuilder::new()
+            .workers(1)
+            .preload(vec!["rmc1-small".into()])
+            .build()
+            .unwrap();
+        let native = server.native_backend().expect("builder-constructed native backend");
+        assert_eq!(native.pool.built_count(), 1, "preload list must build the model");
+        let _ = server.shutdown();
+    }
+
+    #[test]
+    fn submit_wait_ticket_roundtrip() {
+        let server = mock_server(1, 0, Duration::from_micros(100));
+        let handle = server.handle();
+        let t = handle.submit_live(Query::new(7, "rmc1-small", 3, 0.0));
+        assert_eq!(t.query_id, 7);
+        assert!(t.ticket_id > 0);
+        let out = t.wait();
+        let c = out.completed().expect("completed");
+        assert_eq!(c.id, 7);
+        assert_eq!(c.tenant, "rmc1-small");
+        assert_eq!(c.items, 3);
+        assert_eq!(c.ctrs.len(), 3, "mock backend returns one CTR per item");
+        assert!(c.latency_ms.is_finite());
+        // try_wait on a resolved ticket agrees.
+        assert!(t.try_wait().unwrap().completed().is_some());
+        let report = server.shutdown().expect("final report");
+        assert_eq!(report.queries, 1);
+        assert_eq!(report.queries_offered, 1);
+        assert_eq!(report.queries_shed, 0);
+        assert!(report.qps_offered > 0.0, "degenerate horizon must fall back to wall time");
+    }
+
+    #[test]
+    fn admission_cap_sheds_with_explicit_outcome() {
+        // Slow backend + cap 2: flooding 40 submissions must shed most,
+        // every ticket resolves, and the report's accounting is exact.
+        let server = mock_server(1, 2, Duration::from_millis(30));
+        let handle = server.handle();
+        let tickets: Vec<Ticket> = (0..40)
+            .map(|i| handle.submit_live(Query::new(i, "rmc1-small", 2, 0.0)))
+            .collect();
+        assert!(handle.inflight() <= 2, "inflight {} exceeds cap", handle.inflight());
+        let outcomes: Vec<TicketOutcome> = tickets.iter().map(Ticket::wait).collect();
+        let rejected = outcomes.iter().filter(|o| o.is_rejected()).count();
+        let completed = outcomes.iter().filter(|o| o.completed().is_some()).count();
+        assert_eq!(rejected + completed, 40, "every ticket resolves to exactly one outcome");
+        assert!(rejected > 0, "cap 2 under a 40-query flood must shed");
+        assert!(handle.quiesce(Duration::from_secs(10)).unwrap());
+        let report = handle.report().unwrap();
+        assert_eq!(report.queries_offered, 40);
+        assert_eq!(report.queries_shed, rejected as u64);
+        assert_eq!(report.queries, completed as u64);
+        assert_eq!(report.inflight_cap, Some(2));
+        assert!(report.peak_inflight <= 2, "peak {} exceeds cap", report.peak_inflight);
+        let tenant_shed: u64 = report.per_tenant.iter().map(|t| t.shed_queries).sum();
+        assert_eq!(tenant_shed, report.queries_shed);
+        let _ = server.shutdown();
+    }
+
+    #[test]
+    fn reset_accounting_opens_a_fresh_window() {
+        let server = mock_server(1, 0, Duration::from_micros(100));
+        let handle = server.handle();
+        handle.submit_live(Query::new(1, "rmc1-small", 2, 0.0)).wait();
+        handle.reset_accounting(Some(5.0)).unwrap();
+        handle.submit_live(Query::new(2, "rmc1-small", 4, 0.0)).wait();
+        assert!(handle.quiesce(Duration::from_secs(5)).unwrap());
+        let report = handle.report().unwrap();
+        assert_eq!(report.queries_offered, 1, "pre-reset query must not be counted");
+        assert_eq!(report.items_offered, 4);
+        assert_eq!(report.per_tenant[0].sla_ms, 5.0, "reset applied the new default SLA");
+        let _ = server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_abandons_unexecuted_queries() {
+        // A backend slower than the shutdown: queued-but-unbatched work
+        // resolves as Abandoned, never hangs.
+        let server = ServerBuilder::new()
+            .workers(1)
+            .sla_ms(50.0)
+            .buckets(vec![8])
+            .max_batch(8)
+            .batch_timeout_us(5_000_000) // flush only on size: queries sit pending
+            .backend(Arc::new(MockBackend { latency: Duration::from_millis(1) }))
+            .build()
+            .unwrap();
+        let handle = server.handle();
+        let t = handle.submit_live(Query::new(1, "rmc1-small", 1, 0.0));
+        // Give the dispatcher time to enqueue it (still unflushed).
+        std::thread::sleep(Duration::from_millis(20));
+        let report = server.shutdown().expect("report");
+        assert!(matches!(t.wait(), TicketOutcome::Abandoned));
+        assert_eq!(report.queries, 0);
+        assert_eq!(report.queries_offered, 1);
+        assert!(report.incomplete, "abandoned work must not read as a clean run");
+        assert!(!report.drain_deadline_hit, "no drain deadline was involved");
+    }
+}

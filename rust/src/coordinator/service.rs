@@ -1,27 +1,23 @@
-//! The coordinator service: wires router + batcher + worker pool and
-//! runs complete serving experiments (open-loop Poisson load against a
-//! deployment config), producing the paper's latency-bounded-throughput
-//! report.
+//! Serving reports + the open-loop experiment client.
 //!
-//! The coordinator is multi-tenant: one instance serves a *tenant set*
-//! (a `TrafficMix`), with a per-model `DynamicBatcher` behind a unified
-//! flush scheduler, per-tenant SLA accounting, and — under the
-//! `dedicated` routing policy — share-weighted worker partitioning, so
-//! isolated-vs-co-located serving is a measured experiment rather than
-//! only a simulated one (paper §VI, Fig 11).
+//! `ServeReport` is the paper's latency-bounded-throughput report
+//! (aggregate + per-tenant + admission/shed accounting), produced by the
+//! server's dispatcher. `Coordinator` is the open-loop *client* of the
+//! live serving API (`ServerBuilder` / `Server` / `ServerHandle` in
+//! `server.rs`): it paces a streaming query schedule against wall-clock,
+//! submits through a session handle, quiesces, and reads the server's
+//! report. There is no second serving code path — the experiment harness
+//! drives exactly the machinery a live client does.
 
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::DeploymentConfig;
-use crate::metrics::MultiSlaMeter;
 use crate::util::Json;
-use crate::workload::{Query, QueryResult, TrafficMix};
+use crate::workload::{Query, TrafficMix};
 
 use super::backend::Backend;
-use super::batcher::{TenantBatchCfg, TenantBatchers};
-use super::router::{partition_by_share, RoutingPolicy, WorkerInfo};
-use super::worker::WorkerHandle;
+use super::server::{Server, ServerBuilder, ServerHandle};
 
 /// Per-tenant slice of a serving run.
 #[derive(Debug, Clone)]
@@ -31,6 +27,9 @@ pub struct TenantReport {
     /// Completed queries / items for this tenant.
     pub queries: u64,
     pub items: u64,
+    /// Queries / items shed by admission control for this tenant.
+    pub shed_queries: u64,
+    pub shed_items: u64,
     /// Items ranked per second within THIS tenant's SLA.
     pub bounded_throughput: f64,
     pub violation_rate: f64,
@@ -39,12 +38,13 @@ pub struct TenantReport {
     pub p99_ms: f64,
 }
 
-/// Outcome of a serving run.
+/// Outcome of a serving run (or a live accounting window).
 #[derive(Debug, Clone)]
 pub struct ServeReport {
-    /// Queries offered by the workload schedule.
+    /// Queries offered to the server: admitted + shed.
     pub queries_offered: u64,
-    /// Queries that actually completed (== offered unless a worker died).
+    /// Queries that actually completed (== offered unless admission shed
+    /// load or a worker died).
     pub queries: u64,
     pub items_offered: u64,
     /// Items that actually produced results. Reporting offered items
@@ -54,11 +54,25 @@ pub struct ServeReport {
     /// Items whose batch errored in the backend (counted as SLA
     /// violations, excluded from `items`).
     pub items_failed: u64,
-    /// True when the drain loop gave up before every query completed
+    /// Queries / items shed by admission control (explicit `Rejected`
+    /// tickets — offered-but-shed, never silently dropped).
+    pub queries_shed: u64,
+    pub items_shed: u64,
+    /// Configured inflight cap (`None` = uncapped).
+    pub inflight_cap: Option<usize>,
+    /// High-water mark of admitted-but-incomplete queries — under a cap
+    /// this never exceeds it (the bounded-inflight invariant).
+    pub peak_inflight: u64,
+    /// True when the drain gave up before every admitted query completed
     /// (worker death / hang) — the run's numbers only cover what
     /// finished.
     pub incomplete: bool,
+    /// True when the configured drain deadline tripped (the cause of
+    /// `incomplete` in an otherwise-healthy run).
+    pub drain_deadline_hit: bool,
     pub elapsed_s: f64,
+    /// Offered load over the arrival horizon; falls back to wall time
+    /// when the schedule is degenerate (single query / all at t=0).
     pub qps_offered: f64,
     /// Items ranked per second within SLA, aggregated over tenants, each
     /// judged against its own bound (the headline metric, §III).
@@ -70,7 +84,7 @@ pub struct ServeReport {
     /// Batches per bucket size (batching effectiveness).
     pub bucket_histogram: Vec<(usize, u64)>,
     /// Per-tenant breakdown, model-name order. One entry per model that
-    /// completed at least one query.
+    /// completed (or shed) at least one query.
     pub per_tenant: Vec<TenantReport>,
     /// Per-model sharded-execution breakdown (shard SLS / gather /
     /// leader MLP / cache hit-rate), model-name order. Empty for
@@ -92,11 +106,24 @@ impl ServeReport {
             self.elapsed_s,
             self.qps_offered
         ));
+        if self.queries_shed > 0 {
+            s.push_str(&format!(
+                "admission: shed {} queries ({} items) at inflight cap {} (peak inflight {})\n",
+                self.queries_shed,
+                self.items_shed,
+                self.inflight_cap.map_or("-".into(), |c| c.to_string()),
+                self.peak_inflight
+            ));
+        }
         if self.incomplete {
-            s.push_str(
-                "WARNING: run incomplete — a worker died or stalled; metrics cover completed \
-                 queries only\n",
-            );
+            s.push_str(&format!(
+                "WARNING: run incomplete — {}; metrics cover completed queries only\n",
+                if self.drain_deadline_hit {
+                    "drain deadline tripped (worker died or stalled)"
+                } else {
+                    "shut down with admitted queries still unserved"
+                }
+            ));
         }
         if self.items_failed > 0 {
             s.push_str(&format!(
@@ -116,15 +143,17 @@ impl ServeReport {
         ));
         if self.per_tenant.len() > 1 {
             s.push_str(&format!(
-                "{:<12} {:>8} {:>8} {:>10} {:>8} {:>8} {:>8} {:>9}\n",
-                "tenant", "queries", "items", "items/s", "p50 ms", "p99 ms", "sla ms", "viol %"
+                "{:<12} {:>8} {:>8} {:>8} {:>10} {:>8} {:>8} {:>8} {:>9}\n",
+                "tenant", "queries", "items", "shed", "items/s", "p50 ms", "p99 ms", "sla ms",
+                "viol %"
             ));
             for t in &self.per_tenant {
                 s.push_str(&format!(
-                    "{:<12} {:>8} {:>8} {:>10.0} {:>8.3} {:>8.3} {:>8.1} {:>8.1}%\n",
+                    "{:<12} {:>8} {:>8} {:>8} {:>10.0} {:>8.3} {:>8.3} {:>8.1} {:>8.1}%\n",
                     t.model,
                     t.queries,
                     t.items,
+                    t.shed_queries,
                     t.bounded_throughput,
                     t.p50_ms,
                     t.p99_ms,
@@ -174,7 +203,12 @@ impl ServeReport {
             ("items_offered", num(self.items_offered as f64)),
             ("items_completed", num(self.items as f64)),
             ("items_failed", num(self.items_failed as f64)),
+            ("queries_shed", num(self.queries_shed as f64)),
+            ("items_shed", num(self.items_shed as f64)),
+            ("inflight_cap", self.inflight_cap.map_or(Json::Null, |c| num(c as f64))),
+            ("peak_inflight", num(self.peak_inflight as f64)),
             ("incomplete", Json::Bool(self.incomplete)),
+            ("drain_deadline_hit", Json::Bool(self.drain_deadline_hit)),
             ("elapsed_s", num(self.elapsed_s)),
             ("qps_offered", num(self.qps_offered)),
             ("bounded_throughput", num(self.bounded_throughput)),
@@ -219,6 +253,8 @@ impl ServeReport {
                                 ("sla_ms", num(t.sla_ms)),
                                 ("queries", num(t.queries as f64)),
                                 ("items", num(t.items as f64)),
+                                ("shed_queries", num(t.shed_queries as f64)),
+                                ("shed_items", num(t.shed_items as f64)),
                                 ("bounded_throughput", num(t.bounded_throughput)),
                                 ("violation_rate", num(t.violation_rate)),
                                 ("mean_ms", num(t.mean_ms)),
@@ -233,25 +269,18 @@ impl ServeReport {
     }
 }
 
-/// The serving coordinator (leader). Owns the worker pool.
+/// Open-loop experiment client over the live serving API. Construction
+/// goes through [`ServerBuilder`] (the `new`/`new_with_mix` conveniences
+/// exist for the historical signature); `run_open_loop` paces a query
+/// schedule through a [`ServerHandle`] session exactly like any other
+/// client.
 pub struct Coordinator {
-    workers: Vec<WorkerHandle>,
-    infos: Vec<WorkerInfo>,
-    policy: RoutingPolicy,
-    batcher: TenantBatchers,
-    /// Resolved per-tenant SLA bounds (model, ms) for the meter; models
-    /// outside the set fall back to the run's default SLA.
-    tenant_slas: Vec<(String, f64)>,
-    results_rx: mpsc::Receiver<QueryResult>,
-    rr_state: usize,
-    /// Models already warned about as unroutable (no worker serves
-    /// them) — warn once per model, not once per batch.
-    unroutable_warned: std::collections::HashSet<String>,
-    t0: Instant,
+    server: Server,
+    handle: ServerHandle,
 }
 
 impl Coordinator {
-    /// Build from a deployment config and a backend factory (one backend
+    /// Build from a deployment config and a backend (one backend
     /// instance shared across workers). Single-tenant batching defaults;
     /// use [`Coordinator::new_with_mix`] for a tenant set.
     pub fn new(
@@ -259,13 +288,14 @@ impl Coordinator {
         backend: Arc<dyn Backend>,
         buckets: Vec<usize>,
     ) -> anyhow::Result<Self> {
-        Self::build(cfg, backend, buckets, None)
+        Ok(Self::from_server(
+            ServerBuilder::new().deployment(cfg).backend(backend).buckets(buckets).build()?,
+        ))
     }
 
     /// Multi-tenant construction: a per-model `DynamicBatcher` per
-    /// tenant (flush timeout capped at a quarter of the tenant's SLA,
-    /// so a tight-SLA tenant never queues away its whole latency
-    /// budget), per-tenant SLA accounting, and — when `cfg.routing` is
+    /// tenant (flush timeout capped at a quarter of the tenant's SLA),
+    /// per-tenant SLA accounting, and — when `cfg.routing` is
     /// `"dedicated"` and the pools don't pin models themselves —
     /// share-weighted worker partitioning.
     pub fn new_with_mix(
@@ -274,235 +304,69 @@ impl Coordinator {
         buckets: Vec<usize>,
         mix: &TrafficMix,
     ) -> anyhow::Result<Self> {
-        Self::build(cfg, backend, buckets, Some(mix))
+        Ok(Self::from_server(
+            ServerBuilder::new()
+                .deployment(cfg)
+                .backend(backend)
+                .buckets(buckets)
+                .mix(mix.clone())
+                .build()?,
+        ))
     }
 
-    fn build(
-        cfg: &DeploymentConfig,
-        backend: Arc<dyn Backend>,
-        buckets: Vec<usize>,
-        mix: Option<&TrafficMix>,
-    ) -> anyhow::Result<Self> {
-        let policy = RoutingPolicy::parse(&cfg.routing)
-            .ok_or_else(|| anyhow::anyhow!("unknown routing policy '{}'", cfg.routing))?;
-        // Validate here (user-supplied config) so a bad max_batch surfaces
-        // as a clean Err; the batcher's own assert guards programmer error.
-        anyhow::ensure!(!buckets.is_empty(), "need at least one batch bucket");
-        let min_bucket = *buckets.iter().min().unwrap();
-        anyhow::ensure!(
-            cfg.max_batch >= min_bucket,
-            "max_batch {} is below the smallest batch bucket {min_bucket}",
-            cfg.max_batch
-        );
-        let (results_tx, results_rx) = mpsc::channel();
-        let t0 = Instant::now();
-        let mut workers = Vec::new();
-        let mut infos = Vec::new();
-        let mut id = 0usize;
-        for pool in &cfg.pools {
-            for _ in 0..pool.machines * pool.colocation {
-                infos.push(WorkerInfo { id, gen: pool.gen, models: pool.models.clone() });
-                workers.push(WorkerHandle::spawn(
-                    id,
-                    pool.gen,
-                    backend.clone(),
-                    results_tx.clone(),
-                    t0,
-                ));
-                id += 1;
-            }
-        }
-        if workers.is_empty() {
-            anyhow::bail!("deployment has no workers");
-        }
-        // Dedicated routing with an unpartitioned pool: carve the
-        // workers into share-weighted per-tenant partitions. Pools that
-        // pin models explicitly keep their configuration.
-        if let Some(mix) = mix {
-            if policy == RoutingPolicy::Dedicated && infos.iter().all(|w| w.models.is_empty()) {
-                let shares: Vec<(String, f64)> =
-                    mix.tenants.iter().map(|t| (t.model.clone(), t.share)).collect();
-                let parts = partition_by_share(workers.len(), &shares);
-                for (info, models) in infos.iter_mut().zip(parts) {
-                    info.models = models;
-                }
-            }
-        }
-        let default_timeout = Duration::from_micros(cfg.batch_timeout_us);
-        let mut batcher = TenantBatchers::uniform(buckets.clone(), cfg.max_batch, default_timeout);
-        let mut tenant_slas = Vec::new();
-        if let Some(mix) = mix {
-            for t in &mix.tenants {
-                let sla_ms = t.sla_ms.unwrap_or(cfg.sla_ms);
-                let timeout = default_timeout.min(Duration::from_secs_f64(sla_ms / 4.0 / 1e3));
-                batcher.add_tenant(
-                    buckets.clone(),
-                    &TenantBatchCfg {
-                        model: t.model.clone(),
-                        max_batch: cfg.max_batch,
-                        timeout,
-                    },
-                );
-                tenant_slas.push((t.model.clone(), sla_ms));
-            }
-        }
-        Ok(Coordinator {
-            workers,
-            infos,
-            policy,
-            batcher,
-            tenant_slas,
-            results_rx,
-            rr_state: 0,
-            unroutable_warned: Default::default(),
-            t0,
-        })
+    /// Wrap an already-built server (the CLI path: the builder is
+    /// configured explicitly, then driven open-loop).
+    pub fn from_server(server: Server) -> Self {
+        let handle = server.handle();
+        Coordinator { server, handle }
+    }
+
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// A live client session handle onto the underlying server.
+    pub fn handle(&self) -> ServerHandle {
+        self.server.handle()
     }
 
     /// Worker partition view (post-`dedicated` assignment) — test/debug.
     pub fn worker_models(&self) -> Vec<Vec<String>> {
-        self.infos.iter().map(|w| w.models.clone()).collect()
+        self.server.worker_models()
     }
 
-    fn dispatch(&mut self, batch: super::batcher::Batch) {
-        let outstanding: Vec<usize> =
-            self.workers.iter().map(|w| w.outstanding()).collect();
-        let picked = self
-            .policy
-            .pick(&self.infos, &batch.model, batch.bucket, &outstanding, &mut self.rr_state)
-            .unwrap_or_else(|| {
-                // No worker serves this model (reachable when every
-                // worker is pinned to other tenants). Serve it anyway on
-                // the least-loaded worker — dropping completed-count
-                // accounting would hang the drain loop — but say so: in
-                // a partitioned experiment this contaminates a tenant's
-                // isolation.
-                if self.unroutable_warned.insert(batch.model.clone()) {
-                    eprintln!(
-                        "coordinator: no worker serves model '{}'; routing its batches to the \
-                         least-loaded worker (partition isolation not guaranteed)",
-                        batch.model
-                    );
-                }
-                outstanding
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(id, out)| (**out, *id))
-                    .map(|(id, _)| id)
-                    .unwrap_or(0)
-            });
-        self.workers[picked].submit(batch);
-    }
-
-    /// Run an open-loop experiment: submit `queries` (pre-scheduled
-    /// arrivals) pacing to wall-clock, wait for completion, report.
-    /// `sla_ms` is the default latency bound; tenants configured through
-    /// [`Coordinator::new_with_mix`] are judged against their own.
-    pub fn run_open_loop(&mut self, queries: Vec<Query>, sla_ms: f64) -> ServeReport {
-        let n = queries.len() as u64;
-        let items_offered: u64 = queries.iter().map(|q| q.items as u64).sum();
-        let offered_horizon = queries.last().map(|q| q.arrival_s).unwrap_or(0.0);
-
-        let mut submitted = 0u64;
-        let mut meter = MultiSlaMeter::new(sla_ms);
-        for (model, sla) in &self.tenant_slas {
-            meter.set_tenant_sla(model, *sla);
-        }
-        let mut buckets: std::collections::BTreeMap<usize, u64> = Default::default();
-        let mut completed = 0u64;
-        let mut incomplete = false;
-
+    /// Run an open-loop experiment: pace `queries` (a pre-scheduled,
+    /// possibly streaming arrival source) against wall-clock, submit
+    /// each through the session API, quiesce, and report. `sla_ms` is
+    /// the default latency bound; tenants configured through the mix
+    /// are judged against their own.
+    ///
+    /// The driver sleeps the full gap to the next arrival — batcher
+    /// flush timing belongs to the server's dispatcher thread, so
+    /// nothing here busy-waits or affects flush scheduling.
+    pub fn run_open_loop<I>(&mut self, queries: I, sla_ms: f64) -> ServeReport
+    where
+        I: IntoIterator<Item = Query>,
+    {
+        self.handle.reset_accounting(Some(sla_ms)).expect("server dispatcher died");
+        let t0 = self.server.t0();
         for q in queries {
-            // Pace to the arrival schedule.
-            let target = self.t0 + Duration::from_secs_f64(q.arrival_s);
+            // Pace to the arrival schedule: one real sleep per gap.
+            let target = t0 + Duration::from_secs_f64(q.arrival_s);
             if let Some(wait) = target.checked_duration_since(Instant::now()) {
-                // Drain results while waiting.
-                let deadline = Instant::now() + wait;
-                while Instant::now() < deadline {
-                    let slice = self
-                        .batcher
-                        .next_deadline(Instant::now())
-                        .unwrap_or(deadline - Instant::now())
-                        .min(deadline - Instant::now());
-                    if let Ok(r) = self.results_rx.recv_timeout(slice.max(Duration::from_micros(50))) {
-                        completed += 1;
-                        meter.record(&r.model, r.latency_ms, r.items as u64);
-                        *buckets.entry(r.batch_bucket).or_default() += 1;
-                    }
-                    while let Some(b) = self.batcher.poll_timeout(Instant::now()) {
-                        self.dispatch(b);
-                    }
-                }
+                std::thread::sleep(wait);
             }
-            submitted += 1;
-            if let Some(b) = self.batcher.push(q, Instant::now()) {
-                self.dispatch(b);
-            }
-            while let Some(b) = self.batcher.poll_timeout(Instant::now()) {
-                self.dispatch(b);
-            }
+            // The dispatcher resolves tickets into the report whether or
+            // not anyone holds them; the open-loop driver doesn't.
+            drop(self.handle.submit(q));
         }
-        // Drain: flush pending, then wait for all results.
-        for b in self.batcher.drain(Instant::now()) {
-            self.dispatch(b);
-        }
-        while completed < submitted {
-            match self.results_rx.recv_timeout(Duration::from_secs(30)) {
-                Ok(r) => {
-                    completed += 1;
-                    meter.record(&r.model, r.latency_ms, r.items as u64);
-                    *buckets.entry(r.batch_bucket).or_default() += 1;
-                }
-                Err(_) => {
-                    // Worker died or stalled: report what actually
-                    // completed and say so, rather than crediting the
-                    // run with offered-but-unserved work.
-                    incomplete = true;
-                    break;
-                }
-            }
-        }
-        let elapsed = self.t0.elapsed().as_secs_f64();
-        meter.set_elapsed(elapsed);
-        let mut pooled = meter.pooled_latencies();
-        let per_tenant: Vec<TenantReport> = meter
-            .tenants_mut()
-            .map(|(model, m)| TenantReport {
-                model: model.clone(),
-                sla_ms: m.sla_ms,
-                queries: m.queries(),
-                items: m.items_served(),
-                bounded_throughput: m.bounded_throughput(),
-                violation_rate: m.violation_rate(),
-                mean_ms: m.mean_ms(),
-                p50_ms: m.p50_ms(),
-                p99_ms: m.p99_ms(),
-            })
-            .collect();
-        ServeReport {
-            queries_offered: n,
-            queries: completed,
-            items_offered,
-            items: meter.items_served(),
-            items_failed: meter.items_failed(),
-            incomplete,
-            elapsed_s: elapsed,
-            qps_offered: if offered_horizon > 0.0 { n as f64 / offered_horizon } else { 0.0 },
-            bounded_throughput: meter.bounded_throughput(),
-            violation_rate: meter.violation_rate(),
-            mean_ms: pooled.mean(),
-            p50_ms: pooled.p50(),
-            p99_ms: pooled.p99(),
-            bucket_histogram: buckets.into_iter().collect(),
-            per_tenant,
-            sharded: Vec::new(),
-        }
+        let _drained =
+            self.handle.quiesce(self.server.drain_deadline()).expect("server dispatcher died");
+        self.handle.report().expect("server dispatcher died")
     }
 
-    pub fn shutdown(mut self) {
-        for w in &mut self.workers {
-            w.shutdown();
-        }
+    pub fn shutdown(self) {
+        let _ = self.server.shutdown();
     }
 }
 
@@ -512,6 +376,7 @@ mod tests {
     use crate::config::{DeploymentConfig, ServerGen, ServerPoolConfig};
     use crate::coordinator::backend::MockBackend;
     use crate::workload::PoissonArrivals;
+    use std::time::Duration as StdDuration;
 
     fn deployment(workers: usize, routing: &str) -> DeploymentConfig {
         DeploymentConfig {
@@ -538,12 +403,13 @@ mod tests {
     #[test]
     fn serves_all_queries_with_mock_backend() {
         let cfg = deployment(2, "round-robin");
-        let backend = Arc::new(MockBackend { latency: Duration::from_micros(200) });
+        let backend = Arc::new(MockBackend { latency: StdDuration::from_micros(200) });
         let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
         let report = c.run_open_loop(queries(40, 2000.0), 50.0);
         assert_eq!(report.queries, 40);
         assert_eq!(report.queries_offered, 40);
         assert_eq!(report.items, report.items_offered, "all items completed");
+        assert_eq!(report.queries_shed, 0, "uncapped run never sheds");
         assert!(!report.incomplete);
         assert!(report.bounded_throughput > 0.0);
         assert!(report.violation_rate < 0.2, "violations {}", report.violation_rate);
@@ -553,7 +419,7 @@ mod tests {
     #[test]
     fn batches_fill_under_load() {
         let cfg = deployment(1, "least-loaded");
-        let backend = Arc::new(MockBackend { latency: Duration::from_micros(100) });
+        let backend = Arc::new(MockBackend { latency: StdDuration::from_micros(100) });
         let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
         // 200 queries at very high rate: most batches should be b8.
         let report = c.run_open_loop(queries(200, 100_000.0), 1000.0);
@@ -572,7 +438,7 @@ mod tests {
     fn unknown_policy_rejected() {
         let mut cfg = deployment(1, "nope");
         cfg.routing = "nope".into();
-        let backend = Arc::new(MockBackend { latency: Duration::from_micros(10) });
+        let backend = Arc::new(MockBackend { latency: StdDuration::from_micros(10) });
         assert!(Coordinator::new(&cfg, backend, vec![1]).is_err());
     }
 
@@ -581,7 +447,7 @@ mod tests {
         // User-supplied config error must surface as Err, not a panic.
         let mut cfg = deployment(1, "round-robin");
         cfg.max_batch = 0;
-        let backend = Arc::new(MockBackend { latency: Duration::from_micros(10) });
+        let backend = Arc::new(MockBackend { latency: StdDuration::from_micros(10) });
         assert!(Coordinator::new(&cfg, backend.clone(), vec![1, 8]).is_err());
         assert!(Coordinator::new(&cfg, backend, Vec::new()).is_err());
     }
@@ -590,7 +456,7 @@ mod tests {
     fn sla_violations_counted() {
         let cfg = deployment(1, "round-robin");
         // Backend slower than the SLA.
-        let backend = Arc::new(MockBackend { latency: Duration::from_millis(20) });
+        let backend = Arc::new(MockBackend { latency: StdDuration::from_millis(20) });
         let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
         let report = c.run_open_loop(queries(10, 10_000.0), 0.5);
         assert!(report.violation_rate > 0.5);
@@ -598,10 +464,27 @@ mod tests {
     }
 
     #[test]
+    fn qps_offered_never_nonsensical() {
+        // Regression (ISSUE 5 satellite): a single query — or a schedule
+        // arriving entirely at t=0 — used to report qps_offered = 0.
+        let cfg = deployment(1, "round-robin");
+        let backend = Arc::new(MockBackend { latency: StdDuration::from_micros(50) });
+        let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
+        let report = c.run_open_loop(vec![Query::new(0, "rmc1-small", 2, 0.0)], 50.0);
+        assert_eq!(report.queries, 1);
+        assert!(
+            report.qps_offered > 0.0 && report.qps_offered.is_finite(),
+            "qps_offered {} must fall back to wall time",
+            report.qps_offered
+        );
+        c.shutdown();
+    }
+
+    #[test]
     fn multi_tenant_mock_run_reports_per_tenant() {
         let mix = TrafficMix::parse("rmc1-small:0.5:40,rmc2-small:0.5").unwrap();
         let cfg = deployment(2, "least-loaded");
-        let backend = Arc::new(MockBackend { latency: Duration::from_micros(200) });
+        let backend = Arc::new(MockBackend { latency: StdDuration::from_micros(200) });
         let mut c = Coordinator::new_with_mix(&cfg, backend, vec![1, 8], &mix).unwrap();
         let qs = mix.generate(60, 3000.0, 5);
         let report = c.run_open_loop(qs, 50.0);
@@ -627,7 +510,7 @@ mod tests {
     fn dedicated_policy_partitions_unpinned_workers() {
         let mix = TrafficMix::parse("rmc1-small:0.75,rmc2-small:0.25").unwrap();
         let cfg = deployment(4, "dedicated");
-        let backend = Arc::new(MockBackend { latency: Duration::from_micros(50) });
+        let backend = Arc::new(MockBackend { latency: StdDuration::from_micros(50) });
         let c = Coordinator::new_with_mix(&cfg, backend, vec![1, 8], &mix).unwrap();
         let parts = c.worker_models();
         assert_eq!(parts.len(), 4);
@@ -640,7 +523,7 @@ mod tests {
     #[test]
     fn serve_report_json_roundtrips() {
         let cfg = deployment(1, "round-robin");
-        let backend = Arc::new(MockBackend { latency: Duration::from_micros(100) });
+        let backend = Arc::new(MockBackend { latency: StdDuration::from_micros(100) });
         let mut c = Coordinator::new(&cfg, backend, vec![1, 8]).unwrap();
         let mut report = c.run_open_loop(queries(10, 5000.0), 50.0);
         c.shutdown();
@@ -663,6 +546,10 @@ mod tests {
         let v = Json::parse(&text).unwrap();
         assert_eq!(v.get("queries_completed").and_then(Json::as_usize), Some(10));
         assert_eq!(v.get("incomplete").and_then(Json::as_bool), Some(false));
+        assert_eq!(v.get("drain_deadline_hit").and_then(Json::as_bool), Some(false));
+        assert_eq!(v.get("queries_shed").and_then(Json::as_usize), Some(0));
+        assert_eq!(v.get("inflight_cap"), Some(&Json::Null));
+        assert!(v.get("peak_inflight").and_then(Json::as_usize).is_some());
         assert!(v.get("per_tenant").and_then(Json::as_arr).is_some());
         let sharded = v.get("sharded").and_then(Json::as_arr).unwrap();
         assert_eq!(sharded.len(), 1);

@@ -23,14 +23,20 @@ pub struct WorkerHandle {
 
 impl WorkerHandle {
     /// Spawn a worker. Results (one per query) flow to `results_tx`;
-    /// `t0` anchors latency measurement to the service start.
-    pub fn spawn(
+    /// `t0` anchors latency measurement to the service start. The sink
+    /// type is generic so the same worker feeds either a bare
+    /// `QueryResult` channel or the server dispatcher's event channel
+    /// (`ServerEvent: From<QueryResult>`).
+    pub fn spawn<E>(
         id: usize,
         gen: ServerGen,
         backend: Arc<dyn Backend>,
-        results_tx: mpsc::Sender<QueryResult>,
+        results_tx: mpsc::Sender<E>,
         t0: Instant,
-    ) -> Self {
+    ) -> Self
+    where
+        E: From<QueryResult> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Batch>();
         let outstanding = Arc::new(AtomicUsize::new(0));
         let out2 = outstanding.clone();
@@ -50,29 +56,31 @@ impl WorkerHandle {
                                     .unwrap_or_default()
                                     .as_secs_f64()
                                     * 1e3;
-                                let _ = results_tx.send(QueryResult {
+                                let _ = results_tx.send(E::from(QueryResult {
                                     id: q.id,
+                                    ticket: q.ticket,
                                     model: q.model.clone(),
                                     items: q.items,
                                     ctrs: c,
                                     latency_ms,
                                     batch_bucket: batch.bucket,
                                     worker: id,
-                                });
+                                }));
                             }
                         }
                         Err(e) => {
                             eprintln!("worker-{id}: batch failed: {e:#}");
                             for q in &batch.queries {
-                                let _ = results_tx.send(QueryResult {
+                                let _ = results_tx.send(E::from(QueryResult {
                                     id: q.id,
+                                    ticket: q.ticket,
                                     model: q.model.clone(),
                                     items: q.items,
                                     ctrs: Vec::new(),
                                     latency_ms: f64::INFINITY,
                                     batch_bucket: batch.bucket,
                                     worker: id,
-                                });
+                                }));
                             }
                         }
                     }

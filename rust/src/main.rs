@@ -9,9 +9,26 @@
 //!                [--impl native|xla|pallas] [--threads N]
 //!                [--engine optimized|reference]
 //!                [--shards N] [--cache-rows F]
+//!                [--inflight-cap N] [--drain-deadline-s F]
 //!                                       end-to-end serving run (native
 //!                                       needs no artifacts; xla/pallas
 //!                                       need the `pjrt` feature).
+//!                                       Every flag lands on one
+//!                                       validated ServerBuilder; the
+//!                                       open-loop driver is a client
+//!                                       of the live Server/ticket API.
+//!                                       --inflight-cap N bounds
+//!                                       admitted-but-incomplete
+//!                                       queries; excess load sheds
+//!                                       with explicit Rejected tickets
+//!                                       counted in the report
+//!                                       (queries_shed / items_shed /
+//!                                       per-tenant sheds; 0 =
+//!                                       uncapped). --drain-deadline-s
+//!                                       bounds the end-of-run drain
+//!                                       wait (drain_deadline_hit +
+//!                                       incomplete in the report when
+//!                                       it trips).
 //!                                       --mix serves a multi-tenant
 //!                                       model set (per-query model
 //!                                       drawn from the shares, e.g.
@@ -54,9 +71,9 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use recsys::config::{DeploymentConfig, ServerGen, ServerSpec};
-use recsys::coordinator::{Backend, Coordinator, NativeBackend};
+use recsys::coordinator::{Backend, Coordinator, ServerBuilder};
 use recsys::model::ModelGraph;
-use recsys::runtime::{EngineKind, ExecOptions, NativePool};
+use recsys::runtime::{EngineKind, ExecOptions};
 use recsys::simulator::MachineSim;
 use recsys::workload::{PoissonArrivals, Query, SparseIdGen, TrafficMix};
 
@@ -186,16 +203,17 @@ fn cmd_figure(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result
     Ok(())
 }
 
-/// Build the serving backend for `--impl`, preloading every model in
-/// the tenant set (all tenants share one pool/engine, so co-located
-/// batches contend on the same intra-op thread pool and scratch
-/// arenas). Native is always available; xla/pallas execute the AOT
-/// artifacts and need the `pjrt` feature.
-fn make_backend(
+/// Configure the builder's backend for `--impl`. Native construction
+/// (pool seed 0, tenant set preloaded so all tenants share one
+/// pool/engine and co-located batches contend on the same intra-op
+/// thread pool and scratch arenas) happens inside `ServerBuilder::build`;
+/// xla/pallas execute the AOT artifacts and need the `pjrt` feature.
+fn builder_with_backend(
+    builder: recsys::coordinator::ServerBuilder,
     models: &[String],
     impl_: &str,
     opts: ExecOptions,
-) -> anyhow::Result<(Arc<dyn Backend>, Vec<usize>, Option<Arc<NativeBackend>>)> {
+) -> anyhow::Result<recsys::coordinator::ServerBuilder> {
     match impl_ {
         "native" => {
             println!(
@@ -211,19 +229,17 @@ fn make_backend(
                     String::new()
                 }
             );
-            let pool = Arc::new(NativePool::new(0));
-            let native = Arc::new(NativeBackend::with_options(pool, opts));
-            for model in models {
-                // Sharded mode preloads the services (shard executors
-                // own the tables); single-node preloads the pool.
-                native.preload(model)?;
-            }
-            let backend: Arc<dyn Backend> = native.clone();
-            Ok((backend, recsys::config::PJRT_BATCHES.to_vec(), Some(native)))
+            // Preload explicitly: the single-model path never sets a
+            // mix on the builder, but the first live query must not pay
+            // the model build.
+            Ok(builder
+                .native(opts)
+                .preload(models.to_vec())
+                .buckets(recsys::config::PJRT_BATCHES.to_vec()))
         }
         "xla" | "pallas" => {
             let (backend, buckets) = make_pjrt_backend(models, impl_)?;
-            Ok((backend, buckets, None))
+            Ok(builder.backend(backend).buckets(buckets))
         }
         other => anyhow::bail!("unknown --impl '{other}' (expected native, xla or pallas)"),
     }
@@ -312,6 +328,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "--items applies to single-model serving only; a mix draws per-tenant item counts \
          from each tenant's distribution"
     );
+    let inflight_cap: usize =
+        flags.get("inflight-cap").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let drain_deadline_s: f64 =
+        flags.get("drain-deadline-s").map(|s| s.parse()).transpose()?.unwrap_or(30.0);
+    anyhow::ensure!(drain_deadline_s > 0.0, "--drain-deadline-s must be positive");
 
     // Tenant set: --mix serves a weighted multi-model mix; --model (or
     // the default) degenerates to a single-tenant mix of that model.
@@ -320,37 +341,51 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         None => TrafficMix::single(&model, items),
     };
     let opts = ExecOptions { threads, engine, shards, cache_rows };
-    let (backend, buckets, native_backend) = make_backend(&mix.models(), &impl_, opts)?;
+
+    // All flag plumbing lands on the one validated builder surface.
+    let mut builder = ServerBuilder::new()
+        .deployment(&cfg)
+        .inflight_cap(inflight_cap)
+        .drain_deadline(std::time::Duration::from_secs_f64(drain_deadline_s));
     // Only an explicit --mix opts into per-tenant batching (and its
     // SLA/4 flush-timeout cap); the single-model path keeps the
     // uniform batcher and whatever batch_timeout_us the config asked
     // for, exactly as before.
-    let mut coordinator = if flags.contains_key("mix") {
-        Coordinator::new_with_mix(&cfg, backend, buckets, &mix)?
-    } else {
-        Coordinator::new(&cfg, backend, buckets)?
-    };
+    if flags.contains_key("mix") {
+        builder = builder.mix(mix.clone());
+    }
+    builder = builder_with_backend(builder, &mix.models(), &impl_, opts)?;
+    let server = builder.build()?;
+    // Sharded serving: keep a handle on the internally-built native
+    // backend so the per-model per-stage breakdown can be attached to
+    // the report after the run (empty vec for single-node / PJRT).
+    let native_backend = server.native_backend();
+    let mut coordinator = Coordinator::from_server(server);
 
-    let queries: Vec<Query> = if flags.contains_key("mix") {
-        mix.generate(n, qps, 1234)
+    println!(
+        "serving {n} queries at {qps} qps (SLA {} ms, impl {impl_}, routing {}, tenants {:?}{}) ...",
+        cfg.sla_ms,
+        cfg.routing,
+        mix.models(),
+        if inflight_cap > 0 {
+            format!(", inflight cap {inflight_cap}")
+        } else {
+            String::new()
+        }
+    );
+    // Streaming query sources: the open-loop driver paces straight off
+    // the iterator, so a multi-minute run holds O(1) queries in memory.
+    let mut report = if flags.contains_key("mix") {
+        coordinator.run_open_loop(mix.stream(n, qps, 1234), cfg.sla_ms)
     } else {
         // Single-model path keeps its historical fixed item count (and
         // therefore its historical numbers).
         let mut arr = PoissonArrivals::new(qps, 1234);
-        (0..n)
-            .map(|i| Query::new(i as u64, model.clone(), items, arr.next_arrival_s()))
-            .collect()
+        let queries = (0..n)
+            .map(move |i| Query::new(i as u64, model.clone(), items, arr.next_arrival_s()));
+        coordinator.run_open_loop(queries, cfg.sla_ms)
     };
-    println!(
-        "serving {n} queries at {qps} qps (SLA {} ms, impl {impl_}, routing {}, tenants {:?}) ...",
-        cfg.sla_ms,
-        cfg.routing,
-        mix.models()
-    );
-    let mut report = coordinator.run_open_loop(queries, cfg.sla_ms);
     if let Some(nb) = &native_backend {
-        // Sharded serving: attach the per-model per-stage breakdown
-        // (empty vec for single-node, which renders nothing).
         report.sharded = nb.sharded_breakdown();
     }
     print!("{}", report.render());

@@ -11,4 +11,4 @@ mod traffic_mix;
 pub use arrivals::PoissonArrivals;
 pub use query::{Query, QueryResult};
 pub use sparse_gen::{unique_fraction, IdDistribution, SparseIdGen};
-pub use traffic_mix::{TenantSpec, TrafficMix};
+pub use traffic_mix::{QueryStream, TenantSpec, TrafficMix};

@@ -14,12 +14,17 @@ pub struct Query {
     pub arrival_s: f64,
     /// Seed for this query's sparse-feature generation.
     pub seed: u64,
+    /// Server-assigned completion-handle id, unique per submission.
+    /// Caller-supplied `id`s are free to collide across client threads;
+    /// `ServerHandle::submit` stamps this so results always route back
+    /// to the right ticket. 0 until submitted.
+    pub ticket: u64,
 }
 
 impl Query {
     pub fn new(id: u64, model: impl Into<String>, items: usize, arrival_s: f64) -> Self {
         let model = model.into();
-        Query { id, seed: id.wrapping_mul(0x9E3779B97F4A7C15), model, items, arrival_s }
+        Query { id, seed: id.wrapping_mul(0x9E3779B97F4A7C15), model, items, arrival_s, ticket: 0 }
     }
 }
 
@@ -27,6 +32,8 @@ impl Query {
 #[derive(Debug, Clone)]
 pub struct QueryResult {
     pub id: u64,
+    /// Ticket id copied from the query (see `Query::ticket`).
+    pub ticket: u64,
     pub model: String,
     pub items: usize,
     /// Predicted CTRs (PJRT backend) or empty (simulation backend).

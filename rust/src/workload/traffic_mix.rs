@@ -146,19 +146,24 @@ impl TrafficMix {
     /// Generate `n` open-loop queries at aggregate rate `qps`: one
     /// merged Poisson arrival process, per-query tenant drawn from the
     /// mix shares, per-query items drawn from the tenant's distribution.
-    /// Fully deterministic given `seed`.
+    /// Fully deterministic given `seed`. Materializes the whole
+    /// schedule; prefer [`TrafficMix::stream`] for long runs.
     pub fn generate(&self, n: usize, qps: f64, seed: u64) -> Vec<Query> {
-        let mut arr = PoissonArrivals::new(qps, seed);
-        let mut rng = Rng::seed_from_u64(seed ^ 0x7E41_A7C0_FFEE_D00D);
-        (0..n)
-            .map(|i| {
-                let t = self.draw_tenant(&mut rng);
-                // Uniform in [1, 2·mean-1] — mean items_mean, never 0.
-                let span = (2 * t.items_mean).saturating_sub(1).max(1) as u64;
-                let items = 1 + rng.gen_range(span) as usize;
-                Query::new(i as u64, t.model.clone(), items, arr.next_arrival_s())
-            })
-            .collect()
+        self.stream(n, qps, seed).collect()
+    }
+
+    /// Streaming form of [`TrafficMix::generate`]: the same
+    /// deterministic query sequence as a lazy iterator, so a
+    /// multi-minute open-loop run holds O(1) queries in memory instead
+    /// of the whole schedule (the server API paces straight off this).
+    pub fn stream(&self, n: usize, qps: f64, seed: u64) -> QueryStream {
+        QueryStream {
+            mix: self.clone(),
+            arr: PoissonArrivals::new(qps, seed),
+            rng: Rng::seed_from_u64(seed ^ 0x7E41_A7C0_FFEE_D00D),
+            next_id: 0,
+            remaining: n,
+        }
     }
 
     fn draw_tenant(&self, rng: &mut Rng) -> &TenantSpec {
@@ -173,6 +178,43 @@ impl TrafficMix {
         self.tenants.last().unwrap()
     }
 }
+
+/// Lazy open-loop query source (see [`TrafficMix::stream`]). Owns its
+/// RNG state, so two streams with the same (mix, n, qps, seed) yield
+/// identical query sequences.
+#[derive(Debug, Clone)]
+pub struct QueryStream {
+    mix: TrafficMix,
+    arr: PoissonArrivals,
+    rng: Rng,
+    next_id: u64,
+    remaining: usize,
+}
+
+impl Iterator for QueryStream {
+    type Item = Query;
+
+    fn next(&mut self) -> Option<Query> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let t = self.mix.draw_tenant(&mut self.rng);
+        // Uniform in [1, 2·mean-1] — mean items_mean, never 0.
+        let span = (2 * t.items_mean).saturating_sub(1).max(1) as u64;
+        let model = t.model.clone();
+        let items = 1 + self.rng.gen_range(span) as usize;
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Query::new(id, model, items, self.arr.next_arrival_s()))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for QueryStream {}
 
 #[cfg(test)]
 mod tests {
@@ -240,6 +282,23 @@ mod tests {
                 a.iter().filter(|q| q.model == t.model).count() as f64 / a.len() as f64;
             assert!((got - t.share).abs() < 0.04, "{}: got {got}, want {}", t.model, t.share);
         }
+    }
+
+    #[test]
+    fn stream_matches_generate_lazily() {
+        let mix = TrafficMix::parse("rmc1:0.5,rmc3:0.5").unwrap();
+        let eager = mix.generate(500, 800.0, 13);
+        let stream = mix.stream(500, 800.0, 13);
+        assert_eq!(stream.len(), 500);
+        let lazy: Vec<Query> = stream.collect();
+        assert_eq!(eager.len(), lazy.len());
+        assert!(eager.iter().zip(&lazy).all(|(a, b)| {
+            a.id == b.id
+                && a.model == b.model
+                && a.items == b.items
+                && a.arrival_s == b.arrival_s
+                && a.seed == b.seed
+        }));
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Integration tests over the live serving API (ISSUE 5): concurrent
+//! multi-client sessions, bounded admission control with explicit shed
+//! accounting, drain-deadline honesty, and conformance of the open-loop
+//! harness (now a thin client of the same API) with its historical
+//! accounting.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use recsys::coordinator::{Coordinator, MockBackend, ServerBuilder, Ticket, TicketOutcome};
+use recsys::runtime::ExecOptions;
+use recsys::workload::{PoissonArrivals, Query, TrafficMix};
+
+/// The query set both multi-client determinism runs submit: two tenants,
+/// ids 0..n (ids are the determinism key — CTRs derive from id seeds).
+fn session_queries(n: usize) -> Vec<Query> {
+    (0..n as u64)
+        .map(|i| {
+            let model = if i % 3 == 0 { "rmc2-small" } else { "rmc1-small" };
+            Query::new(i, model, 1 + (i % 4) as usize, 0.0)
+        })
+        .collect()
+}
+
+fn native_server(workers: usize) -> recsys::coordinator::Server {
+    ServerBuilder::new()
+        .mix(TrafficMix::parse("rmc1-small:0.7,rmc2-small:0.3").unwrap())
+        .workers(workers)
+        .routing("least-loaded")
+        .sla_ms(500.0)
+        .native(ExecOptions::default())
+        .build()
+        .unwrap()
+}
+
+/// Submit `queries` from `clients` concurrent session threads and wait
+/// every ticket; returns id -> (tenant, ctrs).
+fn run_clients(
+    server: &recsys::coordinator::Server,
+    queries: Vec<Query>,
+    clients: usize,
+) -> BTreeMap<u64, (String, Vec<f32>)> {
+    let tickets: Vec<Ticket> = std::thread::scope(|s| {
+        let joins: Vec<_> = queries
+            .chunks(queries.len().div_ceil(clients))
+            .map(|chunk| {
+                let handle = server.handle();
+                let chunk = chunk.to_vec();
+                s.spawn(move || {
+                    chunk.into_iter().map(|q| handle.submit_live(q)).collect::<Vec<Ticket>>()
+                })
+            })
+            .collect();
+        joins.into_iter().flat_map(|j| j.join().unwrap()).collect()
+    });
+    tickets
+        .into_iter()
+        .map(|t| {
+            let outcome = t.wait();
+            let done = outcome.completed().expect("uncapped run completes everything");
+            (done.id, (done.tenant.clone(), done.ctrs.clone()))
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_multi_client_matches_single_client() {
+    // The determinism contract across the session API: per-query CTRs
+    // served to 4 concurrent client threads are bitwise-identical to a
+    // single client submitting the same queries — batch composition is
+    // scheduling, never numerics. Per-ticket results must also match the
+    // per-tenant ServeReport accounting exactly.
+    let n = 48;
+    let single_server = native_server(2);
+    let single = run_clients(&single_server, session_queries(n), 1);
+    let single_report = single_server.shutdown().expect("report");
+
+    let multi_server = native_server(2);
+    let multi = run_clients(&multi_server, session_queries(n), 4);
+    let multi_report = multi_server.shutdown().expect("report");
+
+    assert_eq!(single.len(), n);
+    assert_eq!(multi.len(), n);
+    for (id, (tenant, ctrs)) in &single {
+        let (m_tenant, m_ctrs) = &multi[id];
+        assert_eq!(tenant, m_tenant, "query {id} routed to a different tenant");
+        assert_eq!(ctrs, m_ctrs, "query {id}: multi-client CTRs diverge from single-client");
+        assert!(!ctrs.is_empty());
+    }
+
+    // Per-ticket results == per-tenant report accounting, on both runs.
+    for (report, results) in [(&single_report, &single), (&multi_report, &multi)] {
+        assert_eq!(report.queries, n as u64);
+        assert_eq!(report.queries_shed, 0);
+        assert!(!report.incomplete);
+        let mut by_tenant: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+        for (_, (tenant, ctrs)) in results.iter() {
+            let e = by_tenant.entry(tenant.clone()).or_default();
+            e.0 += 1;
+            e.1 += ctrs.len() as u64;
+        }
+        assert_eq!(report.per_tenant.len(), by_tenant.len());
+        for t in &report.per_tenant {
+            let (q, items) = by_tenant[&t.model];
+            assert_eq!(t.queries, q, "{}: ticket count != report", t.model);
+            assert_eq!(t.items, items, "{}: ticket items != report", t.model);
+        }
+    }
+}
+
+#[test]
+fn overload_sheds_bounded_and_accounted() {
+    // Shed-under-overload property, across cap settings: inflight never
+    // exceeds the cap, every offered query resolves to exactly one of
+    // completed/shed, and per-tenant shed counts sum to the total.
+    for cap in [1usize, 8] {
+        let server = ServerBuilder::new()
+            .mix(TrafficMix::parse("rmc1-small:0.5,rmc2-small:0.5").unwrap())
+            .workers(2)
+            .routing("least-loaded")
+            .sla_ms(50.0)
+            .buckets(vec![1, 8])
+            .backend(Arc::new(MockBackend { latency: Duration::from_millis(10) }))
+            .inflight_cap(cap)
+            .build()
+            .unwrap();
+        let (clients, per_client) = (4usize, 75usize);
+        let outcomes: Vec<TicketOutcome> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..clients)
+                .map(|c| {
+                    let handle = server.handle();
+                    s.spawn(move || {
+                        let tickets: Vec<Ticket> = (0..per_client)
+                            .map(|i| {
+                                let id = (c * per_client + i) as u64;
+                                let model = if id % 2 == 0 { "rmc1-small" } else { "rmc2-small" };
+                                handle.submit_live(Query::new(id, model, 2, 0.0))
+                            })
+                            .collect();
+                        tickets.iter().map(Ticket::wait).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            joins.into_iter().flat_map(|j| j.join().unwrap()).collect()
+        });
+        let offered = (clients * per_client) as u64;
+        let completed = outcomes.iter().filter(|o| o.completed().is_some()).count() as u64;
+        let rejected = outcomes.iter().filter(|o| o.is_rejected()).count() as u64;
+        assert_eq!(
+            completed + rejected,
+            offered,
+            "cap {cap}: every query resolves to exactly one of completed/shed"
+        );
+        assert!(rejected > 0, "cap {cap}: a 300-query flood must shed");
+
+        let handle = server.handle();
+        assert!(handle.quiesce(Duration::from_secs(20)).unwrap(), "cap {cap}: drain");
+        let report = server.shutdown().expect("report");
+        assert_eq!(report.queries_offered, offered, "cap {cap}");
+        assert_eq!(report.queries, completed, "cap {cap}");
+        assert_eq!(report.queries_shed, rejected, "cap {cap}");
+        assert_eq!(report.inflight_cap, Some(cap), "cap {cap}");
+        assert!(
+            report.peak_inflight <= cap as u64,
+            "cap {cap}: peak inflight {} exceeds the cap",
+            report.peak_inflight
+        );
+        assert!(!report.incomplete, "cap {cap}: shed load is not incompleteness");
+        let tenant_shed: u64 = report.per_tenant.iter().map(|t| t.shed_queries).sum();
+        assert_eq!(tenant_shed, report.queries_shed, "cap {cap}: per-tenant sheds sum");
+        let tenant_shed_items: u64 = report.per_tenant.iter().map(|t| t.shed_items).sum();
+        assert_eq!(tenant_shed_items, report.items_shed, "cap {cap}");
+        assert_eq!(
+            report.items + report.items_shed,
+            report.items_offered,
+            "cap {cap}: item accounting is exact when nothing fails"
+        );
+    }
+}
+
+#[test]
+fn run_open_loop_is_a_client_of_the_session_api() {
+    // Conformance: the reimplemented open-loop harness reports the same
+    // completion accounting as a manual ticket-session client submitting
+    // the identical schedule (latency stats differ — pacing is real
+    // time — but counts may not).
+    let mk = || {
+        ServerBuilder::new()
+            .mix(TrafficMix::parse("rmc1-small:0.7,rmc2-small:0.3").unwrap())
+            .workers(2)
+            .routing("least-loaded")
+            .sla_ms(50.0)
+            .buckets(vec![1, 8])
+            .backend(Arc::new(MockBackend { latency: Duration::from_micros(300) }))
+            .build()
+            .unwrap()
+    };
+    let mix = TrafficMix::parse("rmc1-small:0.7,rmc2-small:0.3").unwrap();
+
+    // Harness path: a streaming (non-materialized) schedule.
+    let mut coordinator = Coordinator::from_server(mk());
+    let harness = coordinator.run_open_loop(mix.stream(80, 2000.0, 7), 50.0);
+    coordinator.shutdown();
+
+    // Manual session path: same schedule, unpaced.
+    let server = mk();
+    let handle = server.handle();
+    let tickets: Vec<Ticket> = mix.stream(80, 2000.0, 7).map(|q| handle.submit(q)).collect();
+    for t in &tickets {
+        assert!(t.wait().completed().is_some());
+    }
+    assert!(handle.quiesce(Duration::from_secs(10)).unwrap());
+    let manual = handle.report().unwrap();
+    let _ = server.shutdown();
+
+    assert_eq!(harness.queries, 80);
+    assert_eq!(harness.queries, manual.queries);
+    assert_eq!(harness.queries_offered, manual.queries_offered);
+    assert_eq!(harness.items, manual.items);
+    assert_eq!(harness.items_offered, manual.items_offered);
+    assert_eq!(harness.queries_shed, 0);
+    assert!(!harness.incomplete && !manual.incomplete);
+    assert_eq!(harness.per_tenant.len(), manual.per_tenant.len());
+    for (h, m) in harness.per_tenant.iter().zip(&manual.per_tenant) {
+        assert_eq!(h.model, m.model);
+        assert_eq!(h.queries, m.queries);
+        assert_eq!(h.items, m.items);
+        assert_eq!(h.sla_ms, m.sla_ms);
+    }
+    // Batches happened on both paths and cover every query.
+    let batches: u64 = harness.bucket_histogram.iter().map(|(_, n)| *n).sum();
+    assert_eq!(batches, 80, "one histogram entry per completed query");
+    assert!(harness.qps_offered > 0.0 && harness.qps_offered.is_finite());
+}
+
+#[test]
+fn drain_deadline_trips_honestly() {
+    // A worker stuck on a slow batch: the configured drain deadline
+    // bounds the wait, and the report says so instead of hanging or
+    // crediting unserved work.
+    let server = ServerBuilder::new()
+        .workers(1)
+        .sla_ms(50.0)
+        .buckets(vec![1])
+        .max_batch(8)
+        .backend(Arc::new(MockBackend { latency: Duration::from_millis(900) }))
+        .drain_deadline(Duration::from_millis(80))
+        .build()
+        .unwrap();
+    let mut coordinator = Coordinator::from_server(server);
+    let queries: Vec<Query> = (0..2).map(|i| Query::new(i, "rmc1-small", 1, 0.0)).collect();
+    let report = coordinator.run_open_loop(queries, 50.0);
+    assert!(report.incomplete, "drain gave up before the slow batches finished");
+    assert!(report.drain_deadline_hit);
+    assert!(report.queries < report.queries_offered);
+    assert_eq!(report.queries_offered, 2);
+    coordinator.shutdown();
+}
+
+#[test]
+fn open_loop_pacing_still_paces() {
+    // The busy-loop fix replaced the 50µs recv slices with real sleeps;
+    // pacing itself must survive: a 100-query schedule at 1000 qps takes
+    // at least the schedule horizon of wall time.
+    let server = ServerBuilder::new()
+        .workers(1)
+        .sla_ms(50.0)
+        .buckets(vec![1, 8])
+        .backend(Arc::new(MockBackend { latency: Duration::from_micros(100) }))
+        .build()
+        .unwrap();
+    let mut coordinator = Coordinator::from_server(server);
+    let mut arr = PoissonArrivals::new(1000.0, 5);
+    let queries: Vec<Query> = (0..100u64)
+        .map(|i| Query::new(i, "rmc1-small", 2, arr.next_arrival_s()))
+        .collect();
+    let horizon = queries.last().unwrap().arrival_s;
+    let t0 = std::time::Instant::now();
+    let report = coordinator.run_open_loop(queries, 50.0);
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert_eq!(report.queries, 100);
+    assert!(
+        elapsed >= horizon * 0.9,
+        "pacing collapsed: {elapsed:.3}s wall for a {horizon:.3}s schedule"
+    );
+    assert!((report.qps_offered - 100.0 / horizon).abs() / (100.0 / horizon) < 0.01);
+    coordinator.shutdown();
+}
