@@ -1,0 +1,377 @@
+//! Placement-policy sweep (paper §VII capacity argument): the same
+//! `ShardedEmbeddingService` under the three `--placement` policies —
+//! `whole` (PR-4 table-wise), `rows` (byte-balanced row-range split,
+//! optionally + hot-table replication), and `auto` (replans from
+//! measured skew after `AUTO_REPLAN_AFTER_BATCHES`) — swept over shard
+//! counts x the Fig-14 locality spectrum.
+//!
+//! Traffic is deliberately *table-skewed*: table 0 carries 4x the
+//! weighted lookups of every other table (zero weights are padding on
+//! both the single-node and sharded paths, so this stays bitwise
+//! conformant). That is the regime where placement policy matters:
+//! whole-table layouts pin the hot table's entire load on one
+//! executor, row splits spread its bytes, replication spreads its
+//! reads. The hot-row cache is left off here — the cache x placement
+//! interaction is covered by the conformance suite and the sharded
+//! sweep; this bench isolates layout effects.
+//!
+//! Every sweep point asserts bitwise conformance against single-node
+//! `NativeModel::run_rmc` — once before timing and once after (the
+//! second catches a post-replan divergence in `auto` mode).
+//!
+//! Emits machine-readable `BENCH_placement.json` (see EXPERIMENTS.md
+//! §Placement sweep for the schema and runbook).
+//!
+//! Flags:  --smoke        tiny run (CI emitter check); defaults to a
+//!                        separate *.smoke.json so it never clobbers
+//!                        the committed tracker
+//!         --out <path>   JSON output path (default: repo root)
+
+use std::time::Instant;
+
+use recsys::config::RmcConfig;
+use recsys::runtime::{
+    ExecOptions, NativeModel, PlacementMode, ScratchArena, ShardedEmbeddingService,
+};
+use recsys::util::json::{num, obj};
+use recsys::util::Json;
+use recsys::workload::{IdDistribution, SparseIdGen};
+
+/// Parameter seed shared by the single-node golden model and every
+/// service (bitwise comparability).
+const SEED: u64 = 0;
+/// Per-table ID stream seed base.
+const STREAM_SEED: u64 = 1000;
+
+struct Load {
+    model: &'static str,
+    batch: usize,
+    warmup: usize,
+    iters: usize,
+}
+
+/// One locality point on the Fig-14 spectrum.
+fn localities() -> Vec<(&'static str, IdDistribution)> {
+    vec![
+        ("uniform", IdDistribution::Uniform),
+        ("zipf-1.05", IdDistribution::Zipf { s: 1.05 }),
+        ("trace-h0.001-p0.9", IdDistribution::Trace { hot_fraction: 0.001, hot_prob: 0.9 }),
+    ]
+}
+
+/// Weighted-lookup tensor with the traffic skew the placement policies
+/// are judged on: table 0 keeps every weighted lookup, every other
+/// table keeps one in four (the rest are zero-weight padding, skipped
+/// identically by single-node and sharded pooling). Built on
+/// `golden_lwts` so the surviving weights stay non-trivial.
+fn skewed_lwts(cfg: &RmcConfig, batch: usize) -> Vec<f32> {
+    let per_table = batch * cfg.lookups;
+    let mut w = recsys::runtime::golden_lwts(cfg.num_tables, batch, cfg.lookups);
+    for t in 1..cfg.num_tables {
+        for s in 0..per_table {
+            if s % 4 != 0 {
+                w[t * per_table + s] = 0.0;
+            }
+        }
+    }
+    w
+}
+
+/// Fresh per-table generators for one sweep point (deterministic, so
+/// every placement config sees the identical stream).
+fn table_gens(dist: IdDistribution, cfg: &RmcConfig, rows: usize) -> Vec<SparseIdGen> {
+    (0..cfg.num_tables)
+        .map(|t| SparseIdGen::new(dist, rows, STREAM_SEED + t as u64))
+        .collect()
+}
+
+/// One iteration's (T, B, L) id tensor drawn from the per-table streams.
+fn draw_ids(gens: &mut [SparseIdGen], batch: usize, lookups: usize) -> Vec<i32> {
+    let mut ids = Vec::with_capacity(gens.len() * batch * lookups);
+    for gen in gens.iter_mut() {
+        ids.extend(gen.gen_batch(batch, lookups).into_iter().map(|id| id as i32));
+    }
+    ids
+}
+
+/// Placement arm label: mode name plus the replication budget when one
+/// is granted ("rows+rep0.5").
+fn arm_label(mode: PlacementMode, replicate_hot: f64) -> String {
+    if replicate_hot > 0.0 {
+        format!("{}+rep{}", mode.name(), replicate_hot)
+    } else {
+        mode.name().to_string()
+    }
+}
+
+struct Point {
+    locality: String,
+    shards: usize,
+    arm: String,
+    max_shard_bytes: usize,
+    lookup_imbalance: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = match args.iter().position(|a| a == "--out") {
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => v.clone(),
+            _ => anyhow::bail!("--out requires a path argument"),
+        },
+        // Smoke runs must never clobber the committed tracker with
+        // throwaway short-run numbers.
+        None if smoke => {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_placement.smoke.json").to_string()
+        }
+        None => concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_placement.json").to_string(),
+    };
+
+    // rmc1-large: 6 tables over {2, 4} shards leaves a table-count
+    // remainder, so table-wise placement *cannot* balance bytes at 4
+    // shards — the capacity case row splits exist for. The full run's
+    // warmup covers AUTO_REPLAN_AFTER_BATCHES so `auto` points replan
+    // before timing starts.
+    let load = if smoke {
+        Load { model: "rmc1-small", batch: 8, warmup: 1, iters: 2 }
+    } else {
+        Load { model: "rmc1-large", batch: 32, warmup: 10, iters: 30 }
+    };
+    let shards_sweep: &[usize] = if smoke { &[2] } else { &[2, 4] };
+    // (mode, replicate_hot) arms. 0.5 grants half the table footprint
+    // again as replication headroom: enough for the hot table's
+    // replicas at 4 shards (3 extra copies = 0.5 of a 6-table total).
+    let arms: &[(PlacementMode, f64)] = if smoke {
+        &[(PlacementMode::Whole, 0.0), (PlacementMode::Rows, 0.0), (PlacementMode::Auto, 0.3)]
+    } else {
+        &[
+            (PlacementMode::Whole, 0.0),
+            (PlacementMode::Rows, 0.0),
+            (PlacementMode::Rows, 0.5),
+            (PlacementMode::Auto, 0.0),
+            (PlacementMode::Auto, 0.5),
+        ]
+    };
+
+    let cfg = recsys::config::all_rmc()
+        .into_iter()
+        .find(|c| c.name == load.model)
+        .expect("known preset");
+    let single = NativeModel::new(&cfg, SEED);
+    let rows = single.rows();
+    let dense = recsys::runtime::golden_dense(load.batch, cfg.dense_dim);
+    let lwts = skewed_lwts(&cfg, load.batch);
+    let total_table_bytes = cfg.num_tables * rows * cfg.emb_dim * 4;
+
+    println!(
+        "placement sweep: {} b{} | shards {:?} x {} arms x {} localities \
+         ({} warmup + {} measured iters, table-0 hot)",
+        load.model,
+        load.batch,
+        shards_sweep,
+        arms.len(),
+        localities().len(),
+        load.warmup,
+        load.iters
+    );
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut points: Vec<Point> = Vec::new();
+    for &shards in shards_sweep {
+        for &(mode, replicate_hot) in arms {
+            let arm = arm_label(mode, replicate_hot);
+            for (loc_name, dist) in localities() {
+                // Fresh service per point: `auto` mutates its plan from
+                // measured skew, which must not leak across localities.
+                let svc = ShardedEmbeddingService::new(
+                    &cfg,
+                    SEED,
+                    ExecOptions {
+                        shards,
+                        placement: mode,
+                        replicate_hot,
+                        ..Default::default()
+                    },
+                )?;
+                let mut gens = table_gens(dist, &cfg, rows);
+                let warm_ids: Vec<Vec<i32>> = (0..load.warmup)
+                    .map(|_| draw_ids(&mut gens, load.batch, cfg.lookups))
+                    .collect();
+                let timed_ids: Vec<Vec<i32>> = (0..load.iters)
+                    .map(|_| draw_ids(&mut gens, load.batch, cfg.lookups))
+                    .collect();
+                let mut arena = ScratchArena::new();
+                let mut conformance_ok = true;
+                for (w, ids) in warm_ids.iter().enumerate() {
+                    let got = svc.run_rmc_into(&mut arena, &dense, ids, &lwts)?.to_vec();
+                    if w == 0 {
+                        let want = single.run_rmc(&dense, ids, &lwts)?;
+                        conformance_ok = want == got;
+                        assert!(
+                            conformance_ok,
+                            "{loc_name} shards={shards} {arm}: sharded output diverged \
+                             from single-node"
+                        );
+                    }
+                }
+                let mut iter_ms = Vec::with_capacity(load.iters);
+                for ids in &timed_ids {
+                    let t0 = Instant::now();
+                    svc.run_rmc_into(&mut arena, &dense, ids, &lwts)?;
+                    iter_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                let mean_ms = iter_ms.iter().sum::<f64>() / load.iters.max(1) as f64;
+                let mut sorted = iter_ms.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let p99_ms = sorted[((sorted.len() - 1) as f64 * 0.99).round() as usize];
+                // Post-timing conformance: in `auto` mode the plan in
+                // force now is the replanned one, not the one warmup
+                // iter 0 checked.
+                {
+                    let ids = draw_ids(&mut gens, load.batch, cfg.lookups);
+                    let got = svc.run_rmc_into(&mut arena, &dense, &ids, &lwts)?.to_vec();
+                    let want = single.run_rmc(&dense, &ids, &lwts)?;
+                    conformance_ok = conformance_ok && want == got;
+                    assert!(
+                        conformance_ok,
+                        "{loc_name} shards={shards} {arm}: post-replan output diverged \
+                         from single-node"
+                    );
+                }
+                let stats = svc.stats();
+                let total_ns = stats.total_ns().max(1.0);
+                let shard_bytes = svc.shard_bytes();
+                let max_shard_bytes = shard_bytes.iter().copied().max().unwrap_or(0);
+                let plan = svc.placement();
+                let replica_reads: u64 = stats.replica_reads.iter().sum();
+                let routed: u64 = stats.shard_lookups.iter().sum();
+
+                println!(
+                    "{loc_name:<18} shards={} {arm:<10} -> {:>7.3} ms/iter | max-shard \
+                     {:>5.1} MB balance {:.2} | replica reads {:>4.1}%{}",
+                    stats.shards,
+                    mean_ms,
+                    max_shard_bytes as f64 / 1e6,
+                    stats.lookup_imbalance(),
+                    100.0 * replica_reads as f64 / routed.max(1) as f64,
+                    if stats.replans > 0 {
+                        format!(" | replans {}", stats.replans)
+                    } else {
+                        String::new()
+                    }
+                );
+                points.push(Point {
+                    locality: loc_name.to_string(),
+                    shards,
+                    arm: arm.clone(),
+                    max_shard_bytes,
+                    lookup_imbalance: stats.lookup_imbalance(),
+                });
+                results.push(obj(vec![
+                    ("model", Json::Str(load.model.into())),
+                    ("locality", Json::Str(loc_name.into())),
+                    ("placement", Json::Str(mode.name().into())),
+                    ("replicate_hot", num(replicate_hot)),
+                    ("arm", Json::Str(arm.clone())),
+                    ("shards", num(stats.shards as f64)),
+                    ("batch", num(load.batch as f64)),
+                    ("warmup_iters", num(load.warmup as f64)),
+                    ("iters", num(load.iters as f64)),
+                    ("mean_ms", num(mean_ms)),
+                    ("p99_ms", num(p99_ms)),
+                    ("shard_sls_pct", num(100.0 * stats.shard_sls_ns / total_ns)),
+                    ("gather_pct", num(100.0 * stats.gather_ns / total_ns)),
+                    ("leader_mlp_pct", num(100.0 * stats.leader_mlp_ns / total_ns)),
+                    (
+                        "shard_bytes",
+                        Json::Arr(shard_bytes.iter().map(|&b| num(b as f64)).collect()),
+                    ),
+                    ("max_shard_bytes", num(max_shard_bytes as f64)),
+                    ("bytes_imbalance", num(plan.bytes_imbalance(rows, cfg.emb_dim))),
+                    (
+                        "shard_lookups",
+                        Json::Arr(stats.shard_lookups.iter().map(|&x| num(x as f64)).collect()),
+                    ),
+                    ("lookup_imbalance", num(stats.lookup_imbalance())),
+                    (
+                        "table_lookups",
+                        Json::Arr(stats.table_lookups.iter().map(|&x| num(x as f64)).collect()),
+                    ),
+                    ("replica_read_frac", num(replica_reads as f64 / routed.max(1) as f64)),
+                    ("replans", num(stats.replans as f64)),
+                    ("conformance_ok", Json::Bool(conformance_ok)),
+                ]));
+            }
+        }
+    }
+
+    // Headline comparisons: per (locality, shards), each arm against
+    // the whole-table baseline on the two axes the ISSUE's acceptance
+    // tracks — max-shard bytes (capacity) and lookup imbalance (load).
+    let mut comparisons: Vec<Json> = Vec::new();
+    for &shards in shards_sweep {
+        for (loc_name, _) in localities() {
+            let find = |arm: &str| {
+                points
+                    .iter()
+                    .find(|p| p.locality == loc_name && p.shards == shards && p.arm == arm)
+            };
+            let whole = match find("whole") {
+                Some(p) => p,
+                None => continue,
+            };
+            for p in points.iter().filter(|p| {
+                p.locality == loc_name && p.shards == shards && p.arm != "whole"
+            }) {
+                comparisons.push(obj(vec![
+                    ("locality", Json::Str(loc_name.into())),
+                    ("shards", num(shards as f64)),
+                    ("arm", Json::Str(p.arm.clone())),
+                    (
+                        "max_bytes_reduction_vs_whole",
+                        num(1.0 - p.max_shard_bytes as f64 / whole.max_shard_bytes.max(1) as f64),
+                    ),
+                    ("whole_lookup_imbalance", num(whole.lookup_imbalance)),
+                    ("lookup_imbalance", num(p.lookup_imbalance)),
+                ]));
+            }
+        }
+    }
+
+    let doc = obj(vec![
+        ("schema", Json::Str("bench_placement/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            obj(vec![
+                ("model", Json::Str(load.model.into())),
+                ("batch", num(load.batch as f64)),
+                ("warmup_iters", num(load.warmup as f64)),
+                ("iters", num(load.iters as f64)),
+                ("rows_per_table", num(rows as f64)),
+                ("num_tables", num(cfg.num_tables as f64)),
+                ("lookups", num(cfg.lookups as f64)),
+                ("total_table_bytes", num(total_table_bytes as f64)),
+                ("seed", num(SEED as f64)),
+                ("stream_seed", num(STREAM_SEED as f64)),
+                (
+                    "traffic_skew",
+                    Json::Str("table 0 keeps 4x the weighted lookups of every other table".into()),
+                ),
+            ]),
+        ),
+        (
+            "host",
+            obj(vec![(
+                "available_cores",
+                num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+            )]),
+        ),
+        ("results", Json::Arr(results)),
+        ("summary", obj(vec![("comparisons", Json::Arr(comparisons))])),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty() + "\n")?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use recsys::config::RmcConfig;
 use recsys::runtime::{ExecOptions, NativeModel, ScratchArena, ShardedEmbeddingService};
-use recsys::simulator::embedding_cache::simulate_row_cache;
+use recsys::simulator::embedding_cache::simulate_row_cache_batched;
 use recsys::util::json::{num, obj};
 use recsys::util::Json;
 use recsys::workload::{IdDistribution, SparseIdGen};
@@ -176,16 +176,21 @@ fn main() -> anyhow::Result<()> {
 
                 // Simulator prediction on the identical streams: each
                 // table's stream through an even split of the cache
-                // capacity (see EXPERIMENTS.md for the methodology).
+                // capacity, with per-batch dedup matching the leader's
+                // row map (see EXPERIMENTS.md for the methodology).
                 let (measured_hit, predicted_hit) = if cache_frac > 0.0 {
-                    let per_table_lookups = (load.warmup + load.iters) * load.batch * cfg.lookups;
                     let per_table_cap =
                         (stats.cache_capacity_rows / cfg.num_tables).max(1);
                     let mut acc = 0.0;
                     for t in 0..cfg.num_tables {
                         let mut gen = SparseIdGen::new(dist, rows, STREAM_SEED + t as u64);
-                        acc +=
-                            simulate_row_cache(&mut gen, per_table_cap, per_table_lookups).hit_rate;
+                        acc += simulate_row_cache_batched(
+                            &mut gen,
+                            per_table_cap,
+                            load.warmup + load.iters,
+                            load.batch * cfg.lookups,
+                        )
+                        .hit_rate;
                     }
                     (num(stats.hit_rate()), num(acc / cfg.num_tables as f64))
                 } else {

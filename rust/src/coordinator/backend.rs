@@ -191,6 +191,7 @@ impl NativeBackend {
         }
         let svc = Arc::new(ShardedEmbeddingService::from_model_with_engine(
             NativeModel::from_name(model, self.pool.seed())?,
+            self.pool.seed(),
             self.opts,
             self.engine.clone(),
         )?);
@@ -513,5 +514,35 @@ mod tests {
         assert!(s.cache_hits > 0, "second identical batch must hit the row cache");
         // Single-node serving never built a service.
         assert!(single.sharded_breakdown().is_empty());
+    }
+
+    #[test]
+    fn native_backend_row_placement_matches_single_node() {
+        // Row-range placement with hot-table replication serves the
+        // same bits as single-node, and the breakdown reports the
+        // placement-layer counters.
+        use crate::runtime::PlacementMode;
+        let pool = Arc::new(NativePool::new(4));
+        let single = NativeBackend::new(pool.clone());
+        let placed = NativeBackend::with_options(
+            pool,
+            ExecOptions {
+                shards: 2,
+                placement: PlacementMode::Rows,
+                replicate_hot: 0.3,
+                ..Default::default()
+            },
+        );
+        let queries =
+            vec![Query::new(9, "rmc1-small", 4, 0.0), Query::new(10, "rmc1-small", 3, 0.0)];
+        let a = single.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        let b = placed.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        assert_eq!(a, b, "row-placed serving must match single-node bitwise");
+        let breakdown = placed.sharded_breakdown();
+        assert_eq!(breakdown.len(), 1);
+        let s = &breakdown[0].1;
+        assert_eq!(s.placement, PlacementMode::Rows);
+        assert!(s.shard_lookups.iter().sum::<u64>() > 0, "lookup routing must be counted");
+        assert!(s.shard_bytes.iter().all(|&b| b > 0), "every shard must own bytes");
     }
 }

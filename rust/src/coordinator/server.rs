@@ -457,6 +457,7 @@ impl ServerBuilder {
         }
         let (backend, native): (Arc<dyn Backend>, Option<Arc<NativeBackend>>) = match backend {
             BackendChoice::Native(opts) => {
+                opts.validate()?;
                 let nb = NativeBackend::for_models(&models, opts)?;
                 let dynamic: Arc<dyn Backend> = nb.clone();
                 (dynamic, Some(nb))

@@ -168,13 +168,18 @@ impl ServeReport {
             }
             let total = st.total_ns().max(1.0);
             s.push_str(&format!(
-                "sharded[{model}]: shards={} | shard-sls {:.1}% gather {:.1}% \
-                 leader-mlp {:.1}%",
+                "sharded[{model}]: shards={} placement={} balance={:.2} | shard-sls \
+                 {:.1}% gather {:.1}% leader-mlp {:.1}%",
                 st.shards,
+                st.placement.name(),
+                st.lookup_imbalance(),
                 100.0 * st.shard_sls_ns / total,
                 100.0 * st.gather_ns / total,
                 100.0 * st.leader_mlp_ns / total,
             ));
+            if st.replans > 0 {
+                s.push_str(&format!(" | replans {}", st.replans));
+            }
             if st.cache_capacity_rows > 0 {
                 s.push_str(&format!(
                     " | cache {} rows, hit-rate {:.1}% ({} rows fetched)",
@@ -540,6 +545,7 @@ mod tests {
                 cache_hits: 30,
                 cache_misses: 10,
                 rows_fetched: 10,
+                ..Default::default()
             },
         )];
         let text = report.to_json().to_string_pretty();

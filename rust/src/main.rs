@@ -9,6 +9,7 @@
 //!                [--impl native|xla|pallas] [--threads N]
 //!                [--engine optimized|reference]
 //!                [--shards N] [--cache-rows F]
+//!                [--placement whole|rows|auto] [--replicate-hot F]
 //!                [--inflight-cap N] [--drain-deadline-s F]
 //!                                       end-to-end serving run (native
 //!                                       needs no artifacts; xla/pallas
@@ -58,7 +59,24 @@
 //!                                       carries the per-stage
 //!                                       shard-SLS/gather/leader-MLP
 //!                                       breakdown and measured cache
-//!                                       hit rates
+//!                                       hit rates.
+//!                                       --placement picks how table
+//!                                       bytes land on shards: whole
+//!                                       (table-wise, the default),
+//!                                       rows (capacity-balanced
+//!                                       row-range split), auto (rows +
+//!                                       skew-aware replan from
+//!                                       measured lookup counts);
+//!                                       --replicate-hot F spends up to
+//!                                       that fraction of total table
+//!                                       bytes replicating the hottest
+//!                                       tables across shards with
+//!                                       load-balanced replica reads
+//!                                       (rows/auto only). All plans
+//!                                       serve bit-identical CTRs; the
+//!                                       report adds per-shard bytes,
+//!                                       lookup balance, and the
+//!                                       replica read split
 //!   recsys check                        numeric self-verification
 //!   recsys simulate --model M [--gen G] [--batch B] [--jobs N]
 //!                                       one simulator measurement
@@ -73,7 +91,7 @@ use std::sync::Arc;
 use recsys::config::{DeploymentConfig, ServerGen, ServerSpec};
 use recsys::coordinator::{Backend, Coordinator, ServerBuilder};
 use recsys::model::ModelGraph;
-use recsys::runtime::{EngineKind, ExecOptions};
+use recsys::runtime::{EngineKind, ExecOptions, PlacementMode};
 use recsys::simulator::MachineSim;
 use recsys::workload::{PoissonArrivals, Query, SparseIdGen, TrafficMix};
 
@@ -222,8 +240,11 @@ fn builder_with_backend(
                 if opts.threads == 0 { "auto".to_string() } else { opts.threads.to_string() },
                 if opts.sharded() {
                     format!(
-                        ", {} embedding shard(s), cache {} of rows",
-                        opts.shards, opts.cache_rows
+                        ", {} embedding shard(s), placement {}, replicate-hot {}, cache {} of rows",
+                        opts.shards,
+                        opts.placement.name(),
+                        opts.replicate_hot,
+                        opts.cache_rows
                     )
                 } else {
                     String::new()
@@ -297,26 +318,40 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let cache_rows: f64 =
         flags.get("cache-rows").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+    let placement = match flags.get("placement") {
+        Some(s) => PlacementMode::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --placement '{s}' (expected whole, rows or auto)")
+        })?,
+        None => PlacementMode::Whole,
+    };
+    let replicate_hot: f64 =
+        flags.get("replicate-hot").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
     anyhow::ensure!(
         (0.0..=1.0).contains(&cache_rows),
         "--cache-rows is a fraction of table rows in [0, 1] (got {cache_rows})"
     );
-    // --threads / --engine / --shards / --cache-rows configure the
-    // native execution engine only; silently ignoring them on the PJRT
-    // path would corrupt A/B numbers.
+    // --threads / --engine / --shards / --cache-rows / --placement /
+    // --replicate-hot configure the native execution engine only;
+    // silently ignoring them on the PJRT path would corrupt A/B numbers.
+    let placement_flags = placement != PlacementMode::Whole || replicate_hot != 0.0;
     if impl_ != "native"
-        && (threads != 1 || engine != EngineKind::Optimized || shards != 1 || cache_rows != 0.0)
+        && (threads != 1
+            || engine != EngineKind::Optimized
+            || shards != 1
+            || cache_rows != 0.0
+            || placement_flags)
     {
         anyhow::bail!(
-            "--threads/--engine/--shards/--cache-rows apply to --impl native only \
-             (got --impl {impl_}); the PJRT path executes AOT artifacts as compiled"
+            "--threads/--engine/--shards/--cache-rows/--placement/--replicate-hot apply \
+             to --impl native only (got --impl {impl_}); the PJRT path executes AOT \
+             artifacts as compiled"
         );
     }
-    if engine == EngineKind::Reference && (shards != 1 || cache_rows != 0.0) {
+    if engine == EngineKind::Reference && (shards != 1 || cache_rows != 0.0 || placement_flags) {
         anyhow::bail!(
-            "--shards/--cache-rows run the optimized leader stack; --engine reference \
-             is the single-node A/B baseline"
+            "--shards/--cache-rows/--placement/--replicate-hot run the optimized leader \
+             stack; --engine reference is the single-node A/B baseline"
         );
     }
     anyhow::ensure!(
@@ -340,7 +375,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(spec) => TrafficMix::parse(spec)?,
         None => TrafficMix::single(&model, items),
     };
-    let opts = ExecOptions { threads, engine, shards, cache_rows };
+    let opts = ExecOptions { threads, engine, shards, cache_rows, placement, replicate_hot };
+    opts.validate()?;
 
     // All flag plumbing lands on the one validated builder surface.
     let mut builder = ServerBuilder::new()

@@ -7,12 +7,16 @@
 //!   (packed-weight GEMM + scratch arenas + intra-op thread pool).
 //! * `parallel` — the crate-internal worker thread pool (std-only rayon
 //!   stand-in) the optimized engine shards operators over.
-//! * `sharded` — the scale-out topology: table-sharded SLS across
-//!   thread-pinned shard executors that *own* their table slices, a
+//! * `sharded` — the scale-out topology: placement-driven SLS across
+//!   thread-pinned shard executors that *own* their table chunks, a
 //!   fan-out/gather leader running the dense stack, and an optional
 //!   hot-row cache (`row_cache`) that short-circuits remote lookups —
 //!   measured counterparts of `simulator::{distributed,
 //!   embedding_cache}`.
+//! * `placement` — the capacity-driven placement layer: `Placement`
+//!   plans (whole / row-range split / hot-table replicated per table)
+//!   and the `PlacementPlanner` that computes them from capacity
+//!   budgets and measured access skew.
 //! * `executor`/`pool` (feature `pjrt`) — loads the AOT artifacts
 //!   (`artifacts/manifest.json` + HLO text + params blob) produced by
 //!   `make artifacts`, stages model parameters as device buffers ONCE,
@@ -28,6 +32,7 @@ mod executor;
 mod golden;
 mod native;
 mod parallel;
+mod placement;
 #[cfg(feature = "pjrt")]
 mod pool;
 mod row_cache;
@@ -42,10 +47,13 @@ pub use native::{
     ExecOptions, ForwardStats, NativeModel, NativePool, PackedLayer, ScratchArena,
 };
 pub use parallel::{shard_range, ThreadPool};
+pub use placement::{
+    Placement, PlacementMode, PlacementPlanner, RowSegment, TablePlacement, TableSkew,
+};
 #[cfg(feature = "pjrt")]
 pub use pool::ModelPool;
 pub use row_cache::{row_key, EmbeddingCache};
-pub use sharded::{ShardedEmbeddingService, ShardedStats};
+pub use sharded::{ShardedEmbeddingService, ShardedStats, AUTO_REPLAN_AFTER_BATCHES};
 
 /// Default artifacts directory relative to the crate root.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

@@ -39,6 +39,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail};
 
 use super::parallel::{shard_range, SendPtr, ThreadPool};
+use super::placement::PlacementMode;
 use crate::config::RmcConfig;
 use crate::util::Rng;
 
@@ -235,19 +236,59 @@ pub struct ExecOptions {
     /// rows (`0.0` disables the cache). Any positive value routes
     /// execution through the sharded service even at `shards == 1`.
     pub cache_rows: f64,
+    /// Embedding-table placement policy (`serve --placement
+    /// whole|rows|auto`): table-wise (PR-4 layout), byte-balanced
+    /// row-range split, or skew-aware auto-replanning.
+    pub placement: PlacementMode,
+    /// Hot-table replication budget as a fraction of total table bytes
+    /// (`serve --replicate-hot F`): the planner may spend this much
+    /// extra memory on full replicas of the hottest tables, with reads
+    /// load-balanced across the copies. `0.0` disables replication.
+    pub replicate_hot: f64,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { threads: 1, engine: EngineKind::Optimized, shards: 1, cache_rows: 0.0 }
+        ExecOptions {
+            threads: 1,
+            engine: EngineKind::Optimized,
+            shards: 1,
+            cache_rows: 0.0,
+            placement: PlacementMode::Whole,
+            replicate_hot: 0.0,
+        }
     }
 }
 
 impl ExecOptions {
     /// True when execution must go through the sharded embedding
-    /// service (table-sharded SLS and/or the leader hot-row cache).
+    /// service (table-sharded SLS, non-trivial placement, and/or the
+    /// leader hot-row cache).
     pub fn sharded(&self) -> bool {
-        self.shards > 1 || self.cache_rows > 0.0
+        self.shards > 1
+            || self.cache_rows > 0.0
+            || self.placement != PlacementMode::Whole
+            || self.replicate_hot > 0.0
+    }
+
+    /// Range/consistency checks shared by `ServerBuilder::build` and
+    /// the sharded-service constructors.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.shards >= 1, "--shards must be >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.cache_rows),
+            "--cache-rows must be a fraction of table rows in [0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.replicate_hot),
+            "--replicate-hot must be a fraction of table bytes in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.replicate_hot == 0.0 || self.placement != PlacementMode::Whole,
+            "--replicate-hot requires --placement rows|auto (whole-table \
+             placement never replicates)"
+        );
+        Ok(())
     }
 }
 

@@ -1,0 +1,674 @@
+//! Capacity-driven embedding-table placement (paper §VII via Lui et
+//! al.'s scale-out study): *where* each table's rows live across the
+//! shard executors, as a first-class plan instead of the implicit
+//! table-wise split.
+//!
+//! Three layouts compose per table:
+//!
+//! * **whole** — the table lives on exactly one shard (the PR-4
+//!   layout): pooled reductions run shard-side.
+//! * **row-range split** — contiguous row ranges of one table live on
+//!   different shards, so a single huge table no longer pins one
+//!   shard's memory. Split tables are served row-wise and pooled on
+//!   the leader in canonical (ascending-lookup) order — see the
+//!   determinism argument in `runtime::sharded`.
+//! * **replicated** — hot tables hold a full copy on several shards;
+//!   reads load-balance across the replicas. Replica choice can never
+//!   change numerics (every replica holds byte-identical rows), so it
+//!   is determinism-safe by construction.
+//!
+//! [`PlacementPlanner`] computes plans from per-shard capacity budgets
+//! and measured access skew ([`TableSkew`], fed by `ShardedStats`'
+//! per-table lookup counters and the row cache's per-table hit
+//! counters — the Fig-14 locality machinery, measured).
+
+use std::collections::HashMap;
+
+use anyhow::ensure;
+
+use super::parallel::shard_range;
+
+/// Placement policy selected via `ExecOptions` / `serve --placement`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// Table-wise: every table whole on one shard (PR-4 behavior).
+    Whole,
+    /// Byte-balanced row-range split (+ hot-table replication under a
+    /// `replicate_hot` byte budget).
+    Rows,
+    /// Like `Rows`, but the service replans from *measured* per-table
+    /// skew after a warmup window (and balances measured lookup load,
+    /// not just bytes).
+    Auto,
+}
+
+impl PlacementMode {
+    pub fn parse(s: &str) -> Option<PlacementMode> {
+        match s {
+            "whole" | "table" => Some(PlacementMode::Whole),
+            "rows" | "row" => Some(PlacementMode::Rows),
+            "auto" => Some(PlacementMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementMode::Whole => "whole",
+            PlacementMode::Rows => "rows",
+            PlacementMode::Auto => "auto",
+        }
+    }
+}
+
+/// One contiguous row range `[rows.0, rows.1)` of a table, owned by one
+/// shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowSegment {
+    pub shard: usize,
+    pub rows: (usize, usize),
+}
+
+/// Where one table's rows live.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TablePlacement {
+    /// Full copy on every listed shard (non-empty, ascending). One
+    /// entry = plain whole-table ownership; several = a hot-table
+    /// replica set with reads load-balanced across them.
+    Replicated(Vec<usize>),
+    /// Disjoint ascending row segments covering `[0, rows)`. Served
+    /// row-wise; pooled leader-side in canonical order.
+    Split(Vec<RowSegment>),
+}
+
+/// A full placement plan: per-table row layout over `shards` executors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub shards: usize,
+    /// One entry per global table index.
+    pub tables: Vec<TablePlacement>,
+}
+
+impl Placement {
+    /// The PR-4 table-wise layout: contiguous table ranges, shards
+    /// clamped to the table count (an executor must own something).
+    pub fn whole(num_tables: usize, shards: usize) -> Placement {
+        let shards = shards.clamp(1, num_tables.max(1));
+        let mut tables = Vec::with_capacity(num_tables);
+        for i in 0..shards {
+            let (lo, hi) = shard_range(num_tables, shards, i);
+            tables.extend((lo..hi).map(|_| TablePlacement::Replicated(vec![i])));
+        }
+        Placement { shards, tables }
+    }
+
+    /// Structural validity: every table's rows covered exactly once per
+    /// copy, shard ids in range, replica sets non-empty/ascending.
+    pub fn validate(&self, num_tables: usize, rows: usize) -> anyhow::Result<()> {
+        ensure!(self.shards >= 1, "placement needs at least one shard");
+        ensure!(
+            self.tables.len() == num_tables,
+            "placement covers {} tables, model has {num_tables}",
+            self.tables.len()
+        );
+        for (t, tp) in self.tables.iter().enumerate() {
+            match tp {
+                TablePlacement::Replicated(reps) => {
+                    ensure!(!reps.is_empty(), "table {t}: empty replica set");
+                    ensure!(
+                        reps.windows(2).all(|w| w[0] < w[1]),
+                        "table {t}: replica set not ascending/deduped: {reps:?}"
+                    );
+                    ensure!(
+                        *reps.last().unwrap() < self.shards,
+                        "table {t}: replica shard out of range ({reps:?} vs {})",
+                        self.shards
+                    );
+                }
+                TablePlacement::Split(segs) => {
+                    ensure!(!segs.is_empty(), "table {t}: empty split");
+                    let mut next = 0usize;
+                    for seg in segs {
+                        ensure!(
+                            seg.shard < self.shards,
+                            "table {t}: segment shard {} out of range",
+                            seg.shard
+                        );
+                        ensure!(
+                            seg.rows.0 == next && seg.rows.1 > seg.rows.0,
+                            "table {t}: segments must be ascending, contiguous and non-empty \
+                             (got [{}, {}) after {next})",
+                            seg.rows.0,
+                            seg.rows.1
+                        );
+                        next = seg.rows.1;
+                    }
+                    ensure!(
+                        next == rows,
+                        "table {t}: split covers {next} of {rows} rows"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Embedding bytes owned by each shard under this plan (replica
+    /// copies cost real memory on every holder).
+    pub fn shard_bytes(&self, rows: usize, emb_dim: usize) -> Vec<usize> {
+        let row_bytes = emb_dim * 4;
+        let mut bytes = vec![0usize; self.shards];
+        for tp in &self.tables {
+            match tp {
+                TablePlacement::Replicated(reps) => {
+                    for &s in reps {
+                        bytes[s] += rows * row_bytes;
+                    }
+                }
+                TablePlacement::Split(segs) => {
+                    for seg in segs {
+                        bytes[seg.shard] += (seg.rows.1 - seg.rows.0) * row_bytes;
+                    }
+                }
+            }
+        }
+        bytes
+    }
+
+    /// True when any table is split or replicated (the layouts the
+    /// whole-table fan-out cannot serve).
+    pub fn has_row_routing(&self) -> bool {
+        self.tables.iter().any(|tp| match tp {
+            TablePlacement::Replicated(reps) => reps.len() > 1,
+            TablePlacement::Split(_) => true,
+        })
+    }
+
+    /// max/mean byte imbalance across shards (1.0 = perfectly even).
+    pub fn bytes_imbalance(&self, rows: usize, emb_dim: usize) -> f64 {
+        imbalance_usize(&self.shard_bytes(rows, emb_dim))
+    }
+}
+
+/// max/mean ratio (1.0 when empty or all-zero).
+pub(crate) fn imbalance_usize(v: &[usize]) -> f64 {
+    let sum: usize = v.iter().sum();
+    if v.is_empty() || sum == 0 {
+        return 1.0;
+    }
+    let mean = sum as f64 / v.len() as f64;
+    v.iter().copied().max().unwrap() as f64 / mean
+}
+
+/// Per-table measured access skew — the planner's input signal.
+/// `lookups` comes from `ShardedStats::table_lookups`; `cache_hits`
+/// from the row cache's per-table hit counters (hits are load the
+/// shards never saw, but they still mark the table hot).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TableSkew {
+    pub lookups: u64,
+    pub cache_hits: u64,
+}
+
+impl TableSkew {
+    fn weight(&self) -> u64 {
+        self.lookups + self.cache_hits
+    }
+}
+
+/// Computes [`Placement`] plans from capacity budgets and measured
+/// skew. Plans are a pure function of the inputs (deterministic given
+/// identical skew stats — unit-tested).
+#[derive(Debug, Clone)]
+pub struct PlacementPlanner {
+    pub shards: usize,
+    pub mode: PlacementMode,
+    /// Fraction of total table bytes granted as replication headroom
+    /// (0 disables replication; needs `shards > 1` to do anything).
+    pub replicate_hot: f64,
+    /// Optional per-shard capacity budget in bytes. `None` balances to
+    /// ~`total/shards`. A budget that cannot fit the model is an error,
+    /// not a silent overflow.
+    pub capacity_bytes: Option<usize>,
+}
+
+impl PlacementPlanner {
+    pub fn new(shards: usize, mode: PlacementMode, replicate_hot: f64) -> Self {
+        PlacementPlanner { shards: shards.max(1), mode, replicate_hot, capacity_bytes: None }
+    }
+
+    /// Compute a plan for `num_tables` tables of `rows` x `emb_dim`
+    /// fp32 rows. `skew` is per-table measured load (empty = no signal
+    /// yet: tables are treated as equally hot, which keeps the plan
+    /// deterministic before any traffic).
+    pub fn plan(
+        &self,
+        num_tables: usize,
+        rows: usize,
+        emb_dim: usize,
+        skew: &[TableSkew],
+    ) -> anyhow::Result<Placement> {
+        ensure!(num_tables > 0 && rows > 0 && emb_dim > 0, "degenerate model shape");
+        ensure!(
+            (0.0..=1.0).contains(&self.replicate_hot),
+            "replicate_hot is a fraction of total table bytes (got {})",
+            self.replicate_hot
+        );
+        ensure!(
+            skew.is_empty() || skew.len() == num_tables,
+            "skew stats cover {} tables, model has {num_tables}",
+            skew.len()
+        );
+        if self.mode == PlacementMode::Whole {
+            return Ok(Placement::whole(num_tables, self.shards));
+        }
+        // Row-granular placement: more shards than tables is legal, but
+        // an executor must still be able to own at least one row.
+        let shards = self.shards.clamp(1, num_tables * rows);
+        let row_bytes = emb_dim * 4;
+        let table_bytes = rows * row_bytes;
+        let total_bytes = num_tables * table_bytes;
+
+        let weight = |t: usize| skew.get(t).map(TableSkew::weight).unwrap_or(0);
+        let total_weight: u64 = (0..num_tables).map(weight).sum();
+
+        // --- hot-table replication under the byte budget ---------------
+        let mut replicated = vec![false; num_tables];
+        if shards > 1 && self.replicate_hot > 0.0 {
+            let mut budget = (self.replicate_hot * total_bytes as f64) as usize;
+            // Hottest tables first (measured weight, index as the
+            // deterministic tie-break; with no signal every table ties
+            // and the order is by index).
+            let mut order: Vec<usize> = (0..num_tables).collect();
+            order.sort_by_key(|&t| (std::cmp::Reverse(weight(t)), t));
+            let mean_weight = total_weight / num_tables as u64;
+            for t in order {
+                // With measured skew, only genuinely hot tables (above
+                // the mean) earn replicas; with none, the budget is
+                // spent in index order.
+                if total_weight > 0 && weight(t) <= mean_weight {
+                    break;
+                }
+                let cost = (shards - 1) * table_bytes;
+                if cost <= budget {
+                    replicated[t] = true;
+                    budget -= cost;
+                }
+            }
+        }
+        let replicated_bytes: usize =
+            replicated.iter().filter(|&&r| r).count() * table_bytes;
+
+        // --- row-range split of the rest --------------------------------
+        // Per-row cost: bytes for `rows` mode; in `auto`, measured
+        // lookup load blended with bytes, so a hot table's rows spread
+        // across more shards than a cold equal-sized one.
+        let split: Vec<usize> = (0..num_tables).filter(|&t| !replicated[t]).collect();
+        let cost_per_row = |t: usize| -> f64 {
+            let byte_cost = row_bytes as f64;
+            if self.mode == PlacementMode::Auto && total_weight > 0 {
+                let load = weight(t) as f64 / total_weight as f64; // table's load share
+                let load_cost = load * total_bytes as f64 / rows as f64;
+                0.5 * byte_cost + 0.5 * load_cost
+            } else {
+                byte_cost
+            }
+        };
+        let total_cost: f64 = split.iter().map(|&t| cost_per_row(t) * rows as f64).sum();
+        // Per-shard capacity: an explicit budget must also absorb the
+        // replica copies it hosts.
+        let byte_budget = match self.capacity_bytes {
+            Some(cap) => {
+                let per_shard_replicas = replicated_bytes; // full copy on every shard
+                ensure!(
+                    cap > per_shard_replicas,
+                    "per-shard capacity {cap}B cannot even hold the {per_shard_replicas}B \
+                     of replicated hot tables"
+                );
+                let free = cap - per_shard_replicas;
+                ensure!(
+                    free * shards >= total_bytes - replicated_bytes,
+                    "capacity budget infeasible: {shards} x {free}B free < {}B of \
+                     unreplicated table rows",
+                    total_bytes - replicated_bytes
+                );
+                Some(free)
+            }
+            None => None,
+        };
+        let cost_budget = total_cost / shards as f64;
+
+        let mut tables: Vec<TablePlacement> = (0..num_tables)
+            .map(|_| TablePlacement::Replicated(Vec::new()))
+            .collect();
+        for (t, tp) in tables.iter_mut().enumerate() {
+            if replicated[t] {
+                *tp = TablePlacement::Replicated((0..shards).collect());
+            }
+        }
+        // Walk rows across the split tables in index order, cutting a
+        // contiguous chunk whenever the current shard's cost budget (or
+        // its byte capacity) fills. Deterministic: pure function of
+        // (shape, budgets, skew).
+        let mut shard = 0usize;
+        let mut cost_used = 0.0f64;
+        let mut bytes_used = 0usize;
+        for &t in &split {
+            let c = cost_per_row(t);
+            let mut row = 0usize;
+            let mut segs: Vec<RowSegment> = Vec::new();
+            while row < rows {
+                // Advance past full shards (never past the last one —
+                // it absorbs rounding).
+                while shard + 1 < shards {
+                    let cost_full = cost_used + c > cost_budget + 1e-9;
+                    let bytes_full =
+                        byte_budget.is_some_and(|b| bytes_used + row_bytes > b);
+                    if cost_full || bytes_full {
+                        shard += 1;
+                        cost_used = 0.0;
+                        bytes_used = 0;
+                    } else {
+                        break;
+                    }
+                }
+                let mut take = rows - row;
+                if shard + 1 < shards {
+                    let by_cost = ((cost_budget - cost_used) / c).floor().max(1.0) as usize;
+                    take = take.min(by_cost);
+                    if let Some(b) = byte_budget {
+                        take = take.min(((b - bytes_used) / row_bytes).max(1));
+                    }
+                } else if let Some(b) = byte_budget {
+                    // Last shard still honors an explicit byte cap.
+                    let room = (b.saturating_sub(bytes_used)) / row_bytes;
+                    ensure!(
+                        room >= rows - row,
+                        "capacity budget infeasible on final shard (table {t})"
+                    );
+                }
+                segs.push(RowSegment { shard, rows: (row, row + take) });
+                row += take;
+                cost_used += take as f64 * c;
+                bytes_used += take * row_bytes;
+            }
+            tables[t] = if segs.len() == 1 {
+                // A whole-table chunk is plain single-owner placement:
+                // it keeps the shard-side pooled path.
+                TablePlacement::Replicated(vec![segs[0].shard])
+            } else {
+                TablePlacement::Split(segs)
+            };
+        }
+        let plan = Placement { shards, tables };
+        plan.validate(num_tables, rows)?;
+        Ok(plan)
+    }
+}
+
+/// Per-shard table storage sliced from a model's taken tables
+/// according to a plan: `segs[table]` = ascending `(row_lo, data)`
+/// chunks this shard holds (a whole copy is one chunk at `row_lo` 0).
+pub(crate) type ShardSegments = HashMap<usize, Vec<(usize, Vec<f32>)>>;
+
+/// Slice (and, for replicas, duplicate) the taken tables into
+/// per-shard stores. Replica copies are real allocations — the
+/// replication byte cost the planner budgets for is physical.
+pub(crate) fn slice_tables(
+    tables: Vec<Vec<f32>>,
+    plan: &Placement,
+    emb_dim: usize,
+) -> Vec<ShardSegments> {
+    let mut stores: Vec<ShardSegments> = (0..plan.shards).map(|_| HashMap::new()).collect();
+    for (t, data) in tables.into_iter().enumerate() {
+        match &plan.tables[t] {
+            TablePlacement::Replicated(reps) => {
+                for &s in reps.iter().skip(1) {
+                    stores[s].entry(t).or_default().push((0, data.clone()));
+                }
+                stores[reps[0]].entry(t).or_default().push((0, data));
+            }
+            TablePlacement::Split(segs) => {
+                for seg in segs {
+                    let chunk = data[seg.rows.0 * emb_dim..seg.rows.1 * emb_dim].to_vec();
+                    stores[seg.shard].entry(t).or_default().push((seg.rows.0, chunk));
+                }
+            }
+        }
+    }
+    stores
+}
+
+/// Find the shard(s) holding row `id` of table `t` under `plan`.
+/// Replicated tables return the full replica set (the caller
+/// load-balances); split tables return the one owning segment.
+pub(crate) fn row_owners(plan: &Placement, t: usize, id: usize) -> &[usize] {
+    match &plan.tables[t] {
+        TablePlacement::Replicated(reps) => reps,
+        TablePlacement::Split(segs) => {
+            // Binary search the ascending, contiguous segments.
+            let i = segs.partition_point(|seg| seg.rows.1 <= id);
+            std::slice::from_ref(&segs[i].shard)
+        }
+    }
+}
+
+impl std::str::FromStr for PlacementMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        PlacementMode::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown placement '{s}' (whole|rows|auto)"))
+    }
+}
+
+impl Default for PlacementMode {
+    fn default() -> Self {
+        PlacementMode::Whole
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_matches_table_wise_ranges() {
+        // 3 tables over 2 shards: 2 + 1, same as the PR-4 shard_range
+        // split; over 5 shards: clamped to 3.
+        let p = Placement::whole(3, 2);
+        assert_eq!(p.shards, 2);
+        assert_eq!(
+            p.tables,
+            vec![
+                TablePlacement::Replicated(vec![0]),
+                TablePlacement::Replicated(vec![0]),
+                TablePlacement::Replicated(vec![1]),
+            ]
+        );
+        assert_eq!(Placement::whole(3, 5).shards, 3);
+        p.validate(3, 10).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_gaps_overlaps_and_bad_shards() {
+        let seg = |shard, lo, hi| RowSegment { shard, rows: (lo, hi) };
+        let mk = |tp| Placement { shards: 2, tables: vec![tp] };
+        mk(TablePlacement::Split(vec![seg(0, 0, 4), seg(1, 4, 10)]))
+            .validate(1, 10)
+            .unwrap();
+        assert!(mk(TablePlacement::Split(vec![seg(0, 0, 4)])).validate(1, 10).is_err(), "gap");
+        assert!(
+            mk(TablePlacement::Split(vec![seg(0, 0, 6), seg(1, 4, 10)]))
+                .validate(1, 10)
+                .is_err(),
+            "overlap"
+        );
+        assert!(
+            mk(TablePlacement::Split(vec![seg(2, 0, 10)])).validate(1, 10).is_err(),
+            "shard oob"
+        );
+        assert!(
+            mk(TablePlacement::Replicated(vec![])).validate(1, 10).is_err(),
+            "empty replicas"
+        );
+        assert!(
+            mk(TablePlacement::Replicated(vec![1, 1])).validate(1, 10).is_err(),
+            "dup replicas"
+        );
+        assert!(mk(TablePlacement::Replicated(vec![0])).validate(2, 10).is_err(), "table count");
+    }
+
+    #[test]
+    fn rows_plan_balances_bytes_and_splits_across_tables() {
+        // 3 tables x 60 rows over 4 shards: whole-table placement
+        // cannot do better than one table per shard (max 1 of 3 tables'
+        // bytes); the rows plan lands within one row of 45 rows/shard.
+        let planner = PlacementPlanner::new(4, PlacementMode::Rows, 0.0);
+        let plan = planner.plan(3, 60, 4, &[]).unwrap();
+        plan.validate(3, 60).unwrap();
+        let bytes = plan.shard_bytes(60, 4);
+        let max = *bytes.iter().max().unwrap();
+        let min = *bytes.iter().min().unwrap();
+        assert!(max - min <= 16, "rows split should balance bytes: {bytes:?}");
+        assert!(plan.has_row_routing(), "4 shards over 3 tables forces row splits");
+        let whole = Placement::whole(3, 4);
+        assert!(
+            max < *whole.shard_bytes(60, 4).iter().max().unwrap(),
+            "rows must beat whole on max-shard bytes here"
+        );
+    }
+
+    #[test]
+    fn planner_is_deterministic_given_identical_skew() {
+        let skew: Vec<TableSkew> = (0..6)
+            .map(|t| TableSkew { lookups: 100 * (t as u64 + 1), cache_hits: 10 * t as u64 })
+            .collect();
+        let planner = PlacementPlanner::new(3, PlacementMode::Auto, 0.2);
+        let a = planner.plan(6, 40, 8, &skew).unwrap();
+        let b = planner.plan(6, 40, 8, &skew).unwrap();
+        assert_eq!(a, b, "identical skew must yield identical plans");
+    }
+
+    #[test]
+    fn hot_tables_get_replicated_within_budget() {
+        // Tables 2 and 7 carry most of the measured load. One table's
+        // replicas over 4 shards cost 3 x table_bytes = 30% of total:
+        // a 70% budget affords both hot tables, a 40% budget only the
+        // hottest.
+        let mut skew = vec![TableSkew::default(); 10];
+        skew[2] = TableSkew { lookups: 1_000_000, cache_hits: 0 };
+        skew[7] = TableSkew { lookups: 900_000, cache_hits: 0 };
+        let count_replicated = |plan: &Placement| -> Vec<usize> {
+            (0..10)
+                .filter(|&t| {
+                    matches!(&plan.tables[t], TablePlacement::Replicated(r) if r.len() > 1)
+                })
+                .collect()
+        };
+        let wide = PlacementPlanner::new(4, PlacementMode::Rows, 0.7)
+            .plan(10, 50, 4, &skew)
+            .unwrap();
+        assert_eq!(
+            wide.tables[2],
+            TablePlacement::Replicated(vec![0, 1, 2, 3]),
+            "hottest table must be fully replicated"
+        );
+        assert_eq!(count_replicated(&wide), vec![2, 7], "70% budget affords both hot tables");
+        let narrow = PlacementPlanner::new(4, PlacementMode::Rows, 0.4)
+            .plan(10, 50, 4, &skew)
+            .unwrap();
+        assert_eq!(
+            count_replicated(&narrow),
+            vec![2],
+            "40% budget affords only the hottest table's replicas"
+        );
+    }
+
+    #[test]
+    fn cold_tables_are_not_replicated_when_skew_is_measured() {
+        // With real skew, tables at/below mean load never earn
+        // replicas even if the budget would allow more.
+        let mut skew = vec![TableSkew { lookups: 10, cache_hits: 0 }; 8];
+        skew[3].lookups = 10_000;
+        let planner = PlacementPlanner::new(2, PlacementMode::Rows, 1.0);
+        let plan = planner.plan(8, 30, 4, &skew).unwrap();
+        let replicated: Vec<usize> = (0..8)
+            .filter(|&t| matches!(&plan.tables[t], TablePlacement::Replicated(r) if r.len() > 1))
+            .collect();
+        assert_eq!(replicated, vec![3], "only the genuinely hot table replicates");
+    }
+
+    #[test]
+    fn capacity_budget_is_respected_or_rejected() {
+        let planner = |cap| PlacementPlanner {
+            shards: 3,
+            mode: PlacementMode::Rows,
+            replicate_hot: 0.0,
+            capacity_bytes: Some(cap),
+        };
+        // 4 tables x 30 rows x 4 floats = 480B/table, 1920B total.
+        let plan = planner(700).plan(4, 30, 4, &[]).unwrap();
+        for (s, b) in plan.shard_bytes(30, 4).iter().enumerate() {
+            assert!(*b <= 700, "shard {s} over budget: {b}B");
+        }
+        assert!(planner(500).plan(4, 30, 4, &[]).is_err(), "3 x 500B < 1920B must fail");
+    }
+
+    #[test]
+    fn auto_spreads_hot_table_rows_wider_than_cold() {
+        // One table absorbs ~all load: under auto its rows must spread
+        // across more shards than the byte-balanced share.
+        let mut skew = vec![TableSkew { lookups: 1, cache_hits: 0 }; 4];
+        skew[0].lookups = 1_000_000;
+        let planner = PlacementPlanner::new(4, PlacementMode::Auto, 0.0);
+        let plan = planner.plan(4, 100, 4, &skew).unwrap();
+        let hot_shards = match &plan.tables[0] {
+            TablePlacement::Split(segs) => {
+                let mut s: Vec<usize> = segs.iter().map(|x| x.shard).collect();
+                s.dedup();
+                s.len()
+            }
+            TablePlacement::Replicated(r) => r.len(),
+        };
+        assert!(hot_shards >= 3, "hot table spread over {hot_shards} shards: {plan:?}");
+    }
+
+    #[test]
+    fn slice_tables_moves_and_duplicates_correctly() {
+        let emb = 2;
+        let mk = |v: f32| (0..6 * emb).map(|i| v + i as f32).collect::<Vec<f32>>();
+        let plan = Placement {
+            shards: 2,
+            tables: vec![
+                TablePlacement::Replicated(vec![0, 1]),
+                TablePlacement::Split(vec![
+                    RowSegment { shard: 1, rows: (0, 2) },
+                    RowSegment { shard: 0, rows: (2, 6) },
+                ]),
+            ],
+        };
+        plan.validate(2, 6).unwrap();
+        let stores = slice_tables(vec![mk(0.0), mk(100.0)], &plan, emb);
+        // Replicated table 0: full copy on both shards.
+        assert_eq!(stores[0][&0], vec![(0, mk(0.0))]);
+        assert_eq!(stores[1][&0], vec![(0, mk(0.0))]);
+        // Split table 1: rows [0,2) on shard 1, [2,6) on shard 0.
+        assert_eq!(stores[1][&1], vec![(0, mk(100.0)[..2 * emb].to_vec())]);
+        assert_eq!(stores[0][&1], vec![(2, mk(100.0)[2 * emb..].to_vec())]);
+        // Owners: replicated -> both; split row 1 -> shard 1, row 5 -> 0.
+        assert_eq!(row_owners(&plan, 0, 3), &[0, 1]);
+        assert_eq!(row_owners(&plan, 1, 1), &[1]);
+        assert_eq!(row_owners(&plan, 1, 5), &[0]);
+        // Byte accounting includes the replica copy.
+        let bytes = plan.shard_bytes(6, emb);
+        assert_eq!(bytes[0], (6 + 4) * emb * 4);
+        assert_eq!(bytes[1], (6 + 2) * emb * 4);
+        assert!((plan.bytes_imbalance(6, emb) - (10.0 / 9.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn planner_whole_mode_delegates() {
+        let planner = PlacementPlanner::new(2, PlacementMode::Whole, 0.5);
+        assert_eq!(planner.plan(3, 10, 4, &[]).unwrap(), Placement::whole(3, 2));
+    }
+}

@@ -2,35 +2,44 @@
 //! §VII's "distributed inference" direction, grounded in Lui et al.'s
 //! capacity-driven scale-out study): RMC2-class tables exceed one
 //! node's DRAM comfort zone, so production shards embedding tables
-//! table-wise across nodes; a leader fans SLS requests out, shards
-//! compute pooled partials over the tables they own, and the leader
-//! runs the dense/interaction/top-MLP stack on the gathered vectors.
+//! across nodes; a leader fans SLS requests out, shards serve the rows
+//! they own, and the leader runs the dense/interaction/top-MLP stack on
+//! the gathered vectors.
 //!
-//! This module is the real-execution counterpart of
-//! `simulator::distributed`: N in-process shard executors, each pinned
-//! to its own thread and *owning* its table slice (`NativeModel::
-//! take_tables` moves the rows out of the leader, so the per-node
-//! capacity split is real memory, not a modeled number), with channel
-//! fan-out/gather standing in for the network. An optional hot-row
-//! [`EmbeddingCache`] on the leader (`runtime::row_cache`) short-
-//! circuits remote lookups for hot rows — viable exactly because of
-//! the paper's Fig-14 locality spectrum — and reports measured hit
-//! rates next to `simulator::embedding_cache`'s predictions.
+//! Placement is a first-class plan (`runtime::placement`): each table
+//! is either owned whole by one shard, **replicated** on several (reads
+//! load-balanced across byte-identical copies), or **row-range split**
+//! across shards so one huge table no longer pins a single executor's
+//! memory. `NativeModel::take_tables` moves the rows out of the leader
+//! and `placement::slice_tables` cuts them into per-shard stores, so
+//! the capacity split (and the replication overhead) is real memory,
+//! not a modeled number. An optional hot-row [`EmbeddingCache`] on the
+//! leader (`runtime::row_cache`) short-circuits remote lookups for hot
+//! rows — viable exactly because of the paper's Fig-14 locality
+//! spectrum — and reports measured hit rates next to
+//! `simulator::embedding_cache`'s predictions.
 //!
 //! # Determinism contract
 //!
-//! A sharded run is bit-identical to the single-node `run_rmc` at any
-//! shard count, with or without the cache (enforced by
-//! `tests/prop_invariants.rs`):
+//! A sharded run is bit-identical to the single-node `run_rmc` under
+//! **any** valid placement — whole, split, replicated, any shard
+//! count, cache on or off (enforced by `tests/prop_invariants.rs`):
 //!
-//! * Tables are partitioned whole — a per-row pooled reduction never
-//!   crosses a shard boundary, and within each (table, sample) tile
-//!   every executor accumulates in ascending lookup order, exactly
-//!   like the single-node `sls_tiles` kernel.
+//! * A table owned whole by one shard (or replicated) pools remotely:
+//!   the executor accumulates each (table, sample) tile in ascending
+//!   lookup order through the shared `sls_axpy` step, exactly like the
+//!   single-node `sls_tiles` kernel. Replicas hold byte-identical
+//!   rows, so replica choice changes *where* bytes come from, never
+//!   which bytes are summed.
+//! * A row-split table's tile may need rows from several shards, and
+//!   float addition is not associative — so split tables are never
+//!   pooled shard-side. The leader fetches the (batch-deduplicated)
+//!   raw rows and pools them itself in the same ascending-lookup
+//!   order. Moving a row between shards relocates bytes; the reduction
+//!   order is pinned by the leader.
 //! * A cache hit returns a byte-exact copy of the row the shard would
-//!   have gathered, and the leader's cache-path pooling runs the same
-//!   ascending-lookup f32 accumulation — so caching changes *where*
-//!   bytes come from, never which bytes are summed or in what order.
+//!   have served, and the cache path reuses the leader-side pooling
+//!   above for every table.
 //! * The leader's bottom/interaction/top stack is the single-node
 //!   optimized engine itself (`bottom_mlp_into` / `interact_and_top`),
 //!   which is bit-stable in its thread count by the engine contract.
@@ -40,27 +49,36 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::{anyhow, ensure};
 
 use super::native::{sls_axpy, Engine, EngineKind, ExecOptions, NativeModel, ScratchArena};
-use super::parallel::shard_range;
+use super::placement::{
+    row_owners, slice_tables, Placement, PlacementMode, PlacementPlanner, ShardSegments,
+    TablePlacement, TableSkew,
+};
 use super::row_cache::{row_key, EmbeddingCache};
 use crate::config::RmcConfig;
 use crate::util::json::{num, obj};
 use crate::util::Json;
 
+/// Batches of measured traffic an `--placement auto` service observes
+/// before replanning from the recorded skew.
+pub const AUTO_REPLAN_AFTER_BATCHES: u64 = 8;
+
 /// Cumulative per-stage breakdown of a service's lifetime (snapshot via
 /// [`ShardedEmbeddingService::stats`]); the measured analogue of
 /// `simulator::distributed::ShardedResult`.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ShardedStats {
     /// Shard executors (config, filled on snapshot).
     pub shards: usize,
     /// Hot-row cache capacity in rows (0 = cache disabled).
     pub cache_capacity_rows: usize,
+    /// Placement policy in force (config, filled on snapshot).
+    pub placement: PlacementMode,
     /// Forward passes served.
     pub batches: u64,
     /// Sum over batches of the *slowest* shard's gather/pool compute
@@ -82,6 +100,33 @@ pub struct ShardedStats {
     pub cache_misses: u64,
     /// Rows actually shipped leader <- shards (deduplicated per batch).
     pub rows_fetched: u64,
+    /// Weighted lookups routed to each shard (row ownership, with the
+    /// batch's replica choices applied) — the measured lookup balance.
+    pub shard_lookups: Vec<u64>,
+    /// Of `shard_lookups`, the portion each shard served on behalf of
+    /// a *replicated* table — the replica read split.
+    pub replica_reads: Vec<u64>,
+    /// Weighted lookups per global table — the skew signal the
+    /// `PlacementPlanner` replans from.
+    pub table_lookups: Vec<u64>,
+    /// Embedding bytes owned per shard under the current plan
+    /// (snapshot; replica copies included).
+    pub shard_bytes: Vec<u64>,
+    /// Placement replans applied (`--placement auto`).
+    pub replans: u64,
+}
+
+fn add_vec(dst: &mut Vec<u64>, src: &[u64]) {
+    if dst.len() < src.len() {
+        dst.resize(src.len(), 0);
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+fn u64_arr(v: &[u64]) -> Json {
+    Json::Arr(v.iter().map(|&x| num(x as f64)).collect())
 }
 
 impl ShardedStats {
@@ -99,11 +144,23 @@ impl ShardedStats {
         }
     }
 
-    /// Machine-readable form (serve --json / benches/sharded.rs).
+    /// max/mean of `shard_lookups` — 1.0 is a perfectly even routing
+    /// split, `shards` is everything on one executor.
+    pub fn lookup_imbalance(&self) -> f64 {
+        let sum: u64 = self.shard_lookups.iter().sum();
+        if self.shard_lookups.is_empty() || sum == 0 {
+            return 1.0;
+        }
+        let mean = sum as f64 / self.shard_lookups.len() as f64;
+        *self.shard_lookups.iter().max().unwrap() as f64 / mean
+    }
+
+    /// Machine-readable form (serve --json / benches).
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("shards", num(self.shards as f64)),
             ("cache_capacity_rows", num(self.cache_capacity_rows as f64)),
+            ("placement", Json::Str(self.placement.name().into())),
             ("batches", num(self.batches as f64)),
             ("shard_sls_ns", num(self.shard_sls_ns)),
             ("gather_ns", num(self.gather_ns)),
@@ -112,27 +169,56 @@ impl ShardedStats {
             ("cache_misses", num(self.cache_misses as f64)),
             ("cache_hit_rate", num(self.hit_rate())),
             ("rows_fetched", num(self.rows_fetched as f64)),
+            ("shard_lookups", u64_arr(&self.shard_lookups)),
+            ("lookup_imbalance", num(self.lookup_imbalance())),
+            ("replica_reads", u64_arr(&self.replica_reads)),
+            ("table_lookups", u64_arr(&self.table_lookups)),
+            ("shard_bytes", u64_arr(&self.shard_bytes)),
+            ("replans", num(self.replans as f64)),
         ])
     }
 }
 
-/// Tables owned by one shard executor (moved out of the leader model).
+/// Table chunks owned by one shard executor (moved out of the leader
+/// model): per global table, ascending `(row_lo, rows)` slices.
 struct ShardTables {
-    /// Global index of the first owned table.
-    t0: usize,
-    tables: Vec<Vec<f32>>,
+    segs: ShardSegments,
     emb_dim: usize,
     lookups: usize,
 }
 
-/// One fan-out request. Ids/weights arrive pre-sliced to the shard's
-/// own table range, laid out (owned_tables, B, L) row-major.
+impl ShardTables {
+    /// Full copy of table `t` (only valid for tables this shard holds
+    /// whole — the leader only sends `Pool` jobs for those).
+    fn full(&self, t: usize) -> &[f32] {
+        &self.segs[&t][0].1
+    }
+
+    /// The `emb_dim` floats of row `id` of table `t` (the leader only
+    /// requests rows inside this shard's owned ranges).
+    fn row(&self, t: usize, id: usize) -> &[f32] {
+        let chunks = &self.segs[&t];
+        let i = chunks.partition_point(|(lo, _)| *lo <= id) - 1;
+        let (lo, data) = &chunks[i];
+        let off = (id - lo) * self.emb_dim;
+        &data[off..off + self.emb_dim]
+    }
+}
+
+/// One fan-out request.
 enum ShardJob {
-    /// Pool every owned table's lookups; reply with the
-    /// (owned_tables, B, E) pooled block.
-    Pool { ids: Vec<i32>, lwts: Vec<f32>, batch: usize, reply: mpsc::Sender<PoolReply> },
-    /// Fetch raw rows for cache-miss fills; reply rows in request
-    /// order, `emb_dim` floats each.
+    /// Pool the listed (whole-owned) tables' lookups; ids/weights are
+    /// laid out (tables.len(), B, L) row-major in listed-table order;
+    /// reply is the matching (tables.len(), B, E) pooled block.
+    Pool {
+        tables: Vec<usize>,
+        ids: Vec<i32>,
+        lwts: Vec<f32>,
+        batch: usize,
+        reply: mpsc::Sender<PoolReply>,
+    },
+    /// Fetch raw rows (row-split tables and cache-miss fills); reply
+    /// rows in request order, `emb_dim` floats each.
     Rows { wants: Vec<(usize, i32)>, reply: mpsc::Sender<RowsReply> },
 }
 
@@ -146,19 +232,20 @@ struct RowsReply {
     compute_ns: u64,
 }
 
-/// Shard executor loop: owns its table slice for the service's
+/// Shard executor loop: owns its table chunks for the topology's
 /// lifetime; exits when the leader drops its sender.
 fn shard_loop(st: ShardTables, rx: mpsc::Receiver<ShardJob>) {
     let emb = st.emb_dim;
     while let Ok(job) = rx.recv() {
         match job {
-            ShardJob::Pool { ids, lwts, batch, reply } => {
+            ShardJob::Pool { tables, ids, lwts, batch, reply } => {
                 let t0c = Instant::now();
                 let l = st.lookups;
-                let mut pooled = vec![0.0f32; st.tables.len() * batch * emb];
-                for (ti, table) in st.tables.iter().enumerate() {
+                let mut pooled = vec![0.0f32; tables.len() * batch * emb];
+                for (k, &t) in tables.iter().enumerate() {
+                    let table = st.full(t);
                     for s in 0..batch {
-                        let q = ti * batch + s;
+                        let q = k * batch + s;
                         let acc = &mut pooled[q * emb..(q + 1) * emb];
                         let base = q * l;
                         // Ascending-lookup accumulation through the
@@ -182,9 +269,7 @@ fn shard_loop(st: ShardTables, rx: mpsc::Receiver<ShardJob>) {
                 let t0c = Instant::now();
                 let mut rows = vec![0.0f32; wants.len() * emb];
                 for (k, (t, id)) in wants.iter().enumerate() {
-                    let table = &st.tables[*t - st.t0];
-                    let start = *id as usize * emb;
-                    rows[k * emb..(k + 1) * emb].copy_from_slice(&table[start..start + emb]);
+                    rows[k * emb..(k + 1) * emb].copy_from_slice(st.row(*t, *id as usize));
                 }
                 let _ =
                     reply.send(RowsReply { rows, compute_ns: t0c.elapsed().as_nanos() as u64 });
@@ -193,8 +278,47 @@ fn shard_loop(st: ShardTables, rx: mpsc::Receiver<ShardJob>) {
     }
 }
 
-/// Table-sharded SLS execution with an optional leader hot-row cache;
-/// see the module docs for topology and the determinism contract.
+/// The live shard topology: the plan plus the executors realizing it.
+/// Swapped whole on an auto replan (behind the service's `RwLock`).
+struct Topology {
+    plan: Placement,
+    senders: Vec<mpsc::Sender<ShardJob>>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    shard_bytes: Vec<usize>,
+}
+
+impl Topology {
+    /// Slice `tables` per `plan` and spawn one executor per shard.
+    fn spawn(plan: Placement, tables: Vec<Vec<f32>>, cfg: &RmcConfig, rows: usize) -> Topology {
+        let shard_bytes = plan.shard_bytes(rows, cfg.emb_dim);
+        let stores = slice_tables(tables, &plan, cfg.emb_dim);
+        let mut senders = Vec::with_capacity(plan.shards);
+        let mut joins = Vec::with_capacity(plan.shards);
+        for (i, segs) in stores.into_iter().enumerate() {
+            let st = ShardTables { segs, emb_dim: cfg.emb_dim, lookups: cfg.lookups };
+            let (tx, rx) = mpsc::channel();
+            let join = std::thread::Builder::new()
+                .name(format!("emb-shard-{i}"))
+                .spawn(move || shard_loop(st, rx))
+                .expect("spawn shard executor");
+            senders.push(tx);
+            joins.push(join);
+        }
+        Topology { plan, senders, joins, shard_bytes }
+    }
+
+    /// Close the executor channels and reap the threads.
+    fn shutdown(&mut self) {
+        self.senders.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Placement-aware sharded SLS execution with an optional leader
+/// hot-row cache; see the module docs for topology and the determinism
+/// contract.
 pub struct ShardedEmbeddingService {
     /// MLPs + interaction only — `take_tables` moved the rows out.
     leader: NativeModel,
@@ -202,40 +326,44 @@ pub struct ShardedEmbeddingService {
     /// owning backend when co-located services would otherwise
     /// multiply thread pools).
     engine: Arc<Engine>,
-    senders: Vec<mpsc::Sender<ShardJob>>,
-    joins: Vec<std::thread::JoinHandle<()>>,
-    /// Global table range [lo, hi) per shard.
-    ranges: Vec<(usize, usize)>,
-    /// Owned embedding bytes per shard (the measured capacity split).
-    shard_bytes: Vec<usize>,
-    /// Shard index serving each global table.
-    table_shard: Vec<usize>,
+    topo: RwLock<Topology>,
+    /// Parameter seed the model was built with — lets an auto replan
+    /// re-materialize the tables deterministically.
+    seed: u64,
+    /// Replans enabled (placement auto, not a pinned custom plan).
+    auto_replan: bool,
+    planner: PlacementPlanner,
     cache: Option<EmbeddingCache>,
+    /// Serializes replans (snapshot-compute-swap); batches keep running
+    /// under the topology read lock meanwhile.
+    replan_gate: Mutex<()>,
     stats: Mutex<ShardedStats>,
 }
 
 impl ShardedEmbeddingService {
     /// Build the (cfg, seed) model — parameter-identical to
-    /// `NativeModel::new(cfg, seed)` — and partition its tables across
-    /// `opts.shards` executors. `opts.cache_rows > 0` adds the leader
-    /// hot-row cache sized as that fraction of total table rows.
+    /// `NativeModel::new(cfg, seed)` — and place its tables across
+    /// `opts.shards` executors per `opts.placement`. `opts.cache_rows
+    /// > 0` adds the leader hot-row cache sized as that fraction of
+    /// total table rows.
     pub fn new(cfg: &RmcConfig, seed: u64, opts: ExecOptions) -> anyhow::Result<Self> {
-        Self::from_model(NativeModel::new(cfg, seed), opts)
+        Self::from_model(NativeModel::new(cfg, seed), seed, opts)
     }
 
     /// Build by preset name (`config::all_rmc`).
     pub fn from_name(name: &str, seed: u64, opts: ExecOptions) -> anyhow::Result<Self> {
-        Self::from_model(NativeModel::from_name(name, seed)?, opts)
+        Self::from_model(NativeModel::from_name(name, seed)?, seed, opts)
     }
 
     /// Consume a built model: move its tables out to the shard
     /// executors and keep the MLP stack as the leader (the service
     /// spawns its own leader engine; see `from_model_with_engine` to
-    /// share one).
-    pub fn from_model(model: NativeModel, opts: ExecOptions) -> anyhow::Result<Self> {
+    /// share one). `seed` must be the seed `model` was built with (it
+    /// re-materializes the tables on an auto replan).
+    pub fn from_model(model: NativeModel, seed: u64, opts: ExecOptions) -> anyhow::Result<Self> {
         let engine =
             Arc::new(Engine::new(ExecOptions { threads: opts.threads, ..Default::default() }));
-        Self::from_model_with_engine(model, opts, engine)
+        Self::from_model_with_engine(model, seed, opts, engine)
     }
 
     /// Like `from_model` but running the leader's dense stack on an
@@ -243,9 +371,46 @@ impl ShardedEmbeddingService {
     /// a multi-tenant mix of sharded services contends on one intra-op
     /// pool instead of spawning one per model.
     pub fn from_model_with_engine(
-        mut model: NativeModel,
+        model: NativeModel,
+        seed: u64,
         opts: ExecOptions,
         engine: Arc<Engine>,
+    ) -> anyhow::Result<Self> {
+        let cfg = model.cfg();
+        ensure!(cfg.num_tables > 0, "{}: no embedding tables to shard", cfg.name);
+        let planner =
+            PlacementPlanner::new(opts.shards, opts.placement, opts.replicate_hot);
+        // No measured skew yet: the initial plan is the static
+        // byte-balanced one (for `whole`, the PR-4 table-wise layout).
+        let plan = planner.plan(cfg.num_tables, model.rows(), cfg.emb_dim, &[])?;
+        Self::with_plan_inner(model, seed, opts, engine, planner, plan, true)
+    }
+
+    /// Build with an explicit, possibly hand-crafted plan (conformance
+    /// property tests exercise random splits/replica sets through
+    /// this). The plan is pinned: auto replanning is disabled.
+    pub fn with_plan(
+        cfg: &RmcConfig,
+        seed: u64,
+        opts: ExecOptions,
+        plan: Placement,
+    ) -> anyhow::Result<Self> {
+        let model = NativeModel::new(cfg, seed);
+        let engine =
+            Arc::new(Engine::new(ExecOptions { threads: opts.threads, ..Default::default() }));
+        let planner =
+            PlacementPlanner::new(plan.shards, opts.placement, opts.replicate_hot);
+        Self::with_plan_inner(model, seed, opts, engine, planner, plan, false)
+    }
+
+    fn with_plan_inner(
+        mut model: NativeModel,
+        seed: u64,
+        opts: ExecOptions,
+        engine: Arc<Engine>,
+        planner: PlacementPlanner,
+        plan: Placement,
+        from_planner: bool,
     ) -> anyhow::Result<Self> {
         ensure!(
             opts.engine == EngineKind::Optimized,
@@ -256,59 +421,29 @@ impl ShardedEmbeddingService {
             engine.kind() == EngineKind::Optimized,
             "the sharded leader stack requires an optimized engine"
         );
-        ensure!(opts.shards >= 1, "need at least one shard executor");
-        ensure!(
-            (0.0..=1.0).contains(&opts.cache_rows),
-            "--cache-rows is a fraction of table rows (got {})",
-            opts.cache_rows
-        );
+        opts.validate()?;
         let cfg = model.cfg().clone();
-        ensure!(cfg.num_tables > 0, "{}: no embedding tables to shard", cfg.name);
         let rows = model.rows();
-        // More shards than tables would leave executors with nothing to
-        // own; clamp (table-wise partitioning is the unit of scale-out).
-        let shards = opts.shards.min(cfg.num_tables);
-
-        let mut table_iter = model.take_tables().into_iter();
-        let mut senders = Vec::with_capacity(shards);
-        let mut joins = Vec::with_capacity(shards);
-        let mut ranges = Vec::with_capacity(shards);
-        let mut shard_bytes = Vec::with_capacity(shards);
-        let mut table_shard = vec![0usize; cfg.num_tables];
-        for i in 0..shards {
-            let (lo, hi) = shard_range(cfg.num_tables, shards, i);
-            let own: Vec<Vec<f32>> =
-                (lo..hi).map(|_| table_iter.next().expect("table count")).collect();
-            shard_bytes.push(own.iter().map(|t| t.len() * 4).sum());
-            table_shard[lo..hi].fill(i);
-            ranges.push((lo, hi));
-            let st =
-                ShardTables { t0: lo, tables: own, emb_dim: cfg.emb_dim, lookups: cfg.lookups };
-            let (tx, rx) = mpsc::channel();
-            let join = std::thread::Builder::new()
-                .name(format!("emb-shard-{i}"))
-                .spawn(move || shard_loop(st, rx))
-                .expect("spawn shard executor");
-            senders.push(tx);
-            joins.push(join);
-        }
+        plan.validate(cfg.num_tables, rows)?;
 
         let cache = if opts.cache_rows > 0.0 {
             let total_rows = cfg.num_tables * rows;
             let cap = ((total_rows as f64 * opts.cache_rows) as usize).max(16);
-            Some(EmbeddingCache::new(cap, cfg.emb_dim))
+            // Per-table hit counters feed the planner's skew signal.
+            Some(EmbeddingCache::with_tables(cap, cfg.emb_dim, cfg.num_tables))
         } else {
             None
         };
+        let topo = Topology::spawn(plan, model.take_tables(), &cfg, rows);
         Ok(ShardedEmbeddingService {
             leader: model,
             engine,
-            senders,
-            joins,
-            ranges,
-            shard_bytes,
-            table_shard,
+            topo: RwLock::new(topo),
+            seed,
+            auto_replan: from_planner && opts.placement == PlacementMode::Auto,
+            planner,
             cache,
+            replan_gate: Mutex::new(()),
             stats: Mutex::new(ShardedStats::default()),
         })
     }
@@ -322,20 +457,20 @@ impl ShardedEmbeddingService {
         self.leader.rows()
     }
 
-    /// Shard executors actually running (post table-count clamp).
+    /// Shard executors currently running.
     pub fn shards(&self) -> usize {
-        self.senders.len()
+        self.topo.read().unwrap().plan.shards
     }
 
-    /// Global table range [lo, hi) owned by each shard.
-    pub fn shard_table_ranges(&self) -> &[(usize, usize)] {
-        &self.ranges
+    /// Snapshot of the placement plan in force.
+    pub fn placement(&self) -> Placement {
+        self.topo.read().unwrap().plan.clone()
     }
 
     /// Embedding bytes owned by each shard — the per-node capacity the
-    /// leader no longer pays.
-    pub fn shard_bytes(&self) -> &[usize] {
-        &self.shard_bytes
+    /// leader no longer pays (replica copies included).
+    pub fn shard_bytes(&self) -> Vec<usize> {
+        self.topo.read().unwrap().shard_bytes.clone()
     }
 
     /// Leader-resident parameter bytes (MLPs only; tables moved out).
@@ -349,9 +484,15 @@ impl ShardedEmbeddingService {
 
     /// Snapshot of the cumulative per-stage breakdown.
     pub fn stats(&self) -> ShardedStats {
-        let mut s = *self.stats.lock().unwrap();
-        s.shards = self.shards();
+        let mut s = self.stats.lock().unwrap().clone();
+        let topo = self.topo.read().unwrap();
+        s.shards = topo.plan.shards;
+        s.placement = self.planner.mode;
         s.cache_capacity_rows = self.cache.as_ref().map_or(0, |c| c.capacity_rows());
+        s.shard_bytes = topo.shard_bytes.iter().map(|&b| b as u64).collect();
+        s.shard_lookups.resize(topo.plan.shards.max(s.shard_lookups.len()), 0);
+        s.replica_reads.resize(topo.plan.shards.max(s.replica_reads.len()), 0);
+        s.table_lookups.resize(self.cfg().num_tables, 0);
         s
     }
 
@@ -362,6 +503,47 @@ impl ShardedEmbeddingService {
         if let Some(c) = &self.cache {
             c.clear();
         }
+    }
+
+    /// Recompute the plan from the skew measured so far and swap the
+    /// topology if it changed. Returns whether a new plan was applied.
+    /// `--placement auto` calls this automatically after
+    /// [`AUTO_REPLAN_AFTER_BATCHES`]; benches may call it directly.
+    pub fn replan_from_stats(&self) -> anyhow::Result<bool> {
+        let _gate = self.replan_gate.lock().unwrap();
+        let cfg = self.cfg().clone();
+        let rows = self.rows();
+        let mut skew: Vec<TableSkew> = {
+            let s = self.stats.lock().unwrap();
+            (0..cfg.num_tables)
+                .map(|t| TableSkew {
+                    lookups: s.table_lookups.get(t).copied().unwrap_or(0),
+                    cache_hits: 0,
+                })
+                .collect()
+        };
+        if let Some(cache) = &self.cache {
+            for (t, hits) in cache.table_hits().into_iter().enumerate() {
+                skew[t].cache_hits = hits;
+            }
+        }
+        let plan = self.planner.plan(cfg.num_tables, rows, cfg.emb_dim, &skew)?;
+        if plan == self.topo.read().unwrap().plan {
+            return Ok(false);
+        }
+        // Re-materialize the tables (deterministic from (cfg, seed) —
+        // parameter init is pure) and swap executors under the write
+        // lock. In-flight batches finished under the old topology keep
+        // their replies: queued jobs drain before an executor exits.
+        let tables = NativeModel::new(&cfg, self.seed).take_tables();
+        let mut fresh = Topology::spawn(plan, tables, &cfg, rows);
+        {
+            let mut topo = self.topo.write().unwrap();
+            std::mem::swap(&mut *topo, &mut fresh);
+        }
+        fresh.shutdown(); // the old topology
+        self.stats.lock().unwrap().replans += 1;
+        Ok(true)
     }
 
     /// Forward pass through the sharded topology with a thread-local
@@ -397,10 +579,16 @@ impl ShardedEmbeddingService {
         let mut delta = ShardedStats::default();
 
         // --- fan out ---------------------------------------------------
+        // Replica load-balancing seeds from the lifetime routing counts
+        // so successive batches spread over the copies.
+        let base_loads = {
+            let s = self.stats.lock().unwrap();
+            s.shard_lookups.clone()
+        };
         let t_fan = Instant::now();
-        let pending = match &self.cache {
-            None => self.fan_out_pooled(ids, lwts, batch, per_table)?,
-            Some(cache) => self.fan_out_cached(cache, ids, lwts, batch, per_table, &mut delta)?,
+        let mut pending = {
+            let topo = self.topo.read().unwrap();
+            self.fan_out(&topo, ids, lwts, batch, per_table, &base_loads, &mut delta)?
         };
         delta.gather_ns += t_fan.elapsed().as_nanos() as f64;
 
@@ -413,56 +601,55 @@ impl ShardedEmbeddingService {
         // --- gather ----------------------------------------------------
         let t_gather = Instant::now();
         let mut max_shard_ns = 0u64;
-        match pending {
-            Pending::Pooled(rxs) => {
-                for (i, rx) in rxs.into_iter().enumerate() {
-                    let reply = rx
-                        .recv()
-                        .map_err(|_| anyhow!("embedding shard {i} died mid-request"))?;
-                    let (lo, hi) = self.ranges[i];
-                    arena.emb[lo * batch * emb..hi * batch * emb]
-                        .copy_from_slice(&reply.pooled);
-                    max_shard_ns = max_shard_ns.max(reply.compute_ns);
-                }
+        for req in pending.pooled.drain(..) {
+            let reply = req
+                .reply_rx
+                .recv()
+                .map_err(|_| anyhow!("embedding shard {} died mid-request", req.shard))?;
+            for (k, &t) in req.tables.iter().enumerate() {
+                arena.emb[t * batch * emb..(t + 1) * batch * emb]
+                    .copy_from_slice(&reply.pooled[k * batch * emb..(k + 1) * batch * emb]);
             }
-            Pending::Rows { mut rowmap, requests } => {
-                for req in requests {
-                    let reply = req.reply_rx.recv().map_err(|_| {
-                        anyhow!("embedding shard {} died mid-request", req.shard)
-                    })?;
-                    let cache = self.cache.as_ref().expect("cache mode");
-                    for (k, (t, id)) in req.wants.iter().enumerate() {
-                        let row = &reply.rows[k * emb..(k + 1) * emb];
-                        let key = row_key(*t, *id as u32);
-                        cache.insert(key, row);
-                        rowmap.insert(key, row.to_vec());
-                    }
-                    delta.rows_fetched += req.wants.len() as u64;
-                    max_shard_ns = max_shard_ns.max(reply.compute_ns);
+            max_shard_ns = max_shard_ns.max(reply.compute_ns);
+        }
+        for req in pending.rows.drain(..) {
+            let reply = req
+                .reply_rx
+                .recv()
+                .map_err(|_| anyhow!("embedding shard {} died mid-request", req.shard))?;
+            for (k, (t, id)) in req.wants.iter().enumerate() {
+                let row = &reply.rows[k * emb..(k + 1) * emb];
+                let key = row_key(*t, *id as u32);
+                if let Some(cache) = &self.cache {
+                    cache.insert(key, row);
                 }
-                // Leader-side pooling from resolved rows — the same
-                // ascending-lookup sls_axpy accumulation as sls_tiles,
-                // so cached execution stays bit-identical.
-                for t in 0..self.cfg().num_tables {
-                    for s in 0..batch {
-                        let q = t * batch + s;
-                        let acc = &mut arena.emb[q * emb..(q + 1) * emb];
-                        acc.fill(0.0);
-                        let base = q * self.cfg().lookups;
-                        for li in 0..self.cfg().lookups {
-                            let w = lwts[base + li];
-                            if w == 0.0 {
-                                continue;
-                            }
-                            let key = row_key(t, ids[base + li] as u32);
-                            let row = &rowmap[&key];
-                            // A leftover empty placeholder would pool
-                            // zeros silently; every queued want must
-                            // have been resolved by the fetch loop.
-                            debug_assert_eq!(row.len(), emb, "unresolved cache miss pooled");
-                            sls_axpy(acc, w, row);
-                        }
+                pending.rowmap.insert(key, row.to_vec());
+            }
+            delta.rows_fetched += req.wants.len() as u64;
+            max_shard_ns = max_shard_ns.max(reply.compute_ns);
+        }
+        // Leader-side pooling for row-resolved tables (split tables,
+        // and every table in cache mode) — the same ascending-lookup
+        // sls_axpy accumulation as the single-node sls_tiles, so split
+        // and cached execution stay bit-identical.
+        for &t in &pending.fetched {
+            for s in 0..batch {
+                let q = t * batch + s;
+                let acc = &mut arena.emb[q * emb..(q + 1) * emb];
+                acc.fill(0.0);
+                let base = q * self.cfg().lookups;
+                for li in 0..self.cfg().lookups {
+                    let w = lwts[base + li];
+                    if w == 0.0 {
+                        continue;
                     }
+                    let key = row_key(t, ids[base + li] as u32);
+                    let row = &pending.rowmap[&key];
+                    // A leftover empty placeholder would pool zeros
+                    // silently; every queued want must have been
+                    // resolved by the fetch loop.
+                    debug_assert_eq!(row.len(), emb, "unresolved row fetch pooled");
+                    sls_axpy(acc, w, row);
                 }
             }
         }
@@ -481,7 +668,7 @@ impl ShardedEmbeddingService {
         self.leader.interact_and_top(&self.engine, arena, in_ping, batch, None);
         delta.leader_mlp_ns += t_top.elapsed().as_nanos() as f64;
 
-        {
+        let batches_done = {
             let mut s = self.stats.lock().unwrap();
             s.batches += 1;
             s.shard_sls_ns += delta.shard_sls_ns;
@@ -490,53 +677,100 @@ impl ShardedEmbeddingService {
             s.cache_hits += delta.cache_hits;
             s.cache_misses += delta.cache_misses;
             s.rows_fetched += delta.rows_fetched;
+            add_vec(&mut s.shard_lookups, &delta.shard_lookups);
+            add_vec(&mut s.replica_reads, &delta.replica_reads);
+            add_vec(&mut s.table_lookups, &delta.table_lookups);
+            s.batches
+        };
+        // Auto placement: after a warmup of measured traffic, replan
+        // from the recorded skew (once; further replans on explicit
+        // `replan_from_stats` calls). Numerics are placement-invariant,
+        // so a replan can never change results — only balance.
+        if self.auto_replan && batches_done == AUTO_REPLAN_AFTER_BATCHES {
+            self.replan_from_stats()?;
         }
         Ok(&arena.out[..batch])
     }
 
-    /// Cache-off fan-out: every shard pools its own tables remotely.
-    fn fan_out_pooled(
+    /// Route one batch: whole/replicated tables pool remotely on a
+    /// (deterministically) chosen replica, split tables and cache-mode
+    /// tables fetch deduplicated raw rows for leader-side pooling.
+    #[allow(clippy::too_many_arguments)]
+    fn fan_out(
         &self,
+        topo: &Topology,
         ids: &[i32],
         lwts: &[f32],
         batch: usize,
         per_table: usize,
-    ) -> anyhow::Result<Pending> {
-        let mut rxs = Vec::with_capacity(self.senders.len());
-        for (i, tx) in self.senders.iter().enumerate() {
-            let (lo, hi) = self.ranges[i];
-            let (reply_tx, reply_rx) = mpsc::channel();
-            tx.send(ShardJob::Pool {
-                ids: ids[lo * per_table..hi * per_table].to_vec(),
-                lwts: lwts[lo * per_table..hi * per_table].to_vec(),
-                batch,
-                reply: reply_tx,
-            })
-            .map_err(|_| anyhow!("embedding shard {i} died"))?;
-            rxs.push(reply_rx);
-        }
-        Ok(Pending::Pooled(rxs))
-    }
-
-    /// Cache-on fan-out: probe the hot-row cache per weighted lookup in
-    /// sequential order (a row missed earlier in the batch counts as a
-    /// hit on re-encounter, matching the simulator's probe-then-insert
-    /// stream), then request only the missing rows from their shards.
-    fn fan_out_cached(
-        &self,
-        cache: &EmbeddingCache,
-        ids: &[i32],
-        lwts: &[f32],
-        batch: usize,
-        per_table: usize,
+        base_loads: &[u64],
         delta: &mut ShardedStats,
     ) -> anyhow::Result<Pending> {
+        let num_tables = self.cfg().num_tables;
+        let shards = topo.plan.shards;
         let emb = self.cfg().emb_dim;
+        delta.shard_lookups = vec![0; shards];
+        delta.replica_reads = vec![0; shards];
+        delta.table_lookups = vec![0; num_tables];
+
+        // Weighted (non-padding) lookups per table: the routing unit
+        // for balance accounting and the planner's skew signal.
+        for t in 0..num_tables {
+            let base = t * per_table;
+            delta.table_lookups[t] =
+                lwts[base..base + per_table].iter().filter(|w| **w != 0.0).count() as u64;
+        }
+        // Replica choice per replicated table: the copy with the least
+        // routed load so far (lifetime + this batch), lowest index on
+        // ties. A pure function of placement and traffic counts — no
+        // timing — so it is deterministic for a given batch sequence;
+        // and since replicas are byte-identical, the choice can never
+        // affect numerics.
+        let load = |s: usize, d: &ShardedStats| {
+            base_loads.get(s).copied().unwrap_or(0) + d.shard_lookups[s]
+        };
+        let choose_replica = |reps: &[usize], d: &ShardedStats| {
+            reps.iter().copied().min_by_key(|&s| (load(s, d), s)).unwrap()
+        };
+
+        let mut pool_sets: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        let mut wants: Vec<Vec<(usize, i32)>> = vec![Vec::new(); shards];
         let mut rowmap: HashMap<u64, Vec<f32>> = HashMap::new();
-        let mut wants: Vec<Vec<(usize, i32)>> = vec![Vec::new(); self.senders.len()];
+        let mut fetched: Vec<usize> = Vec::new();
         let mut rowbuf = vec![0.0f32; emb];
-        for t in 0..self.cfg().num_tables {
-            let shard = self.table_shard[t];
+        let cache_mode = self.cache.is_some();
+
+        for t in 0..num_tables {
+            let tp = &topo.plan.tables[t];
+            let replicated = matches!(tp, TablePlacement::Replicated(r) if r.len() > 1);
+            // Whole-owned tables pool remotely — unless the cache is
+            // on, where every table resolves row-wise so hits can
+            // short-circuit shard traffic.
+            if !cache_mode {
+                if let TablePlacement::Replicated(reps) = tp {
+                    let r = choose_replica(reps, delta);
+                    pool_sets[r].push(t);
+                    delta.shard_lookups[r] += delta.table_lookups[t];
+                    if replicated {
+                        delta.replica_reads[r] += delta.table_lookups[t];
+                    }
+                    continue;
+                }
+            }
+            // Row-resolved path: split tables always; every table in
+            // cache mode. Probe the cache (if any) per weighted lookup
+            // in sequential order — a row missed earlier in the batch
+            // counts as a hit on re-encounter, matching the simulator's
+            // probe-then-insert stream — and queue the misses to the
+            // owning shard (least-loaded replica for replicated
+            // tables, fixed per batch).
+            fetched.push(t);
+            let table_replica = match tp {
+                TablePlacement::Replicated(reps) if cache_mode => {
+                    Some(choose_replica(reps, delta))
+                }
+                _ => None,
+            };
             let base_t = t * per_table;
             for (&id, &w) in
                 ids[base_t..base_t + per_table].iter().zip(&lwts[base_t..base_t + per_table])
@@ -544,40 +778,91 @@ impl ShardedEmbeddingService {
                 if w == 0.0 {
                     continue;
                 }
+                // Routing accounting: every weighted lookup's row is
+                // owned somewhere, whether or not the cache ends up
+                // serving the bytes.
+                let owner = match table_replica {
+                    Some(r) => r,
+                    None => row_owners(&topo.plan, t, id as usize)[0],
+                };
+                delta.shard_lookups[owner] += 1;
+                if replicated {
+                    delta.replica_reads[owner] += 1;
+                }
                 let key = row_key(t, id as u32);
                 if rowmap.contains_key(&key) {
                     // Resolved earlier in this batch (cache hit, or a
                     // miss already queued): sequentially it would be
                     // resident by now.
-                    delta.cache_hits += 1;
-                } else if cache.probe_into(key, &mut rowbuf) {
-                    delta.cache_hits += 1;
-                    rowmap.insert(key, rowbuf.clone());
-                } else {
-                    delta.cache_misses += 1;
-                    wants[shard].push((t, id));
-                    // Placeholder marks the fetch as queued; the gather
-                    // overwrites it with the shard's bytes.
-                    rowmap.insert(key, Vec::new());
+                    if cache_mode {
+                        delta.cache_hits += 1;
+                    }
+                    continue;
                 }
+                if cache_mode {
+                    if let Some(cache) = &self.cache {
+                        if cache.probe_into(key, &mut rowbuf) {
+                            delta.cache_hits += 1;
+                            rowmap.insert(key, rowbuf.clone());
+                            continue;
+                        }
+                    }
+                    delta.cache_misses += 1;
+                }
+                wants[owner].push((t, id));
+                // Placeholder marks the fetch as queued; the gather
+                // overwrites it with the shard's bytes.
+                rowmap.insert(key, Vec::new());
             }
         }
-        let mut requests = Vec::new();
+
+        let mut pooled = Vec::new();
+        for (i, tables) in pool_sets.into_iter().enumerate() {
+            if tables.is_empty() {
+                continue;
+            }
+            let mut sids = Vec::with_capacity(tables.len() * per_table);
+            let mut slwts = Vec::with_capacity(tables.len() * per_table);
+            for &t in &tables {
+                sids.extend_from_slice(&ids[t * per_table..(t + 1) * per_table]);
+                slwts.extend_from_slice(&lwts[t * per_table..(t + 1) * per_table]);
+            }
+            let (reply_tx, reply_rx) = mpsc::channel();
+            topo.senders[i]
+                .send(ShardJob::Pool {
+                    tables: tables.clone(),
+                    ids: sids,
+                    lwts: slwts,
+                    batch,
+                    reply: reply_tx,
+                })
+                .map_err(|_| anyhow!("embedding shard {i} died"))?;
+            pooled.push(PoolRequest { shard: i, tables, reply_rx });
+        }
+        let mut rows = Vec::new();
         for (i, want) in wants.into_iter().enumerate() {
             if want.is_empty() {
                 continue;
             }
             let (reply_tx, reply_rx) = mpsc::channel();
-            self.senders[i]
+            topo.senders[i]
                 .send(ShardJob::Rows { wants: want.clone(), reply: reply_tx })
                 .map_err(|_| anyhow!("embedding shard {i} died"))?;
-            requests.push(RowsRequest { shard: i, wants: want, reply_rx });
+            rows.push(RowsRequest { shard: i, wants: want, reply_rx });
         }
-        Ok(Pending::Rows { rowmap, requests })
+        Ok(Pending { pooled, rows, rowmap, fetched })
     }
 }
 
-/// One outstanding cache-miss row fetch (cache-mode fan-out).
+/// One outstanding remote-pool request.
+struct PoolRequest {
+    shard: usize,
+    /// Global table indices, in the pooled block's layout order.
+    tables: Vec<usize>,
+    reply_rx: mpsc::Receiver<PoolReply>,
+}
+
+/// One outstanding raw-row fetch.
 struct RowsRequest {
     shard: usize,
     wants: Vec<(usize, i32)>,
@@ -585,18 +870,18 @@ struct RowsRequest {
 }
 
 /// In-flight fan-out state between send and gather.
-enum Pending {
-    Pooled(Vec<mpsc::Receiver<PoolReply>>),
-    Rows { rowmap: HashMap<u64, Vec<f32>>, requests: Vec<RowsRequest> },
+struct Pending {
+    pooled: Vec<PoolRequest>,
+    rows: Vec<RowsRequest>,
+    /// Resolved rows for leader-side pooling, keyed by `row_key`.
+    rowmap: HashMap<u64, Vec<f32>>,
+    /// Tables (ascending) the leader pools from `rowmap`.
+    fetched: Vec<usize>,
 }
 
 impl Drop for ShardedEmbeddingService {
     fn drop(&mut self) {
-        // Closing the channels ends each executor loop.
-        self.senders.clear();
-        for j in self.joins.drain(..) {
-            let _ = j.join();
-        }
+        self.topo.get_mut().unwrap().shutdown();
     }
 }
 
@@ -604,6 +889,7 @@ impl Drop for ShardedEmbeddingService {
 mod tests {
     use super::*;
     use crate::config::ModelClass;
+    use crate::runtime::placement::RowSegment;
 
     fn tiny_cfg() -> RmcConfig {
         RmcConfig {
@@ -632,6 +918,15 @@ mod tests {
         ExecOptions { shards, cache_rows, ..Default::default() }
     }
 
+    fn opts_placed(
+        shards: usize,
+        cache_rows: f64,
+        placement: PlacementMode,
+        replicate_hot: f64,
+    ) -> ExecOptions {
+        ExecOptions { shards, cache_rows, placement, replicate_hot, ..Default::default() }
+    }
+
     #[test]
     fn sharded_matches_single_node_bitwise() {
         let cfg = tiny_cfg();
@@ -647,21 +942,135 @@ mod tests {
     }
 
     #[test]
+    fn row_split_and_replicated_placements_match_single_node_bitwise() {
+        let cfg = tiny_cfg();
+        let single = NativeModel::new(&cfg, 7);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 6);
+        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+        // Row placement at 5 shards > 3 tables: no clamp — row
+        // granularity keeps every executor fed.
+        for (shards, mode, rep) in [
+            (2, PlacementMode::Rows, 0.0),
+            (5, PlacementMode::Rows, 0.0),
+            (4, PlacementMode::Rows, 0.5),
+            (4, PlacementMode::Auto, 0.3),
+        ] {
+            let svc =
+                ShardedEmbeddingService::new(&cfg, 7, opts_placed(shards, 0.0, mode, rep))
+                    .unwrap();
+            assert_eq!(svc.shards(), shards, "row placement must not clamp to table count");
+            for _ in 0..2 {
+                let got = svc.run_rmc(&dense, &ids, &lwts).unwrap();
+                assert_eq!(want, got, "{}/{shards} shards diverged", mode.name());
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_plan_with_split_and_replicas_is_bitwise_and_balances_reads() {
+        let cfg = tiny_cfg();
+        let single = NativeModel::new(&cfg, 11);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 4);
+        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+        let plan = Placement {
+            shards: 2,
+            tables: vec![
+                TablePlacement::Replicated(vec![0, 1]),
+                TablePlacement::Split(vec![
+                    RowSegment { shard: 1, rows: (0, 17) },
+                    RowSegment { shard: 0, rows: (17, 60) },
+                ]),
+                TablePlacement::Replicated(vec![1]),
+            ],
+        };
+        let svc =
+            ShardedEmbeddingService::with_plan(&cfg, 11, opts(2, 0.0), plan.clone()).unwrap();
+        assert_eq!(svc.placement(), plan);
+        for i in 0..4 {
+            let got = svc.run_rmc(&dense, &ids, &lwts).unwrap();
+            assert_eq!(want, got, "batch {i} diverged under custom plan");
+        }
+        let s = svc.stats();
+        assert_eq!(s.batches, 4);
+        // Table 0 is replicated: its reads are attributed as replica
+        // reads somewhere.
+        assert!(
+            s.replica_reads.iter().sum::<u64>() > 0,
+            "replicated table reads must be recorded: {:?}",
+            s.replica_reads
+        );
+        // Every weighted lookup is routed somewhere.
+        assert_eq!(
+            s.shard_lookups.iter().sum::<u64>(),
+            s.table_lookups.iter().sum::<u64>(),
+            "routing accounting must cover all weighted lookups"
+        );
+        // The replica copy costs real bytes: shard 1 owns table 0 and
+        // 2 whole plus 17 rows of table 1.
+        let row_bytes = cfg.emb_dim * 4;
+        assert_eq!(
+            svc.shard_bytes(),
+            &[
+                (60 + 43) * row_bytes, // replica of t0 + t1 tail
+                (60 + 17 + 60) * row_bytes,
+            ]
+        );
+    }
+
+    #[test]
+    fn replica_reads_balance_across_copies() {
+        // Every table fully replicated on both shards: within each
+        // batch the least-loaded rule must hand at least one table to
+        // each shard (after the first assignment, the other copy is
+        // strictly less loaded), so both copies serve reads.
+        let cfg = tiny_cfg();
+        let single = NativeModel::new(&cfg, 13);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 4);
+        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+        let plan = Placement {
+            shards: 2,
+            tables: (0..cfg.num_tables)
+                .map(|_| TablePlacement::Replicated(vec![0, 1]))
+                .collect(),
+        };
+        let svc =
+            ShardedEmbeddingService::with_plan(&cfg, 13, opts(2, 0.0), plan).unwrap();
+        for _ in 0..4 {
+            assert_eq!(want, svc.run_rmc(&dense, &ids, &lwts).unwrap());
+        }
+        let s = svc.stats();
+        assert!(
+            s.replica_reads.iter().all(|&r| r > 0),
+            "replica reads must spread over both copies: {:?}",
+            s.replica_reads
+        );
+        // Full replication doubles the owned bytes on a 2-shard plan.
+        let table_bytes = cfg.pjrt_rows * cfg.emb_dim * 4;
+        assert_eq!(
+            svc.shard_bytes().iter().sum::<usize>(),
+            2 * cfg.num_tables * table_bytes
+        );
+    }
+
+    #[test]
     fn cache_mode_is_bitwise_identical_and_hits_on_reuse() {
         let cfg = tiny_cfg();
         let single = NativeModel::new(&cfg, 9);
         let (dense, ids, lwts) = tiny_inputs(&cfg, 4);
         let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
-        let svc = ShardedEmbeddingService::new(&cfg, 9, opts(2, 0.5)).unwrap();
-        let cold = svc.run_rmc(&dense, &ids, &lwts).unwrap();
-        let warm = svc.run_rmc(&dense, &ids, &lwts).unwrap();
-        assert_eq!(want, cold, "cold cache diverged");
-        assert_eq!(want, warm, "warm cache diverged");
-        let s = svc.stats();
-        assert_eq!(s.batches, 2);
-        assert!(s.cache_hits > 0, "repeat batch must hit: {s:?}");
-        // The repeat batch's rows were all resolved leader-side.
-        assert!(s.rows_fetched <= s.cache_misses, "fetches are deduplicated misses");
+        for mode in [PlacementMode::Whole, PlacementMode::Rows] {
+            let svc =
+                ShardedEmbeddingService::new(&cfg, 9, opts_placed(2, 0.5, mode, 0.0)).unwrap();
+            let cold = svc.run_rmc(&dense, &ids, &lwts).unwrap();
+            let warm = svc.run_rmc(&dense, &ids, &lwts).unwrap();
+            assert_eq!(want, cold, "{}: cold cache diverged", mode.name());
+            assert_eq!(want, warm, "{}: warm cache diverged", mode.name());
+            let s = svc.stats();
+            assert_eq!(s.batches, 2);
+            assert!(s.cache_hits > 0, "repeat batch must hit: {s:?}");
+            // The repeat batch's rows were all resolved leader-side.
+            assert!(s.rows_fetched <= s.cache_misses, "fetches are deduplicated misses");
+        }
     }
 
     #[test]
@@ -670,11 +1079,58 @@ mod tests {
         let svc = ShardedEmbeddingService::new(&cfg, 1, opts(2, 0.0)).unwrap();
         let table_bytes = cfg.pjrt_rows * cfg.emb_dim * 4;
         assert_eq!(svc.shard_bytes().iter().sum::<usize>(), cfg.num_tables * table_bytes);
-        // 3 tables over 2 shards: 2 + 1.
+        // 3 tables over 2 shards, whole placement: 2 + 1.
         assert_eq!(svc.shard_bytes(), &[2 * table_bytes, table_bytes]);
-        assert_eq!(svc.shard_table_ranges(), &[(0, 2), (2, 3)]);
+        assert_eq!(
+            svc.placement().tables,
+            vec![
+                TablePlacement::Replicated(vec![0]),
+                TablePlacement::Replicated(vec![0]),
+                TablePlacement::Replicated(vec![1]),
+            ]
+        );
         // The leader really let go of the rows.
         assert_eq!(svc.leader_param_bytes(), 4 * cfg.fc_params() as usize);
+        // Row placement balances within one row's bytes.
+        let svc =
+            ShardedEmbeddingService::new(&cfg, 1, opts_placed(2, 0.0, PlacementMode::Rows, 0.0))
+                .unwrap();
+        let bytes = svc.shard_bytes();
+        assert_eq!(bytes.iter().sum::<usize>(), cfg.num_tables * table_bytes);
+        let (max, min) = (bytes.iter().max().unwrap(), bytes.iter().min().unwrap());
+        assert!(max - min <= cfg.emb_dim * 4, "row split should balance bytes: {bytes:?}");
+    }
+
+    #[test]
+    fn auto_placement_replans_from_measured_skew() {
+        let cfg = tiny_cfg();
+        let svc = ShardedEmbeddingService::new(
+            &cfg,
+            5,
+            opts_placed(2, 0.0, PlacementMode::Auto, 0.4),
+        )
+        .unwrap();
+        let single = NativeModel::new(&cfg, 5);
+        let (dense, ids, mut lwts) = tiny_inputs(&cfg, 4);
+        // Skew the measured load: zero out most of tables 1 and 2's
+        // weights so table 0 dominates the recorded lookups.
+        let per_table = 4 * cfg.lookups;
+        for w in lwts[per_table..].iter_mut().skip(2) {
+            *w = 0.0;
+        }
+        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+        for i in 0..(AUTO_REPLAN_AFTER_BATCHES + 3) {
+            let got = svc.run_rmc(&dense, &ids, &lwts).unwrap();
+            assert_eq!(want, got, "batch {i} diverged (replan must not change numerics)");
+        }
+        let s = svc.stats();
+        assert_eq!(s.replans, 1, "auto mode must replan once after warmup");
+        assert_eq!(s.placement, PlacementMode::Auto);
+        assert!(
+            s.table_lookups[0] > s.table_lookups[1],
+            "skew signal recorded: {:?}",
+            s.table_lookups
+        );
     }
 
     #[test]
@@ -687,8 +1143,12 @@ mod tests {
         assert_eq!(s.batches, 1);
         assert_eq!(s.shards, 2);
         assert_eq!(s.cache_capacity_rows, 0);
+        assert_eq!(s.placement, PlacementMode::Whole);
         assert!(s.gather_ns > 0.0 && s.leader_mlp_ns > 0.0);
         assert_eq!(s.cache_hits + s.cache_misses, 0, "no cache traffic when disabled");
+        assert_eq!(s.shard_lookups.len(), 2);
+        assert_eq!(s.shard_bytes.len(), 2);
+        assert!(s.lookup_imbalance() >= 1.0);
         svc.reset_stats();
         assert_eq!(svc.stats().batches, 0);
     }
@@ -712,6 +1172,28 @@ mod tests {
             )
             .is_err(),
             "reference engine"
+        );
+        assert!(
+            ShardedEmbeddingService::new(
+                &cfg,
+                0,
+                ExecOptions { shards: 2, replicate_hot: 0.1, ..Default::default() }
+            )
+            .is_err(),
+            "replication requires rows/auto placement"
+        );
+        // A structurally invalid custom plan is rejected up front.
+        let bad = Placement {
+            shards: 2,
+            tables: vec![
+                TablePlacement::Replicated(vec![0]),
+                TablePlacement::Replicated(vec![0]),
+                TablePlacement::Split(vec![RowSegment { shard: 1, rows: (0, 10) }]),
+            ],
+        };
+        assert!(
+            ShardedEmbeddingService::with_plan(&cfg, 0, opts(2, 0.0), bad).is_err(),
+            "split must cover all rows"
         );
         let svc = ShardedEmbeddingService::new(&cfg, 0, opts(2, 0.0)).unwrap();
         let (dense, mut ids, lwts) = tiny_inputs(&cfg, 2);

@@ -38,11 +38,16 @@ pub struct SparseIdGen {
     pub dist: IdDistribution,
     pub rows: usize,
     rng: Rng,
-    /// Precomputed Zipf inverse-CDF table (perf: one powf per sample was
-    /// still ~31ns; the 1025-point interpolated table samples in ~5ns —
-    /// see EXPERIMENTS.md §Perf). Monotone in u; interpolation error is
-    /// immaterial for workload popularity modeling.
-    zipf_table: Vec<f64>,
+    /// Precomputed Zipf inverse-CDF table in Q32 fixed point (rank x
+    /// 2^32), 1025 points, monotone by construction. Two properties at
+    /// once: perf (one powf per sample was ~31ns; table interpolation
+    /// samples in ~5ns — see EXPERIMENTS.md §Perf) and bit-stability —
+    /// the table is built with `detmath` (IEEE basic ops only, no libm
+    /// powf) and sampled with pure integer arithmetic, so the Zipf
+    /// stream is identical on every platform and golden-pinned like the
+    /// other arms. Interpolation error is immaterial for workload
+    /// popularity modeling.
+    zipf_table: Vec<u64>,
     /// Trace hot-set size, hoisted to construction: `next_id` used to
     /// recompute `(rows * hot_fraction) as u64` from floats on every
     /// sample. The value is a pure function of (rows, hot_fraction), so
@@ -59,18 +64,27 @@ impl SparseIdGen {
         let mut zipf_table = Vec::new();
         if let IdDistribution::Zipf { s } = dist {
             assert!(s > 0.0, "zipf exponent must be positive");
+            assert!(rows <= u32::MAX as usize, "ids are u32");
             let n = rows as f64;
             zipf_table = (0..=ZIPF_TABLE)
                 .map(|i| {
                     let u = i as f64 / ZIPF_TABLE as f64;
-                    if (s - 1.0).abs() < 1e-9 {
-                        n.powf(u)
+                    let x = if (s - 1.0).abs() < 1e-9 {
+                        detmath::powf(n, u)
                     } else {
                         let one_s = 1.0 - s;
-                        (u * (n.powf(one_s) - 1.0) + 1.0).powf(1.0 / one_s)
-                    }
+                        detmath::powf(u * (detmath::powf(n, one_s) - 1.0) + 1.0, 1.0 / one_s)
+                    };
+                    // Q32 fixed point; clamp to the rank range first so
+                    // the scaling below cannot overflow.
+                    (x.clamp(1.0, n) * 4294967296.0) as u64
                 })
                 .collect();
+            // Monotone mathematically; enforce it bit-wise so the
+            // integer interpolation in `next_id` can never wrap.
+            for i in 1..zipf_table.len() {
+                zipf_table[i] = zipf_table[i].max(zipf_table[i - 1]);
+            }
         }
         let hot_rows = match dist {
             IdDistribution::Trace { hot_fraction, .. } => {
@@ -95,12 +109,18 @@ impl SparseIdGen {
                 // Zipf ranks are 1-based; spread ranks over the table with
                 // a multiplicative hash so hot rows are not contiguous
                 // (production tables are not popularity-sorted).
-                // Interpolated inverse-CDF (no powf on the hot path).
-                let u = self.rng.gen_f64() * ZIPF_TABLE as f64;
-                let i = (u as usize).min(ZIPF_TABLE - 1);
-                let frac = u - i as f64;
-                let x = self.zipf_table[i] * (1.0 - frac) + self.zipf_table[i + 1] * frac;
-                let rank = (x as u64).clamp(1, self.rows as u64) - 1;
+                // One integer draw resolves the sample: the top 10 bits
+                // pick the inverse-CDF cell, the next 32 interpolate
+                // inside it in Q32 — no float math on the hot path, so
+                // the stream is bit-stable across platforms (pinned by
+                // `trace_stream_golden_values`).
+                let bits = self.rng.next_u64();
+                let i = (bits >> 54) as usize;
+                let frac = (bits >> 22) & 0xFFFF_FFFF;
+                let lo = self.zipf_table[i];
+                let hi = self.zipf_table[i + 1];
+                let x = lo + (((hi - lo) as u128 * frac as u128) >> 32) as u64;
+                let rank = (x >> 32).clamp(1, self.rows as u64) - 1;
                 // Multiply-shift range reduction (perf: u64 modulo was
                 // ~25% of sampling cost).
                 reduce(scatter(rank), self.rows) as u32
@@ -124,6 +144,67 @@ impl SparseIdGen {
     /// A full batch: `batch * lookups` IDs, row-major.
     pub fn gen_batch(&mut self, batch: usize, lookups: usize) -> Vec<u32> {
         (0..batch * lookups).map(|_| self.next_id()).collect()
+    }
+}
+
+/// Bit-stable ln/exp/pow built from IEEE-754 basic operations only.
+///
+/// `+ - * /`, comparisons, casts, and bit-level exponent manipulation
+/// are exactly specified by IEEE 754 / the Rust reference, so these
+/// return the same bits on every conforming platform — unlike libm's
+/// `powf`, whose last-ulp rounding varies by implementation (which is
+/// why the Zipf stream historically could not be golden-pinned). Fixed
+/// iteration counts keep the rounding sequence identical everywhere;
+/// truncation error sits far below f64 resolution for our ranges.
+mod detmath {
+    /// ln(2) rounded to f64 (a fixed literal, not a libm product).
+    const LN2: f64 = 0.693_147_180_559_945_3;
+    const SQRT2: f64 = 1.414_213_562_373_095_1;
+
+    /// Natural log for finite x > 0: exponent split + centered
+    /// mantissa, then 2·atanh((m-1)/(m+1)) via a 16-term odd series
+    /// (|t| <= 0.172 after centering, so the first dropped term is
+    /// < 1e-26).
+    pub fn ln(x: f64) -> f64 {
+        debug_assert!(x > 0.0 && x.is_finite());
+        let bits = x.to_bits();
+        let mut e = ((bits >> 52) & 0x7FF) as i64 - 1023;
+        let mut m = f64::from_bits((bits & 0x000F_FFFF_FFFF_FFFF) | (1023u64 << 52));
+        if m > SQRT2 {
+            m *= 0.5;
+            e += 1;
+        }
+        let t = (m - 1.0) / (m + 1.0);
+        let t2 = t * t;
+        let mut sum = 0.0;
+        let mut term = t;
+        for k in 0..16u32 {
+            sum += term / (2 * k + 1) as f64;
+            term *= t2;
+        }
+        e as f64 * LN2 + 2.0 * sum
+    }
+
+    /// exp(x) for moderate |x|: nearest-integer ln2 reduction, 20-term
+    /// Taylor series on the remainder (|r| <= ~0.35, dropped term
+    /// < 1e-27), exact power-of-two rescale via the exponent field.
+    pub fn exp(x: f64) -> f64 {
+        debug_assert!(x.is_finite() && x.abs() < 700.0);
+        let y = x / LN2;
+        let n = if y >= 0.0 { (y + 0.5) as i64 } else { (y - 0.5) as i64 };
+        let r = x - n as f64 * LN2;
+        let mut term = 1.0;
+        let mut sum = 1.0;
+        for k in 1..=20u32 {
+            term = term * r / k as f64;
+            sum += term;
+        }
+        sum * f64::from_bits(((1023 + n) as u64) << 52)
+    }
+
+    /// a^b for finite a > 0.
+    pub fn powf(a: f64, b: f64) -> f64 {
+        exp(b * ln(a))
     }
 }
 
@@ -244,10 +325,29 @@ mod tests {
             ],
             "trace(0.02, 0.5) seed 7 stream drifted"
         );
-        // (No Zipf golden: its inverse-CDF table goes through powf,
-        // whose last-ulp rounding is libm-specific — the hoist doesn't
-        // touch that arm, and `deterministic_given_seed` already covers
-        // its within-platform stability.)
+        // Zipf goldens, both exponent branches: the table is built with
+        // detmath (IEEE basic ops only) and sampled with integer
+        // interpolation, so — unlike the old libm-powf table — the
+        // stream is pinnable across platforms. Values cross-computed
+        // with an independent bit-exact mirror of detmath + the Rng.
+        let mut g = SparseIdGen::new(IdDistribution::Zipf { s: 1.05 }, rows, 42);
+        assert_eq!(
+            g.gen_lookups(12),
+            [
+                498229, 659886, 212174, 951014, 372805, 436502, 591189, 395272, 389829,
+                956152, 676979, 293278
+            ],
+            "zipf(1.05) seed 42 stream drifted"
+        );
+        let mut g = SparseIdGen::new(IdDistribution::Zipf { s: 1.0 }, rows, 7);
+        assert_eq!(
+            g.gen_lookups(12),
+            [
+                566561, 682362, 801371, 809468, 32767, 595627, 911825, 960313, 815072,
+                566561, 113450, 682362
+            ],
+            "zipf(1.0) seed 7 stream drifted"
+        );
         let mut g = SparseIdGen::new(IdDistribution::Uniform, rows, 42);
         assert_eq!(
             g.gen_lookups(12),
@@ -257,6 +357,51 @@ mod tests {
             ],
             "uniform seed 42 stream drifted"
         );
+    }
+
+    #[test]
+    fn detmath_tracks_libm() {
+        // The bit-stable series must agree with libm to well under the
+        // interpolation error that dominates the Zipf table (~1e-3 in
+        // rank space); in practice they agree to ~1 ulp.
+        for x in [1e-6, 0.07, 0.5, 0.999, 1.0, 1.5, 2.0, 3.14159, 97.0, 1e6] {
+            let (det, lib) = (detmath::ln(x), x.ln());
+            assert!(
+                (det - lib).abs() <= 1e-12 * (1.0 + lib.abs()),
+                "ln({x}): {det} vs {lib}"
+            );
+        }
+        for x in [-20.0, -1.5, -0.3, 0.0, 0.3, 1.0, 4.7, 13.8, 20.0] {
+            let (det, lib) = (detmath::exp(x), x.exp());
+            assert!(
+                ((det - lib) / lib).abs() <= 1e-12,
+                "exp({x}): {det} vs {lib}"
+            );
+        }
+        for (a, b) in [(1e6, 0.5), (1e6, -0.05), (2.0, 10.0), (1.000001, 3.0), (50.0, 1.0)] {
+            let (det, lib) = (detmath::powf(a, b), a.powf(b));
+            assert!(
+                ((det - lib) / lib).abs() <= 1e-12,
+                "powf({a}, {b}): {det} vs {lib}"
+            );
+        }
+        assert_eq!(detmath::exp(0.0), 1.0);
+        assert_eq!(detmath::ln(1.0), 0.0);
+    }
+
+    #[test]
+    fn zipf_table_is_monotone_and_spans_ranks() {
+        for s in [0.8, 1.0, 1.05, 1.3] {
+            let g = SparseIdGen::new(IdDistribution::Zipf { s }, 1_000_000, 1);
+            assert_eq!(g.zipf_table.len(), ZIPF_TABLE + 1);
+            assert!(g.zipf_table.windows(2).all(|w| w[0] <= w[1]), "s={s} not monotone");
+            assert_eq!(g.zipf_table[0] >> 32, 1, "s={s}: u=0 must map to rank 1");
+            let top = g.zipf_table[ZIPF_TABLE] >> 32;
+            assert!(
+                (999_000..=1_000_000).contains(&top),
+                "s={s}: u=1 maps to rank {top}, expected ~n"
+            );
+        }
     }
 
     #[test]

@@ -469,6 +469,123 @@ fn prop_sharded_conformance_bitwise_across_presets() {
     }
 }
 
+// ---------------------------------------------------------- placement --
+#[test]
+fn prop_placement_conformance_bitwise_across_presets() {
+    // The ISSUE 6 tentpole contract: ANY valid placement — row-range
+    // split, hot-table replica sets, planner-produced or adversarially
+    // random — must serve bits identical to single-node execution, at
+    // any shard count, cache on or off. Placement moves bytes and
+    // routing, never numerics.
+    use recsys::runtime::{Placement, PlacementMode, RowSegment, TablePlacement};
+
+    // Planner-produced plans over the preset grid.
+    for cfg in [
+        recsys::config::rmc1_small(),
+        recsys::config::rmc2_small(),
+        recsys::config::rmc3_small(),
+    ] {
+        let single = NativeModel::new(&cfg, 17);
+        for mode in [PlacementMode::Rows, PlacementMode::Auto] {
+            for shards in [1usize, 2, 4] {
+                for (cache_rows, replicate_hot) in [(0.0f64, 0.0), (0.05, 0.3)] {
+                    let svc = ShardedEmbeddingService::new(
+                        &cfg,
+                        17,
+                        ExecOptions {
+                            shards,
+                            cache_rows,
+                            placement: mode,
+                            replicate_hot,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                    let mut arena = ScratchArena::new();
+                    for &batch in &[1usize, 5, 8] {
+                        let (dense, ids, lwts) = rmc_inputs(&cfg, batch);
+                        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+                        // Twice: cold, then warm (cache contents and
+                        // replica load counters have state now).
+                        for round in 0..2 {
+                            let got =
+                                svc.run_rmc_into(&mut arena, &dense, &ids, &lwts).unwrap();
+                            assert_eq!(
+                                want.as_slice(),
+                                got,
+                                "{} {:?} shards={shards} cache={cache_rows} \
+                                 rep={replicate_hot} b{batch} round {round} diverged",
+                                cfg.name,
+                                mode
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Adversarially random explicit plans on one preset: random cut
+    // points, random segment owners, random replica subsets.
+    let cfg = recsys::config::rmc1_small();
+    let single = NativeModel::new(&cfg, 23);
+    let rows = single.rows();
+    let mut arena = ScratchArena::new();
+    check("placement-conformance", 8, |rng, _| {
+        let shards = usize_in(rng, 1, 4);
+        let tables = (0..cfg.num_tables)
+            .map(|_| {
+                if rng.gen_bool(0.4) {
+                    let mut reps: Vec<usize> =
+                        (0..shards).filter(|_| rng.gen_bool(0.5)).collect();
+                    if reps.is_empty() {
+                        reps.push(usize_in(rng, 0, shards - 1));
+                    }
+                    TablePlacement::Replicated(reps)
+                } else {
+                    let mut cuts: Vec<usize> = (0..usize_in(rng, 0, 2))
+                        .map(|_| usize_in(rng, 1, rows - 1))
+                        .collect();
+                    cuts.sort_unstable();
+                    cuts.dedup();
+                    let mut segs = Vec::new();
+                    let mut lo = 0usize;
+                    for hi in cuts.into_iter().chain([rows]) {
+                        segs.push(RowSegment {
+                            shard: usize_in(rng, 0, shards - 1),
+                            rows: (lo, hi),
+                        });
+                        lo = hi;
+                    }
+                    TablePlacement::Split(segs)
+                }
+            })
+            .collect();
+        let plan = Placement { shards, tables };
+        let cache_rows = *pick(rng, &[0.0f64, 0.08]);
+        let svc = ShardedEmbeddingService::with_plan(
+            &cfg,
+            23,
+            ExecOptions { cache_rows, ..Default::default() },
+            plan,
+        )
+        .unwrap();
+        for batch in [1usize, 7] {
+            let (dense, ids, lwts) = rmc_inputs(&cfg, batch);
+            let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+            for round in 0..2 {
+                let got = svc.run_rmc_into(&mut arena, &dense, &ids, &lwts).unwrap();
+                assert_eq!(
+                    want.as_slice(),
+                    got,
+                    "random plan shards={shards} cache={cache_rows} b{batch} \
+                     round {round} diverged"
+                );
+            }
+        }
+    });
+}
+
 // ------------------------------------------------------------- id gen --
 #[test]
 fn prop_idgen_in_range_and_deterministic() {
