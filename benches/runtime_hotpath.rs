@@ -211,12 +211,13 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let outstanding = vec![0usize; 16];
+    let alive = vec![true; 16];
     let s = bench("router 10k heterogeneity picks", 2, if smoke { 5 } else { 50 }, || {
         let mut rr = 0;
         for i in 0..10_000 {
             let b = if i % 2 == 0 { 8 } else { 128 };
             RoutingPolicy::Heterogeneity
-                .pick(&workers, "m", b, &outstanding, &mut rr)
+                .pick(&workers, "m", b, &outstanding, &alive, &mut rr)
                 .unwrap();
         }
     });

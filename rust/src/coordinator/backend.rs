@@ -10,7 +10,7 @@ use crate::model::ModelGraph;
 #[cfg(feature = "pjrt")]
 use crate::runtime::ModelPool;
 use crate::runtime::{
-    golden_lwts, Engine, ExecOptions, NativeModel, NativePool, ScratchArena,
+    golden_lwts, Engine, ExecOptions, NativeModel, NativePool, ScratchArena, ShardUnavailable,
     ShardedEmbeddingService, ShardedStats,
 };
 use crate::simulator::MachineSim;
@@ -199,6 +199,49 @@ impl NativeBackend {
         Ok(svc)
     }
 
+    /// Every fully-built sharded service (slots still mid-build are
+    /// skipped — a fault applied during a build races the build, and
+    /// the fresh service starts healthy anyway).
+    fn built_services(&self) -> Vec<Arc<ShardedEmbeddingService>> {
+        let slots: Vec<SvcSlot> = self.sharded.lock().unwrap().values().cloned().collect();
+        slots
+            .into_iter()
+            .filter_map(|s| s.try_lock().ok().and_then(|g| g.as_ref().cloned()))
+            .collect()
+    }
+
+    /// Fault injection: kill shard executor `shard` in every built
+    /// sharded service. Returns how many services applied the kill
+    /// (0 = single-node serving, index out of range, or already dead).
+    pub fn kill_shard(&self, shard: usize) -> usize {
+        self.built_services().iter().filter(|svc| svc.kill_shard(shard)).count()
+    }
+
+    /// Fault recovery: re-materialize shard `shard` from the parameter
+    /// seed in every built sharded service. Returns how many services
+    /// applied the restart.
+    pub fn restart_shard(&self, shard: usize) -> usize {
+        self.built_services()
+            .iter()
+            .filter(|svc| match svc.restart_shard(shard) {
+                Ok(applied) => applied,
+                Err(e) => {
+                    eprintln!("restart-shard {shard}: {e:#}");
+                    false
+                }
+            })
+            .count()
+    }
+
+    /// Aggregate (shard_deaths, shard_restarts, failover_reads) across
+    /// every built sharded service — the `ServeReport`'s shard-fault
+    /// counters. Monotonic over the backend's lifetime.
+    pub fn fault_counters(&self) -> (u64, u64, u64) {
+        self.built_services().iter().map(|svc| svc.stats()).fold((0, 0, 0), |(d, r, f), s| {
+            (d + s.shard_deaths, r + s.shard_restarts, f + s.failover_reads)
+        })
+    }
+
     /// Per-model sharded breakdown snapshots (model-name order), empty
     /// when serving single-node. The serve CLI attaches this to the
     /// `ServeReport`. Entries still mid-build are skipped (their stats
@@ -228,6 +271,30 @@ thread_local! {
     static NATIVE_ARENA: RefCell<ScratchArena> = RefCell::new(ScratchArena::new());
 }
 
+impl NativeBackend {
+    /// Marshal and execute one batch through a sharded service,
+    /// returning per-query CTR vectors.
+    fn run_sharded(
+        &self,
+        svc: &ShardedEmbeddingService,
+        bucket: usize,
+        queries: &[Query],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let cfg = svc.cfg();
+        let inputs =
+            marshal_inputs(queries, bucket, cfg.num_tables, cfg.lookups, svc.rows(), cfg.dense_dim);
+        NATIVE_ARENA.with(|arena| {
+            let mut arena = arena.borrow_mut();
+            let ctrs = svc.run_rmc_into(&mut arena, &inputs.dense, &inputs.ids, &inputs.lwts)?;
+            Ok(queries
+                .iter()
+                .zip(&inputs.slots)
+                .map(|(_, (s0, n))| ctrs[*s0..s0 + n].to_vec())
+                .collect())
+        })
+    }
+}
+
 impl Backend for NativeBackend {
     fn execute(
         &self,
@@ -241,25 +308,31 @@ impl Backend for NativeBackend {
             // hot-row cache, bit-identical to the single-node branch
             // below (prop-tested).
             let svc = self.sharded_service(model)?;
-            let cfg = svc.cfg();
-            let inputs = marshal_inputs(
-                queries,
-                bucket,
-                cfg.num_tables,
-                cfg.lookups,
-                svc.rows(),
-                cfg.dense_dim,
-            );
-            return NATIVE_ARENA.with(|arena| {
-                let mut arena = arena.borrow_mut();
-                let ctrs =
-                    svc.run_rmc_into(&mut arena, &inputs.dense, &inputs.ids, &inputs.lwts)?;
-                Ok(queries
-                    .iter()
-                    .zip(&inputs.slots)
-                    .map(|(_, (s0, n))| ctrs[*s0..s0 + n].to_vec())
-                    .collect())
-            });
+            return match self.run_sharded(&svc, bucket, queries) {
+                Ok(ctrs) => Ok(ctrs),
+                Err(e) if e.downcast_ref::<ShardUnavailable>().is_some() => {
+                    // A dead shard doomed the batch, but batchmates whose
+                    // rows live on surviving replicas can still be
+                    // served: re-execute per query, and only the queries
+                    // that genuinely need the dead shard fail (empty
+                    // ctrs — the worker's per-query failure sentinel).
+                    if queries.len() == 1 {
+                        return Ok(vec![Vec::new()]);
+                    }
+                    let mut out = Vec::with_capacity(queries.len());
+                    for q in queries {
+                        match self.run_sharded(&svc, bucket, std::slice::from_ref(q)) {
+                            Ok(mut one) => out.push(one.pop().unwrap_or_default()),
+                            Err(e2) if e2.downcast_ref::<ShardUnavailable>().is_some() => {
+                                out.push(Vec::new())
+                            }
+                            Err(e2) => return Err(e2),
+                        }
+                    }
+                    Ok(out)
+                }
+                Err(e) => Err(e),
+            };
         }
         let m = self.pool.get(model)?;
         let cfg = m.cfg();
@@ -514,6 +587,58 @@ mod tests {
         assert!(s.cache_hits > 0, "second identical batch must hit the row cache");
         // Single-node serving never built a service.
         assert!(single.sharded_breakdown().is_empty());
+    }
+
+    #[test]
+    fn killed_shard_fails_queries_not_batches() {
+        use crate::runtime::PlacementMode;
+        // Full replication (2 shards, replicate_hot 1.0): a 1-shard
+        // kill must stay bitwise-correct via replica failover, and a
+        // restart must recover cleanly.
+        let pool = Arc::new(NativePool::new(7));
+        let single = NativeBackend::new(pool.clone());
+        let replicated = NativeBackend::with_options(
+            pool.clone(),
+            ExecOptions {
+                shards: 2,
+                placement: PlacementMode::Rows,
+                replicate_hot: 1.0,
+                ..Default::default()
+            },
+        );
+        replicated.preload("rmc1-small").unwrap();
+        let queries =
+            vec![Query::new(2, "rmc1-small", 3, 0.0), Query::new(3, "rmc1-small", 3, 0.0)];
+        let expect = single.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        assert_eq!(replicated.kill_shard(1), 1, "one built service must apply the kill");
+        let through_kill =
+            replicated.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        assert_eq!(expect, through_kill, "full replication must survive a 1-shard kill bitwise");
+        assert_eq!(replicated.restart_shard(1), 1);
+        let after_restart =
+            replicated.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        assert_eq!(expect, after_restart, "restarted shard must serve the original bytes");
+        let (deaths, restarts, failovers) = replicated.fault_counters();
+        assert_eq!((deaths, restarts), (1, 1));
+        assert!(failovers > 0, "the killed replica's lookups must have failed over");
+
+        // Unreplicated table-split placement: every query needs every
+        // shard, so a dead shard fails each query individually (empty
+        // ctrs — the worker's per-query failure sentinel), never the
+        // whole execute() call.
+        let split =
+            NativeBackend::with_options(pool, ExecOptions { shards: 2, ..Default::default() });
+        split.preload("rmc1-small").unwrap();
+        assert_eq!(split.kill_shard(1), 1);
+        let out = split.execute("rmc1-small", 8, &queries, ServerGen::Broadwell).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(
+            out.iter().all(|c| c.is_empty()),
+            "table-split queries need the dead shard; each fails per-query"
+        );
+        // Out-of-range and single-node kills are no-ops.
+        assert_eq!(split.kill_shard(99), 0);
+        assert_eq!(single.kill_shard(0), 0);
     }
 
     #[test]

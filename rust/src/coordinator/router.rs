@@ -56,19 +56,23 @@ impl RoutingPolicy {
 
     /// Pick a worker for a `bucket`-sized batch of `model`.
     /// `outstanding[w]` = batches queued+running on worker w;
-    /// `rr_state` = round-robin cursor (updated).
+    /// `alive[w]` = whether worker w can accept work (dead workers are
+    /// never picked — round-robin must skip them explicitly because it
+    /// ignores load); `rr_state` = round-robin cursor (updated).
     pub fn pick(
         &self,
         workers: &[WorkerInfo],
         model: &str,
         bucket: usize,
         outstanding: &[usize],
+        alive: &[bool],
         rr_state: &mut usize,
     ) -> Option<usize> {
         // Allocation-free iteration (perf: this runs per dispatched
         // batch; collecting eligible workers into a Vec showed up in the
         // router microbench — see EXPERIMENTS.md §Perf).
-        let eligible = || workers.iter().filter(|w| w.serves(model));
+        let up = |w: &&WorkerInfo| alive.get(w.id).copied().unwrap_or(true);
+        let eligible = || workers.iter().filter(|w| w.serves(model)).filter(up);
         match self {
             RoutingPolicy::RoundRobin => {
                 let count = eligible().count();
@@ -135,27 +139,38 @@ impl Router {
     }
 
     /// Pick the worker for a `bucket`-sized batch of `model` given the
-    /// current per-worker load. Never fails: when no worker serves the
-    /// model (reachable when every worker is pinned to other tenants)
-    /// it warns once and falls back to the least-loaded worker —
-    /// dropping the batch would strand its completion handles.
-    pub fn route(&mut self, model: &str, bucket: usize, outstanding: &[usize]) -> usize {
-        self.policy
-            .pick(&self.infos, model, bucket, outstanding, &mut self.rr_state)
-            .unwrap_or_else(|| {
-                if self.unroutable_warned.insert(model.to_string()) {
-                    eprintln!(
-                        "coordinator: no worker serves model '{model}'; routing its batches to \
-                         the least-loaded worker (partition isolation not guaranteed)"
-                    );
-                }
-                outstanding
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(id, out)| (**out, *id))
-                    .map(|(id, _)| id)
-                    .unwrap_or(0)
-            })
+    /// current per-worker load and liveness. When no *alive* worker
+    /// serves the model (reachable when every worker pinned to it is
+    /// dead or pinned to other tenants) it warns once and falls back to
+    /// the least-loaded alive worker — dropping the batch would strand
+    /// its completion handles. Returns `None` only when every worker is
+    /// dead; the caller must then fail the batch's queries.
+    pub fn route(
+        &mut self,
+        model: &str,
+        bucket: usize,
+        outstanding: &[usize],
+        alive: &[bool],
+    ) -> Option<usize> {
+        if let Some(w) =
+            self.policy
+                .pick(&self.infos, model, bucket, outstanding, alive, &mut self.rr_state)
+        {
+            return Some(w);
+        }
+        let fallback = outstanding
+            .iter()
+            .enumerate()
+            .filter(|(id, _)| alive.get(*id).copied().unwrap_or(true))
+            .min_by_key(|(id, out)| (**out, *id))
+            .map(|(id, _)| id)?;
+        if self.unroutable_warned.insert(model.to_string()) {
+            eprintln!(
+                "coordinator: no alive worker serves model '{model}'; routing its batches to \
+                 the least-loaded alive worker (partition isolation not guaranteed)"
+            );
+        }
+        Some(fallback)
     }
 }
 
@@ -237,7 +252,7 @@ mod tests {
         let picks: Vec<usize> = (0..4)
             .map(|_| {
                 RoutingPolicy::RoundRobin
-                    .pick(&w, "rmc1-small", 8, &[0, 0, 0], &mut rr)
+                    .pick(&w, "rmc1-small", 8, &[0, 0, 0], &[true; 3], &mut rr)
                     .unwrap()
             })
             .collect();
@@ -250,9 +265,45 @@ mod tests {
         let w = pool();
         let mut rr = 0;
         let pick = RoutingPolicy::LeastLoaded
-            .pick(&w, "rmc1-small", 8, &[3, 1, 9], &mut rr)
+            .pick(&w, "rmc1-small", 8, &[3, 1, 9], &[true; 3], &mut rr)
             .unwrap();
         assert_eq!(pick, 1);
+    }
+
+    #[test]
+    fn dead_workers_are_never_picked() {
+        let w = pool();
+        let mut rr = 0;
+        // Round-robin cycles over the surviving eligible worker only.
+        for _ in 0..3 {
+            let pick = RoutingPolicy::RoundRobin
+                .pick(&w, "rmc1-small", 8, &[0, 0, 0], &[false, true, true], &mut rr)
+                .unwrap();
+            assert_eq!(pick, 1);
+        }
+        // Least-loaded skips the idle-but-dead worker.
+        let pick = RoutingPolicy::LeastLoaded
+            .pick(&w, "rmc1-small", 8, &[0, 9, 0], &[false, true, true], &mut rr)
+            .unwrap();
+        assert_eq!(pick, 1);
+        // All eligible workers dead: pick is None, and route falls back
+        // to an alive generalist... here worker 2 serves another model,
+        // so route still uses it rather than stranding the batch.
+        assert_eq!(
+            RoutingPolicy::LeastLoaded.pick(
+                &w,
+                "rmc1-small",
+                8,
+                &[0, 0, 0],
+                &[false, false, false],
+                &mut rr
+            ),
+            None
+        );
+        let mut r = Router::new(RoutingPolicy::LeastLoaded, pool());
+        assert_eq!(r.route("rmc1-small", 8, &[0, 0, 0], &[false, false, true]), Some(2));
+        // Whole fleet dead: route reports failure instead of picking.
+        assert_eq!(r.route("rmc1-small", 8, &[0, 0, 0], &[false, false, false]), None);
     }
 
     #[test]
@@ -260,10 +311,10 @@ mod tests {
         let w = pool();
         let mut rr = 0;
         let small = RoutingPolicy::Heterogeneity
-            .pick(&w, "rmc1-small", 8, &[0, 0, 0], &mut rr)
+            .pick(&w, "rmc1-small", 8, &[0, 0, 0], &[true; 3], &mut rr)
             .unwrap();
         let large = RoutingPolicy::Heterogeneity
-            .pick(&w, "rmc1-small", 128, &[0, 0, 0], &mut rr)
+            .pick(&w, "rmc1-small", 128, &[0, 0, 0], &[true; 3], &mut rr)
             .unwrap();
         assert_eq!(w[small].gen, ServerGen::Broadwell);
         assert_eq!(w[large].gen, ServerGen::Skylake);
@@ -277,7 +328,7 @@ mod tests {
         ];
         let mut rr = 0;
         let pick = RoutingPolicy::Heterogeneity
-            .pick(&w, "m", 128, &[5, 2], &mut rr)
+            .pick(&w, "m", 128, &[5, 2], &[true; 2], &mut rr)
             .unwrap();
         assert_eq!(pick, 1);
     }
@@ -289,13 +340,13 @@ mod tests {
         // Only worker 2 is... no: workers 0/1 serve any model, worker 2
         // additionally serves rmc2-small. All three eligible.
         let pick = RoutingPolicy::LeastLoaded
-            .pick(&w, "rmc2-small", 8, &[1, 1, 0], &mut rr)
+            .pick(&w, "rmc2-small", 8, &[1, 1, 0], &[true; 3], &mut rr)
             .unwrap();
         assert_eq!(pick, 2);
         // Unknown model with restrictive worker list still routes to
         // unrestricted workers.
         let pick2 = RoutingPolicy::LeastLoaded
-            .pick(&w, "other", 8, &[0, 1, 0], &mut rr)
+            .pick(&w, "other", 8, &[0, 1, 0], &[true; 3], &mut rr)
             .unwrap();
         assert_eq!(pick2, 0);
     }
@@ -326,11 +377,11 @@ mod tests {
         let mut rr = 0;
         // Even with worker 3 idle, rmc1 traffic stays on its partition.
         let pick = RoutingPolicy::Dedicated
-            .pick(&w, "rmc1-small", 8, &[5, 2, 0, 0], &mut rr)
+            .pick(&w, "rmc1-small", 8, &[5, 2, 0, 0], &[true; 4], &mut rr)
             .unwrap();
         assert_eq!(pick, 1, "least-loaded within the rmc1 partition");
         let pick = RoutingPolicy::Dedicated
-            .pick(&w, "rmc2-small", 8, &[0, 0, 9, 0], &mut rr)
+            .pick(&w, "rmc2-small", 8, &[0, 0, 9, 0], &[true; 4], &mut rr)
             .unwrap();
         assert_eq!(pick, 2, "rmc2 stays on its dedicated worker even when loaded");
     }
@@ -340,7 +391,7 @@ mod tests {
         let w = partitioned_pool();
         let mut rr = 0;
         let pick = RoutingPolicy::Dedicated
-            .pick(&w, "rmc3-small", 8, &[0, 0, 0, 4], &mut rr)
+            .pick(&w, "rmc3-small", 8, &[0, 0, 0, 4], &[true; 4], &mut rr)
             .unwrap();
         assert_eq!(pick, 3, "only the generalist serves an unpartitioned model");
     }
@@ -353,7 +404,10 @@ mod tests {
             models: vec!["rmc1-small".into()],
         }];
         let mut rr = 0;
-        assert_eq!(RoutingPolicy::Dedicated.pick(&w, "rmc2-small", 8, &[0], &mut rr), None);
+        assert_eq!(
+            RoutingPolicy::Dedicated.pick(&w, "rmc2-small", 8, &[0], &[true], &mut rr),
+            None
+        );
     }
 
     #[test]
@@ -365,9 +419,9 @@ mod tests {
             WorkerInfo { id: 1, gen: ServerGen::Broadwell, models: vec!["rmc1-small".into()] },
         ];
         let mut r = Router::new(RoutingPolicy::Dedicated, infos);
-        assert_eq!(r.route("rmc2-small", 8, &[3, 1]), 1);
+        assert_eq!(r.route("rmc2-small", 8, &[3, 1], &[true; 2]), Some(1));
         // Routable models keep their partition semantics.
-        assert_eq!(r.route("rmc1-small", 8, &[3, 1]), 1);
+        assert_eq!(r.route("rmc1-small", 8, &[3, 1], &[true; 2]), Some(1));
         assert_eq!(r.worker_models(), vec![vec!["rmc1-small"], vec!["rmc1-small"]]);
     }
 

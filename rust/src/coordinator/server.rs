@@ -27,7 +27,7 @@
 //! code path): it paces a streaming query source, submits through a
 //! handle, quiesces, and reads the server's report.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -35,7 +35,7 @@ use std::time::{Duration, Instant};
 use crate::config::{DeploymentConfig, ServerGen, ServerPoolConfig, PJRT_BATCHES};
 use crate::metrics::MultiSlaMeter;
 use crate::runtime::ExecOptions;
-use crate::workload::{Query, QueryResult, TrafficMix};
+use crate::workload::{FaultAction, FaultEvent, FaultPlan, Query, QueryResult, TrafficMix};
 
 use super::backend::{Backend, NativeBackend};
 use super::batcher::{TenantBatchCfg, TenantBatchers};
@@ -50,14 +50,22 @@ use super::worker::WorkerHandle;
 /// tests pin.
 #[derive(Debug, Clone)]
 pub enum TicketOutcome {
-    /// Executed by a worker. Late or backend-failed queries are still
-    /// `Completed` (a failed batch carries `latency_ms = ∞` and no
-    /// CTRs), matching the SLA meter's accounting.
+    /// Executed by a worker with finite latency. Late queries are still
+    /// `Completed` (the SLA meter marks them late); queries whose
+    /// execution *failed* past the retry budget resolve as
+    /// [`TicketOutcome::Failed`] instead.
     Completed(CompletedQuery),
     /// Shed by admission control before batching (inflight cap hit).
     Rejected,
     /// The server shut down (or died) before the query executed.
     Abandoned,
+    /// Execution failed (dead worker, lost shard) and the bounded retry
+    /// budget was exhausted. Counted as `queries_failed`, keeping
+    /// completed + shed + failed == offered exact.
+    Failed {
+        /// Re-dispatch attempts made before giving up.
+        retries: u32,
+    },
 }
 
 impl TicketOutcome {
@@ -71,6 +79,10 @@ impl TicketOutcome {
     pub fn is_rejected(&self) -> bool {
         matches!(self, TicketOutcome::Rejected)
     }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, TicketOutcome::Failed { .. })
+    }
 }
 
 /// Per-query completion record delivered through a [`Ticket`].
@@ -81,11 +93,10 @@ pub struct CompletedQuery {
     /// Model (tenant) that served the query.
     pub tenant: String,
     pub items: usize,
-    /// Predicted CTRs (empty for latency-only backends or failed
-    /// batches).
+    /// Predicted CTRs (empty for latency-only backends).
     pub ctrs: Vec<f32>,
-    /// Arrival-to-completion latency; `∞` when the batch failed in the
-    /// backend.
+    /// Arrival-to-completion latency (always finite — failed executions
+    /// resolve as [`TicketOutcome::Failed`], not `Completed`).
     pub latency_ms: f64,
     /// AOT batch bucket the query executed in.
     pub batch_bucket: usize,
@@ -298,6 +309,7 @@ pub struct ServerBuilder {
     /// 0 = uncapped.
     inflight_cap: usize,
     drain_deadline: Duration,
+    faults: FaultPlan,
 }
 
 impl Default for ServerBuilder {
@@ -319,6 +331,7 @@ impl ServerBuilder {
             preload: Vec::new(),
             inflight_cap: 0,
             drain_deadline: Duration::from_secs(30),
+            faults: FaultPlan::new(),
         }
     }
 
@@ -429,12 +442,29 @@ impl ServerBuilder {
         self
     }
 
+    /// Deterministic fault-injection schedule (`serve --faults SPEC`):
+    /// kill/restart events for workers and shard executors, applied by
+    /// the dispatcher when their batch-count or elapsed-time triggers
+    /// come due. Worker ids are validated against the fleet at `build`.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
     /// Validate the whole configuration and start the server: workers
     /// spawn, the dispatcher thread starts, and the returned `Server`
     /// is ready for `handle().submit(..)`.
     pub fn build(self) -> anyhow::Result<Server> {
-        let ServerBuilder { cfg, mix, buckets, backend, preload, inflight_cap, drain_deadline } =
-            self;
+        let ServerBuilder {
+            cfg,
+            mix,
+            buckets,
+            backend,
+            preload,
+            inflight_cap,
+            drain_deadline,
+            faults,
+        } = self;
         let policy = RoutingPolicy::parse(&cfg.routing)
             .ok_or_else(|| anyhow::anyhow!("unknown routing policy '{}'", cfg.routing))?;
         anyhow::ensure!(!buckets.is_empty(), "need at least one batch bucket");
@@ -486,6 +516,18 @@ impl ServerBuilder {
         if workers.is_empty() {
             anyhow::bail!("deployment has no workers");
         }
+        // Shard ids can't be validated here (the executor count belongs
+        // to the backend); a kill/restart of a nonexistent shard is a
+        // no-op. Worker ids, however, are known — reject typos loudly.
+        for ev in faults.events() {
+            if let FaultAction::KillWorker(w) | FaultAction::RestartWorker(w) = ev.action {
+                anyhow::ensure!(
+                    w < workers.len(),
+                    "fault event '{ev}' names worker {w}, but the fleet has {} workers",
+                    workers.len()
+                );
+            }
+        }
         // Dedicated routing with an unpartitioned pool: carve the
         // workers into share-weighted per-tenant partitions. Pools that
         // pin models explicitly keep their configuration.
@@ -527,6 +569,7 @@ impl ServerBuilder {
         for (m, s) in &tenant_slas {
             meter.set_tenant_sla(m, *s);
         }
+        let n_workers = workers.len();
         let dispatcher = Dispatcher {
             workers,
             router: Router::new(policy, infos),
@@ -544,6 +587,21 @@ impl ServerBuilder {
             incomplete: false,
             drain_deadline_hit: false,
             quiesce: None,
+            backend,
+            native: native.clone(),
+            events_tx: events_tx.clone(),
+            faults,
+            batches_dispatched: 0,
+            inflight_by_worker: vec![HashSet::new(); n_workers],
+            retry_queue: Vec::new(),
+            queries_failed: 0,
+            queries_retried: 0,
+            worker_deaths: 0,
+            worker_restarts: 0,
+            dead_shards: HashSet::new(),
+            shard_base: (0, 0, 0),
+            degraded_since: None,
+            degraded_total: Duration::ZERO,
             t0,
             window_t0: t0,
         };
@@ -726,6 +784,26 @@ impl ServerHandle {
 /// responsive to a quiesce deadline arriving with an empty batcher).
 const IDLE_SLICE: Duration = Duration::from_millis(100);
 
+/// Bounded retry budget: a failed query re-dispatches at most this many
+/// times before its ticket resolves as [`TicketOutcome::Failed`].
+const MAX_RETRIES: u32 = 3;
+/// First retry delay; doubles per attempt (2, 4, 8 ms) so a recovering
+/// fleet isn't hammered by a whole failed batch at once.
+const RETRY_BACKOFF: Duration = Duration::from_millis(2);
+/// Retries stop once a query is older than this many of its tenant's
+/// SLA bounds — completing far past the latency goal is worth less than
+/// releasing the admission slot for fresh traffic.
+const RETRY_DEADLINE_SLAS: f64 = 8.0;
+
+/// Dispatcher-side record of one admitted, unresolved query: the
+/// completion handle plus everything a retry needs to re-dispatch it.
+struct PendingQuery {
+    state: Arc<TicketState>,
+    q: Query,
+    /// Dispatch attempts that have failed so far.
+    attempts: u32,
+}
+
 struct Dispatcher {
     workers: Vec<WorkerHandle>,
     router: Router,
@@ -733,8 +811,8 @@ struct Dispatcher {
     meter: MultiSlaMeter,
     default_sla_ms: f64,
     tenant_slas: Vec<(String, f64)>,
-    /// Unresolved completion handles by ticket id.
-    pending: HashMap<u64, Arc<TicketState>>,
+    /// Unresolved queries by ticket id.
+    pending: HashMap<u64, PendingQuery>,
     bucket_hist: BTreeMap<usize, u64>,
     admission: Arc<Admission>,
     queries_admitted: u64,
@@ -745,6 +823,38 @@ struct Dispatcher {
     incomplete: bool,
     drain_deadline_hit: bool,
     quiesce: Option<(Instant, mpsc::Sender<bool>)>,
+    /// Backend handle for respawning killed workers.
+    backend: Arc<dyn Backend>,
+    /// The builder-constructed native backend, when any — the shard
+    /// fault surface (`kill_shard` / `restart_shard`) and the failover
+    /// counters live there.
+    native: Option<Arc<NativeBackend>>,
+    /// Event-channel sender respawned workers report through.
+    events_tx: mpsc::Sender<Event>,
+    /// Pending fault-injection schedule (events are removed as they fire).
+    faults: FaultPlan,
+    /// Batches handed to workers so far — the `b<N>` trigger clock.
+    batches_dispatched: u64,
+    /// Ticket ids inflight per worker: what a crashed worker takes down
+    /// with it. (An *injected* kill drains its queue as explicit failure
+    /// results instead, so its set is cleared at kill time.)
+    inflight_by_worker: Vec<HashSet<u64>>,
+    /// (due-instant, ticket) backoff schedule for failed queries.
+    retry_queue: Vec<(Instant, u64)>,
+    queries_failed: u64,
+    queries_retried: u64,
+    worker_deaths: u64,
+    worker_restarts: u64,
+    /// Shards currently killed (dispatcher's view, for degraded-time
+    /// tracking; the authoritative liveness lives in the shard services).
+    dead_shards: HashSet<usize>,
+    /// Shard fault counters (deaths, restarts, failover reads) at the
+    /// last `Reset` — subtracted so reports cover the current window.
+    shard_base: (u64, u64, u64),
+    /// Start of the current degraded interval (any worker or shard dead).
+    degraded_since: Option<Instant>,
+    /// Degraded wall-clock accumulated over closed intervals.
+    degraded_total: Duration,
     /// Latency epoch (arrival_s is measured from here) — fixed for the
     /// server's lifetime.
     t0: Instant,
@@ -757,6 +867,13 @@ struct Dispatcher {
 impl Dispatcher {
     fn run(mut self, rx: mpsc::Receiver<Event>) {
         loop {
+            // Supervision, every iteration: fire due fault-plan events,
+            // reap workers that died on their own (backend panic),
+            // recover tickets lost to dead workers, and re-dispatch
+            // retries whose backoff has elapsed.
+            self.apply_due_faults();
+            self.sweep_dead_workers();
+            self.pump_retries();
             let now = Instant::now();
             // Flush every over-age queue — this fires on the dispatcher's
             // own schedule, regardless of whether any client is pacing.
@@ -790,6 +907,15 @@ impl Dispatcher {
             if let Some((deadline, _)) = &self.quiesce {
                 timeout = timeout.min(deadline.saturating_duration_since(now));
             }
+            // Wake for the earliest retry backoff and the earliest
+            // time-armed fault, so neither waits on channel traffic.
+            if let Some(due) = self.retry_queue.iter().map(|(d, _)| *d).min() {
+                timeout = timeout.min(due.saturating_duration_since(now));
+            }
+            if let Some(secs) = self.faults.next_elapsed_trigger() {
+                let at = self.t0 + Duration::from_secs_f64(secs);
+                timeout = timeout.min(at.saturating_duration_since(now));
+            }
             match rx.recv_timeout(timeout.max(Duration::from_micros(1))) {
                 Ok(Event::Submit { q, ticket }) => {
                     self.queries_admitted += 1;
@@ -797,7 +923,10 @@ impl Dispatcher {
                     if q.arrival_s > self.max_arrival_s {
                         self.max_arrival_s = q.arrival_s;
                     }
-                    self.pending.insert(q.ticket, ticket);
+                    self.pending.insert(
+                        q.ticket,
+                        PendingQuery { state: ticket, q: q.clone(), attempts: 0 },
+                    );
                     if let Some(b) = self.batchers.push(q, Instant::now()) {
                         self.dispatch(b);
                     }
@@ -825,8 +954,8 @@ impl Dispatcher {
                     if !self.pending.is_empty() {
                         self.incomplete = true;
                     }
-                    for (_, t) in self.pending.drain() {
-                        t.resolve(TicketOutcome::Abandoned);
+                    for (_, p) in self.pending.drain() {
+                        p.state.resolve(TicketOutcome::Abandoned);
                     }
                     let report = self.build_report();
                     let _ = reply.send(report);
@@ -834,8 +963,8 @@ impl Dispatcher {
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    for (_, t) in self.pending.drain() {
-                        t.resolve(TicketOutcome::Abandoned);
+                    for (_, p) in self.pending.drain() {
+                        p.state.resolve(TicketOutcome::Abandoned);
                     }
                     break;
                 }
@@ -847,25 +976,222 @@ impl Dispatcher {
 
     fn dispatch(&mut self, batch: super::batcher::Batch) {
         let outstanding: Vec<usize> = self.workers.iter().map(|w| w.outstanding()).collect();
-        let picked = self.router.route(&batch.model, batch.bucket, &outstanding);
-        self.workers[picked].submit(batch);
+        let alive: Vec<bool> = self.workers.iter().map(|w| w.alive()).collect();
+        let Some(picked) = self.router.route(&batch.model, batch.bucket, &outstanding, &alive)
+        else {
+            // Whole fleet dead: fail (or schedule retries for) every
+            // query now rather than parking the batch until a restart
+            // that may never come.
+            self.fail_batch(batch);
+            return;
+        };
+        let tickets: Vec<u64> = batch.queries.iter().map(|q| q.ticket).collect();
+        match self.workers[picked].submit(batch) {
+            Ok(()) => {
+                self.batches_dispatched += 1;
+                self.inflight_by_worker[picked].extend(tickets);
+            }
+            // Lost a race with a worker death between the liveness
+            // snapshot and the queue send.
+            Err(batch) => self.fail_batch(batch),
+        }
+    }
+
+    /// Route every query of an undispatchable batch through the
+    /// fail-or-retry budget.
+    fn fail_batch(&mut self, batch: super::batcher::Batch) {
+        for q in &batch.queries {
+            self.fail_or_retry(q.ticket);
+        }
+    }
+
+    /// One query's execution failed (dead worker, lost batch, dead
+    /// shard): schedule a bounded retry, or — budget exhausted, deadline
+    /// blown, or no worker left alive — resolve its ticket as `Failed`.
+    /// The admission slot is held across retries (a retry is not a new
+    /// admission, so the inflight cap is never violated) and released
+    /// exactly once, at resolution.
+    fn fail_or_retry(&mut self, ticket: u64) {
+        let (model, items, arrival_s, attempts) = {
+            let Some(p) = self.pending.get_mut(&ticket) else {
+                return; // already resolved (duplicate failure report)
+            };
+            p.attempts += 1;
+            (p.q.model.clone(), p.q.items, p.q.arrival_s, p.attempts)
+        };
+        let age_ms = (self.t0.elapsed().as_secs_f64() - arrival_s).max(0.0) * 1e3;
+        let within_deadline = age_ms <= RETRY_DEADLINE_SLAS * self.sla_for(&model);
+        let any_alive = self.workers.iter().any(|w| w.alive());
+        if attempts <= MAX_RETRIES && within_deadline && any_alive {
+            let backoff = RETRY_BACKOFF * 2u32.saturating_pow(attempts - 1);
+            self.retry_queue.push((Instant::now() + backoff, ticket));
+            self.queries_retried += 1;
+        } else {
+            let p = self.pending.remove(&ticket).expect("checked pending above");
+            self.meter.record(&model, f64::INFINITY, items as u64);
+            self.queries_failed += 1;
+            p.state.resolve(TicketOutcome::Failed { retries: attempts - 1 });
+            self.admission.release();
+        }
+    }
+
+    /// Re-batch retries whose backoff has elapsed. Retried queries go
+    /// back through the normal batcher + router path, so they land on
+    /// surviving workers and batch with fresh traffic.
+    fn pump_retries(&mut self) {
+        if self.retry_queue.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.retry_queue.len() {
+            if self.retry_queue[i].0 <= now {
+                let (_, ticket) = self.retry_queue.swap_remove(i);
+                // Drop retries whose ticket resolved in the meantime
+                // (e.g. a duplicate result completed it).
+                let Some(p) = self.pending.get(&ticket) else { continue };
+                if let Some(b) = self.batchers.push(p.q.clone(), now) {
+                    self.dispatch(b);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Fire every fault-plan event whose trigger has come due.
+    fn apply_due_faults(&mut self) {
+        if self.faults.is_empty() {
+            return;
+        }
+        let elapsed = self.t0.elapsed().as_secs_f64();
+        for ev in self.faults.take_due(self.batches_dispatched, elapsed) {
+            self.apply_fault(ev);
+        }
+    }
+
+    fn apply_fault(&mut self, ev: FaultEvent) {
+        match ev.action {
+            FaultAction::KillWorker(id) => {
+                if self.workers[id].kill() {
+                    self.worker_deaths += 1;
+                    // The kill joined the thread, which drained its queue
+                    // as explicit ∞-latency results — those are already
+                    // in the event channel, so nothing is lost and the
+                    // sweep must not fail these tickets a second way.
+                    self.inflight_by_worker[id].clear();
+                    eprintln!("fault[{ev}]: worker-{id} killed");
+                }
+            }
+            FaultAction::RestartWorker(id) => {
+                if !self.workers[id].alive() {
+                    // If the worker died by panic (not injected kill),
+                    // its inflight tickets were never reported — recover
+                    // them before the slot reads as alive again.
+                    self.recover_worker_inflight(id);
+                    let gen = self.workers[id].gen;
+                    self.workers[id] = WorkerHandle::spawn(
+                        id,
+                        gen,
+                        self.backend.clone(),
+                        self.events_tx.clone(),
+                        self.t0,
+                    );
+                    self.worker_restarts += 1;
+                    eprintln!("fault[{ev}]: worker-{id} respawned");
+                }
+            }
+            FaultAction::KillShard(s) => {
+                if let Some(nb) = &self.native {
+                    if nb.kill_shard(s) > 0 {
+                        self.dead_shards.insert(s);
+                        eprintln!("fault[{ev}]: shard {s} killed");
+                    }
+                }
+            }
+            FaultAction::RestartShard(s) => {
+                if let Some(nb) = &self.native {
+                    if nb.restart_shard(s) > 0 {
+                        self.dead_shards.remove(&s);
+                        eprintln!("fault[{ev}]: shard {s} re-materialized from seed");
+                    }
+                }
+            }
+        }
+        self.update_degraded();
+    }
+
+    /// Detect workers that died *without* an injected kill (backend
+    /// panic): reap the thread, count the death, and recover the tickets
+    /// the crash took down.
+    fn sweep_dead_workers(&mut self) {
+        for id in 0..self.workers.len() {
+            if self.workers[id].panicked() {
+                self.workers[id].kill(); // reap: close queue + join
+                self.worker_deaths += 1;
+                eprintln!("dispatcher: worker-{id} thread died; recovering its inflight work");
+                self.update_degraded();
+            }
+            if !self.workers[id].alive() && !self.inflight_by_worker[id].is_empty() {
+                self.recover_worker_inflight(id);
+            }
+        }
+    }
+
+    /// Fail-or-retry every ticket still tracked as inflight on worker
+    /// `id` (lost work: a crashed worker drops its queue unreported).
+    fn recover_worker_inflight(&mut self, id: usize) {
+        let tickets: Vec<u64> = self.inflight_by_worker[id].drain().collect();
+        for t in tickets {
+            self.fail_or_retry(t);
+        }
+    }
+
+    /// Track wall-clock spent with any worker or shard dead.
+    fn update_degraded(&mut self) {
+        let degraded =
+            !self.dead_shards.is_empty() || self.workers.iter().any(|w| !w.alive());
+        match (degraded, self.degraded_since) {
+            (true, None) => self.degraded_since = Some(Instant::now()),
+            (false, Some(t)) => {
+                self.degraded_total += t.elapsed();
+                self.degraded_since = None;
+            }
+            _ => {}
+        }
     }
 
     fn complete(&mut self, r: QueryResult) {
+        if let Some(set) = self.inflight_by_worker.get_mut(r.worker) {
+            set.remove(&r.ticket);
+        }
+        if !self.pending.contains_key(&r.ticket) {
+            // Already resolved — e.g. a duplicate from a batch that was
+            // presumed lost and recovered, then reported after all.
+            // Counting it again would break completed + shed + failed
+            // == offered.
+            return;
+        }
+        if !r.latency_ms.is_finite() {
+            // Execution failure (killed worker queue, backend error,
+            // dead shard): route through the bounded retry budget
+            // instead of recording a completion.
+            self.fail_or_retry(r.ticket);
+            return;
+        }
         self.meter.record(&r.model, r.latency_ms, r.items as u64);
         *self.bucket_hist.entry(r.batch_bucket).or_default() += 1;
         self.queries_completed += 1;
-        if let Some(t) = self.pending.remove(&r.ticket) {
-            t.resolve(TicketOutcome::Completed(CompletedQuery {
-                id: r.id,
-                tenant: r.model,
-                items: r.items,
-                ctrs: r.ctrs,
-                latency_ms: r.latency_ms,
-                batch_bucket: r.batch_bucket,
-                worker: r.worker,
-            }));
-        }
+        let p = self.pending.remove(&r.ticket).expect("checked pending above");
+        p.state.resolve(TicketOutcome::Completed(CompletedQuery {
+            id: r.id,
+            tenant: r.model,
+            items: r.items,
+            ctrs: r.ctrs,
+            latency_ms: r.latency_ms,
+            batch_bucket: r.batch_bucket,
+            worker: r.worker,
+        }));
         self.admission.release();
     }
 
@@ -885,6 +1211,18 @@ impl Dispatcher {
         self.max_arrival_s = 0.0;
         self.incomplete = false;
         self.drain_deadline_hit = false;
+        self.queries_failed = 0;
+        self.queries_retried = 0;
+        self.worker_deaths = 0;
+        self.worker_restarts = 0;
+        self.shard_base =
+            self.native.as_ref().map(|nb| nb.fault_counters()).unwrap_or_default();
+        self.degraded_total = Duration::ZERO;
+        // If the fleet is degraded right now, the new window starts
+        // inside a degraded interval.
+        let degraded_now =
+            !self.dead_shards.is_empty() || self.workers.iter().any(|w| !w.alive());
+        self.degraded_since = degraded_now.then(Instant::now);
         self.admission.reset_shed();
         self.window_t0 = Instant::now();
     }
@@ -909,10 +1247,11 @@ impl Dispatcher {
             .map(|(model, m)| TenantReport {
                 model: model.clone(),
                 sla_ms: m.sla_ms,
-                queries: m.queries(),
+                queries: m.queries() - m.queries_failed(),
                 items: m.items_served(),
                 shed_queries: 0,
                 shed_items: 0,
+                failed_queries: m.queries_failed(),
                 bounded_throughput: m.bounded_throughput(),
                 violation_rate: m.violation_rate(),
                 mean_ms: m.mean_ms(),
@@ -935,6 +1274,7 @@ impl Dispatcher {
                     items: 0,
                     shed_queries: *sq,
                     shed_items: *si,
+                    failed_queries: 0,
                     bounded_throughput: 0.0,
                     violation_rate: 0.0,
                     mean_ms: 0.0,
@@ -959,6 +1299,16 @@ impl Dispatcher {
         } else {
             0.0
         };
+        // Shard fault counters are service-lifetime monotonic; subtract
+        // the last reset's snapshot so the report covers this window.
+        let (sd, sr, fr) = self
+            .native
+            .as_ref()
+            .map(|nb| nb.fault_counters())
+            .unwrap_or_default();
+        let degraded_duration_s = (self.degraded_total
+            + self.degraded_since.map(|t| t.elapsed()).unwrap_or_default())
+        .as_secs_f64();
         ServeReport {
             queries_offered,
             queries: self.queries_completed,
@@ -967,6 +1317,14 @@ impl Dispatcher {
             items_failed: self.meter.items_failed(),
             queries_shed: shed.queries,
             items_shed: shed.items,
+            queries_failed: self.queries_failed,
+            queries_retried: self.queries_retried,
+            worker_deaths: self.worker_deaths,
+            worker_restarts: self.worker_restarts,
+            shard_deaths: sd.saturating_sub(self.shard_base.0),
+            shard_restarts: sr.saturating_sub(self.shard_base.1),
+            failover_reads: fr.saturating_sub(self.shard_base.2),
+            degraded_duration_s,
             inflight_cap: if self.admission.cap == usize::MAX {
                 None
             } else {
@@ -985,6 +1343,17 @@ impl Dispatcher {
             bucket_histogram: self.bucket_hist.iter().map(|(b, n)| (*b, *n)).collect(),
             per_tenant,
             sharded: Vec::new(),
+        }
+    }
+}
+
+impl Drop for Dispatcher {
+    fn drop(&mut self) {
+        // Abnormal teardown (dispatcher thread unwinding): resolve every
+        // outstanding ticket so no client blocks forever in
+        // `Ticket::wait`. Normal shutdown already drained `pending`.
+        for (_, p) in self.pending.drain() {
+            p.state.resolve(TicketOutcome::Abandoned);
         }
     }
 }
@@ -1092,6 +1461,98 @@ mod tests {
         assert_eq!(report.queries_offered, 1, "pre-reset query must not be counted");
         assert_eq!(report.items_offered, 4);
         assert_eq!(report.per_tenant[0].sla_ms, 5.0, "reset applied the new default SLA");
+        let _ = server.shutdown();
+    }
+
+    #[test]
+    fn injected_worker_kill_retries_and_completes() {
+        // Kill 1 of 2 workers after the first dispatched batch: its
+        // queued batches fail fast, the supervisor retries them on the
+        // survivor, and every ticket still completes.
+        let server = ServerBuilder::new()
+            .workers(2)
+            .routing("round-robin")
+            .sla_ms(500.0)
+            .buckets(vec![1])
+            .backend(Arc::new(MockBackend { latency: Duration::from_millis(3) }))
+            .faults(FaultPlan::parse("kill-worker:0@b1").unwrap())
+            .build()
+            .unwrap();
+        let handle = server.handle();
+        let tickets: Vec<Ticket> = (0..12)
+            .map(|i| handle.submit_live(Query::new(i, "rmc1-small", 1, 0.0)))
+            .collect();
+        let outcomes: Vec<TicketOutcome> = tickets.iter().map(Ticket::wait).collect();
+        assert!(
+            outcomes.iter().all(|o| o.completed().is_some()),
+            "all queries must complete through a 1-of-2 worker kill"
+        );
+        assert!(handle.quiesce(Duration::from_secs(10)).unwrap());
+        let report = handle.report().unwrap();
+        assert_eq!(report.worker_deaths, 1);
+        assert_eq!(report.queries, 12);
+        assert_eq!(report.queries_failed, 0);
+        assert_eq!(
+            report.queries_offered,
+            report.queries + report.queries_shed + report.queries_failed
+        );
+        assert!(report.degraded_duration_s > 0.0, "a dead worker is degraded time");
+        let _ = server.shutdown();
+    }
+
+    #[test]
+    fn builder_rejects_fault_events_naming_missing_workers() {
+        let err = ServerBuilder::new()
+            .workers(2)
+            .backend(Arc::new(MockBackend { latency: Duration::from_micros(10) }))
+            .faults(FaultPlan::parse("kill-worker:5@b1").unwrap())
+            .build()
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("worker 5"), "got: {err:#}");
+    }
+
+    /// Backend that crashes the worker thread itself — the harshest
+    /// failure mode: no error result is ever reported.
+    struct PanicBackend;
+    impl Backend for PanicBackend {
+        fn execute(
+            &self,
+            _model: &str,
+            _bucket: usize,
+            _queries: &[Query],
+            _gen: ServerGen,
+        ) -> anyhow::Result<Vec<Vec<f32>>> {
+            panic!("injected backend crash");
+        }
+    }
+
+    #[test]
+    fn worker_panic_fails_tickets_instead_of_hanging() {
+        // Regression (ISSUE 7): a worker dying with tickets outstanding
+        // must resolve them as Failed, not leave Ticket::wait blocked.
+        let server = ServerBuilder::new()
+            .workers(1)
+            .sla_ms(50.0)
+            .buckets(vec![1])
+            .backend(Arc::new(PanicBackend))
+            .build()
+            .unwrap();
+        let handle = server.handle();
+        let t = handle.submit_live(Query::new(1, "rmc1-small", 1, 0.0));
+        let out = t
+            .wait_timeout(Duration::from_secs(20))
+            .expect("ticket must resolve after the worker dies, not hang");
+        assert!(out.is_failed(), "expected Failed, got {out:?}");
+        let report = handle.report().unwrap();
+        assert_eq!(report.queries_failed, 1);
+        assert_eq!(report.worker_deaths, 1);
+        assert_eq!(report.queries, 0);
+        assert_eq!(
+            report.queries_offered,
+            report.queries + report.queries_shed + report.queries_failed
+        );
+        // Shutdown with a dead fleet must not hang either.
         let _ = server.shutdown();
     }
 

@@ -30,6 +30,9 @@ pub struct TenantReport {
     /// Queries / items shed by admission control for this tenant.
     pub shed_queries: u64,
     pub shed_items: u64,
+    /// Queries that exhausted their retry budget without producing
+    /// results (tickets resolved `Failed`), excluded from `queries`.
+    pub failed_queries: u64,
     /// Items ranked per second within THIS tenant's SLA.
     pub bounded_throughput: f64,
     pub violation_rate: f64,
@@ -58,6 +61,26 @@ pub struct ServeReport {
     /// tickets — offered-but-shed, never silently dropped).
     pub queries_shed: u64,
     pub items_shed: u64,
+    /// Queries whose bounded retry budget exhausted without producing
+    /// results (tickets resolved `Failed`). For a drained run the
+    /// accounting identity holds: completed + shed + failed == offered.
+    pub queries_failed: u64,
+    /// Retry dispatches scheduled after worker/shard failures (a query
+    /// retried twice counts twice).
+    pub queries_retried: u64,
+    /// Fault-layer counters for the measurement window: coordinator
+    /// workers killed (injected or panicked) and respawned, embedding
+    /// shard executors killed and re-materialized.
+    pub worker_deaths: u64,
+    pub worker_restarts: u64,
+    pub shard_deaths: u64,
+    pub shard_restarts: u64,
+    /// Replicated-table lookups served by a surviving replica while at
+    /// least one home shard of the table was dead (degraded but
+    /// bitwise-correct reads).
+    pub failover_reads: u64,
+    /// Wall-clock seconds with at least one worker or shard dead.
+    pub degraded_duration_s: f64,
     /// Configured inflight cap (`None` = uncapped).
     pub inflight_cap: Option<usize>,
     /// High-water mark of admitted-but-incomplete queries — under a cap
@@ -115,6 +138,21 @@ impl ServeReport {
                 self.peak_inflight
             ));
         }
+        if self.worker_deaths + self.shard_deaths + self.queries_failed + self.queries_retried > 0
+        {
+            s.push_str(&format!(
+                "faults: {} worker deaths ({} restarts), {} shard deaths ({} restarts), \
+                 degraded {:.2}s | {} queries failed, {} retries, {} failover reads\n",
+                self.worker_deaths,
+                self.worker_restarts,
+                self.shard_deaths,
+                self.shard_restarts,
+                self.degraded_duration_s,
+                self.queries_failed,
+                self.queries_retried,
+                self.failover_reads
+            ));
+        }
         if self.incomplete {
             s.push_str(&format!(
                 "WARNING: run incomplete — {}; metrics cover completed queries only\n",
@@ -143,17 +181,18 @@ impl ServeReport {
         ));
         if self.per_tenant.len() > 1 {
             s.push_str(&format!(
-                "{:<12} {:>8} {:>8} {:>8} {:>10} {:>8} {:>8} {:>8} {:>9}\n",
-                "tenant", "queries", "items", "shed", "items/s", "p50 ms", "p99 ms", "sla ms",
-                "viol %"
+                "{:<12} {:>8} {:>8} {:>8} {:>8} {:>10} {:>8} {:>8} {:>8} {:>9}\n",
+                "tenant", "queries", "items", "shed", "failed", "items/s", "p50 ms", "p99 ms",
+                "sla ms", "viol %"
             ));
             for t in &self.per_tenant {
                 s.push_str(&format!(
-                    "{:<12} {:>8} {:>8} {:>8} {:>10.0} {:>8.3} {:>8.3} {:>8.1} {:>8.1}%\n",
+                    "{:<12} {:>8} {:>8} {:>8} {:>8} {:>10.0} {:>8.3} {:>8.3} {:>8.1} {:>8.1}%\n",
                     t.model,
                     t.queries,
                     t.items,
                     t.shed_queries,
+                    t.failed_queries,
                     t.bounded_throughput,
                     t.p50_ms,
                     t.p99_ms,
@@ -210,6 +249,14 @@ impl ServeReport {
             ("items_failed", num(self.items_failed as f64)),
             ("queries_shed", num(self.queries_shed as f64)),
             ("items_shed", num(self.items_shed as f64)),
+            ("queries_failed", num(self.queries_failed as f64)),
+            ("queries_retried", num(self.queries_retried as f64)),
+            ("worker_deaths", num(self.worker_deaths as f64)),
+            ("worker_restarts", num(self.worker_restarts as f64)),
+            ("shard_deaths", num(self.shard_deaths as f64)),
+            ("shard_restarts", num(self.shard_restarts as f64)),
+            ("failover_reads", num(self.failover_reads as f64)),
+            ("degraded_duration_s", num(self.degraded_duration_s)),
             ("inflight_cap", self.inflight_cap.map_or(Json::Null, |c| num(c as f64))),
             ("peak_inflight", num(self.peak_inflight as f64)),
             ("incomplete", Json::Bool(self.incomplete)),
@@ -260,6 +307,7 @@ impl ServeReport {
                                 ("items", num(t.items as f64)),
                                 ("shed_queries", num(t.shed_queries as f64)),
                                 ("shed_items", num(t.shed_items as f64)),
+                                ("failed_queries", num(t.failed_queries as f64)),
                                 ("bounded_throughput", num(t.bounded_throughput)),
                                 ("violation_rate", num(t.violation_rate)),
                                 ("mean_ms", num(t.mean_ms)),
@@ -554,6 +602,12 @@ mod tests {
         assert_eq!(v.get("incomplete").and_then(Json::as_bool), Some(false));
         assert_eq!(v.get("drain_deadline_hit").and_then(Json::as_bool), Some(false));
         assert_eq!(v.get("queries_shed").and_then(Json::as_usize), Some(0));
+        assert_eq!(v.get("queries_failed").and_then(Json::as_usize), Some(0));
+        assert_eq!(v.get("queries_retried").and_then(Json::as_usize), Some(0));
+        assert_eq!(v.get("worker_deaths").and_then(Json::as_usize), Some(0));
+        assert_eq!(v.get("shard_deaths").and_then(Json::as_usize), Some(0));
+        assert_eq!(v.get("failover_reads").and_then(Json::as_usize), Some(0));
+        assert!(v.get("degraded_duration_s").and_then(Json::as_f64).is_some());
         assert_eq!(v.get("inflight_cap"), Some(&Json::Null));
         assert!(v.get("peak_inflight").and_then(Json::as_usize).is_some());
         assert!(v.get("per_tenant").and_then(Json::as_arr).is_some());

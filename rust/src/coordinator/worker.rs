@@ -1,7 +1,7 @@
 //! Worker threads: drain a per-worker batch queue, execute through the
 //! backend, and report per-query results.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
@@ -18,6 +18,10 @@ pub struct WorkerHandle {
     tx: Option<mpsc::Sender<Batch>>,
     /// Batches queued + running (router load signal).
     outstanding: Arc<AtomicUsize>,
+    /// Fault-injection kill switch: once set, the worker loop stops
+    /// executing and fails its queued batches fast (∞ latency, empty
+    /// ctrs) so the dispatcher can retry them elsewhere.
+    dead: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -40,22 +44,38 @@ impl WorkerHandle {
         let (tx, rx) = mpsc::channel::<Batch>();
         let outstanding = Arc::new(AtomicUsize::new(0));
         let out2 = outstanding.clone();
+        let dead = Arc::new(AtomicBool::new(false));
+        let dead2 = dead.clone();
         let join = std::thread::Builder::new()
             .name(format!("worker-{id}"))
             .spawn(move || {
                 while let Ok(batch) = rx.recv() {
-                    let exec = backend.execute(&batch.model, batch.bucket, &batch.queries, gen);
+                    // A killed worker fails its queued batches without
+                    // executing them; the batch running at kill time (if
+                    // any) already completed normally above.
+                    let exec = if dead2.load(Ordering::SeqCst) {
+                        Ok(vec![Vec::new(); batch.queries.len()])
+                    } else {
+                        backend.execute(&batch.model, batch.bucket, &batch.queries, gen)
+                    };
                     let done = Instant::now();
                     match exec {
                         Ok(ctrs) => {
                             for (q, c) in batch.queries.iter().zip(ctrs) {
-                                let arrival =
-                                    t0 + std::time::Duration::from_secs_f64(q.arrival_s);
-                                let latency_ms = done
-                                    .checked_duration_since(arrival)
-                                    .unwrap_or_default()
-                                    .as_secs_f64()
-                                    * 1e3;
+                                // Empty ctrs marks a per-query failure
+                                // (real results always hold >= 1 CTR):
+                                // report ∞ latency so the dispatcher's
+                                // retry path picks the query up.
+                                let latency_ms = if c.is_empty() {
+                                    f64::INFINITY
+                                } else {
+                                    let arrival =
+                                        t0 + std::time::Duration::from_secs_f64(q.arrival_s);
+                                    done.checked_duration_since(arrival)
+                                        .unwrap_or_default()
+                                        .as_secs_f64()
+                                        * 1e3
+                                };
                                 let _ = results_tx.send(E::from(QueryResult {
                                     id: q.id,
                                     ticket: q.ticket,
@@ -88,19 +108,60 @@ impl WorkerHandle {
                 }
             })
             .expect("spawn worker");
-        WorkerHandle { id, gen, tx: Some(tx), outstanding, join: Some(join) }
+        WorkerHandle { id, gen, tx: Some(tx), outstanding, dead, join: Some(join) }
     }
 
-    pub fn submit(&self, batch: Batch) {
+    /// Queue a batch. Fails (returning the batch to the caller) when the
+    /// worker has been killed or its thread has exited — the dispatcher
+    /// must then fail or retry the batch's queries instead of stranding
+    /// their tickets.
+    pub fn submit(&self, batch: Batch) -> Result<(), Batch> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(batch);
+        };
         self.outstanding.fetch_add(1, Ordering::SeqCst);
-        let _ = self.tx.as_ref().expect("worker shut down").send(batch);
+        match tx.send(batch) {
+            Ok(()) => Ok(()),
+            Err(mpsc::SendError(b)) => {
+                self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                Err(b)
+            }
+        }
     }
 
     pub fn outstanding(&self) -> usize {
         self.outstanding.load(Ordering::SeqCst)
     }
 
+    /// True while the worker can accept work: the queue is open and the
+    /// thread has not exited (a backend panic shows up here too).
+    pub fn alive(&self) -> bool {
+        self.tx.is_some() && self.join.as_ref().is_some_and(|j| !j.is_finished())
+    }
+
+    /// The thread exited while the queue was still open — it panicked
+    /// (a worker's loop only returns after `kill`/`shutdown` close the
+    /// queue). The dispatcher sweep uses this to detect crashed workers
+    /// and recover the tickets they took down.
+    pub fn panicked(&self) -> bool {
+        self.tx.is_some() && self.join.as_ref().is_some_and(|j| j.is_finished())
+    }
+
+    /// Fault injection: mark the worker dead and reap its thread. Queued
+    /// batches drain as ∞-latency failures (the dispatcher retries
+    /// them); the batch executing at kill time completes normally.
+    /// Idempotent — returns whether this call killed a live worker.
+    pub fn kill(&mut self) -> bool {
+        if self.tx.is_none() {
+            return false;
+        }
+        self.dead.store(true, Ordering::SeqCst);
+        self.shutdown();
+        true
+    }
+
     /// Close the queue and join the thread (drains pending batches).
+    /// Tolerates a panicked worker thread.
     pub fn shutdown(&mut self) {
         self.tx.take(); // closes the channel; worker loop exits
         if let Some(j) = self.join.take() {

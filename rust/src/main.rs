@@ -11,6 +11,7 @@
 //!                [--shards N] [--cache-rows F]
 //!                [--placement whole|rows|auto] [--replicate-hot F]
 //!                [--inflight-cap N] [--drain-deadline-s F]
+//!                [--faults SPEC]
 //!                                       end-to-end serving run (native
 //!                                       needs no artifacts; xla/pallas
 //!                                       need the `pjrt` feature).
@@ -76,7 +77,27 @@
 //!                                       serve bit-identical CTRs; the
 //!                                       report adds per-shard bytes,
 //!                                       lookup balance, and the
-//!                                       replica read split
+//!                                       replica read split.
+//!                                       --faults SPEC injects a
+//!                                       deterministic kill/restart
+//!                                       schedule, e.g.
+//!                                       kill-shard:1@b8,
+//!                                       restart-shard:1@b24,
+//!                                       kill-worker:0@t0.5 (b<N> =
+//!                                       after N dispatched batches,
+//!                                       t<S> = after S seconds).
+//!                                       Killed shards fail over to
+//!                                       replicas (--replicate-hot)
+//!                                       bitwise-identically; queries
+//!                                       needing a lost unreplicated
+//!                                       range retry on a bounded
+//!                                       budget, then fail honestly —
+//!                                       the report adds worker/shard
+//!                                       deaths + restarts, retries,
+//!                                       failed queries, failover
+//!                                       reads, and degraded time, and
+//!                                       completed + shed + failed ==
+//!                                       offered stays exact
 //!   recsys check                        numeric self-verification
 //!   recsys simulate --model M [--gen G] [--batch B] [--jobs N]
 //!                                       one simulator measurement
@@ -93,7 +114,7 @@ use recsys::coordinator::{Backend, Coordinator, ServerBuilder};
 use recsys::model::ModelGraph;
 use recsys::runtime::{EngineKind, ExecOptions, PlacementMode};
 use recsys::simulator::MachineSim;
-use recsys::workload::{PoissonArrivals, Query, SparseIdGen, TrafficMix};
+use recsys::workload::{FaultPlan, PoissonArrivals, Query, SparseIdGen, TrafficMix};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -368,6 +389,20 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let drain_deadline_s: f64 =
         flags.get("drain-deadline-s").map(|s| s.parse()).transpose()?.unwrap_or(30.0);
     anyhow::ensure!(drain_deadline_s > 0.0, "--drain-deadline-s must be positive");
+    let faults = match flags.get("faults") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::new(),
+    };
+    if faults.events().iter().any(|e| {
+        matches!(
+            e.action,
+            recsys::workload::FaultAction::KillShard(_)
+                | recsys::workload::FaultAction::RestartShard(_)
+        )
+    }) && shards <= 1
+    {
+        anyhow::bail!("--faults names shard events, but serving is single-node (--shards 1)");
+    }
 
     // Tenant set: --mix serves a weighted multi-model mix; --model (or
     // the default) degenerates to a single-tenant mix of that model.
@@ -382,7 +417,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let mut builder = ServerBuilder::new()
         .deployment(&cfg)
         .inflight_cap(inflight_cap)
-        .drain_deadline(std::time::Duration::from_secs_f64(drain_deadline_s));
+        .drain_deadline(std::time::Duration::from_secs_f64(drain_deadline_s))
+        .faults(faults);
     // Only an explicit --mix opts into per-tenant batching (and its
     // SLA/4 flush-timeout cap); the single-model path keeps the
     // uniform batcher and whatever batch_timeout_us the config asked

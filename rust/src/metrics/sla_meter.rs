@@ -219,6 +219,12 @@ impl MultiSlaMeter {
         self.tenants.values().map(SlaMeter::items_failed).sum()
     }
 
+    /// Queries that never produced results (retry budget exhausted) —
+    /// the `failed` term of completed + shed + failed == offered.
+    pub fn queries_failed(&self) -> u64 {
+        self.tenants.values().map(SlaMeter::queries_failed).sum()
+    }
+
     /// Pooled latency distribution across tenants (aggregate p50/p99).
     pub fn pooled_latencies(&self) -> LatencyHistogram {
         let mut all = LatencyHistogram::new();

@@ -53,7 +53,9 @@ pub use placement::{
 #[cfg(feature = "pjrt")]
 pub use pool::ModelPool;
 pub use row_cache::{row_key, EmbeddingCache};
-pub use sharded::{ShardedEmbeddingService, ShardedStats, AUTO_REPLAN_AFTER_BATCHES};
+pub use sharded::{
+    ShardUnavailable, ShardedEmbeddingService, ShardedStats, AUTO_REPLAN_AFTER_BATCHES,
+};
 
 /// Default artifacts directory relative to the crate root.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

@@ -49,7 +49,8 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::fmt;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Instant;
 
 use anyhow::{anyhow, ensure};
@@ -67,6 +68,47 @@ use crate::util::Json;
 /// Batches of measured traffic an `--placement auto` service observes
 /// before replanning from the recorded skew.
 pub const AUTO_REPLAN_AFTER_BATCHES: u64 = 8;
+
+/// Typed failure for a lookup whose row lives only on dead shard(s):
+/// a Split row range owned by a killed executor, or a Replicated table
+/// with no surviving replica. The leader surfaces it as a per-batch
+/// error (downcastable from the `anyhow` chain) that the coordinator
+/// converts into per-query failure + bounded retry — never a panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardUnavailable {
+    /// The dead shard the lookup routed to.
+    pub shard: usize,
+    /// The global table whose data was unreachable.
+    pub table: usize,
+}
+
+impl fmt::Display for ShardUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "embedding shard {} unavailable (table {} has no surviving replica)",
+            self.shard, self.table
+        )
+    }
+}
+
+impl std::error::Error for ShardUnavailable {}
+
+// Poison-tolerant lock access: a panicked shard executor (or a caller
+// panicking mid-snapshot) must not cascade-poison the leader's stats
+// and topology locks — the guarded state is counters and an
+// already-consistent topology, both safe to read after an unwind.
+fn lock_tolerant<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn read_tolerant<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_tolerant<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Cumulative per-stage breakdown of a service's lifetime (snapshot via
 /// [`ShardedEmbeddingService::stats`]); the measured analogue of
@@ -114,6 +156,17 @@ pub struct ShardedStats {
     pub shard_bytes: Vec<u64>,
     /// Placement replans applied (`--placement auto`).
     pub replans: u64,
+    /// Shard executors currently alive (snapshot; `shards` minus the
+    /// killed-and-not-restarted ones).
+    pub shards_alive: usize,
+    /// Shard executors killed by fault injection.
+    pub shard_deaths: u64,
+    /// Killed shards re-materialized from the parameter seed.
+    pub shard_restarts: u64,
+    /// Weighted lookups rerouted to a surviving replica because a copy
+    /// in the table's replica set was dead — the measured failover
+    /// traffic (degraded but bitwise-correct reads).
+    pub failover_reads: u64,
 }
 
 fn add_vec(dst: &mut Vec<u64>, src: &[u64]) {
@@ -175,6 +228,10 @@ impl ShardedStats {
             ("table_lookups", u64_arr(&self.table_lookups)),
             ("shard_bytes", u64_arr(&self.shard_bytes)),
             ("replans", num(self.replans as f64)),
+            ("shards_alive", num(self.shards_alive as f64)),
+            ("shard_deaths", num(self.shard_deaths as f64)),
+            ("shard_restarts", num(self.shard_restarts as f64)),
+            ("failover_reads", num(self.failover_reads as f64)),
         ])
     }
 }
@@ -280,10 +337,12 @@ fn shard_loop(st: ShardTables, rx: mpsc::Receiver<ShardJob>) {
 
 /// The live shard topology: the plan plus the executors realizing it.
 /// Swapped whole on an auto replan (behind the service's `RwLock`).
+/// A killed shard keeps its slot (`None` sender) so shard indices stay
+/// stable for the plan and the stats vectors; a restart refills it.
 struct Topology {
     plan: Placement,
-    senders: Vec<mpsc::Sender<ShardJob>>,
-    joins: Vec<std::thread::JoinHandle<()>>,
+    senders: Vec<Option<mpsc::Sender<ShardJob>>>,
+    joins: Vec<Option<std::thread::JoinHandle<()>>>,
     shard_bytes: Vec<usize>,
 }
 
@@ -296,24 +355,66 @@ impl Topology {
         let mut joins = Vec::with_capacity(plan.shards);
         for (i, segs) in stores.into_iter().enumerate() {
             let st = ShardTables { segs, emb_dim: cfg.emb_dim, lookups: cfg.lookups };
-            let (tx, rx) = mpsc::channel();
-            let join = std::thread::Builder::new()
-                .name(format!("emb-shard-{i}"))
-                .spawn(move || shard_loop(st, rx))
-                .expect("spawn shard executor");
-            senders.push(tx);
-            joins.push(join);
+            let (tx, join) = spawn_executor(i, st);
+            senders.push(Some(tx));
+            joins.push(Some(join));
         }
         Topology { plan, senders, joins, shard_bytes }
+    }
+
+    /// Whether shard `s` has a live executor.
+    fn alive(&self, s: usize) -> bool {
+        self.senders.get(s).is_some_and(Option::is_some)
+    }
+
+    /// Live executor count.
+    fn alive_count(&self) -> usize {
+        self.senders.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Kill shard `s`: drop its sender (the executor drains queued
+    /// jobs — their replies still arrive — then exits) and reap the
+    /// thread. Returns false if the shard was already dead or the
+    /// index is out of range.
+    fn kill(&mut self, s: usize) -> bool {
+        match self.senders.get_mut(s) {
+            Some(slot) if slot.is_some() => *slot = None,
+            _ => return false,
+        }
+        if let Some(j) = self.joins[s].take() {
+            let _ = j.join();
+        }
+        true
+    }
+
+    /// Refill a killed shard's slot with a freshly materialized
+    /// executor.
+    fn respawn(&mut self, s: usize, st: ShardTables) {
+        debug_assert!(self.senders[s].is_none(), "respawn of a live shard");
+        let (tx, join) = spawn_executor(s, st);
+        self.senders[s] = Some(tx);
+        self.joins[s] = Some(join);
     }
 
     /// Close the executor channels and reap the threads.
     fn shutdown(&mut self) {
         self.senders.clear();
-        for j in self.joins.drain(..) {
+        for j in self.joins.drain(..).flatten() {
             let _ = j.join();
         }
     }
+}
+
+fn spawn_executor(
+    i: usize,
+    st: ShardTables,
+) -> (mpsc::Sender<ShardJob>, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let join = std::thread::Builder::new()
+        .name(format!("emb-shard-{i}"))
+        .spawn(move || shard_loop(st, rx))
+        .expect("spawn shard executor");
+    (tx, join)
 }
 
 /// Placement-aware sharded SLS execution with an optional leader
@@ -457,20 +558,27 @@ impl ShardedEmbeddingService {
         self.leader.rows()
     }
 
-    /// Shard executors currently running.
+    /// Shard executors in the topology (killed slots included — shard
+    /// indices stay stable across kill/restart).
     pub fn shards(&self) -> usize {
-        self.topo.read().unwrap().plan.shards
+        read_tolerant(&self.topo).plan.shards
+    }
+
+    /// Per-shard liveness snapshot (`false` = killed, not restarted).
+    pub fn alive_shards(&self) -> Vec<bool> {
+        let topo = read_tolerant(&self.topo);
+        (0..topo.plan.shards).map(|s| topo.alive(s)).collect()
     }
 
     /// Snapshot of the placement plan in force.
     pub fn placement(&self) -> Placement {
-        self.topo.read().unwrap().plan.clone()
+        read_tolerant(&self.topo).plan.clone()
     }
 
     /// Embedding bytes owned by each shard — the per-node capacity the
     /// leader no longer pays (replica copies included).
     pub fn shard_bytes(&self) -> Vec<usize> {
-        self.topo.read().unwrap().shard_bytes.clone()
+        read_tolerant(&self.topo).shard_bytes.clone()
     }
 
     /// Leader-resident parameter bytes (MLPs only; tables moved out).
@@ -484,9 +592,10 @@ impl ShardedEmbeddingService {
 
     /// Snapshot of the cumulative per-stage breakdown.
     pub fn stats(&self) -> ShardedStats {
-        let mut s = self.stats.lock().unwrap().clone();
-        let topo = self.topo.read().unwrap();
+        let mut s = lock_tolerant(&self.stats).clone();
+        let topo = read_tolerant(&self.topo);
         s.shards = topo.plan.shards;
+        s.shards_alive = topo.alive_count();
         s.placement = self.planner.mode;
         s.cache_capacity_rows = self.cache.as_ref().map_or(0, |c| c.capacity_rows());
         s.shard_bytes = topo.shard_bytes.iter().map(|&b| b as u64).collect();
@@ -499,10 +608,53 @@ impl ShardedEmbeddingService {
     /// Zero the breakdown and drop cached rows (bench hygiene between
     /// sweep points).
     pub fn reset_stats(&self) {
-        *self.stats.lock().unwrap() = ShardedStats::default();
+        *lock_tolerant(&self.stats) = ShardedStats::default();
         if let Some(c) = &self.cache {
             c.clear();
         }
+    }
+
+    /// Fault injection: kill shard `shard`'s executor. Its queued jobs
+    /// drain (in-flight batches keep their replies) before the thread
+    /// is reaped; afterwards Replicated tables it held fail over to
+    /// surviving replicas and Split row ranges it owned alone surface
+    /// [`ShardUnavailable`] per batch. Returns false when the index is
+    /// out of range or the shard is already dead.
+    pub fn kill_shard(&self, shard: usize) -> bool {
+        // Same gate as replans: kill vs replan vs restart serialize, so
+        // a concurrent plan swap can never resurrect a killed slot.
+        let _gate = lock_tolerant(&self.replan_gate);
+        let killed = write_tolerant(&self.topo).kill(shard);
+        if killed {
+            lock_tolerant(&self.stats).shard_deaths += 1;
+        }
+        killed
+    }
+
+    /// Fault recovery: re-materialize a killed shard's table chunks
+    /// from the parameter seed (byte-identical to the originals, same
+    /// determinism argument as auto replans) and rejoin it to the
+    /// topology under the write lock. Returns false when the shard is
+    /// alive or the index is out of range.
+    pub fn restart_shard(&self, shard: usize) -> anyhow::Result<bool> {
+        let _gate = lock_tolerant(&self.replan_gate);
+        // The gate serializes every topology mutation, so the plan
+        // snapshot below cannot go stale before the write lock.
+        let plan = {
+            let topo = read_tolerant(&self.topo);
+            if shard >= topo.plan.shards || topo.alive(shard) {
+                return Ok(false);
+            }
+            topo.plan.clone()
+        };
+        let cfg = self.cfg().clone();
+        let tables = NativeModel::new(&cfg, self.seed).take_tables();
+        let mut stores = slice_tables(tables, &plan, cfg.emb_dim);
+        let segs = std::mem::take(&mut stores[shard]);
+        let st = ShardTables { segs, emb_dim: cfg.emb_dim, lookups: cfg.lookups };
+        write_tolerant(&self.topo).respawn(shard, st);
+        lock_tolerant(&self.stats).shard_restarts += 1;
+        Ok(true)
     }
 
     /// Recompute the plan from the skew measured so far and swap the
@@ -510,11 +662,11 @@ impl ShardedEmbeddingService {
     /// `--placement auto` calls this automatically after
     /// [`AUTO_REPLAN_AFTER_BATCHES`]; benches may call it directly.
     pub fn replan_from_stats(&self) -> anyhow::Result<bool> {
-        let _gate = self.replan_gate.lock().unwrap();
+        let _gate = lock_tolerant(&self.replan_gate);
         let cfg = self.cfg().clone();
         let rows = self.rows();
         let mut skew: Vec<TableSkew> = {
-            let s = self.stats.lock().unwrap();
+            let s = lock_tolerant(&self.stats);
             (0..cfg.num_tables)
                 .map(|t| TableSkew {
                     lookups: s.table_lookups.get(t).copied().unwrap_or(0),
@@ -528,21 +680,31 @@ impl ShardedEmbeddingService {
             }
         }
         let plan = self.planner.plan(cfg.num_tables, rows, cfg.emb_dim, &skew)?;
-        if plan == self.topo.read().unwrap().plan {
-            return Ok(false);
-        }
+        let dead: Vec<usize> = {
+            let topo = read_tolerant(&self.topo);
+            if plan == topo.plan {
+                return Ok(false);
+            }
+            (0..topo.plan.shards).filter(|&s| !topo.alive(s)).collect()
+        };
         // Re-materialize the tables (deterministic from (cfg, seed) —
         // parameter init is pure) and swap executors under the write
         // lock. In-flight batches finished under the old topology keep
         // their replies: queued jobs drain before an executor exits.
         let tables = NativeModel::new(&cfg, self.seed).take_tables();
         let mut fresh = Topology::spawn(plan, tables, &cfg, rows);
+        // A replan changes the layout, not the fleet's health: shards
+        // that were killed stay killed (only an explicit restart event
+        // revives them), so degraded-mode accounting never self-heals.
+        for s in dead {
+            fresh.kill(s);
+        }
         {
-            let mut topo = self.topo.write().unwrap();
+            let mut topo = write_tolerant(&self.topo);
             std::mem::swap(&mut *topo, &mut fresh);
         }
         fresh.shutdown(); // the old topology
-        self.stats.lock().unwrap().replans += 1;
+        lock_tolerant(&self.stats).replans += 1;
         Ok(true)
     }
 
@@ -582,12 +744,12 @@ impl ShardedEmbeddingService {
         // Replica load-balancing seeds from the lifetime routing counts
         // so successive batches spread over the copies.
         let base_loads = {
-            let s = self.stats.lock().unwrap();
+            let s = lock_tolerant(&self.stats);
             s.shard_lookups.clone()
         };
         let t_fan = Instant::now();
         let mut pending = {
-            let topo = self.topo.read().unwrap();
+            let topo = read_tolerant(&self.topo);
             self.fan_out(&topo, ids, lwts, batch, per_table, &base_loads, &mut delta)?
         };
         delta.gather_ns += t_fan.elapsed().as_nanos() as f64;
@@ -669,7 +831,7 @@ impl ShardedEmbeddingService {
         delta.leader_mlp_ns += t_top.elapsed().as_nanos() as f64;
 
         let batches_done = {
-            let mut s = self.stats.lock().unwrap();
+            let mut s = lock_tolerant(&self.stats);
             s.batches += 1;
             s.shard_sls_ns += delta.shard_sls_ns;
             s.gather_ns += delta.gather_ns;
@@ -677,6 +839,7 @@ impl ShardedEmbeddingService {
             s.cache_hits += delta.cache_hits;
             s.cache_misses += delta.cache_misses;
             s.rows_fetched += delta.rows_fetched;
+            s.failover_reads += delta.failover_reads;
             add_vec(&mut s.shard_lookups, &delta.shard_lookups);
             add_vec(&mut s.replica_reads, &delta.replica_reads);
             add_vec(&mut s.table_lookups, &delta.table_lookups);
@@ -720,17 +883,25 @@ impl ShardedEmbeddingService {
             delta.table_lookups[t] =
                 lwts[base..base + per_table].iter().filter(|w| **w != 0.0).count() as u64;
         }
-        // Replica choice per replicated table: the copy with the least
-        // routed load so far (lifetime + this batch), lowest index on
-        // ties. A pure function of placement and traffic counts — no
-        // timing — so it is deterministic for a given batch sequence;
-        // and since replicas are byte-identical, the choice can never
-        // affect numerics.
+        // Replica choice per replicated table: the *surviving* copy
+        // with the least routed load so far (lifetime + this batch),
+        // lowest index on ties. A pure function of placement, liveness,
+        // and traffic counts — no timing — so it is deterministic for a
+        // given batch + fault sequence; and since replicas are
+        // byte-identical, the choice (failover included) can never
+        // affect numerics. A table whose every replica is dead is a
+        // typed per-batch error, not a panic.
         let load = |s: usize, d: &ShardedStats| {
             base_loads.get(s).copied().unwrap_or(0) + d.shard_lookups[s]
         };
-        let choose_replica = |reps: &[usize], d: &ShardedStats| {
-            reps.iter().copied().min_by_key(|&s| (load(s, d), s)).unwrap()
+        let choose_replica = |t: usize, reps: &[usize], d: &ShardedStats| {
+            reps.iter()
+                .copied()
+                .filter(|&s| topo.alive(s))
+                .min_by_key(|&s| (load(s, d), s))
+                .ok_or_else(|| {
+                    anyhow::Error::new(ShardUnavailable { shard: reps[0], table: t })
+                })
         };
 
         let mut pool_sets: Vec<Vec<usize>> = vec![Vec::new(); shards];
@@ -748,11 +919,16 @@ impl ShardedEmbeddingService {
             // short-circuit shard traffic.
             if !cache_mode {
                 if let TablePlacement::Replicated(reps) = tp {
-                    let r = choose_replica(reps, delta);
+                    let r = choose_replica(t, reps, delta)?;
                     pool_sets[r].push(t);
                     delta.shard_lookups[r] += delta.table_lookups[t];
                     if replicated {
                         delta.replica_reads[r] += delta.table_lookups[t];
+                        // Failover accounting: these reads only landed
+                        // here because a copy in the set is dead.
+                        if reps.iter().any(|&s| !topo.alive(s)) {
+                            delta.failover_reads += delta.table_lookups[t];
+                        }
                     }
                     continue;
                 }
@@ -765,11 +941,12 @@ impl ShardedEmbeddingService {
             // owning shard (least-loaded replica for replicated
             // tables, fixed per batch).
             fetched.push(t);
-            let table_replica = match tp {
-                TablePlacement::Replicated(reps) if cache_mode => {
-                    Some(choose_replica(reps, delta))
-                }
-                _ => None,
+            let (table_replica, replica_failover) = match tp {
+                TablePlacement::Replicated(reps) if cache_mode => (
+                    Some(choose_replica(t, reps, delta)?),
+                    reps.iter().any(|&s| !topo.alive(s)),
+                ),
+                _ => (None, false),
             };
             let base_t = t * per_table;
             for (&id, &w) in
@@ -780,14 +957,27 @@ impl ShardedEmbeddingService {
                 }
                 // Routing accounting: every weighted lookup's row is
                 // owned somewhere, whether or not the cache ends up
-                // serving the bytes.
+                // serving the bytes. A split row range owned only by a
+                // dead shard has nowhere to fail over to — typed error.
                 let owner = match table_replica {
                     Some(r) => r,
-                    None => row_owners(&topo.plan, t, id as usize)[0],
+                    None => {
+                        let owner = row_owners(&topo.plan, t, id as usize)[0];
+                        if !topo.alive(owner) {
+                            return Err(anyhow::Error::new(ShardUnavailable {
+                                shard: owner,
+                                table: t,
+                            }));
+                        }
+                        owner
+                    }
                 };
                 delta.shard_lookups[owner] += 1;
                 if replicated {
                     delta.replica_reads[owner] += 1;
+                    if replica_failover {
+                        delta.failover_reads += 1;
+                    }
                 }
                 let key = row_key(t, id as u32);
                 if rowmap.contains_key(&key) {
@@ -829,6 +1019,8 @@ impl ShardedEmbeddingService {
             }
             let (reply_tx, reply_rx) = mpsc::channel();
             topo.senders[i]
+                .as_ref()
+                .ok_or(ShardUnavailable { shard: i, table: tables[0] })?
                 .send(ShardJob::Pool {
                     tables: tables.clone(),
                     ids: sids,
@@ -846,6 +1038,8 @@ impl ShardedEmbeddingService {
             }
             let (reply_tx, reply_rx) = mpsc::channel();
             topo.senders[i]
+                .as_ref()
+                .ok_or(ShardUnavailable { shard: i, table: want[0].0 })?
                 .send(ShardJob::Rows { wants: want.clone(), reply: reply_tx })
                 .map_err(|_| anyhow!("embedding shard {i} died"))?;
             rows.push(RowsRequest { shard: i, wants: want, reply_rx });
@@ -881,7 +1075,7 @@ struct Pending {
 
 impl Drop for ShardedEmbeddingService {
     fn drop(&mut self) {
-        self.topo.get_mut().unwrap().shutdown();
+        self.topo.get_mut().unwrap_or_else(|e| e.into_inner()).shutdown();
     }
 }
 
@@ -1201,5 +1395,109 @@ mod tests {
         ids[0] = cfg.pjrt_rows as i32 + 1;
         assert!(svc.run_rmc(&dense, &ids, &lwts).is_err(), "oob id caught on the leader");
         assert!(ShardedEmbeddingService::from_name("nope", 0, opts(2, 0.0)).is_err());
+    }
+
+    #[test]
+    fn killed_replica_fails_over_bitwise() {
+        let cfg = tiny_cfg();
+        let single = NativeModel::new(&cfg, 17);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 4);
+        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+        // Every table fully replicated: shard 1's death must degrade
+        // capacity, never availability or numerics.
+        let plan = Placement {
+            shards: 2,
+            tables: (0..cfg.num_tables)
+                .map(|_| TablePlacement::Replicated(vec![0, 1]))
+                .collect(),
+        };
+        let svc = ShardedEmbeddingService::with_plan(&cfg, 17, opts(2, 0.0), plan).unwrap();
+        assert_eq!(want, svc.run_rmc(&dense, &ids, &lwts).unwrap());
+        let routed_before_kill = svc.stats().shard_lookups[1];
+        assert!(svc.kill_shard(1));
+        assert!(!svc.kill_shard(1), "double kill is a no-op");
+        assert!(!svc.kill_shard(9), "out-of-range kill is a no-op");
+        assert_eq!(svc.alive_shards(), vec![true, false]);
+        for i in 0..2 {
+            assert_eq!(
+                want,
+                svc.run_rmc(&dense, &ids, &lwts).unwrap(),
+                "degraded batch {i} diverged from single-node"
+            );
+        }
+        let s = svc.stats();
+        assert_eq!(s.shard_deaths, 1);
+        assert_eq!(s.shards_alive, 1);
+        assert!(s.failover_reads > 0, "failover traffic must be measured: {s:?}");
+        // All post-kill reads landed on the survivor.
+        assert_eq!(
+            s.shard_lookups[1], routed_before_kill,
+            "dead shard served reads: {:?}",
+            s.shard_lookups
+        );
+    }
+
+    #[test]
+    fn dead_split_owner_is_a_typed_error_and_restart_recovers() {
+        let cfg = tiny_cfg();
+        let single = NativeModel::new(&cfg, 19);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 3);
+        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+        // Table 1's rows live only on shard 1 (declared Split so it is
+        // served row-wise): its death has nowhere to fail over to.
+        let plan = Placement {
+            shards: 2,
+            tables: vec![
+                TablePlacement::Replicated(vec![0, 1]),
+                TablePlacement::Split(vec![RowSegment { shard: 1, rows: (0, 60) }]),
+                TablePlacement::Replicated(vec![0]),
+            ],
+        };
+        let svc = ShardedEmbeddingService::with_plan(&cfg, 19, opts(2, 0.0), plan).unwrap();
+        assert_eq!(want, svc.run_rmc(&dense, &ids, &lwts).unwrap());
+        assert!(svc.kill_shard(1));
+        let err = svc.run_rmc(&dense, &ids, &lwts).unwrap_err();
+        let su = err
+            .downcast_ref::<ShardUnavailable>()
+            .unwrap_or_else(|| panic!("untyped shard-loss error: {err:#}"));
+        assert_eq!((su.shard, su.table), (1, 1));
+        // Restart re-materializes the chunks from the parameter seed
+        // and rejoins the topology; service resumes bitwise-identical.
+        assert!(svc.restart_shard(1).unwrap());
+        assert!(!svc.restart_shard(1).unwrap(), "restart of a live shard is a no-op");
+        assert!(!svc.restart_shard(9).unwrap(), "out-of-range restart is a no-op");
+        assert_eq!(
+            want,
+            svc.run_rmc(&dense, &ids, &lwts).unwrap(),
+            "post-restart output diverged from single-node"
+        );
+        let s = svc.stats();
+        assert_eq!((s.shard_deaths, s.shard_restarts), (1, 1));
+        assert_eq!(s.shards_alive, 2);
+    }
+
+    #[test]
+    fn cache_mode_failover_stays_bitwise() {
+        let cfg = tiny_cfg();
+        let single = NativeModel::new(&cfg, 23);
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 4);
+        let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+        let plan = Placement {
+            shards: 2,
+            tables: (0..cfg.num_tables)
+                .map(|_| TablePlacement::Replicated(vec![0, 1]))
+                .collect(),
+        };
+        let svc =
+            ShardedEmbeddingService::with_plan(&cfg, 23, opts(2, 0.5), plan).unwrap();
+        assert_eq!(want, svc.run_rmc(&dense, &ids, &lwts).unwrap());
+        assert!(svc.kill_shard(0));
+        assert_eq!(
+            want,
+            svc.run_rmc(&dense, &ids, &lwts).unwrap(),
+            "cache-mode failover diverged from single-node"
+        );
+        let s = svc.stats();
+        assert!(s.failover_reads > 0, "row-path failover must be measured: {s:?}");
     }
 }

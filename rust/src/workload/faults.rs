@@ -1,0 +1,283 @@
+//! Deterministic fault-injection schedules for the serving stack.
+//!
+//! A [`FaultPlan`] is an ordered list of kill/restart events for worker
+//! threads and embedding-shard executors, each armed by a trigger — a
+//! dispatched-batch count (`b<N>`) or elapsed wall-clock seconds since
+//! the serving window opened (`t<SECS>`). The dispatcher polls the plan
+//! every loop iteration and applies whatever has come due, so the same
+//! spec against the same workload produces the same fault sequence:
+//! batch-count triggers are exactly reproducible, elapsed triggers are
+//! reproducible up to scheduler jitter.
+//!
+//! Spec grammar (the `serve --faults SPEC` argument):
+//!
+//! ```text
+//! SPEC    := EVENT (',' EVENT)*
+//! EVENT   := ACTION ':' ID '@' TRIGGER
+//! ACTION  := kill-worker | restart-worker | kill-shard | restart-shard
+//! TRIGGER := 'b' <u64>      fire once >= N batches have been dispatched
+//!          | 't' <f64>      fire once >= SECS seconds have elapsed
+//! ```
+//!
+//! Example: `kill-shard:1@b8,restart-shard:1@b24,kill-worker:0@t0.5`.
+
+use std::fmt;
+
+use anyhow::{bail, Context};
+
+/// What a fault event does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Kill a coordinator worker thread by id (queued batches fail fast).
+    KillWorker(usize),
+    /// Respawn a previously killed worker under the same id.
+    RestartWorker(usize),
+    /// Kill an embedding-shard executor by shard index (replicas cover).
+    KillShard(usize),
+    /// Re-materialize a killed shard from the parameter seed.
+    RestartShard(usize),
+}
+
+impl fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultAction::KillWorker(id) => write!(f, "kill-worker:{id}"),
+            FaultAction::RestartWorker(id) => write!(f, "restart-worker:{id}"),
+            FaultAction::KillShard(id) => write!(f, "kill-shard:{id}"),
+            FaultAction::RestartShard(id) => write!(f, "restart-shard:{id}"),
+        }
+    }
+}
+
+/// When a fault event fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultTrigger {
+    /// Once the dispatcher has dispatched at least this many batches.
+    Batches(u64),
+    /// Once this many seconds have elapsed since the serving window opened.
+    ElapsedSecs(f64),
+}
+
+impl fmt::Display for FaultTrigger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultTrigger::Batches(n) => write!(f, "b{n}"),
+            FaultTrigger::ElapsedSecs(s) => write!(f, "t{s}"),
+        }
+    }
+}
+
+/// One scheduled fault: an action armed by a trigger.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// What happens when the trigger condition is met.
+    pub action: FaultAction,
+    /// The condition that arms the action.
+    pub trigger: FaultTrigger,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.action, self.trigger)
+    }
+}
+
+/// An ordered, deterministic schedule of fault events.
+///
+/// Events fire in spec order among those simultaneously due, so
+/// `kill-shard:1@b8,kill-worker:0@b8` always kills the shard first.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults — the default serving behavior).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style append, for tests and programmatic schedules.
+    pub fn with(mut self, action: FaultAction, trigger: FaultTrigger) -> Self {
+        self.events.push(FaultEvent { action, trigger });
+        self
+    }
+
+    /// True when no events remain (either empty spec or all fired).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of events still pending.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The pending events, in spec order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Parse a `--faults` spec (see module docs for the grammar).
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut events = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (head, trig) = part
+                .split_once('@')
+                .with_context(|| format!("fault event '{part}': expected ACTION:ID@TRIGGER"))?;
+            let (action_name, id) = head
+                .split_once(':')
+                .with_context(|| format!("fault event '{part}': expected ACTION:ID@TRIGGER"))?;
+            let id: usize = id
+                .parse()
+                .with_context(|| format!("fault event '{part}': bad target id '{id}'"))?;
+            let action = match action_name {
+                "kill-worker" => FaultAction::KillWorker(id),
+                "restart-worker" => FaultAction::RestartWorker(id),
+                "kill-shard" => FaultAction::KillShard(id),
+                "restart-shard" => FaultAction::RestartShard(id),
+                other => bail!(
+                    "fault event '{part}': unknown action '{other}' (expected kill-worker, \
+                     restart-worker, kill-shard, or restart-shard)"
+                ),
+            };
+            let trigger = match trig.split_at(trig.len().min(1)) {
+                ("b", n) => FaultTrigger::Batches(
+                    n.parse()
+                        .with_context(|| format!("fault event '{part}': bad batch count '{n}'"))?,
+                ),
+                ("t", s) => {
+                    let secs: f64 = s.parse().with_context(|| {
+                        format!("fault event '{part}': bad elapsed seconds '{s}'")
+                    })?;
+                    if !secs.is_finite() || secs < 0.0 {
+                        bail!("fault event '{part}': elapsed seconds must be finite and >= 0");
+                    }
+                    FaultTrigger::ElapsedSecs(secs)
+                }
+                _ => bail!(
+                    "fault event '{part}': bad trigger '{trig}' (expected b<batches> or t<secs>)"
+                ),
+            };
+            events.push(FaultEvent { action, trigger });
+        }
+        if events.is_empty() {
+            bail!("fault spec '{spec}': no events");
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Remove and return every event whose trigger is satisfied at the
+    /// given progress point, preserving spec order. The dispatcher calls
+    /// this once per loop iteration.
+    pub fn take_due(&mut self, batches_dispatched: u64, elapsed_s: f64) -> Vec<FaultEvent> {
+        let mut due = Vec::new();
+        self.events.retain(|e| {
+            let fire = match e.trigger {
+                FaultTrigger::Batches(n) => batches_dispatched >= n,
+                FaultTrigger::ElapsedSecs(t) => elapsed_s >= t,
+            };
+            if fire {
+                due.push(*e);
+            }
+            !fire
+        });
+        due
+    }
+
+    /// Earliest pending elapsed-time trigger, if any — lets the
+    /// dispatcher bound its receive timeout so time-armed faults fire
+    /// promptly even on an idle channel.
+    pub fn next_elapsed_trigger(&self) -> Option<f64> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.trigger {
+                FaultTrigger::ElapsedSecs(t) => Some(t),
+                FaultTrigger::Batches(_) => None,
+            })
+            .min_by(|a, b| a.partial_cmp(b).expect("finite by parse validation"))
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{e}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar_and_round_trips() {
+        let spec = "kill-shard:1@b8,restart-shard:1@b24,kill-worker:0@t0.5,restart-worker:0@t1";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.len(), 4);
+        assert_eq!(
+            plan.events()[0],
+            FaultEvent {
+                action: FaultAction::KillShard(1),
+                trigger: FaultTrigger::Batches(8),
+            }
+        );
+        assert_eq!(
+            plan.events()[2],
+            FaultEvent {
+                action: FaultAction::KillWorker(0),
+                trigger: FaultTrigger::ElapsedSecs(0.5),
+            }
+        );
+        // Round-trip through Display re-parses to the same plan.
+        let echoed = FaultPlan::parse(&plan.to_string()).unwrap();
+        assert_eq!(echoed, plan);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "kill-worker:0",         // no trigger
+            "kill-worker@b3",        // no id
+            "explode:0@b3",          // unknown action
+            "kill-worker:x@b3",      // bad id
+            "kill-worker:0@3",       // bare trigger number
+            "kill-worker:0@bx",      // bad batch count
+            "kill-worker:0@t-1",     // negative elapsed
+            "kill-worker:0@tnan",    // non-finite elapsed
+            "kill-shard:1@q9",       // unknown trigger kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted bad spec {bad:?}");
+        }
+    }
+
+    #[test]
+    fn take_due_fires_in_spec_order_and_retains_the_rest() {
+        let mut plan =
+            FaultPlan::parse("restart-shard:1@b10,kill-shard:1@b2,kill-worker:0@t0.25").unwrap();
+        assert!(plan.take_due(1, 0.0).is_empty());
+        let due = plan.take_due(5, 0.3);
+        assert_eq!(due.len(), 2);
+        // Spec order among simultaneously due events, not trigger order.
+        assert_eq!(due[0].action, FaultAction::KillShard(1));
+        assert_eq!(due[1].action, FaultAction::KillWorker(0));
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.next_elapsed_trigger(), None);
+        let rest = plan.take_due(10, 0.3);
+        assert_eq!(rest.len(), 1);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn next_elapsed_trigger_reports_the_earliest_pending_time() {
+        let plan = FaultPlan::parse("kill-worker:0@t2,kill-shard:1@t0.5,restart-shard:1@b9")
+            .unwrap();
+        assert_eq!(plan.next_elapsed_trigger(), Some(0.5));
+    }
+}

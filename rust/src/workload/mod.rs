@@ -4,11 +4,13 @@
 //! model identity drawn from the Fig-1 fleet shares).
 
 mod arrivals;
+mod faults;
 mod query;
 mod sparse_gen;
 mod traffic_mix;
 
 pub use arrivals::PoissonArrivals;
+pub use faults::{FaultAction, FaultEvent, FaultPlan, FaultTrigger};
 pub use query::{Query, QueryResult};
 pub use sparse_gen::{unique_fraction, IdDistribution, SparseIdGen};
 pub use traffic_mix::{QueryStream, TenantSpec, TrafficMix};

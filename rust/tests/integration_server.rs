@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use recsys::coordinator::{Coordinator, MockBackend, ServerBuilder, Ticket, TicketOutcome};
 use recsys::runtime::ExecOptions;
-use recsys::workload::{PoissonArrivals, Query, TrafficMix};
+use recsys::workload::{FaultPlan, PoissonArrivals, Query, TrafficMix};
 
 /// The query set both multi-client determinism runs submit: two tenants,
 /// ids 0..n (ids are the determinism key — CTRs derive from id seeds).
@@ -232,6 +232,60 @@ fn run_open_loop_is_a_client_of_the_session_api() {
     let batches: u64 = harness.bucket_histogram.iter().map(|(_, n)| *n).sum();
     assert_eq!(batches, 80, "one histogram entry per completed query");
     assert!(harness.qps_offered > 0.0 && harness.qps_offered.is_finite());
+}
+
+#[test]
+fn worker_kill_midrun_retries_and_stays_bitwise() {
+    // Fault-injected serving (ISSUE 7): killing a worker mid-run must
+    // not lose queries or change numerics. A 2-worker native server has
+    // worker 0 killed (and respawned) after the third dispatched batch;
+    // every in-flight/queued batch on the dead worker resolves as a
+    // failure event, the supervisor re-dispatches those queries to the
+    // surviving fleet, and every ticket still completes with CTRs
+    // bitwise-identical to a fault-free run of the same query set —
+    // batch composition (including retry singletons) is scheduling,
+    // never numerics.
+    let n = 48;
+    let baseline_server = native_server(2);
+    let baseline = run_clients(&baseline_server, session_queries(n), 1);
+    let _ = baseline_server.shutdown();
+
+    let faulted_server = ServerBuilder::new()
+        .mix(TrafficMix::parse("rmc1-small:0.7,rmc2-small:0.3").unwrap())
+        .workers(2)
+        .routing("least-loaded")
+        .sla_ms(500.0)
+        .native(ExecOptions::default())
+        .faults(FaultPlan::parse("kill-worker:0@b3,restart-worker:0@b3").unwrap())
+        .build()
+        .unwrap();
+    let faulted = run_clients(&faulted_server, session_queries(n), 2);
+    let report = faulted_server.shutdown().expect("report");
+
+    assert_eq!(faulted.len(), n);
+    for (id, (tenant, ctrs)) in &baseline {
+        let (f_tenant, f_ctrs) = &faulted[id];
+        assert_eq!(tenant, f_tenant, "query {id} routed to a different tenant under faults");
+        assert_eq!(ctrs, f_ctrs, "query {id}: CTRs diverge from the fault-free run");
+        assert!(!ctrs.is_empty());
+    }
+
+    assert_eq!(report.worker_deaths, 1, "the injected kill is counted");
+    assert_eq!(report.worker_restarts, 1);
+    assert!(
+        report.queries_retried > 0,
+        "the killed worker's queued batches must be re-dispatched, not silently absorbed"
+    );
+    assert_eq!(report.queries_failed, 0, "retries absorb the kill; nothing exhausts its budget");
+    assert_eq!(report.queries, n as u64);
+    assert_eq!(report.queries_shed, 0);
+    assert_eq!(
+        report.queries_offered,
+        report.queries + report.queries_shed + report.queries_failed,
+        "degraded accounting identity"
+    );
+    assert!(!report.incomplete, "a killed-and-respawned worker is not incompleteness");
+    assert!(report.degraded_duration_s >= 0.0);
 }
 
 #[test]

@@ -86,6 +86,7 @@ fn prop_router_picks_eligible_worker() {
             .collect();
         let outstanding: Vec<usize> =
             (0..n_workers).map(|_| usize_in(rng, 0, 5)).collect();
+        let alive: Vec<bool> = (0..n_workers).map(|_| rng.gen_bool(0.8)).collect();
         let policy = *pick(
             rng,
             &[RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded, RoutingPolicy::Heterogeneity],
@@ -93,16 +94,16 @@ fn prop_router_picks_eligible_worker() {
         let model = *pick(rng, &["special", "other"]);
         let bucket = *pick(rng, &[1usize, 8, 32, 128]);
         let mut rr = usize_in(rng, 0, 100);
-        match policy.pick(&workers, model, bucket, &outstanding, &mut rr) {
+        match policy.pick(&workers, model, bucket, &outstanding, &alive, &mut rr) {
             Some(id) => {
                 let w = &workers[id];
+                assert!(alive[id], "picked a dead worker");
                 assert!(w.models.is_empty() || w.models.iter().any(|m| m == model));
             }
             None => {
-                // Only legal if nobody serves the model.
-                assert!(workers
-                    .iter()
-                    .all(|w| !w.models.is_empty() && !w.models.iter().any(|m| m == model)));
+                // Only legal if nobody alive serves the model.
+                assert!(workers.iter().all(|w| !alive[w.id]
+                    || (!w.models.is_empty() && !w.models.iter().any(|m| m == model))));
             }
         }
     });
@@ -583,6 +584,81 @@ fn prop_placement_conformance_bitwise_across_presets() {
                 );
             }
         }
+    });
+}
+
+// ------------------------------------------------------------ faults --
+#[test]
+fn prop_replica_failover_bitwise() {
+    // The ISSUE 7 failover contract: when every table is replicated on
+    // at least two shards, killing ANY single shard must not change a
+    // single bit of the output — replicated reads silently fail over to
+    // a surviving replica, cache on or off, and a restart returns the
+    // service to full health with the same bits. Random shard counts,
+    // random replica subsets, random victim.
+    use recsys::runtime::{Placement, TablePlacement};
+
+    let cfg = recsys::config::rmc1_small();
+    let single = NativeModel::new(&cfg, 29);
+    let mut arena = ScratchArena::new();
+    check("replica-failover", 8, |rng, _| {
+        let shards = usize_in(rng, 2, 4);
+        let tables = (0..cfg.num_tables)
+            .map(|_| {
+                let mut reps: Vec<usize> = (0..shards).filter(|_| rng.gen_bool(0.6)).collect();
+                while reps.len() < 2 {
+                    let s = usize_in(rng, 0, shards - 1);
+                    if !reps.contains(&s) {
+                        reps.push(s);
+                    }
+                }
+                reps.sort_unstable();
+                TablePlacement::Replicated(reps)
+            })
+            .collect();
+        let plan = Placement { shards, tables };
+        let cache_rows = *pick(rng, &[0.0f64, 0.08]);
+        let svc = ShardedEmbeddingService::with_plan(
+            &cfg,
+            29,
+            ExecOptions { cache_rows, ..Default::default() },
+            plan,
+        )
+        .unwrap();
+        let victim = usize_in(rng, 0, shards - 1);
+
+        let batches: Vec<_> = [1usize, 6].iter().map(|&b| rmc_inputs(&cfg, b)).collect();
+        // Healthy baseline: conforms to single-node (and warms the cache
+        // so the kill exercises cached + failover paths together).
+        for (dense, ids, lwts) in &batches {
+            let want = single.run_rmc(dense, ids, lwts).unwrap();
+            let got = svc.run_rmc_into(&mut arena, dense, ids, lwts).unwrap();
+            assert_eq!(want.as_slice(), got, "healthy run diverged (shards={shards})");
+        }
+
+        assert!(svc.kill_shard(victim), "first kill of a live shard applies");
+        assert!(!svc.kill_shard(victim), "killing a dead shard is a no-op");
+        assert_eq!(svc.stats().shards_alive, shards - 1);
+        for (dense, ids, lwts) in &batches {
+            let want = single.run_rmc(dense, ids, lwts).unwrap();
+            let got = svc.run_rmc_into(&mut arena, dense, ids, lwts).unwrap();
+            assert_eq!(
+                want.as_slice(),
+                got,
+                "failover run diverged (shards={shards} victim={victim} cache={cache_rows})"
+            );
+        }
+
+        assert!(svc.restart_shard(victim).unwrap(), "restart re-materializes the victim");
+        assert_eq!(svc.stats().shards_alive, shards);
+        for (dense, ids, lwts) in &batches {
+            let want = single.run_rmc(dense, ids, lwts).unwrap();
+            let got = svc.run_rmc_into(&mut arena, dense, ids, lwts).unwrap();
+            assert_eq!(want.as_slice(), got, "post-restart run diverged (shards={shards})");
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.shard_deaths, 1);
+        assert_eq!(stats.shard_restarts, 1);
     });
 }
 
