@@ -1,7 +1,9 @@
 //! L3 hot-path micro-benchmarks + perf-trajectory tracker: both native
 //! engines (reference baseline vs optimized packed/parallel) across
 //! models, batches, and thread counts, with op-level timing (SLS GB/s,
-//! FC GFLOP/s), plus batcher/router/marshal micro-sections and the PJRT
+//! FC GFLOP/s), a dtype x simd sweep (f32/f16/int8 rows, AVX2 forced
+//! off vs auto — effective and physical SLS bandwidth plus bytes per
+//! lookup), plus batcher/router/marshal micro-sections and the PJRT
 //! path when built with that feature.
 //!
 //! Emits machine-readable `BENCH_runtime_hotpath.json` (see
@@ -17,8 +19,8 @@ use std::time::{Duration, Instant};
 
 use recsys::coordinator::{DynamicBatcher, RoutingPolicy, WorkerInfo};
 use recsys::runtime::{
-    golden_dense, golden_ids, golden_lwts, Engine, EngineKind, ExecOptions, ForwardStats,
-    NativePool, ScratchArena,
+    golden_dense, golden_ids, golden_lwts, set_simd_enabled, simd_available, Engine, EngineKind,
+    ExecOptions, ForwardStats, NativeModel, NativePool, ScratchArena, TableDtype,
 };
 use recsys::util::bench::{bench, header, BenchStats};
 use recsys::util::json::{num, obj};
@@ -156,6 +158,104 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- dtype x simd sweep (quantized rows + AVX2 kernels) ----------
+    // The optimized engine at the summary batch, each table dtype, SIMD
+    // force-disabled vs auto (skipped when the host lacks AVX2): the
+    // effective-GB/s axis prices every dtype at f32 bytes, so a
+    // quantized row that finishes the same gather sooner reads as more
+    // effective bandwidth — the paper's int8 argument, measured.
+    struct DtMeasured {
+        model: String,
+        dtype: &'static str,
+        simd: bool,
+        threads: usize,
+        sls_eff_gbps: f64,
+    }
+    let mut dt_results: Vec<Json> = Vec::new();
+    let mut dt_measured: Vec<DtMeasured> = Vec::new();
+    let dt_batch = if smoke { 8 } else { 64 };
+    let simd_arms: &[bool] = if simd_available() { &[false, true] } else { &[false] };
+    if !simd_available() {
+        println!("(AVX2/FMA/F16C not detected — dtype sweep runs scalar arms only)");
+    }
+    for model in ["rmc1-small", "rmc2-small"] {
+        for dtype in [TableDtype::F32, TableDtype::F16, TableDtype::Int8] {
+            let m = NativeModel::from_name_dtype(model, 0, dtype)?;
+            let cfg = m.cfg();
+            let dense = golden_dense(dt_batch, cfg.dense_dim);
+            let ids = golden_ids(cfg.num_tables, dt_batch, cfg.lookups, m.rows());
+            let lwts = golden_lwts(cfg.num_tables, dt_batch, cfg.lookups);
+            for &simd in simd_arms {
+                for threads in [1usize, 4] {
+                    let prev = set_simd_enabled(simd);
+                    let engine = Engine::new(ExecOptions { threads, dtype, ..Default::default() });
+                    let mut arena = ScratchArena::new();
+                    let mut discard = ForwardStats::default();
+                    for _ in 0..if smoke { 1 } else { 2 } {
+                        m.run_rmc_timed(&engine, &mut arena, &dense, &ids, &lwts, &mut discard)
+                            .unwrap();
+                    }
+                    let iters = if smoke { 3 } else { 20 };
+                    let mut stats = ForwardStats::default();
+                    let s = bench(
+                        &format!(
+                            "native {model} b{dt_batch} {} simd={} t{threads}",
+                            dtype.name(),
+                            if simd { "on" } else { "off" }
+                        ),
+                        0,
+                        iters,
+                        || {
+                            let out = m
+                                .run_rmc_timed(
+                                    &engine, &mut arena, &dense, &ids, &lwts, &mut stats,
+                                )
+                                .unwrap();
+                            assert_eq!(out.len(), dt_batch);
+                        },
+                    );
+                    set_simd_enabled(prev);
+                    let runs = iters as f64;
+                    let sls_ns = stats.sls_ns / runs;
+                    let fc_ns = (stats.bottom_ns + stats.top_ns) / runs;
+                    let fc_gflops = m.fc_flops(dt_batch) as f64 / fc_ns.max(1.0);
+                    let sls_eff_gbps = m.sls_traffic_bytes(&lwts) as f64 / sls_ns.max(1.0);
+                    let sls_phys_gbps = m.sls_physical_bytes(&lwts) as f64 / sls_ns.max(1.0);
+                    println!(
+                        "{}   (fc {:.2} GF/s, sls {:.2} eff GB/s, {:.2} phys GB/s, {} B/row)",
+                        s.report(),
+                        fc_gflops,
+                        sls_eff_gbps,
+                        sls_phys_gbps,
+                        m.row_phys_bytes()
+                    );
+                    dt_results.push(obj(vec![
+                        ("model", Json::Str(model.into())),
+                        ("batch", num(dt_batch as f64)),
+                        ("engine", Json::Str("optimized".into())),
+                        ("dtype", Json::Str(dtype.name().into())),
+                        ("simd", Json::Bool(simd)),
+                        ("threads", num(threads as f64)),
+                        ("bench", s.to_json()),
+                        ("sls_ns", num(sls_ns.round())),
+                        ("fc_ns", num(fc_ns.round())),
+                        ("fc_gflops", num(fc_gflops)),
+                        ("sls_effective_gbps", num(sls_eff_gbps)),
+                        ("sls_physical_gbps", num(sls_phys_gbps)),
+                        ("bytes_per_lookup", num(m.row_phys_bytes() as f64)),
+                    ]));
+                    dt_measured.push(DtMeasured {
+                        model: model.into(),
+                        dtype: dtype.name(),
+                        simd,
+                        threads,
+                        sls_eff_gbps,
+                    });
+                }
+            }
+        }
+    }
+
     // Cross-engine summary: single-thread speedup (packing + blocking,
     // no parallelism) and SLS thread scaling — the two acceptance axes.
     let mut summary: Vec<(&str, Json)> = Vec::new();
@@ -182,6 +282,31 @@ fn main() -> anyhow::Result<()> {
         summary.push(("rmc2_sls_scaling_t4", num(o1.sls_ns / o4.sls_ns.max(1.0))));
     }
     summary.push(("summary_batch", num(sum_batch as f64)));
+    // Quantization acceptance axis: int8 (and f16) effective SLS GB/s
+    // over the f32 optimized engine, same thread count, default SIMD
+    // state for the host (on when detected).
+    let simd_default = simd_available();
+    let dt_find = |dtype: &str, threads: usize| {
+        dt_measured.iter().find(|e| {
+            e.model == "rmc2-small"
+                && e.dtype == dtype
+                && e.simd == simd_default
+                && e.threads == threads
+        })
+    };
+    if let (Some(f32e), Some(f16e), Some(i8e)) =
+        (dt_find("f32", 4), dt_find("f16", 4), dt_find("int8", 4))
+    {
+        summary.push((
+            "rmc2_int8_sls_effective_gbps_ratio_t4",
+            num(i8e.sls_eff_gbps / f32e.sls_eff_gbps.max(1e-9)),
+        ));
+        summary.push((
+            "rmc2_f16_sls_effective_gbps_ratio_t4",
+            num(f16e.sls_eff_gbps / f32e.sls_eff_gbps.max(1e-9)),
+        ));
+    }
+    summary.push(("simd_available", Json::Bool(simd_default)));
 
     pjrt_section()?;
 
@@ -226,7 +351,7 @@ fn main() -> anyhow::Result<()> {
     micro.push(marshal_bench(smoke).to_json());
 
     let doc = obj(vec![
-        ("schema", Json::Str("bench_runtime_hotpath/v1".into())),
+        ("schema", Json::Str("bench_runtime_hotpath/v2".into())),
         ("smoke", Json::Bool(smoke)),
         (
             "host",
@@ -236,6 +361,7 @@ fn main() -> anyhow::Result<()> {
             )]),
         ),
         ("results", Json::Arr(results)),
+        ("dtype_results", Json::Arr(dt_results)),
         ("summary", obj(summary)),
         ("micro", Json::Arr(micro)),
     ]);

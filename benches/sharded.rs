@@ -11,6 +11,14 @@
 //! `NativeModel::run_rmc` before timing (the determinism contract is a
 //! precondition of the numbers being comparable at all).
 //!
+//! A dtype arm (f32/f16/int8 rows) re-runs the sharded service per row
+//! encoding: each dtype must stay bitwise equal to its own single-node
+//! model, shard footprints must shrink by exactly the encoded row
+//! size, and a fixed per-shard byte budget — sized below the f32
+//! footprint — shows the capacity win at the `PlacementPlanner` level
+//! (the f32 plan is rejected, the quantized plans fit, and more rows
+//! are resident per shard at the same budget).
+//!
 //! Emits machine-readable `BENCH_sharded.json` (see EXPERIMENTS.md
 //! §Sharded scale-out sweep for the schema and runbook).
 //!
@@ -22,7 +30,10 @@
 use std::time::Instant;
 
 use recsys::config::RmcConfig;
-use recsys::runtime::{ExecOptions, NativeModel, ScratchArena, ShardedEmbeddingService};
+use recsys::runtime::{
+    ExecOptions, NativeModel, PlacementMode, PlacementPlanner, ScratchArena,
+    ShardedEmbeddingService, TableDtype,
+};
 use recsys::simulator::embedding_cache::simulate_row_cache_batched;
 use recsys::util::json::{num, obj};
 use recsys::util::Json;
@@ -250,8 +261,86 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- dtype arm: quantized rows as a capacity lever -----------------
+    // Same preset, same golden inputs, swept over row encodings. The
+    // per-shard byte budget is fixed at 60% of the f32 footprint: the
+    // f32 plan must be rejected by the planner while the quantized
+    // plans fit, and rows-resident-per-shard at that budget scales as
+    // 1/row_bytes — the placement-level statement of "quantization
+    // grows effective capacity per shard".
+    let dt_shards = if smoke { 2 } else { 4 };
+    let dt_iters = if smoke { 2 } else { 10 };
+    let ids_dt = recsys::runtime::golden_ids(cfg.num_tables, load.batch, cfg.lookups, rows);
+    let f32_total_bytes = cfg.num_tables * rows * TableDtype::F32.row_bytes(cfg.emb_dim);
+    let budget_per_shard = f32_total_bytes * 6 / 10 / dt_shards;
+    let mut dtype_results: Vec<Json> = Vec::new();
+    println!("\ndtype arm: {dt_shards} shards, {budget_per_shard} B/shard budget");
+    for dtype in [TableDtype::F32, TableDtype::F16, TableDtype::Int8] {
+        let row_bytes = dtype.row_bytes(cfg.emb_dim);
+        let single_dt = NativeModel::with_dtype(&cfg, SEED, dtype);
+        let svc = ShardedEmbeddingService::new(
+            &cfg,
+            SEED,
+            ExecOptions { shards: dt_shards, dtype, ..Default::default() },
+        )?;
+        let mut arena = ScratchArena::new();
+        let got = svc.run_rmc_into(&mut arena, &dense, &ids_dt, &lwts)?.to_vec();
+        let want = single_dt.run_rmc(&dense, &ids_dt, &lwts)?;
+        assert_eq!(
+            want,
+            got,
+            "{} sharded output diverged from its single-node model",
+            dtype.name()
+        );
+        let t0 = Instant::now();
+        for _ in 0..dt_iters {
+            svc.run_rmc_into(&mut arena, &dense, &ids_dt, &lwts)?;
+        }
+        let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / dt_iters as f64;
+        let resident_bytes: usize = svc.shard_bytes().iter().sum();
+        assert_eq!(
+            resident_bytes,
+            cfg.num_tables * rows * row_bytes,
+            "{} shard footprints disagree with the encoded row size",
+            dtype.name()
+        );
+        let mut planner = PlacementPlanner::new(dt_shards, PlacementMode::Rows, 0.0);
+        planner.capacity_bytes = Some(budget_per_shard);
+        let plan_fits = planner.plan(cfg.num_tables, rows, row_bytes, &[]).is_ok();
+        assert_eq!(
+            plan_fits,
+            dtype != TableDtype::F32,
+            "{} plan feasibility under the fixed budget is wrong",
+            dtype.name()
+        );
+        let rows_per_shard_at_budget = budget_per_shard / row_bytes;
+        println!(
+            "{:<5} row_bytes={:<3} resident={:>9} B plan_fits={:<5} \
+             rows/shard@budget={:>7} | {:>7.3} ms/iter",
+            dtype.name(),
+            row_bytes,
+            resident_bytes,
+            plan_fits,
+            rows_per_shard_at_budget,
+            mean_ms
+        );
+        dtype_results.push(obj(vec![
+            ("model", Json::Str(load.model.into())),
+            ("dtype", Json::Str(dtype.name().into())),
+            ("shards", num(dt_shards as f64)),
+            ("row_bytes", num(row_bytes as f64)),
+            ("resident_bytes", num(resident_bytes as f64)),
+            ("bytes_ratio_vs_f32", num(resident_bytes as f64 / f32_total_bytes as f64)),
+            ("budget_per_shard_bytes", num(budget_per_shard as f64)),
+            ("plan_fits_budget", Json::Bool(plan_fits)),
+            ("rows_per_shard_at_budget", num(rows_per_shard_at_budget as f64)),
+            ("mean_ms", num(mean_ms)),
+            ("conformance_ok", Json::Bool(true)),
+        ]));
+    }
+
     let doc = obj(vec![
-        ("schema", Json::Str("bench_sharded/v1".into())),
+        ("schema", Json::Str("bench_sharded/v2".into())),
         ("smoke", Json::Bool(smoke)),
         (
             "config",
@@ -275,6 +364,7 @@ fn main() -> anyhow::Result<()> {
             )]),
         ),
         ("results", Json::Arr(results)),
+        ("dtype_results", Json::Arr(dtype_results)),
         (
             "summary",
             obj(vec![

@@ -148,7 +148,10 @@ impl NativeBackend {
     /// the native pool otherwise. Models outside the list still build
     /// lazily on first request.
     pub fn for_models(models: &[String], opts: ExecOptions) -> anyhow::Result<Arc<NativeBackend>> {
-        let backend = Arc::new(NativeBackend::with_options(Arc::new(NativePool::new(0)), opts));
+        let backend = Arc::new(NativeBackend::with_options(
+            Arc::new(NativePool::with_dtype(0, opts.dtype)),
+            opts,
+        ));
         for model in models {
             backend.preload(model)?;
         }
@@ -190,7 +193,7 @@ impl NativeBackend {
             return Ok(svc.clone());
         }
         let svc = Arc::new(ShardedEmbeddingService::from_model_with_engine(
-            NativeModel::from_name(model, self.pool.seed())?,
+            NativeModel::from_name_dtype(model, self.pool.seed(), self.opts.dtype)?,
             self.pool.seed(),
             self.opts,
             self.engine.clone(),

@@ -8,6 +8,7 @@
 //!                [--json out.json]
 //!                [--impl native|xla|pallas] [--threads N]
 //!                [--engine optimized|reference]
+//!                [--dtype f32|f16|int8]
 //!                [--shards N] [--cache-rows F]
 //!                [--placement whole|rows|auto] [--replicate-hot F]
 //!                [--inflight-cap N] [--drain-deadline-s F]
@@ -48,6 +49,15 @@
 //!                                       per core); --engine reference
 //!                                       serves on the naive baseline
 //!                                       kernels for A/B comparison.
+//!                                       --dtype stores embedding
+//!                                       tables as f32 (default), f16,
+//!                                       or int8 (per-row scale/bias),
+//!                                       dequantized inside the SLS
+//!                                       kernels — quantized rows flow
+//!                                       end-to-end through shards,
+//!                                       replicas, and the row cache,
+//!                                       shrinking bytes per lookup and
+//!                                       bytes per shard.
 //!                                       --shards N serves through the
 //!                                       real table-sharded embedding
 //!                                       service (per-shard executors
@@ -112,7 +122,7 @@ use std::sync::Arc;
 use recsys::config::{DeploymentConfig, ServerGen, ServerSpec};
 use recsys::coordinator::{Backend, Coordinator, ServerBuilder};
 use recsys::model::ModelGraph;
-use recsys::runtime::{EngineKind, ExecOptions, PlacementMode};
+use recsys::runtime::{EngineKind, ExecOptions, PlacementMode, TableDtype};
 use recsys::simulator::MachineSim;
 use recsys::workload::{FaultPlan, PoissonArrivals, Query, SparseIdGen, TrafficMix};
 
@@ -256,8 +266,9 @@ fn builder_with_backend(
     match impl_ {
         "native" => {
             println!(
-                "initializing native {models:?} (deterministic params, engine {}, {} thread(s){}) ...",
+                "initializing native {models:?} (deterministic params, engine {}, dtype {}, {} thread(s){}) ...",
                 opts.engine.name(),
+                opts.dtype.name(),
                 if opts.threads == 0 { "auto".to_string() } else { opts.threads.to_string() },
                 if opts.sharded() {
                     format!(
@@ -332,9 +343,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let impl_ = flags.get("impl").cloned().unwrap_or_else(|| "native".into());
     let threads: usize = flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let engine = match flags.get("engine") {
-        Some(s) => EngineKind::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown --engine '{s}' (optimized|reference)"))?,
+        Some(s) => EngineKind::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --engine '{s}' (expected optimized or reference)")
+        })?,
         None => EngineKind::Optimized,
+    };
+    let dtype = match flags.get("dtype") {
+        Some(s) => TableDtype::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --dtype '{s}' (expected f32, f16 or int8)")
+        })?,
+        None => TableDtype::F32,
     };
     let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let cache_rows: f64 =
@@ -352,20 +370,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         (0.0..=1.0).contains(&cache_rows),
         "--cache-rows is a fraction of table rows in [0, 1] (got {cache_rows})"
     );
-    // --threads / --engine / --shards / --cache-rows / --placement /
-    // --replicate-hot configure the native execution engine only;
-    // silently ignoring them on the PJRT path would corrupt A/B numbers.
+    // --threads / --engine / --dtype / --shards / --cache-rows /
+    // --placement / --replicate-hot configure the native execution
+    // engine only; silently ignoring them on the PJRT path would
+    // corrupt A/B numbers.
     let placement_flags = placement != PlacementMode::Whole || replicate_hot != 0.0;
     if impl_ != "native"
         && (threads != 1
             || engine != EngineKind::Optimized
+            || dtype != TableDtype::F32
             || shards != 1
             || cache_rows != 0.0
             || placement_flags)
     {
         anyhow::bail!(
-            "--threads/--engine/--shards/--cache-rows/--placement/--replicate-hot apply \
-             to --impl native only (got --impl {impl_}); the PJRT path executes AOT \
+            "--threads/--engine/--dtype/--shards/--cache-rows/--placement/--replicate-hot \
+             apply to --impl native only (got --impl {impl_}); the PJRT path executes AOT \
              artifacts as compiled"
         );
     }
@@ -410,7 +430,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(spec) => TrafficMix::parse(spec)?,
         None => TrafficMix::single(&model, items),
     };
-    let opts = ExecOptions { threads, engine, shards, cache_rows, placement, replicate_hot };
+    let opts =
+        ExecOptions { threads, engine, dtype, shards, cache_rows, placement, replicate_hot };
     opts.validate()?;
 
     // All flag plumbing lands on the one validated builder surface.

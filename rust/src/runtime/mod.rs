@@ -5,6 +5,10 @@
 //!   from the model presets. Self-contained: no artifacts, no toolchain.
 //!   Two engines: `reference` (naive scalar baseline) and `optimized`
 //!   (packed-weight GEMM + scratch arenas + intra-op thread pool).
+//! * `simd` — runtime-detected AVX2 variants of the GEMM and SLS
+//!   kernels, bit-identical to the scalar optimized path by
+//!   construction (unfused mul + add, same order); embedding tables can
+//!   be stored quantized (`TableDtype`: f32/f16/int8 rows).
 //! * `parallel` — the crate-internal worker thread pool (std-only rayon
 //!   stand-in) the optimized engine shards operators over.
 //! * `sharded` — the scale-out topology: placement-driven SLS across
@@ -37,6 +41,7 @@ mod placement;
 mod pool;
 mod row_cache;
 mod sharded;
+mod simd;
 
 pub use artifacts::{InputSpec, Manifest, ParamSpec, VariantSpec};
 #[cfg(feature = "pjrt")]
@@ -44,7 +49,8 @@ pub use executor::{CompiledModel, PjrtRuntime};
 pub use golden::{golden_dense, golden_ids, golden_lwts, golden_ncf_ids};
 pub use native::{
     fc_layer, fc_layer_checked, sigmoid, sls_gather_sum, DenseLayer, Engine, EngineKind,
-    ExecOptions, ForwardStats, NativeModel, NativePool, PackedLayer, ScratchArena,
+    ExecOptions, ForwardStats, NativeModel, NativePool, PackedLayer, ScratchArena, TableDtype,
+    TableRows,
 };
 pub use parallel::{shard_range, ThreadPool};
 pub use placement::{
@@ -56,6 +62,7 @@ pub use row_cache::{row_key, EmbeddingCache};
 pub use sharded::{
     ShardUnavailable, ShardedEmbeddingService, ShardedStats, AUTO_REPLAN_AFTER_BATCHES,
 };
+pub use simd::{set_simd_enabled, simd_available, simd_enabled};
 
 /// Default artifacts directory relative to the crate root.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

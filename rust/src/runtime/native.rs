@@ -23,6 +23,15 @@
 //! summation order (reference folds the bias in first), so they agree
 //! closely (tested to 1e-4 absolute on CTRs) but not bitwise.
 //!
+//! Embedding tables are stored dtype-encoded (`TableDtype`: f32, f16,
+//! or int8 with a per-row scale/bias header) and dequantized inside the
+//! SLS kernels — quantized bytes are what flows through shards,
+//! replicas, and the row cache, so capacity and bandwidth shrink with
+//! the dtype (Park et al., arXiv 1811.09886). `runtime::simd` provides
+//! AVX2 variants of the GEMM and SLS kernels that are bit-identical to
+//! the scalar optimized path by construction (unfused mul + add in the
+//! same order), selected by runtime feature detection.
+//!
 //! Parameters are deterministically initialized from the model presets
 //! at `pjrt_rows` scale, so a fresh clone runs every serving experiment
 //! end-to-end. With the `pjrt` feature the PJRT runtime executes the
@@ -170,18 +179,301 @@ pub fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-/// The SLS inner accumulation step — `acc += w * row`, ascending
-/// element order — shared by every pooled-reduction site on the
-/// optimized path: single-node tiles (`sls_tiles`), shard executors,
-/// and the leader's cache-path pooling (`runtime::sharded`). Keeping
-/// all three loops on this one function makes the bitwise determinism
-/// contract structural: reassociating this sum (SIMD, FMA, unrolling)
-/// would break sharded-vs-single-node bit-identity everywhere at once,
-/// not silently in one copy.
-#[inline(always)]
-pub(crate) fn sls_axpy(acc: &mut [f32], w: f32, row: &[f32]) {
-    for (a, &rv) in acc.iter_mut().zip(row) {
-        *a += w * rv;
+// ===================================================================
+// Embedding-table storage dtypes: f32 / f16 / int8 encoded rows.
+// ===================================================================
+
+/// Storage dtype of embedding-table rows (`serve --dtype f32|f16|int8`).
+/// The dense MLP stack always computes in f32; the dtype governs how
+/// table rows are *stored* and therefore how many bytes every gather
+/// streams from DRAM — the paper's memory-bound axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TableDtype {
+    /// 4 bytes/element, bit-exact (the historical layout).
+    F32,
+    /// IEEE 754 binary16, 2 bytes/element (round-to-nearest-even on
+    /// encode; decode is exact).
+    F16,
+    /// Per-row asymmetric uint8 (Park et al., arXiv 1811.09886): an
+    /// 8-byte `[scale: f32 LE][bias: f32 LE]` header then one quantized
+    /// byte per element; dequant is `q * scale + bias`.
+    Int8,
+}
+
+impl TableDtype {
+    pub fn parse(s: &str) -> Option<TableDtype> {
+        match s {
+            "f32" | "fp32" | "float32" => Some(TableDtype::F32),
+            "f16" | "fp16" | "half" => Some(TableDtype::F16),
+            "int8" | "i8" | "uint8" => Some(TableDtype::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TableDtype::F32 => "f32",
+            TableDtype::F16 => "f16",
+            TableDtype::Int8 => "int8",
+        }
+    }
+
+    /// Physical bytes of one encoded `emb_dim`-wide row.
+    pub fn row_bytes(self, emb_dim: usize) -> usize {
+        match self {
+            TableDtype::F32 => emb_dim * 4,
+            TableDtype::F16 => emb_dim * 2,
+            TableDtype::Int8 => INT8_HEADER + emb_dim,
+        }
+    }
+}
+
+/// Per-row int8 header bytes: little-endian f32 scale, then f32 bias.
+pub(crate) const INT8_HEADER: usize = 8;
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even (ties to even),
+/// handling normals, subnormals, overflow-to-inf, and inf/NaN — no
+/// external half-float crate (the registry is offline).
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp_f32 = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp_f32 == 0xff {
+        // Inf / NaN (any NaN maps to a quiet f16 NaN).
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let h_exp = exp_f32 - 127 + 15;
+    if h_exp >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if h_exp <= 0 {
+        // Subnormal (or underflow-to-zero) target.
+        let shift = (14 - h_exp) as u32;
+        if shift > 24 {
+            return sign;
+        }
+        let man_full = man | 0x0080_0000; // implicit leading 1
+        let man16 = man_full >> shift;
+        let rem = man_full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign | man16 as u16;
+        if rem > half || (rem == half && (man16 & 1) == 1) {
+            h += 1; // RNE; a carry into the exponent field is correct
+        }
+        return h;
+    }
+    // Normal: drop 13 mantissa bits with RNE.
+    let man16 = (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    let mut h = sign | ((h_exp as u16) << 10) | man16;
+    if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
+        h += 1; // carry propagates into the exponent correctly
+    }
+    h
+}
+
+/// IEEE 754 binary16 bits → f32. Exact for every input (f32 is a strict
+/// superset of f16), including subnormals and ±inf/NaN.
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: normalize into an f32 normal.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode one row as per-row asymmetric uint8: `scale = (max-min)/255`,
+/// `bias = min`, `q = round((v - bias) / scale)`; dequant
+/// `q * scale + bias`, so the per-element error is at most `scale / 2`.
+/// A constant row (max == min) encodes `scale = 0` and reproduces
+/// exactly.
+pub(crate) fn quantize_row_int8(row: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), INT8_HEADER + row.len());
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in row {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let scale = if hi > lo { (hi - lo) / 255.0 } else { 0.0 };
+    dst[0..4].copy_from_slice(&scale.to_le_bytes());
+    dst[4..8].copy_from_slice(&lo.to_le_bytes());
+    for (d, &v) in dst[INT8_HEADER..].iter_mut().zip(row) {
+        *d = if scale > 0.0 { ((v - lo) / scale).round().clamp(0.0, 255.0) as u8 } else { 0 };
+    }
+}
+
+/// One embedding table's rows, encoded at a storage dtype. Row `id`
+/// occupies bytes `[id * row_bytes, (id + 1) * row_bytes)` — the unit
+/// that flows through shard executors, replicas, the row cache, and
+/// the sharded row transport, so every one of those shrinks with the
+/// dtype. f32 rows are stored as little-endian byte copies, so the
+/// default dtype is bit-exact with the historical `Vec<f32>` layout.
+#[derive(Debug, Clone)]
+pub struct TableRows {
+    dtype: TableDtype,
+    emb_dim: usize,
+    bytes: Vec<u8>,
+}
+
+impl TableRows {
+    /// Encode `data` ((rows, emb_dim) row-major f32) at `dtype`.
+    pub fn encode(dtype: TableDtype, emb_dim: usize, data: &[f32]) -> TableRows {
+        assert!(emb_dim > 0 && data.len() % emb_dim == 0, "ragged table data");
+        let rb = dtype.row_bytes(emb_dim);
+        let rows = data.len() / emb_dim;
+        let mut bytes = vec![0u8; rows * rb];
+        match dtype {
+            TableDtype::F32 => {
+                for (d, &v) in bytes.chunks_exact_mut(4).zip(data) {
+                    d.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            TableDtype::F16 => {
+                for (d, &v) in bytes.chunks_exact_mut(2).zip(data) {
+                    d.copy_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                }
+            }
+            TableDtype::Int8 => {
+                for (d, row) in bytes.chunks_exact_mut(rb).zip(data.chunks_exact(emb_dim)) {
+                    quantize_row_int8(row, d);
+                }
+            }
+        }
+        TableRows { dtype, emb_dim, bytes }
+    }
+
+    pub fn dtype(&self) -> TableDtype {
+        self.dtype
+    }
+
+    pub fn emb_dim(&self) -> usize {
+        self.emb_dim
+    }
+
+    /// Physical bytes per encoded row.
+    pub fn row_bytes(&self) -> usize {
+        self.dtype.row_bytes(self.emb_dim)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.bytes.len() / self.row_bytes()
+    }
+
+    /// Total encoded bytes (the real memory the table occupies).
+    pub fn byte_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// The encoded row for `id`.
+    pub fn row(&self, id: usize) -> &[u8] {
+        let rb = self.row_bytes();
+        &self.bytes[id * rb..(id + 1) * rb]
+    }
+
+    /// The whole encoded byte buffer (placement slicing).
+    pub(crate) fn raw(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Consume into the encoded byte buffer (zero-copy handoff to the
+    /// shard that owns the primary copy).
+    pub(crate) fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    /// Decode row `id` to f32 (scalar; the reference engine and tests).
+    pub fn decode_row_into(&self, id: usize, dst: &mut [f32]) {
+        decode_row(self.row(id), self.dtype, dst);
+    }
+}
+
+/// Scalar decode of one encoded row into f32 — the exact per-element
+/// arithmetic (`q * scale + bias` for int8, bit widening for f16) the
+/// accumulate kernels use, so decode-then-axpy equals axpy-from-bytes.
+pub(crate) fn decode_row(row: &[u8], dtype: TableDtype, dst: &mut [f32]) {
+    match dtype {
+        TableDtype::F32 => {
+            for (d, c) in dst.iter_mut().zip(row.chunks_exact(4)) {
+                *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        TableDtype::F16 => {
+            for (d, c) in dst.iter_mut().zip(row.chunks_exact(2)) {
+                *d = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+            }
+        }
+        TableDtype::Int8 => {
+            let scale = f32::from_le_bytes(row[0..4].try_into().unwrap());
+            let bias = f32::from_le_bytes(row[4..8].try_into().unwrap());
+            for (d, &q) in dst.iter_mut().zip(&row[INT8_HEADER..]) {
+                *d = q as f32 * scale + bias;
+            }
+        }
+    }
+}
+
+/// The SLS inner accumulation step — `acc += w * dequant(row)`,
+/// ascending element order — shared by every pooled-reduction site on
+/// the optimized path: single-node tiles (`sls_tiles`), shard
+/// executors, and the leader's cache-path pooling (`runtime::sharded`).
+/// Keeping all three loops on this one function makes the bitwise
+/// determinism contract structural: reassociating this sum would break
+/// sharded-vs-single-node bit-identity everywhere at once, not silently
+/// in one copy. The AVX2 variant (`runtime::simd`) is bit-identical to
+/// the scalar body by construction — same unfused mul + add per
+/// element, same order — so the runtime SIMD switch can never change
+/// served numerics.
+#[inline]
+pub(crate) fn sls_axpy_bytes(acc: &mut [f32], w: f32, row: &[u8], dtype: TableDtype) {
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::simd_enabled() {
+        // SAFETY: simd_enabled() implies AVX2 + F16C were detected.
+        unsafe { super::simd::sls_axpy_bytes_avx2(acc, w, row, dtype) };
+        return;
+    }
+    sls_axpy_bytes_scalar(acc, w, row, dtype);
+}
+
+/// Portable scalar body of [`sls_axpy_bytes`] (also the property-test
+/// oracle the AVX2 kernel is pinned against, to 0 ULP).
+pub(crate) fn sls_axpy_bytes_scalar(acc: &mut [f32], w: f32, row: &[u8], dtype: TableDtype) {
+    match dtype {
+        TableDtype::F32 => {
+            for (a, c) in acc.iter_mut().zip(row.chunks_exact(4)) {
+                *a += w * f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        TableDtype::F16 => {
+            for (a, c) in acc.iter_mut().zip(row.chunks_exact(2)) {
+                *a += w * f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+            }
+        }
+        TableDtype::Int8 => {
+            let scale = f32::from_le_bytes(row[0..4].try_into().unwrap());
+            let bias = f32::from_le_bytes(row[4..8].try_into().unwrap());
+            for (a, &q) in acc.iter_mut().zip(&row[INT8_HEADER..]) {
+                let v = q as f32 * scale + bias;
+                *a += w * v;
+            }
+        }
     }
 }
 
@@ -245,6 +537,10 @@ pub struct ExecOptions {
     /// extra memory on full replicas of the hottest tables, with reads
     /// load-balanced across the copies. `0.0` disables replication.
     pub replicate_hot: f64,
+    /// Embedding-table storage dtype (`serve --dtype f32|f16|int8`).
+    /// Quantized rows shrink shard capacity needs and SLS DRAM traffic;
+    /// the dense MLPs always compute in f32.
+    pub dtype: TableDtype,
 }
 
 impl Default for ExecOptions {
@@ -256,6 +552,7 @@ impl Default for ExecOptions {
             cache_rows: 0.0,
             placement: PlacementMode::Whole,
             replicate_hot: 0.0,
+            dtype: TableDtype::F32,
         }
     }
 }
@@ -386,9 +683,9 @@ impl ForwardStats {
 }
 
 /// Micro-kernel row tile (batch rows per register block).
-const MR: usize = 4;
+pub(crate) const MR: usize = 4;
 /// Micro-kernel column tile == packed panel width.
-const NR: usize = 16;
+pub(crate) const NR: usize = 16;
 
 /// One FC layer repacked for the optimized engine, chosen at
 /// `NativeModel` build time: weights stored as `NR`-wide column panels
@@ -401,8 +698,8 @@ pub struct PackedLayer {
     pub in_dim: usize,
     pub out_dim: usize,
     pub relu: bool,
-    b: Vec<f32>,
-    w: Vec<f32>,
+    pub(crate) b: Vec<f32>,
+    pub(crate) w: Vec<f32>,
 }
 
 impl PackedLayer {
@@ -419,7 +716,7 @@ impl PackedLayer {
         PackedLayer { in_dim: kdim, out_dim: ndim, relu: layer.relu, b: layer.b.clone(), w }
     }
 
-    fn panels(&self) -> usize {
+    pub(crate) fn panels(&self) -> usize {
         self.out_dim.div_ceil(NR)
     }
 
@@ -437,8 +734,58 @@ impl PackedLayer {
 /// (4x less weight traffic than the reference kernel) and the MR*NR
 /// accumulators live in vector registers across the whole k loop.
 /// Per-element reduction order is ascending k regardless of `rows` or
-/// tile grouping, so any row partition is bit-identical.
+/// tile grouping, so any row partition is bit-identical. Dispatches to
+/// the AVX2 variant (`runtime::simd`) when the host supports it — that
+/// kernel performs the same unfused mul + add per element in the same
+/// order, so the two bodies are bit-identical by construction.
 fn fc_packed_rows(p: &PackedLayer, x: &[f32], dst: &mut [f32], rows: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::simd_enabled() {
+        // SAFETY: simd_enabled() implies AVX2 was detected.
+        unsafe { super::simd::fc_packed_rows_avx2(p, x, dst, rows) };
+        return;
+    }
+    fc_packed_rows_scalar(p, x, dst, rows);
+}
+
+/// Store one MR x NR accumulator block (+ bias) into the destination,
+/// clipped to the live `nc` columns — the epilogue shared by the scalar
+/// and AVX2 micro-kernels.
+#[inline(always)]
+pub(crate) fn fc_store_panel(
+    p: &PackedLayer,
+    dst: &mut [f32],
+    acc: &[[f32; NR]; MR],
+    r: usize,
+    mr: usize,
+    n0: usize,
+    nc: usize,
+) {
+    let ndim = p.out_dim;
+    for m in 0..mr {
+        let drow = &mut dst[(r + m) * ndim + n0..(r + m) * ndim + n0 + nc];
+        let brow = &p.b[n0..n0 + nc];
+        let a = &acc[m];
+        for j in 0..nc {
+            drow[j] = brow[j] + a[j];
+        }
+    }
+}
+
+/// ReLU over the `mr` finished rows starting at row `r` (shared
+/// epilogue).
+#[inline(always)]
+pub(crate) fn relu_rows(dst: &mut [f32], ndim: usize, r: usize, mr: usize) {
+    for v in dst[r * ndim..(r + mr) * ndim].iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Portable scalar body of [`fc_packed_rows`] (also the 0-ULP oracle
+/// the AVX2 kernel is property-tested against).
+pub(crate) fn fc_packed_rows_scalar(p: &PackedLayer, x: &[f32], dst: &mut [f32], rows: usize) {
     let kdim = p.in_dim;
     let ndim = p.out_dim;
     debug_assert_eq!(x.len(), rows * kdim);
@@ -489,21 +836,10 @@ fn fc_packed_rows(p: &PackedLayer, x: &[f32], dst: &mut [f32], rows: usize) {
                     }
                 }
             }
-            for m in 0..mr {
-                let drow = &mut dst[(r + m) * ndim + n0..(r + m) * ndim + n0 + nc];
-                let brow = &p.b[n0..n0 + nc];
-                let a = &acc[m];
-                for j in 0..nc {
-                    drow[j] = brow[j] + a[j];
-                }
-            }
+            fc_store_panel(p, dst, &acc, r, mr, n0, nc);
         }
         if p.relu {
-            for v in dst[r * ndim..(r + mr) * ndim].iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
+            relu_rows(dst, ndim, r, mr);
         }
         r += mr;
     }
@@ -580,8 +916,11 @@ pub struct NativeModel {
     top: Vec<DenseLayer>,
     bottom_packed: Vec<PackedLayer>,
     top_packed: Vec<PackedLayer>,
-    tables: Vec<Vec<f32>>,
-    /// True once `take_tables` moved the embedding tables out (the
+    /// Embedding tables, encoded at `dtype` (f32 by default — a
+    /// little-endian byte view of the historical layout, bit-exact).
+    tables: Vec<TableRows>,
+    dtype: TableDtype,
+    /// True once `take_table_rows` moved the embedding tables out (the
     /// model then serves as a sharded service's leader: MLPs +
     /// interaction only; its own SLS path refuses to run).
     tables_stripped: bool,
@@ -591,9 +930,18 @@ pub struct NativeModel {
 }
 
 impl NativeModel {
-    /// Build (initialize parameters for) a model preset. Deterministic in
-    /// (cfg, seed); tables are at `cfg.pjrt_rows` scale.
+    /// Build (initialize parameters for) a model preset with f32 tables.
+    /// Deterministic in (cfg, seed); tables are at `cfg.pjrt_rows` scale.
     pub fn new(cfg: &RmcConfig, seed: u64) -> Self {
+        Self::with_dtype(cfg, seed, TableDtype::F32)
+    }
+
+    /// Build with embedding tables encoded at `dtype`. The parameter RNG
+    /// stream is identical for every dtype — rows are drawn in f32 and
+    /// then encoded — so any two dtypes of the same (cfg, seed) quantize
+    /// the *same* underlying parameters, and F32 is bit-exact with the
+    /// historical layout.
+    pub fn with_dtype(cfg: &RmcConfig, seed: u64, dtype: TableDtype) -> Self {
         let mut rng = Rng::seed_from_u64(seed);
         let rows = cfg.pjrt_rows;
 
@@ -617,7 +965,9 @@ impl NativeModel {
         let tables = (0..cfg.num_tables)
             .map(|_| {
                 let scale = 1.0 / (cfg.emb_dim as f64).sqrt();
-                (0..rows * cfg.emb_dim).map(|_| (rng.normal() * scale) as f32).collect()
+                let data: Vec<f32> =
+                    (0..rows * cfg.emb_dim).map(|_| (rng.normal() * scale) as f32).collect();
+                TableRows::encode(dtype, cfg.emb_dim, &data)
             })
             .collect();
 
@@ -638,18 +988,29 @@ impl NativeModel {
             bottom_packed,
             top_packed,
             tables,
+            dtype,
             tables_stripped: false,
             max_act_width,
         }
     }
 
-    /// Build by preset name (`config::all_rmc`).
+    /// Build by preset name (`config::all_rmc`), f32 tables.
     pub fn from_name(name: &str, seed: u64) -> anyhow::Result<Self> {
+        Self::from_name_dtype(name, seed, TableDtype::F32)
+    }
+
+    /// Build by preset name with tables encoded at `dtype`.
+    pub fn from_name_dtype(name: &str, seed: u64, dtype: TableDtype) -> anyhow::Result<Self> {
         let cfg = crate::config::all_rmc()
             .into_iter()
             .find(|c| c.name == name)
             .ok_or_else(|| anyhow!("unknown model '{name}'"))?;
-        Ok(Self::new(&cfg, seed))
+        Ok(Self::with_dtype(&cfg, seed, dtype))
+    }
+
+    /// The embedding-table storage dtype this model was built with.
+    pub fn dtype(&self) -> TableDtype {
+        self.dtype
     }
 
     pub fn cfg(&self) -> &RmcConfig {
@@ -661,7 +1022,9 @@ impl NativeModel {
         self.rows
     }
 
-    /// Total parameter footprint in bytes (fp32), reference layout.
+    /// Total parameter footprint in bytes: fp32 MLP weights plus the
+    /// *encoded* embedding tables — so a quantized model reports the
+    /// smaller footprint it actually occupies.
     pub fn param_bytes(&self) -> usize {
         let fc: usize = self
             .bottom
@@ -669,8 +1032,8 @@ impl NativeModel {
             .chain(&self.top)
             .map(|l| l.w.len() + l.b.len())
             .sum();
-        let emb: usize = self.tables.iter().map(Vec::len).sum();
-        (fc + emb) * 4
+        let emb: usize = self.tables.iter().map(TableRows::byte_len).sum();
+        fc * 4 + emb
     }
 
     /// FLOPs of one forward pass at `batch` (multiply + add per weight).
@@ -684,9 +1047,17 @@ impl NativeModel {
         2 * weights * batch as u64
     }
 
-    /// Approximate SLS memory traffic for one forward pass with these
+    /// *Effective* SLS memory traffic for one forward pass with these
     /// lookup weights: gathered embedding rows (weight != 0) plus the
-    /// ids/weights input streams plus the pooled output writes.
+    /// ids/weights input streams plus the pooled output writes, all
+    /// priced at f32 rows regardless of storage dtype. Dividing by
+    /// wall time yields an effective GB/s that is comparable across
+    /// dtypes — a quantized table "wins" by finishing the same logical
+    /// gather work sooner, exactly how Park et al. report the int8
+    /// bandwidth multiplier. Use [`sls_physical_bytes`] for the bytes
+    /// the dtype actually streams.
+    ///
+    /// [`sls_physical_bytes`]: NativeModel::sls_physical_bytes
     pub fn sls_traffic_bytes(&self, lwts: &[f32]) -> u64 {
         let gathered = lwts.iter().filter(|&&w| w != 0.0).count() as u64;
         let row_bytes = (self.cfg.emb_dim * 4) as u64;
@@ -695,14 +1066,32 @@ impl NativeModel {
         gathered * row_bytes + io + pooled
     }
 
+    /// Physical bytes one encoded row occupies at this model's dtype.
+    pub fn row_phys_bytes(&self) -> usize {
+        self.dtype.row_bytes(self.cfg.emb_dim)
+    }
+
+    /// *Physical* SLS traffic: same accounting as [`sls_traffic_bytes`]
+    /// but with gathered rows priced at the storage dtype's encoded
+    /// size (pooled outputs are always written in f32).
+    ///
+    /// [`sls_traffic_bytes`]: NativeModel::sls_traffic_bytes
+    pub fn sls_physical_bytes(&self, lwts: &[f32]) -> u64 {
+        let gathered = lwts.iter().filter(|&&w| w != 0.0).count() as u64;
+        let io = lwts.len() as u64 * 8;
+        let pooled = (lwts.len() / self.cfg.lookups.max(1)) as u64 * (self.cfg.emb_dim * 4) as u64;
+        gathered * self.row_phys_bytes() as u64 + io + pooled
+    }
+
     /// Move the embedding tables out (table index order preserved),
     /// leaving this model as a sharded service's *leader*: bottom/top
     /// MLPs, interaction, and CTR head only. The move is what makes the
     /// sharded capacity win real — after this, only the shard executors
     /// hold table memory, and `param_bytes` shrinks to the MLP weights.
     /// The stripped model's own forward pass refuses to run (its SLS
-    /// would index empty tables).
-    pub(crate) fn take_tables(&mut self) -> Vec<Vec<f32>> {
+    /// would index empty tables). Rows stay in their encoded dtype —
+    /// the shards, replicas, and row cache hold quantized bytes.
+    pub(crate) fn take_table_rows(&mut self) -> Vec<TableRows> {
         self.tables_stripped = true;
         std::mem::take(&mut self.tables)
     }
@@ -844,19 +1233,37 @@ impl NativeModel {
         }
         t0 = Instant::now();
 
-        // One SLS gather-sum per embedding table.
+        // One SLS gather-sum per embedding table: decode each gathered
+        // row to f32, then `acc += w * row` in ascending lookup order —
+        // for F32 tables this is the historical `sls_gather_sum`
+        // arithmetic bit for bit (decode is a byte copy).
+        let emb_dim = self.cfg.emb_dim;
+        let mut rowbuf = vec![0.0f32; emb_dim];
         let mut embs = Vec::with_capacity(t);
-        for table in 0..t {
-            let lo = table * batch * l;
-            let hi = lo + batch * l;
-            embs.push(sls_gather_sum(
-                &self.tables[table],
-                self.cfg.emb_dim,
-                &ids[lo..hi],
-                &lwts[lo..hi],
-                batch,
-                l,
-            )?);
+        for (ti, table) in self.tables.iter().enumerate() {
+            let mut out = vec![0.0f32; batch * emb_dim];
+            for s in 0..batch {
+                let base = ti * batch * l + s * l;
+                let acc = &mut out[s * emb_dim..(s + 1) * emb_dim];
+                for li in 0..l {
+                    let w = lwts[base + li];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let id = ids[base + li];
+                    if id < 0 || id as usize >= table.rows() {
+                        bail!(
+                            "sls id {id} out of range for table {ti} ({} rows)",
+                            table.rows()
+                        );
+                    }
+                    table.decode_row_into(id as usize, &mut rowbuf);
+                    for (a, &rv) in acc.iter_mut().zip(&rowbuf) {
+                        *a += w * rv;
+                    }
+                }
+            }
+            embs.push(out);
         }
         if let Some(s) = stats.as_mut() {
             s.sls_ns += t0.elapsed().as_nanos() as f64;
@@ -1102,8 +1509,7 @@ impl NativeModel {
                 if w == 0.0 {
                     continue;
                 }
-                let start = ids[base + li] as usize * emb;
-                sls_axpy(acc, w, &table[start..start + emb]);
+                sls_axpy_bytes(acc, w, table.row(ids[base + li] as usize), self.dtype);
             }
         }
     }
@@ -1117,13 +1523,19 @@ type Slot = Arc<Mutex<Option<Arc<NativeModel>>>>;
 /// once (same discipline as the PJRT `ModelPool`).
 pub struct NativePool {
     seed: u64,
+    dtype: TableDtype,
     slots: Mutex<HashMap<String, Slot>>,
     builds: AtomicUsize,
 }
 
 impl NativePool {
     pub fn new(seed: u64) -> Self {
-        NativePool { seed, slots: Mutex::new(HashMap::new()), builds: AtomicUsize::new(0) }
+        Self::with_dtype(seed, TableDtype::F32)
+    }
+
+    /// A pool whose models are built with `dtype`-encoded tables.
+    pub fn with_dtype(seed: u64, dtype: TableDtype) -> Self {
+        NativePool { seed, dtype, slots: Mutex::new(HashMap::new()), builds: AtomicUsize::new(0) }
     }
 
     /// Get (building on first use) the model for `name`.
@@ -1142,7 +1554,7 @@ impl NativePool {
         if let Some(m) = guard.as_ref() {
             return Ok(m.clone());
         }
-        let built = Arc::new(NativeModel::from_name(name, self.seed)?);
+        let built = Arc::new(NativeModel::from_name_dtype(name, self.seed, self.dtype)?);
         self.builds.fetch_add(1, Ordering::SeqCst);
         *guard = Some(built.clone());
         Ok(built)
@@ -1158,6 +1570,11 @@ impl NativePool {
     /// parameter-identical, hence bitwise-comparable).
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    /// The table storage dtype every model in this pool is built with.
+    pub fn dtype(&self) -> TableDtype {
+        self.dtype
     }
 
     /// How many models have been constructed (not just requested).
@@ -1429,7 +1846,8 @@ mod tests {
         assert_eq!(m.top.last().unwrap().out_dim, 1);
         assert_eq!(m.top[0].in_dim, cfg.top_input_dim());
         assert_eq!(m.tables.len(), cfg.num_tables);
-        assert_eq!(m.tables[0].len(), cfg.pjrt_rows * cfg.emb_dim);
+        assert_eq!(m.tables[0].rows(), cfg.pjrt_rows);
+        assert_eq!(m.tables[0].byte_len(), cfg.pjrt_rows * cfg.emb_dim * 4);
         assert_eq!(
             m.param_bytes(),
             4 * (cfg.fc_params() as usize + cfg.num_tables * cfg.pjrt_rows * cfg.emb_dim)
@@ -1452,15 +1870,16 @@ mod tests {
 
     #[test]
     fn stripped_model_refuses_to_run() {
-        // take_tables turns the model into a sharded leader: the tables
-        // are really gone (capacity win), and the local SLS path must
-        // fail loudly instead of indexing empty tables.
+        // take_table_rows turns the model into a sharded leader: the
+        // tables are really gone (capacity win), and the local SLS path
+        // must fail loudly instead of indexing empty tables.
         let cfg = tiny_cfg();
         let mut m = NativeModel::new(&cfg, 1);
         let (dense, ids, lwts) = tiny_inputs(&cfg, 2);
-        let tables = m.take_tables();
+        let tables = m.take_table_rows();
         assert_eq!(tables.len(), cfg.num_tables);
-        assert_eq!(tables[0].len(), cfg.pjrt_rows * cfg.emb_dim);
+        assert_eq!(tables[0].rows(), cfg.pjrt_rows);
+        assert_eq!(tables[0].byte_len(), cfg.pjrt_rows * cfg.emb_dim * 4);
         assert!(m.run_rmc(&dense, &ids, &lwts).is_err(), "stripped model must refuse");
         // The leader footprint is MLP-only once the tables moved out.
         assert_eq!(m.param_bytes(), 4 * cfg.fc_params() as usize);
@@ -1493,5 +1912,156 @@ mod tests {
         // A second model builds independently.
         pool.preload("rmc1-large").unwrap();
         assert_eq!(pool.built_count(), 2);
+    }
+
+    #[test]
+    fn dtype_parse_and_row_bytes() {
+        assert_eq!(TableDtype::parse("f32"), Some(TableDtype::F32));
+        assert_eq!(TableDtype::parse("fp16"), Some(TableDtype::F16));
+        assert_eq!(TableDtype::parse("i8"), Some(TableDtype::Int8));
+        assert_eq!(TableDtype::parse("bf16"), None);
+        assert_eq!(TableDtype::F32.row_bytes(64), 256);
+        assert_eq!(TableDtype::F16.row_bytes(64), 128);
+        assert_eq!(TableDtype::Int8.row_bytes(64), 72); // 8B header + 64
+    }
+
+    #[test]
+    fn f16_goldens_pinned_bit_patterns() {
+        // Encode: known f32 -> f16 bit patterns (IEEE 754 binary16).
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),    // f16::MAX
+            (65536.0, 0x7c00),    // overflow -> +inf
+            (-100000.0, 0xfc00),  // overflow -> -inf
+            (6.1e-5, 0x0400),     // just inside the smallest normal
+            (5.96e-8, 0x0001),    // smallest subnormal (approx)
+            (1e-10, 0x0000),      // underflow -> +0
+            (f32::INFINITY, 0x7c00),
+        ] {
+            assert_eq!(f32_to_f16_bits(x), bits, "encode {x}");
+        }
+        assert_eq!(f32_to_f16_bits(f32::NAN) & 0x7c00, 0x7c00);
+        assert_ne!(f32_to_f16_bits(f32::NAN) & 0x03ff, 0, "NaN must stay NaN");
+        // Round-to-nearest-even at the halfway point: 1.0 + 2^-11 is
+        // exactly between 0x3c00 and 0x3c01, and must round to even.
+        assert_eq!(f32_to_f16_bits(1.0 + 1.0 / 2048.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 / 2048.0), 0x3c02);
+        // Decode: exact for every representable f16.
+        for (bits, x) in
+            [(0x3c00u16, 1.0f32), (0xc000, -2.0), (0x7bff, 65504.0), (0x0001, 2.0f32.powi(-24))]
+        {
+            assert_eq!(f16_bits_to_f32(bits), x, "decode {bits:#06x}");
+        }
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+        assert!(f16_bits_to_f32(0x7e00).is_nan());
+        // Encode-decode round trip is the identity on f16-exact values.
+        for v in [0.25f32, -3.5, 1024.0, 2.0f32.powi(-14), -(2.0f32.powi(-24))] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v);
+        }
+    }
+
+    #[test]
+    fn int8_round_trip_error_bounded() {
+        // quantize -> dequantize error is at most scale/2 per element.
+        let row: Vec<f32> = (0..64).map(|i| ((i * 37 % 100) as f32 - 50.0) / 7.0).collect();
+        let mut enc = vec![0u8; INT8_HEADER + row.len()];
+        quantize_row_int8(&row, &mut enc);
+        let scale = f32::from_le_bytes(enc[0..4].try_into().unwrap());
+        let (lo, hi) = row.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+        assert!((scale - (hi - lo) / 255.0).abs() < 1e-7);
+        let mut dec = vec![0.0f32; row.len()];
+        decode_row(&enc, TableDtype::Int8, &mut dec);
+        for (&v, &d) in row.iter().zip(&dec) {
+            assert!((v - d).abs() <= scale / 2.0 + 1e-6, "|{v} - {d}| > scale/2 = {}", scale / 2.0);
+        }
+        // Min and max land exactly on quantization grid endpoints.
+        let imin = row.iter().position(|&v| v == lo).unwrap();
+        let imax = row.iter().position(|&v| v == hi).unwrap();
+        assert_eq!(dec[imin], lo);
+        assert!((dec[imax] - hi).abs() <= 1e-5 * hi.abs().max(1.0));
+    }
+
+    #[test]
+    fn int8_constant_row_is_exact() {
+        // max == min encodes scale 0 and reproduces the row exactly.
+        let row = [0.75f32; 16];
+        let mut enc = vec![0u8; INT8_HEADER + row.len()];
+        quantize_row_int8(&row, &mut enc);
+        let mut dec = vec![0.0f32; row.len()];
+        decode_row(&enc, TableDtype::Int8, &mut dec);
+        assert_eq!(dec, row);
+    }
+
+    #[test]
+    fn f32_encode_is_bit_identity() {
+        // The default dtype must be a pure byte view of the historical
+        // Vec<f32> layout — NaN payloads and -0.0 included.
+        let data = [1.5f32, -0.0, f32::NAN, 3.25, f32::MIN_POSITIVE / 2.0, -7.0, 0.0, 2e30];
+        let t = TableRows::encode(TableDtype::F32, 4, &data);
+        assert_eq!(t.rows(), 2);
+        let mut dec = vec![0.0f32; 4];
+        for r in 0..2 {
+            t.decode_row_into(r, &mut dec);
+            for (a, b) in dec.iter().zip(&data[r * 4..(r + 1) * 4]) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_bytes_matches_decode_then_axpy() {
+        // The fused accumulate must equal decode-into-f32 then axpy,
+        // element for element, for every dtype (this is what makes the
+        // reference path an oracle for the optimized path per dtype).
+        let row: Vec<f32> = (0..32).map(|i| (i as f32 - 11.0) * 0.37).collect();
+        for dtype in [TableDtype::F32, TableDtype::F16, TableDtype::Int8] {
+            let t = TableRows::encode(dtype, row.len(), &row);
+            let mut dec = vec![0.0f32; row.len()];
+            t.decode_row_into(0, &mut dec);
+            let mut a = vec![0.1f32; row.len()];
+            let mut b = a.clone();
+            sls_axpy_bytes_scalar(&mut a, 0.8, t.row(0), dtype);
+            for (x, &r) in b.iter_mut().zip(&dec) {
+                *x += 0.8 * r;
+            }
+            assert_eq!(a, b, "{dtype:?}");
+        }
+    }
+
+    #[test]
+    fn quantized_forward_tracks_f32() {
+        // Whole-forward agreement across dtypes: same (cfg, seed) so the
+        // same parameters are quantized; CTRs are in (0,1), so absolute
+        // bounds are meaningful. Bounds here are looser than the
+        // prop-test ones (tiny tables quantize coarsely).
+        let cfg = tiny_cfg();
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 4);
+        let f32_out = NativeModel::new(&cfg, 11).run_rmc(&dense, &ids, &lwts).unwrap();
+        for (dtype, bound) in [(TableDtype::F16, 5e-3f32), (TableDtype::Int8, 0.05)] {
+            let m = NativeModel::with_dtype(&cfg, 11, dtype);
+            assert_eq!(m.dtype(), dtype);
+            assert!(m.param_bytes() < NativeModel::new(&cfg, 11).param_bytes());
+            let out = m.run_rmc(&dense, &ids, &lwts).unwrap();
+            for (a, b) in out.iter().zip(&f32_out) {
+                assert!((a - b).abs() <= bound, "{dtype:?}: |{a} - {b}| > {bound}");
+            }
+            // Reference and optimized engines agree per dtype too.
+            let reference = Engine::new(ExecOptions {
+                threads: 1,
+                engine: EngineKind::Reference,
+                ..Default::default()
+            });
+            let mut arena = ScratchArena::new();
+            let r = m.run_rmc_with(&reference, &mut arena, &dense, &ids, &lwts).unwrap();
+            for (x, y) in r.iter().zip(&out) {
+                assert!((x - y).abs() < 1e-5, "{dtype:?} engines diverged: {x} vs {y}");
+            }
+        }
     }
 }

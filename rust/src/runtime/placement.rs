@@ -154,9 +154,10 @@ impl Placement {
     }
 
     /// Embedding bytes owned by each shard under this plan (replica
-    /// copies cost real memory on every holder).
-    pub fn shard_bytes(&self, rows: usize, emb_dim: usize) -> Vec<usize> {
-        let row_bytes = emb_dim * 4;
+    /// copies cost real memory on every holder). `row_bytes` is the
+    /// *encoded* per-row size (`TableDtype::row_bytes`), so quantized
+    /// tables report the smaller footprint they actually occupy.
+    pub fn shard_bytes(&self, rows: usize, row_bytes: usize) -> Vec<usize> {
         let mut bytes = vec![0usize; self.shards];
         for tp in &self.tables {
             match tp {
@@ -185,8 +186,8 @@ impl Placement {
     }
 
     /// max/mean byte imbalance across shards (1.0 = perfectly even).
-    pub fn bytes_imbalance(&self, rows: usize, emb_dim: usize) -> f64 {
-        imbalance_usize(&self.shard_bytes(rows, emb_dim))
+    pub fn bytes_imbalance(&self, rows: usize, row_bytes: usize) -> f64 {
+        imbalance_usize(&self.shard_bytes(rows, row_bytes))
     }
 }
 
@@ -237,18 +238,20 @@ impl PlacementPlanner {
         PlacementPlanner { shards: shards.max(1), mode, replicate_hot, capacity_bytes: None }
     }
 
-    /// Compute a plan for `num_tables` tables of `rows` x `emb_dim`
-    /// fp32 rows. `skew` is per-table measured load (empty = no signal
-    /// yet: tables are treated as equally hot, which keeps the plan
-    /// deterministic before any traffic).
+    /// Compute a plan for `num_tables` tables of `rows` rows occupying
+    /// `row_bytes` encoded bytes each (`TableDtype::row_bytes` — a
+    /// quantized model's smaller rows let more of them fit any given
+    /// `capacity_bytes`). `skew` is per-table measured load (empty = no
+    /// signal yet: tables are treated as equally hot, which keeps the
+    /// plan deterministic before any traffic).
     pub fn plan(
         &self,
         num_tables: usize,
         rows: usize,
-        emb_dim: usize,
+        row_bytes: usize,
         skew: &[TableSkew],
     ) -> anyhow::Result<Placement> {
-        ensure!(num_tables > 0 && rows > 0 && emb_dim > 0, "degenerate model shape");
+        ensure!(num_tables > 0 && rows > 0 && row_bytes > 0, "degenerate model shape");
         ensure!(
             (0.0..=1.0).contains(&self.replicate_hot),
             "replicate_hot is a fraction of total table bytes (got {})",
@@ -265,7 +268,6 @@ impl PlacementPlanner {
         // Row-granular placement: more shards than tables is legal, but
         // an executor must still be able to own at least one row.
         let shards = self.shards.clamp(1, num_tables * rows);
-        let row_bytes = emb_dim * 4;
         let table_bytes = rows * row_bytes;
         let total_bytes = num_tables * table_bytes;
 
@@ -407,30 +409,34 @@ impl PlacementPlanner {
 }
 
 /// Per-shard table storage sliced from a model's taken tables
-/// according to a plan: `segs[table]` = ascending `(row_lo, data)`
+/// according to a plan: `segs[table]` = ascending `(row_lo, bytes)`
 /// chunks this shard holds (a whole copy is one chunk at `row_lo` 0).
-pub(crate) type ShardSegments = HashMap<usize, Vec<(usize, Vec<f32>)>>;
+/// Chunks are dtype-encoded row bytes — the quantized representation is
+/// what each shard owns, so the capacity win is physical.
+pub(crate) type ShardSegments = HashMap<usize, Vec<(usize, Vec<u8>)>>;
 
 /// Slice (and, for replicas, duplicate) the taken tables into
 /// per-shard stores. Replica copies are real allocations — the
 /// replication byte cost the planner budgets for is physical.
 pub(crate) fn slice_tables(
-    tables: Vec<Vec<f32>>,
+    tables: Vec<super::native::TableRows>,
     plan: &Placement,
-    emb_dim: usize,
+    row_bytes: usize,
 ) -> Vec<ShardSegments> {
     let mut stores: Vec<ShardSegments> = (0..plan.shards).map(|_| HashMap::new()).collect();
-    for (t, data) in tables.into_iter().enumerate() {
+    for (t, table) in tables.into_iter().enumerate() {
+        debug_assert_eq!(table.row_bytes(), row_bytes);
         match &plan.tables[t] {
             TablePlacement::Replicated(reps) => {
                 for &s in reps.iter().skip(1) {
-                    stores[s].entry(t).or_default().push((0, data.clone()));
+                    stores[s].entry(t).or_default().push((0, table.raw().to_vec()));
                 }
-                stores[reps[0]].entry(t).or_default().push((0, data));
+                stores[reps[0]].entry(t).or_default().push((0, table.into_bytes()));
             }
             TablePlacement::Split(segs) => {
+                let data = table.raw();
                 for seg in segs {
-                    let chunk = data[seg.rows.0 * emb_dim..seg.rows.1 * emb_dim].to_vec();
+                    let chunk = data[seg.rows.0 * row_bytes..seg.rows.1 * row_bytes].to_vec();
                     stores[seg.shard].entry(t).or_default().push((seg.rows.0, chunk));
                 }
             }
@@ -520,20 +526,21 @@ mod tests {
 
     #[test]
     fn rows_plan_balances_bytes_and_splits_across_tables() {
-        // 3 tables x 60 rows over 4 shards: whole-table placement
-        // cannot do better than one table per shard (max 1 of 3 tables'
-        // bytes); the rows plan lands within one row of 45 rows/shard.
+        // 3 tables x 60 rows (16B encoded rows) over 4 shards:
+        // whole-table placement cannot do better than one table per
+        // shard (max 1 of 3 tables' bytes); the rows plan lands within
+        // one row of 45 rows/shard.
         let planner = PlacementPlanner::new(4, PlacementMode::Rows, 0.0);
-        let plan = planner.plan(3, 60, 4, &[]).unwrap();
+        let plan = planner.plan(3, 60, 16, &[]).unwrap();
         plan.validate(3, 60).unwrap();
-        let bytes = plan.shard_bytes(60, 4);
+        let bytes = plan.shard_bytes(60, 16);
         let max = *bytes.iter().max().unwrap();
         let min = *bytes.iter().min().unwrap();
         assert!(max - min <= 16, "rows split should balance bytes: {bytes:?}");
         assert!(plan.has_row_routing(), "4 shards over 3 tables forces row splits");
         let whole = Placement::whole(3, 4);
         assert!(
-            max < *whole.shard_bytes(60, 4).iter().max().unwrap(),
+            max < *whole.shard_bytes(60, 16).iter().max().unwrap(),
             "rows must beat whole on max-shard bytes here"
         );
     }
@@ -544,8 +551,8 @@ mod tests {
             .map(|t| TableSkew { lookups: 100 * (t as u64 + 1), cache_hits: 10 * t as u64 })
             .collect();
         let planner = PlacementPlanner::new(3, PlacementMode::Auto, 0.2);
-        let a = planner.plan(6, 40, 8, &skew).unwrap();
-        let b = planner.plan(6, 40, 8, &skew).unwrap();
+        let a = planner.plan(6, 40, 32, &skew).unwrap();
+        let b = planner.plan(6, 40, 32, &skew).unwrap();
         assert_eq!(a, b, "identical skew must yield identical plans");
     }
 
@@ -566,7 +573,7 @@ mod tests {
                 .collect()
         };
         let wide = PlacementPlanner::new(4, PlacementMode::Rows, 0.7)
-            .plan(10, 50, 4, &skew)
+            .plan(10, 50, 16, &skew)
             .unwrap();
         assert_eq!(
             wide.tables[2],
@@ -575,7 +582,7 @@ mod tests {
         );
         assert_eq!(count_replicated(&wide), vec![2, 7], "70% budget affords both hot tables");
         let narrow = PlacementPlanner::new(4, PlacementMode::Rows, 0.4)
-            .plan(10, 50, 4, &skew)
+            .plan(10, 50, 16, &skew)
             .unwrap();
         assert_eq!(
             count_replicated(&narrow),
@@ -591,7 +598,7 @@ mod tests {
         let mut skew = vec![TableSkew { lookups: 10, cache_hits: 0 }; 8];
         skew[3].lookups = 10_000;
         let planner = PlacementPlanner::new(2, PlacementMode::Rows, 1.0);
-        let plan = planner.plan(8, 30, 4, &skew).unwrap();
+        let plan = planner.plan(8, 30, 16, &skew).unwrap();
         let replicated: Vec<usize> = (0..8)
             .filter(|&t| matches!(&plan.tables[t], TablePlacement::Replicated(r) if r.len() > 1))
             .collect();
@@ -606,12 +613,19 @@ mod tests {
             replicate_hot: 0.0,
             capacity_bytes: Some(cap),
         };
-        // 4 tables x 30 rows x 4 floats = 480B/table, 1920B total.
-        let plan = planner(700).plan(4, 30, 4, &[]).unwrap();
-        for (s, b) in plan.shard_bytes(30, 4).iter().enumerate() {
+        // 4 tables x 30 rows x 16B rows = 480B/table, 1920B total.
+        let plan = planner(700).plan(4, 30, 16, &[]).unwrap();
+        for (s, b) in plan.shard_bytes(30, 16).iter().enumerate() {
             assert!(*b <= 700, "shard {s} over budget: {b}B");
         }
-        assert!(planner(500).plan(4, 30, 4, &[]).is_err(), "3 x 500B < 1920B must fail");
+        assert!(planner(500).plan(4, 30, 16, &[]).is_err(), "3 x 500B < 1920B must fail");
+        // Quantized rows (int8 at emb_dim 4: 8B header + 4 = 12B/row,
+        // 360B/table, 1440B total) fit the budget that f32 cannot —
+        // the capacity win the dtype buys, visible to the planner.
+        let plan = planner(500).plan(4, 30, 12, &[]).unwrap();
+        for (s, b) in plan.shard_bytes(30, 12).iter().enumerate() {
+            assert!(*b <= 500, "shard {s} over budget: {b}B");
+        }
     }
 
     #[test]
@@ -621,7 +635,7 @@ mod tests {
         let mut skew = vec![TableSkew { lookups: 1, cache_hits: 0 }; 4];
         skew[0].lookups = 1_000_000;
         let planner = PlacementPlanner::new(4, PlacementMode::Auto, 0.0);
-        let plan = planner.plan(4, 100, 4, &skew).unwrap();
+        let plan = planner.plan(4, 100, 16, &skew).unwrap();
         let hot_shards = match &plan.tables[0] {
             TablePlacement::Split(segs) => {
                 let mut s: Vec<usize> = segs.iter().map(|x| x.shard).collect();
@@ -635,8 +649,11 @@ mod tests {
 
     #[test]
     fn slice_tables_moves_and_duplicates_correctly() {
+        use super::super::native::{TableDtype, TableRows};
         let emb = 2;
+        let row_bytes = TableDtype::F32.row_bytes(emb);
         let mk = |v: f32| (0..6 * emb).map(|i| v + i as f32).collect::<Vec<f32>>();
+        let enc = |v: f32| TableRows::encode(TableDtype::F32, emb, &mk(v));
         let plan = Placement {
             shards: 2,
             tables: vec![
@@ -648,27 +665,28 @@ mod tests {
             ],
         };
         plan.validate(2, 6).unwrap();
-        let stores = slice_tables(vec![mk(0.0), mk(100.0)], &plan, emb);
-        // Replicated table 0: full copy on both shards.
-        assert_eq!(stores[0][&0], vec![(0, mk(0.0))]);
-        assert_eq!(stores[1][&0], vec![(0, mk(0.0))]);
+        let stores = slice_tables(vec![enc(0.0), enc(100.0)], &plan, row_bytes);
+        // Replicated table 0: full (encoded) copy on both shards.
+        assert_eq!(stores[0][&0], vec![(0, enc(0.0).into_bytes())]);
+        assert_eq!(stores[1][&0], vec![(0, enc(0.0).into_bytes())]);
         // Split table 1: rows [0,2) on shard 1, [2,6) on shard 0.
-        assert_eq!(stores[1][&1], vec![(0, mk(100.0)[..2 * emb].to_vec())]);
-        assert_eq!(stores[0][&1], vec![(2, mk(100.0)[2 * emb..].to_vec())]);
+        let t1 = enc(100.0).into_bytes();
+        assert_eq!(stores[1][&1], vec![(0, t1[..2 * row_bytes].to_vec())]);
+        assert_eq!(stores[0][&1], vec![(2, t1[2 * row_bytes..].to_vec())]);
         // Owners: replicated -> both; split row 1 -> shard 1, row 5 -> 0.
         assert_eq!(row_owners(&plan, 0, 3), &[0, 1]);
         assert_eq!(row_owners(&plan, 1, 1), &[1]);
         assert_eq!(row_owners(&plan, 1, 5), &[0]);
         // Byte accounting includes the replica copy.
-        let bytes = plan.shard_bytes(6, emb);
-        assert_eq!(bytes[0], (6 + 4) * emb * 4);
-        assert_eq!(bytes[1], (6 + 2) * emb * 4);
-        assert!((plan.bytes_imbalance(6, emb) - (10.0 / 9.0)).abs() < 1e-12);
+        let bytes = plan.shard_bytes(6, row_bytes);
+        assert_eq!(bytes[0], (6 + 4) * row_bytes);
+        assert_eq!(bytes[1], (6 + 2) * row_bytes);
+        assert!((plan.bytes_imbalance(6, row_bytes) - (10.0 / 9.0)).abs() < 1e-12);
     }
 
     #[test]
     fn planner_whole_mode_delegates() {
         let planner = PlacementPlanner::new(2, PlacementMode::Whole, 0.5);
-        assert_eq!(planner.plan(3, 10, 4, &[]).unwrap(), Placement::whole(3, 2));
+        assert_eq!(planner.plan(3, 10, 16, &[]).unwrap(), Placement::whole(3, 2));
     }
 }

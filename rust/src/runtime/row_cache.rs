@@ -4,9 +4,12 @@
 //! intelligent caching", citing Bandana).
 //!
 //! Row-granular: one entry per (table, row) key holding the row's
-//! actual fp32 bytes, so a hit short-circuits the remote shard lookup
-//! and hands the leader the exact bytes the shard would have returned —
-//! which is what keeps cached and uncached execution bit-identical.
+//! actual encoded bytes (f32, f16, or int8 — whatever dtype the tables
+//! store), so a hit short-circuits the remote shard lookup and hands
+//! the leader the exact bytes the shard would have returned — which is
+//! what keeps cached and uncached execution bit-identical. Quantized
+//! dtypes shrink each entry, so the same row capacity costs fewer
+//! bytes.
 //!
 //! Structure: `LOCK_SHARDS` independent exact-LRU maps (slab + intrusive
 //! doubly-linked recency list, O(1) probe/insert/evict), keys routed by
@@ -60,7 +63,7 @@ struct Entry {
     key: u64,
     prev: usize,
     next: usize,
-    row: Vec<f32>,
+    row: Vec<u8>,
 }
 
 /// One lock shard: exact LRU over a slab of entries.
@@ -114,7 +117,7 @@ impl LruShard {
     }
 
     /// Copy the row for `key` into `dst` and promote it to MRU.
-    fn get(&mut self, key: u64, dst: &mut [f32]) -> bool {
+    fn get(&mut self, key: u64, dst: &mut [u8]) -> bool {
         let Some(&i) = self.map.get(&key) else { return false };
         dst.copy_from_slice(&self.slab[i].row);
         if self.head != i {
@@ -126,7 +129,7 @@ impl LruShard {
 
     /// Insert (or refresh) `key` with `row` bytes, evicting the LRU
     /// entry when full.
-    fn insert(&mut self, key: u64, row: &[f32]) {
+    fn insert(&mut self, key: u64, row: &[u8]) {
         if self.cap == 0 {
             return;
         }
@@ -174,10 +177,10 @@ impl LruShard {
     }
 }
 
-/// Sharded row-granular LRU over embedding rows.
+/// Sharded row-granular LRU over embedding rows (encoded bytes).
 pub struct EmbeddingCache {
     shards: Vec<Mutex<LruShard>>,
-    emb_dim: usize,
+    row_bytes: usize,
     capacity_rows: usize,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -188,18 +191,19 @@ pub struct EmbeddingCache {
 }
 
 impl EmbeddingCache {
-    /// `capacity_rows` total rows (must be positive), each `emb_dim`
-    /// floats wide. Capacity is split evenly across lock shards.
-    pub fn new(capacity_rows: usize, emb_dim: usize) -> Self {
-        Self::with_tables(capacity_rows, emb_dim, 0)
+    /// `capacity_rows` total rows (must be positive), each `row_bytes`
+    /// encoded bytes wide (dtype-dependent). Capacity is split evenly
+    /// across lock shards.
+    pub fn new(capacity_rows: usize, row_bytes: usize) -> Self {
+        Self::with_tables(capacity_rows, row_bytes, 0)
     }
 
     /// Like [`EmbeddingCache::new`] but tracking hits per table
     /// (indexed by the table half of `row_key`) so placement planning
     /// can fold cache-absorbed load into its skew measurements.
-    pub fn with_tables(capacity_rows: usize, emb_dim: usize, num_tables: usize) -> Self {
+    pub fn with_tables(capacity_rows: usize, row_bytes: usize, num_tables: usize) -> Self {
         assert!(capacity_rows > 0, "cache needs capacity");
-        assert!(emb_dim > 0, "rows need a width");
+        assert!(row_bytes > 0, "rows need a width");
         let n = LOCK_SHARDS.min(capacity_rows);
         let shards = (0..n)
             .map(|i| {
@@ -209,7 +213,7 @@ impl EmbeddingCache {
             .collect();
         EmbeddingCache {
             shards,
-            emb_dim,
+            row_bytes,
             capacity_rows,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -221,10 +225,10 @@ impl EmbeddingCache {
         ((mix(key) >> 32) % self.shards.len() as u64) as usize
     }
 
-    /// Probe for `key`; on hit copy the row into `dst` (must be
-    /// `emb_dim` long) and promote it. Counts hit/miss.
-    pub fn probe_into(&self, key: u64, dst: &mut [f32]) -> bool {
-        debug_assert_eq!(dst.len(), self.emb_dim);
+    /// Probe for `key`; on hit copy the encoded row into `dst` (must
+    /// be `row_bytes` long) and promote it. Counts hit/miss.
+    pub fn probe_into(&self, key: u64, dst: &mut [u8]) -> bool {
+        debug_assert_eq!(dst.len(), self.row_bytes);
         let hit = self.shards[self.shard_of(key)].lock().unwrap().get(key, dst);
         if hit {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -237,9 +241,10 @@ impl EmbeddingCache {
         hit
     }
 
-    /// Insert `key` -> `row` (a byte-exact copy of the shard's row).
-    pub fn insert(&self, key: u64, row: &[f32]) {
-        debug_assert_eq!(row.len(), self.emb_dim);
+    /// Insert `key` -> `row` (a byte-exact copy of the shard's encoded
+    /// row).
+    pub fn insert(&self, key: u64, row: &[u8]) {
+        debug_assert_eq!(row.len(), self.row_bytes);
         self.shards[self.shard_of(key)].lock().unwrap().insert(key, row);
     }
 
@@ -247,8 +252,9 @@ impl EmbeddingCache {
         self.capacity_rows
     }
 
-    pub fn emb_dim(&self) -> usize {
-        self.emb_dim
+    /// Encoded bytes per cached row (dtype-dependent).
+    pub fn row_bytes(&self) -> usize {
+        self.row_bytes
     }
 
     /// Rows currently resident (never exceeds `capacity_rows`).
@@ -256,9 +262,9 @@ impl EmbeddingCache {
         self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
-    /// Resident row payload in bytes (fp32).
+    /// Resident row payload in bytes (encoded dtype).
     pub fn bytes(&self) -> usize {
-        self.occupancy() * self.emb_dim * 4
+        self.occupancy() * self.row_bytes
     }
 
     pub fn hits(&self) -> u64 {
@@ -304,21 +310,21 @@ mod tests {
     use crate::simulator::embedding_cache::{simulate_row_cache, simulate_row_cache_batched};
     use crate::workload::{IdDistribution, SparseIdGen};
 
-    fn row(v: f32, dim: usize) -> Vec<f32> {
-        (0..dim).map(|i| v + i as f32).collect()
+    fn row(v: u8, len: usize) -> Vec<u8> {
+        (0..len).map(|i| v.wrapping_add(i as u8)).collect()
     }
 
     /// Drive the cache with a sequential probe-then-insert-on-miss
     /// stream, exactly like `simulator::embedding_cache` drives its
     /// line table; rows are synthesized from the id.
     fn drive(cache: &EmbeddingCache, gen: &mut SparseIdGen, lookups: usize) {
-        let dim = cache.emb_dim();
-        let mut buf = vec![0.0f32; dim];
+        let rb = cache.row_bytes();
+        let mut buf = vec![0u8; rb];
         for _ in 0..lookups {
             let id = gen.next_id();
             let key = row_key(0, id);
             if !cache.probe_into(key, &mut buf) {
-                cache.insert(key, &row(id as f32, dim));
+                cache.insert(key, &row(id as u8, rb));
             }
         }
     }
@@ -327,12 +333,12 @@ mod tests {
     fn hit_returns_exact_bytes_and_miss_leaves_dst_alone() {
         let c = EmbeddingCache::new(4, 3);
         let k = row_key(2, 7);
-        let mut dst = vec![-1.0f32; 3];
+        let mut dst = vec![255u8; 3];
         assert!(!c.probe_into(k, &mut dst));
-        assert_eq!(dst, vec![-1.0; 3], "miss must not write dst");
-        c.insert(k, &[1.5, 2.5, 3.5]);
+        assert_eq!(dst, vec![255; 3], "miss must not write dst");
+        c.insert(k, &[15, 25, 35]);
         assert!(c.probe_into(k, &mut dst));
-        assert_eq!(dst, vec![1.5, 2.5, 3.5], "hit must return the inserted bytes");
+        assert_eq!(dst, vec![15, 25, 35], "hit must return the inserted bytes");
         assert_eq!(c.hits(), 1);
         assert_eq!(c.misses(), 1);
     }
@@ -355,7 +361,7 @@ mod tests {
             drive(&c, &mut gen, 4 * cap + 2_000);
             assert!(c.occupancy() <= cap, "cap {cap}: occupancy {}", c.occupancy());
             assert!(c.occupancy() > 0);
-            assert_eq!(c.bytes(), c.occupancy() * 4 * 4);
+            assert_eq!(c.bytes(), c.occupancy() * 4);
         }
     }
 
@@ -369,11 +375,11 @@ mod tests {
         let (a, b, x) = (row_key(0, 1), row_key(0, 3), row_key(0, 5));
         assert_eq!(c.shard_of(a), c.shard_of(b));
         assert_eq!(c.shard_of(a), c.shard_of(x));
-        let mut buf = [0.0f32; 2];
-        c.insert(a, &[1.0, 1.0]);
-        c.insert(b, &[2.0, 2.0]); // shard full
+        let mut buf = [0u8; 2];
+        c.insert(a, &[1, 1]);
+        c.insert(b, &[2, 2]); // shard full
         assert!(c.probe_into(a, &mut buf), "promote a");
-        c.insert(x, &[3.0, 3.0]); // evicts b (shard LRU)
+        c.insert(x, &[3, 3]); // evicts b (shard LRU)
         assert!(c.probe_into(a, &mut buf), "a survived");
         assert!(c.probe_into(x, &mut buf), "x resident");
         assert!(!c.probe_into(b, &mut buf), "b evicted");
@@ -383,17 +389,17 @@ mod tests {
     #[test]
     fn clear_empties_and_resets_counters() {
         let c = EmbeddingCache::new(8, 2);
-        c.insert(row_key(0, 1), &[1.0, 2.0]);
-        let mut buf = [0.0f32; 2];
+        c.insert(row_key(0, 1), &[1, 2]);
+        let mut buf = [0u8; 2];
         assert!(c.probe_into(row_key(0, 1), &mut buf));
         c.clear();
         assert_eq!(c.occupancy(), 0);
         assert_eq!(c.hits() + c.misses(), 0);
         assert!(!c.probe_into(row_key(0, 1), &mut buf));
         // Reinsertion after clear works (free-list reuse).
-        c.insert(row_key(0, 1), &[3.0, 4.0]);
+        c.insert(row_key(0, 1), &[3, 4]);
         assert!(c.probe_into(row_key(0, 1), &mut buf));
-        assert_eq!(buf, [3.0, 4.0]);
+        assert_eq!(buf, [3, 4]);
     }
 
     #[test]
@@ -402,8 +408,8 @@ mod tests {
         // that would route to any other copy: the key is (table, row),
         // never (shard, row). Per-table counters attribute the hits.
         let c = EmbeddingCache::with_tables(8, 2, 3);
-        let mut buf = [0.0f32; 2];
-        c.insert(row_key(1, 9), &[4.0, 5.0]); // fetched "from replica A"
+        let mut buf = [0u8; 2];
+        c.insert(row_key(1, 9), &[4, 5]); // fetched "from replica A"
         assert!(c.probe_into(row_key(1, 9), &mut buf), "replica B's read hits");
         assert!(c.probe_into(row_key(1, 9), &mut buf));
         assert!(!c.probe_into(row_key(2, 9), &mut buf), "other table, other key");
@@ -488,7 +494,7 @@ mod tests {
                 let cap = ((rows as f64 * frac) as usize).max(16);
                 let c = EmbeddingCache::new(cap, 4);
                 let mut gen = SparseIdGen::new(dist, rows, 5);
-                let mut buf = vec![0.0f32; 4];
+                let mut buf = vec![0u8; 4];
                 let mut hits = 0u64;
                 let mut total = 0u64;
                 let mut seen = std::collections::HashSet::new();
@@ -505,7 +511,7 @@ mod tests {
                         if c.probe_into(key, &mut buf) {
                             hits += 1;
                         } else {
-                            c.insert(key, &[1.0, 2.0, 3.0, 4.0]);
+                            c.insert(key, &[1, 2, 3, 4]);
                         }
                     }
                 }

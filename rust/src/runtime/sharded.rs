@@ -10,10 +10,11 @@
 //! is either owned whole by one shard, **replicated** on several (reads
 //! load-balanced across byte-identical copies), or **row-range split**
 //! across shards so one huge table no longer pins a single executor's
-//! memory. `NativeModel::take_tables` moves the rows out of the leader
-//! and `placement::slice_tables` cuts them into per-shard stores, so
-//! the capacity split (and the replication overhead) is real memory,
-//! not a modeled number. An optional hot-row [`EmbeddingCache`] on the
+//! memory. `NativeModel::take_table_rows` moves the encoded rows
+//! (f32/f16/int8 per `--dtype`) out of the leader and
+//! `placement::slice_tables` cuts them into per-shard byte stores, so
+//! the capacity split (and the replication overhead, and the quantized
+//! shrink) is real memory, not a modeled number. An optional hot-row [`EmbeddingCache`] on the
 //! leader (`runtime::row_cache`) short-circuits remote lookups for hot
 //! rows — viable exactly because of the paper's Fig-14 locality
 //! spectrum — and reports measured hit rates next to
@@ -27,10 +28,10 @@
 //!
 //! * A table owned whole by one shard (or replicated) pools remotely:
 //!   the executor accumulates each (table, sample) tile in ascending
-//!   lookup order through the shared `sls_axpy` step, exactly like the
-//!   single-node `sls_tiles` kernel. Replicas hold byte-identical
-//!   rows, so replica choice changes *where* bytes come from, never
-//!   which bytes are summed.
+//!   lookup order through the shared `sls_axpy_bytes` step (decoding
+//!   quantized rows exactly like the single-node `sls_tiles` kernel).
+//!   Replicas hold byte-identical rows, so replica choice changes
+//!   *where* bytes come from, never which bytes are summed.
 //! * A row-split table's tile may need rows from several shards, and
 //!   float addition is not associative — so split tables are never
 //!   pooled shard-side. The leader fetches the (batch-deduplicated)
@@ -55,7 +56,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure};
 
-use super::native::{sls_axpy, Engine, EngineKind, ExecOptions, NativeModel, ScratchArena};
+use super::native::{
+    sls_axpy_bytes, Engine, EngineKind, ExecOptions, NativeModel, ScratchArena, TableDtype,
+    TableRows,
+};
 use super::placement::{
     row_owners, slice_tables, Placement, PlacementMode, PlacementPlanner, ShardSegments,
     TablePlacement, TableSkew,
@@ -121,6 +125,8 @@ pub struct ShardedStats {
     pub cache_capacity_rows: usize,
     /// Placement policy in force (config, filled on snapshot).
     pub placement: PlacementMode,
+    /// Embedding storage dtype name (config, filled on snapshot).
+    pub dtype: &'static str,
     /// Forward passes served.
     pub batches: u64,
     /// Sum over batches of the *slowest* shard's gather/pool compute
@@ -214,6 +220,7 @@ impl ShardedStats {
             ("shards", num(self.shards as f64)),
             ("cache_capacity_rows", num(self.cache_capacity_rows as f64)),
             ("placement", Json::Str(self.placement.name().into())),
+            ("dtype", Json::Str(self.dtype.into())),
             ("batches", num(self.batches as f64)),
             ("shard_sls_ns", num(self.shard_sls_ns)),
             ("gather_ns", num(self.gather_ns)),
@@ -237,28 +244,32 @@ impl ShardedStats {
 }
 
 /// Table chunks owned by one shard executor (moved out of the leader
-/// model): per global table, ascending `(row_lo, rows)` slices.
+/// model): per global table, ascending `(row_lo, row bytes)` slices in
+/// the table's storage dtype (f32/f16/int8 — rows ship and pool as the
+/// exact encoded bytes, so quantized capacity savings are real memory).
 struct ShardTables {
     segs: ShardSegments,
     emb_dim: usize,
+    row_bytes: usize,
+    dtype: TableDtype,
     lookups: usize,
 }
 
 impl ShardTables {
     /// Full copy of table `t` (only valid for tables this shard holds
     /// whole — the leader only sends `Pool` jobs for those).
-    fn full(&self, t: usize) -> &[f32] {
+    fn full(&self, t: usize) -> &[u8] {
         &self.segs[&t][0].1
     }
 
-    /// The `emb_dim` floats of row `id` of table `t` (the leader only
-    /// requests rows inside this shard's owned ranges).
-    fn row(&self, t: usize, id: usize) -> &[f32] {
+    /// The `row_bytes` encoded bytes of row `id` of table `t` (the
+    /// leader only requests rows inside this shard's owned ranges).
+    fn row(&self, t: usize, id: usize) -> &[u8] {
         let chunks = &self.segs[&t];
         let i = chunks.partition_point(|(lo, _)| *lo <= id) - 1;
         let (lo, data) = &chunks[i];
-        let off = (id - lo) * self.emb_dim;
-        &data[off..off + self.emb_dim]
+        let off = (id - lo) * self.row_bytes;
+        &data[off..off + self.row_bytes]
     }
 }
 
@@ -275,7 +286,7 @@ enum ShardJob {
         reply: mpsc::Sender<PoolReply>,
     },
     /// Fetch raw rows (row-split tables and cache-miss fills); reply
-    /// rows in request order, `emb_dim` floats each.
+    /// rows in request order, `row_bytes` encoded bytes each.
     Rows { wants: Vec<(usize, i32)>, reply: mpsc::Sender<RowsReply> },
 }
 
@@ -285,7 +296,7 @@ struct PoolReply {
 }
 
 struct RowsReply {
-    rows: Vec<f32>,
+    rows: Vec<u8>,
     compute_ns: u64,
 }
 
@@ -293,6 +304,7 @@ struct RowsReply {
 /// lifetime; exits when the leader drops its sender.
 fn shard_loop(st: ShardTables, rx: mpsc::Receiver<ShardJob>) {
     let emb = st.emb_dim;
+    let rb = st.row_bytes;
     while let Ok(job) = rx.recv() {
         match job {
             ShardJob::Pool { tables, ids, lwts, batch, reply } => {
@@ -306,16 +318,16 @@ fn shard_loop(st: ShardTables, rx: mpsc::Receiver<ShardJob>) {
                         let acc = &mut pooled[q * emb..(q + 1) * emb];
                         let base = q * l;
                         // Ascending-lookup accumulation through the
-                        // shared sls_axpy step — byte-for-byte the
-                        // single-node sls_tiles reduction (ids are
+                        // shared sls_axpy_bytes step — byte-for-byte
+                        // the single-node sls_tiles reduction (ids are
                         // leader-prescanned, so indexing is in-bounds).
                         for li in 0..l {
                             let w = lwts[base + li];
                             if w == 0.0 {
                                 continue;
                             }
-                            let start = ids[base + li] as usize * emb;
-                            sls_axpy(acc, w, &table[start..start + emb]);
+                            let start = ids[base + li] as usize * rb;
+                            sls_axpy_bytes(acc, w, &table[start..start + rb], st.dtype);
                         }
                     }
                 }
@@ -324,9 +336,9 @@ fn shard_loop(st: ShardTables, rx: mpsc::Receiver<ShardJob>) {
             }
             ShardJob::Rows { wants, reply } => {
                 let t0c = Instant::now();
-                let mut rows = vec![0.0f32; wants.len() * emb];
+                let mut rows = vec![0u8; wants.len() * rb];
                 for (k, (t, id)) in wants.iter().enumerate() {
-                    rows[k * emb..(k + 1) * emb].copy_from_slice(st.row(*t, *id as usize));
+                    rows[k * rb..(k + 1) * rb].copy_from_slice(st.row(*t, *id as usize));
                 }
                 let _ =
                     reply.send(RowsReply { rows, compute_ns: t0c.elapsed().as_nanos() as u64 });
@@ -348,13 +360,26 @@ struct Topology {
 
 impl Topology {
     /// Slice `tables` per `plan` and spawn one executor per shard.
-    fn spawn(plan: Placement, tables: Vec<Vec<f32>>, cfg: &RmcConfig, rows: usize) -> Topology {
-        let shard_bytes = plan.shard_bytes(rows, cfg.emb_dim);
-        let stores = slice_tables(tables, &plan, cfg.emb_dim);
+    fn spawn(
+        plan: Placement,
+        tables: Vec<TableRows>,
+        cfg: &RmcConfig,
+        rows: usize,
+        dtype: TableDtype,
+    ) -> Topology {
+        let row_bytes = dtype.row_bytes(cfg.emb_dim);
+        let shard_bytes = plan.shard_bytes(rows, row_bytes);
+        let stores = slice_tables(tables, &plan, row_bytes);
         let mut senders = Vec::with_capacity(plan.shards);
         let mut joins = Vec::with_capacity(plan.shards);
         for (i, segs) in stores.into_iter().enumerate() {
-            let st = ShardTables { segs, emb_dim: cfg.emb_dim, lookups: cfg.lookups };
+            let st = ShardTables {
+                segs,
+                emb_dim: cfg.emb_dim,
+                row_bytes,
+                dtype,
+                lookups: cfg.lookups,
+            };
             let (tx, join) = spawn_executor(i, st);
             senders.push(Some(tx));
             joins.push(Some(join));
@@ -421,7 +446,7 @@ fn spawn_executor(
 /// hot-row cache; see the module docs for topology and the determinism
 /// contract.
 pub struct ShardedEmbeddingService {
-    /// MLPs + interaction only — `take_tables` moved the rows out.
+    /// MLPs + interaction only — `take_table_rows` moved the rows out.
     leader: NativeModel,
     /// Leader intra-op engine for the dense stack (shared with the
     /// owning backend when co-located services would otherwise
@@ -431,6 +456,9 @@ pub struct ShardedEmbeddingService {
     /// Parameter seed the model was built with — lets an auto replan
     /// re-materialize the tables deterministically.
     seed: u64,
+    /// Embedding-table storage dtype (f32/f16/int8) — fixed at build,
+    /// shared by shards, replicas, the row transport, and the cache.
+    dtype: TableDtype,
     /// Replans enabled (placement auto, not a pinned custom plan).
     auto_replan: bool,
     planner: PlacementPlanner,
@@ -448,12 +476,12 @@ impl ShardedEmbeddingService {
     /// > 0` adds the leader hot-row cache sized as that fraction of
     /// total table rows.
     pub fn new(cfg: &RmcConfig, seed: u64, opts: ExecOptions) -> anyhow::Result<Self> {
-        Self::from_model(NativeModel::new(cfg, seed), seed, opts)
+        Self::from_model(NativeModel::with_dtype(cfg, seed, opts.dtype), seed, opts)
     }
 
     /// Build by preset name (`config::all_rmc`).
     pub fn from_name(name: &str, seed: u64, opts: ExecOptions) -> anyhow::Result<Self> {
-        Self::from_model(NativeModel::from_name(name, seed)?, seed, opts)
+        Self::from_model(NativeModel::from_name_dtype(name, seed, opts.dtype)?, seed, opts)
     }
 
     /// Consume a built model: move its tables out to the shard
@@ -483,7 +511,10 @@ impl ShardedEmbeddingService {
             PlacementPlanner::new(opts.shards, opts.placement, opts.replicate_hot);
         // No measured skew yet: the initial plan is the static
         // byte-balanced one (for `whole`, the PR-4 table-wise layout).
-        let plan = planner.plan(cfg.num_tables, model.rows(), cfg.emb_dim, &[])?;
+        // Byte budgets see the model's *stored* row size, so quantized
+        // dtypes fit more rows under the same capacity.
+        let row_bytes = model.dtype().row_bytes(cfg.emb_dim);
+        let plan = planner.plan(cfg.num_tables, model.rows(), row_bytes, &[])?;
         Self::with_plan_inner(model, seed, opts, engine, planner, plan, true)
     }
 
@@ -496,7 +527,7 @@ impl ShardedEmbeddingService {
         opts: ExecOptions,
         plan: Placement,
     ) -> anyhow::Result<Self> {
-        let model = NativeModel::new(cfg, seed);
+        let model = NativeModel::with_dtype(cfg, seed, opts.dtype);
         let engine =
             Arc::new(Engine::new(ExecOptions { threads: opts.threads, ..Default::default() }));
         let planner =
@@ -525,22 +556,27 @@ impl ShardedEmbeddingService {
         opts.validate()?;
         let cfg = model.cfg().clone();
         let rows = model.rows();
+        let dtype = model.dtype();
+        let row_bytes = dtype.row_bytes(cfg.emb_dim);
         plan.validate(cfg.num_tables, rows)?;
 
         let cache = if opts.cache_rows > 0.0 {
             let total_rows = cfg.num_tables * rows;
             let cap = ((total_rows as f64 * opts.cache_rows) as usize).max(16);
             // Per-table hit counters feed the planner's skew signal.
-            Some(EmbeddingCache::with_tables(cap, cfg.emb_dim, cfg.num_tables))
+            // Entries are encoded rows, so a quantized dtype shrinks
+            // the cache footprint at the same row capacity.
+            Some(EmbeddingCache::with_tables(cap, row_bytes, cfg.num_tables))
         } else {
             None
         };
-        let topo = Topology::spawn(plan, model.take_tables(), &cfg, rows);
+        let topo = Topology::spawn(plan, model.take_table_rows(), &cfg, rows, dtype);
         Ok(ShardedEmbeddingService {
             leader: model,
             engine,
             topo: RwLock::new(topo),
             seed,
+            dtype,
             auto_replan: from_planner && opts.placement == PlacementMode::Auto,
             planner,
             cache,
@@ -556,6 +592,12 @@ impl ShardedEmbeddingService {
     /// Rows materialized per embedding table.
     pub fn rows(&self) -> usize {
         self.leader.rows()
+    }
+
+    /// Embedding-table storage dtype across shards, cache, and
+    /// transport.
+    pub fn dtype(&self) -> TableDtype {
+        self.dtype
     }
 
     /// Shard executors in the topology (killed slots included — shard
@@ -597,6 +639,7 @@ impl ShardedEmbeddingService {
         s.shards = topo.plan.shards;
         s.shards_alive = topo.alive_count();
         s.placement = self.planner.mode;
+        s.dtype = self.dtype.name();
         s.cache_capacity_rows = self.cache.as_ref().map_or(0, |c| c.capacity_rows());
         s.shard_bytes = topo.shard_bytes.iter().map(|&b| b as u64).collect();
         s.shard_lookups.resize(topo.plan.shards.max(s.shard_lookups.len()), 0);
@@ -648,10 +691,17 @@ impl ShardedEmbeddingService {
             topo.plan.clone()
         };
         let cfg = self.cfg().clone();
-        let tables = NativeModel::new(&cfg, self.seed).take_tables();
-        let mut stores = slice_tables(tables, &plan, cfg.emb_dim);
+        let row_bytes = self.dtype.row_bytes(cfg.emb_dim);
+        let tables = NativeModel::with_dtype(&cfg, self.seed, self.dtype).take_table_rows();
+        let mut stores = slice_tables(tables, &plan, row_bytes);
         let segs = std::mem::take(&mut stores[shard]);
-        let st = ShardTables { segs, emb_dim: cfg.emb_dim, lookups: cfg.lookups };
+        let st = ShardTables {
+            segs,
+            emb_dim: cfg.emb_dim,
+            row_bytes,
+            dtype: self.dtype,
+            lookups: cfg.lookups,
+        };
         write_tolerant(&self.topo).respawn(shard, st);
         lock_tolerant(&self.stats).shard_restarts += 1;
         Ok(true)
@@ -679,7 +729,8 @@ impl ShardedEmbeddingService {
                 skew[t].cache_hits = hits;
             }
         }
-        let plan = self.planner.plan(cfg.num_tables, rows, cfg.emb_dim, &skew)?;
+        let plan =
+            self.planner.plan(cfg.num_tables, rows, self.dtype.row_bytes(cfg.emb_dim), &skew)?;
         let dead: Vec<usize> = {
             let topo = read_tolerant(&self.topo);
             if plan == topo.plan {
@@ -691,8 +742,8 @@ impl ShardedEmbeddingService {
         // parameter init is pure) and swap executors under the write
         // lock. In-flight batches finished under the old topology keep
         // their replies: queued jobs drain before an executor exits.
-        let tables = NativeModel::new(&cfg, self.seed).take_tables();
-        let mut fresh = Topology::spawn(plan, tables, &cfg, rows);
+        let tables = NativeModel::with_dtype(&cfg, self.seed, self.dtype).take_table_rows();
+        let mut fresh = Topology::spawn(plan, tables, &cfg, rows, self.dtype);
         // A replan changes the layout, not the fleet's health: shards
         // that were killed stay killed (only an explicit restart event
         // revives them), so degraded-mode accounting never self-heals.
@@ -774,13 +825,14 @@ impl ShardedEmbeddingService {
             }
             max_shard_ns = max_shard_ns.max(reply.compute_ns);
         }
+        let rb = self.dtype.row_bytes(emb);
         for req in pending.rows.drain(..) {
             let reply = req
                 .reply_rx
                 .recv()
                 .map_err(|_| anyhow!("embedding shard {} died mid-request", req.shard))?;
             for (k, (t, id)) in req.wants.iter().enumerate() {
-                let row = &reply.rows[k * emb..(k + 1) * emb];
+                let row = &reply.rows[k * rb..(k + 1) * rb];
                 let key = row_key(*t, *id as u32);
                 if let Some(cache) = &self.cache {
                     cache.insert(key, row);
@@ -792,8 +844,9 @@ impl ShardedEmbeddingService {
         }
         // Leader-side pooling for row-resolved tables (split tables,
         // and every table in cache mode) — the same ascending-lookup
-        // sls_axpy accumulation as the single-node sls_tiles, so split
-        // and cached execution stay bit-identical.
+        // sls_axpy_bytes accumulation (dequantizing in place for
+        // quantized dtypes) as the single-node sls_tiles, so split and
+        // cached execution stay bit-identical per dtype.
         for &t in &pending.fetched {
             for s in 0..batch {
                 let q = t * batch + s;
@@ -810,8 +863,8 @@ impl ShardedEmbeddingService {
                     // A leftover empty placeholder would pool zeros
                     // silently; every queued want must have been
                     // resolved by the fetch loop.
-                    debug_assert_eq!(row.len(), emb, "unresolved row fetch pooled");
-                    sls_axpy(acc, w, row);
+                    debug_assert_eq!(row.len(), rb, "unresolved row fetch pooled");
+                    sls_axpy_bytes(acc, w, row, self.dtype);
                 }
             }
         }
@@ -871,7 +924,7 @@ impl ShardedEmbeddingService {
     ) -> anyhow::Result<Pending> {
         let num_tables = self.cfg().num_tables;
         let shards = topo.plan.shards;
-        let emb = self.cfg().emb_dim;
+        let rb = self.dtype.row_bytes(self.cfg().emb_dim);
         delta.shard_lookups = vec![0; shards];
         delta.replica_reads = vec![0; shards];
         delta.table_lookups = vec![0; num_tables];
@@ -906,9 +959,9 @@ impl ShardedEmbeddingService {
 
         let mut pool_sets: Vec<Vec<usize>> = vec![Vec::new(); shards];
         let mut wants: Vec<Vec<(usize, i32)>> = vec![Vec::new(); shards];
-        let mut rowmap: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut rowmap: HashMap<u64, Vec<u8>> = HashMap::new();
         let mut fetched: Vec<usize> = Vec::new();
-        let mut rowbuf = vec![0.0f32; emb];
+        let mut rowbuf = vec![0u8; rb];
         let cache_mode = self.cache.is_some();
 
         for t in 0..num_tables {
@@ -1067,8 +1120,9 @@ struct RowsRequest {
 struct Pending {
     pooled: Vec<PoolRequest>,
     rows: Vec<RowsRequest>,
-    /// Resolved rows for leader-side pooling, keyed by `row_key`.
-    rowmap: HashMap<u64, Vec<f32>>,
+    /// Resolved rows (encoded bytes) for leader-side pooling, keyed by
+    /// `row_key`.
+    rowmap: HashMap<u64, Vec<u8>>,
     /// Tables (ascending) the leader pools from `rowmap`.
     fetched: Vec<usize>,
 }
@@ -1499,5 +1553,38 @@ mod tests {
         );
         let s = svc.stats();
         assert!(s.failover_reads > 0, "row-path failover must be measured: {s:?}");
+    }
+
+    #[test]
+    fn quantized_sharded_matches_single_node_bitwise_and_shrinks_bytes() {
+        let cfg = tiny_cfg();
+        let (dense, ids, lwts) = tiny_inputs(&cfg, 4);
+        for dtype in [TableDtype::F16, TableDtype::Int8] {
+            let single = NativeModel::with_dtype(&cfg, 7, dtype);
+            let want = single.run_rmc(&dense, &ids, &lwts).unwrap();
+            for (shards, cache_rows) in [(2, 0.0), (3, 0.5)] {
+                let o = ExecOptions { shards, cache_rows, dtype, ..Default::default() };
+                let svc = ShardedEmbeddingService::new(&cfg, 7, o).unwrap();
+                assert_eq!(svc.dtype(), dtype);
+                for i in 0..2 {
+                    assert_eq!(
+                        want,
+                        svc.run_rmc(&dense, &ids, &lwts).unwrap(),
+                        "{} shards={shards} cache={cache_rows} batch {i} diverged",
+                        dtype.name()
+                    );
+                }
+                // The capacity split reflects the encoded row size, not
+                // a fixed 4 bytes/element.
+                let table_bytes = cfg.pjrt_rows * dtype.row_bytes(cfg.emb_dim);
+                assert_eq!(
+                    svc.shard_bytes().iter().sum::<usize>(),
+                    cfg.num_tables * table_bytes,
+                    "{}: shard bytes must be dtype-sized",
+                    dtype.name()
+                );
+                assert_eq!(svc.stats().dtype, dtype.name());
+            }
+        }
     }
 }

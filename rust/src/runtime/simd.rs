@@ -1,0 +1,334 @@
+//! Runtime-detected AVX2 variants of the optimized engine's two hot
+//! kernels: the packed-panel FC GEMM (`fc_packed_rows_avx2`) and the
+//! SLS accumulate/dequantize (`sls_axpy_bytes_avx2`).
+//!
+//! Bitwise contract: every vector kernel performs the *same unfused*
+//! `mul` + `add` per element in the *same order* as its scalar twin in
+//! `runtime::native` — `_mm256_mul_ps` + `_mm256_add_ps`, never an FMA
+//! fusion — and scalar tails reuse the identical per-element arithmetic.
+//! Lanes of one ymm register hold *different output elements*, so
+//! vectorizing never reassociates any single element's reduction. The
+//! result: SIMD on/off can never change served numerics, for any dtype,
+//! at any thread count. This is property-tested to 0 ULP in
+//! `tests/prop_invariants.rs` and unit-tested per kernel below.
+//!
+//! Detection policy: one capability bit — `avx2 && fma && f16c` — via
+//! `is_x86_feature_detected!`, cached in an atomic. FMA is probed (it
+//! travels with AVX2 on every production part and keeps the policy one
+//! predictable bit) even though the kernels deliberately never fuse;
+//! F16C is required for `_mm256_cvtph_ps` on fp16 rows. Set
+//! `RECSYS_NO_SIMD=1` (or pass `--no-simd` to benches/tests via
+//! `set_simd_enabled`) to force the portable scalar path — the two are
+//! bit-identical, so toggling is always safe.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "x86_64")]
+use super::native::{fc_store_panel, relu_rows, PackedLayer, MR, NR};
+use super::native::{TableDtype, INT8_HEADER};
+
+/// Tri-state SIMD switch: 0 = uninitialized, 1 = off, 2 = on.
+static SIMD_STATE: AtomicU8 = AtomicU8::new(0);
+
+/// True when the host CPU supports the vector kernels (AVX2 + FMA +
+/// F16C on x86_64; always false elsewhere).
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Whether the vector kernels are currently selected. Lazily
+/// initialized from CPU detection and the `RECSYS_NO_SIMD` environment
+/// variable (set to anything but `0`/empty to force the scalar path).
+#[inline]
+pub fn simd_enabled() -> bool {
+    match SIMD_STATE.load(Ordering::Relaxed) {
+        0 => {
+            let disabled_by_env = std::env::var("RECSYS_NO_SIMD")
+                .map(|v| !v.is_empty() && v != "0")
+                .unwrap_or(false);
+            let on = simd_available() && !disabled_by_env;
+            SIMD_STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+        s => s == 2,
+    }
+}
+
+/// Force the SIMD path on or off for this process (benches A/B the two
+/// variants in-process; tests pin the scalar oracle). Returns the
+/// previous state. Requesting `on` without hardware support is a no-op
+/// that returns the unchanged state.
+pub fn set_simd_enabled(on: bool) -> bool {
+    let prev = simd_enabled();
+    if !on {
+        SIMD_STATE.store(1, Ordering::Relaxed);
+    } else if simd_available() {
+        SIMD_STATE.store(2, Ordering::Relaxed);
+    }
+    prev
+}
+
+/// AVX2 SLS accumulate: `acc += w * dequant(row)`, 8 output elements
+/// per iteration, scalar tail for `len % 8`. Same unfused per-element
+/// arithmetic and order as `native::sls_axpy_bytes_scalar`.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 + F16C (`simd_available`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "f16c")]
+pub(crate) unsafe fn sls_axpy_bytes_avx2(
+    acc: &mut [f32],
+    w: f32,
+    row: &[u8],
+    dtype: TableDtype,
+) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let main = n - n % 8;
+    let wv = _mm256_set1_ps(w);
+    let a = acc.as_mut_ptr();
+    match dtype {
+        TableDtype::F32 => {
+            debug_assert!(row.len() >= n * 4);
+            // x86 is little-endian: loading encoded bytes directly is
+            // exactly from_le_bytes per element.
+            let p = row.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let r = _mm256_loadu_ps(p.add(i * 4) as *const f32);
+                let cur = _mm256_loadu_ps(a.add(i));
+                _mm256_storeu_ps(a.add(i), _mm256_add_ps(cur, _mm256_mul_ps(wv, r)));
+                i += 8;
+            }
+            for j in main..n {
+                let c = std::slice::from_raw_parts(p.add(j * 4), 4);
+                *a.add(j) += w * f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        TableDtype::F16 => {
+            debug_assert!(row.len() >= n * 2);
+            let p = row.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let h = _mm_loadu_si128(p.add(i * 2) as *const __m128i);
+                let r = _mm256_cvtph_ps(h);
+                let cur = _mm256_loadu_ps(a.add(i));
+                _mm256_storeu_ps(a.add(i), _mm256_add_ps(cur, _mm256_mul_ps(wv, r)));
+                i += 8;
+            }
+            for j in main..n {
+                let c = std::slice::from_raw_parts(p.add(j * 2), 2);
+                let v = super::native::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+                *a.add(j) += w * v;
+            }
+        }
+        TableDtype::Int8 => {
+            debug_assert!(row.len() >= INT8_HEADER + n);
+            let scale = f32::from_le_bytes(row[0..4].try_into().unwrap());
+            let bias = f32::from_le_bytes(row[4..8].try_into().unwrap());
+            let sv = _mm256_set1_ps(scale);
+            let bv = _mm256_set1_ps(bias);
+            let q = row.as_ptr().add(INT8_HEADER);
+            let mut i = 0;
+            while i < main {
+                // 8 bytes -> 8 u32 lanes -> 8 f32 lanes, then the same
+                // q * scale + bias the scalar path computes.
+                let b8 = _mm_loadl_epi64(q.add(i) as *const __m128i);
+                let qi = _mm256_cvtepu8_epi32(b8);
+                let qf = _mm256_cvtepi32_ps(qi);
+                let v = _mm256_add_ps(_mm256_mul_ps(qf, sv), bv);
+                let cur = _mm256_loadu_ps(a.add(i));
+                _mm256_storeu_ps(a.add(i), _mm256_add_ps(cur, _mm256_mul_ps(wv, v)));
+                i += 8;
+            }
+            for j in main..n {
+                let v = *q.add(j) as f32 * scale + bias;
+                *a.add(j) += w * v;
+            }
+        }
+    }
+}
+
+/// AVX2 packed-panel GEMM: the 4x16 micro-kernel with the MR*NR
+/// accumulator block held in 8 ymm registers (4 rows x 2 halves of the
+/// NR=16 panel). Broadcast-multiply-add per k, unfused, ascending k —
+/// the identical reduction `native::fc_packed_rows_scalar` performs,
+/// so outputs are bit-equal. Row remainders (`rows % MR`) and the
+/// bias/ReLU epilogue reuse the scalar code paths outright.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 (`simd_available`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn fc_packed_rows_avx2(
+    p: &PackedLayer,
+    x: &[f32],
+    dst: &mut [f32],
+    rows: usize,
+) {
+    use std::arch::x86_64::*;
+    let kdim = p.in_dim;
+    let ndim = p.out_dim;
+    debug_assert_eq!(x.len(), rows * kdim);
+    debug_assert_eq!(dst.len(), rows * ndim);
+    debug_assert_eq!(NR, 16);
+    let panels = p.panels();
+    let mut r = 0;
+    while r < rows {
+        let mr = MR.min(rows - r);
+        for pi in 0..panels {
+            let n0 = pi * NR;
+            let nc = NR.min(ndim - n0);
+            let panel = &p.w[pi * kdim * NR..(pi + 1) * kdim * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            if mr == MR {
+                let x0 = &x[r * kdim..(r + 1) * kdim];
+                let x1 = &x[(r + 1) * kdim..(r + 2) * kdim];
+                let x2 = &x[(r + 2) * kdim..(r + 3) * kdim];
+                let x3 = &x[(r + 3) * kdim..(r + 4) * kdim];
+                let mut a0l = _mm256_setzero_ps();
+                let mut a0h = _mm256_setzero_ps();
+                let mut a1l = _mm256_setzero_ps();
+                let mut a1h = _mm256_setzero_ps();
+                let mut a2l = _mm256_setzero_ps();
+                let mut a2h = _mm256_setzero_ps();
+                let mut a3l = _mm256_setzero_ps();
+                let mut a3h = _mm256_setzero_ps();
+                let wp = panel.as_ptr();
+                for k in 0..kdim {
+                    let wl = _mm256_loadu_ps(wp.add(k * NR));
+                    let wh = _mm256_loadu_ps(wp.add(k * NR + 8));
+                    let v0 = _mm256_set1_ps(x0[k]);
+                    let v1 = _mm256_set1_ps(x1[k]);
+                    let v2 = _mm256_set1_ps(x2[k]);
+                    let v3 = _mm256_set1_ps(x3[k]);
+                    a0l = _mm256_add_ps(a0l, _mm256_mul_ps(v0, wl));
+                    a0h = _mm256_add_ps(a0h, _mm256_mul_ps(v0, wh));
+                    a1l = _mm256_add_ps(a1l, _mm256_mul_ps(v1, wl));
+                    a1h = _mm256_add_ps(a1h, _mm256_mul_ps(v1, wh));
+                    a2l = _mm256_add_ps(a2l, _mm256_mul_ps(v2, wl));
+                    a2h = _mm256_add_ps(a2h, _mm256_mul_ps(v2, wh));
+                    a3l = _mm256_add_ps(a3l, _mm256_mul_ps(v3, wl));
+                    a3h = _mm256_add_ps(a3h, _mm256_mul_ps(v3, wh));
+                }
+                _mm256_storeu_ps(acc[0].as_mut_ptr(), a0l);
+                _mm256_storeu_ps(acc[0].as_mut_ptr().add(8), a0h);
+                _mm256_storeu_ps(acc[1].as_mut_ptr(), a1l);
+                _mm256_storeu_ps(acc[1].as_mut_ptr().add(8), a1h);
+                _mm256_storeu_ps(acc[2].as_mut_ptr(), a2l);
+                _mm256_storeu_ps(acc[2].as_mut_ptr().add(8), a2h);
+                _mm256_storeu_ps(acc[3].as_mut_ptr(), a3l);
+                _mm256_storeu_ps(acc[3].as_mut_ptr().add(8), a3h);
+            } else {
+                // Row remainder: the scalar remainder loop verbatim
+                // (same per-element k order; not worth vectorizing).
+                for (m, a) in acc.iter_mut().enumerate().take(mr) {
+                    let xrow = &x[(r + m) * kdim..(r + m + 1) * kdim];
+                    for (k, &xv) in xrow.iter().enumerate() {
+                        let w = &panel[k * NR..k * NR + NR];
+                        for j in 0..NR {
+                            a[j] += xv * w[j];
+                        }
+                    }
+                }
+            }
+            fc_store_panel(p, dst, &acc, r, mr, n0, nc);
+        }
+        if p.relu {
+            relu_rows(dst, ndim, r, mr);
+        }
+        r += mr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(target_arch = "x86_64")]
+    use super::super::native::{
+        fc_packed_rows_scalar, sls_axpy_bytes_scalar, DenseLayer, TableRows,
+    };
+
+    #[test]
+    fn detection_is_consistent() {
+        // simd_enabled can only be true on hardware that supports it.
+        if simd_enabled() {
+            assert!(simd_available());
+        }
+        // The override round-trips and never enables without support.
+        let prev = set_simd_enabled(false);
+        assert!(!simd_enabled());
+        set_simd_enabled(true);
+        assert_eq!(simd_enabled(), simd_available());
+        set_simd_enabled(prev);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_sls_axpy_bitwise_equals_scalar() {
+        if !simd_available() {
+            println!("skipping avx2_sls_axpy_bitwise_equals_scalar: no AVX2/FMA/F16C");
+            return;
+        }
+        let mut rng = crate::util::Rng::seed_from_u64(42);
+        for emb in [1usize, 7, 8, 16, 27, 64, 65] {
+            let row: Vec<f32> = (0..emb).map(|_| rng.normal() as f32).collect();
+            for dtype in [TableDtype::F32, TableDtype::F16, TableDtype::Int8] {
+                let t = TableRows::encode(dtype, emb, &row);
+                let init: Vec<f32> = (0..emb).map(|_| rng.normal() as f32).collect();
+                let w = rng.normal() as f32;
+                let mut a = init.clone();
+                let mut b = init;
+                sls_axpy_bytes_scalar(&mut a, w, t.row(0), dtype);
+                unsafe { sls_axpy_bytes_avx2(&mut b, w, t.row(0), dtype) };
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{dtype:?} emb={emb}: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_gemm_bitwise_equals_scalar() {
+        if !simd_available() {
+            println!("skipping avx2_gemm_bitwise_equals_scalar: no AVX2/FMA/F16C");
+            return;
+        }
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        for (kdim, ndim, relu) in [(3usize, 5usize, false), (8, 16, true), (17, 33, true)] {
+            let layer = DenseLayer {
+                in_dim: kdim,
+                out_dim: ndim,
+                w: (0..kdim * ndim).map(|_| rng.normal() as f32).collect(),
+                b: (0..ndim).map(|_| rng.normal() as f32).collect(),
+                relu,
+            };
+            let p = PackedLayer::pack(&layer);
+            for rows in [1usize, 3, 4, 5, 9] {
+                let x: Vec<f32> = (0..rows * kdim).map(|_| rng.normal() as f32).collect();
+                let mut a = vec![0.0f32; rows * ndim];
+                let mut b = vec![0.0f32; rows * ndim];
+                fc_packed_rows_scalar(&p, &x, &mut a, rows);
+                unsafe { fc_packed_rows_avx2(&p, &x, &mut b, rows) };
+                for (u, v) in a.iter().zip(&b) {
+                    assert_eq!(
+                        u.to_bits(),
+                        v.to_bits(),
+                        "k={kdim} n={ndim} rows={rows}: {u} vs {v}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -249,6 +249,38 @@ fn multi_tenant_sharded_backend_serving() {
 }
 
 #[test]
+fn quantized_serving_end_to_end() {
+    // ISSUE 8 satellite: int8 rows through the full coordinator stack —
+    // the sharded SLS executors and the leader hot-row cache hold
+    // quantized bytes end-to-end. Every query completes, and the
+    // sharded breakdown reports the serving dtype (no silent f32
+    // fallback anywhere on the path).
+    use recsys::runtime::TableDtype;
+    let pool = Arc::new(NativePool::with_dtype(0, TableDtype::Int8));
+    let backend = Arc::new(NativeBackend::with_options(
+        pool,
+        ExecOptions {
+            shards: 2,
+            cache_rows: 0.05,
+            dtype: TableDtype::Int8,
+            ..Default::default()
+        },
+    ));
+    backend.preload("rmc1-small").unwrap();
+    let cfg = deployment(2, "least-loaded", 200.0);
+    let mut c = Coordinator::new(&cfg, backend.clone(), PJRT_BATCHES.to_vec()).unwrap();
+    let report = c.run_open_loop(queries(60, "rmc1-small", 4, 300.0, 5), 200.0);
+    c.shutdown();
+    assert_eq!(report.queries, 60, "every query must complete on quantized tables");
+    assert!(report.p99_ms.is_finite(), "no quantized batch may fail");
+    let breakdown = backend.sharded_breakdown();
+    assert_eq!(breakdown.len(), 1);
+    let (model, s) = &breakdown[0];
+    assert_eq!(s.dtype, "int8", "{model}: breakdown must carry the serving dtype");
+    assert!(s.batches > 0 && s.shards == 2, "{model}: sharded service must have served");
+}
+
+#[test]
 fn native_model_memory_footprint_is_scaled() {
     // The native path materializes pjrt_rows-scale tables: rmc2-small
     // must stay in the tens-of-MB band, not the paper's 10GB full scale.

@@ -1,7 +1,9 @@
 //! Property-based tests (std-only `util::prop` harness — proptest is
 //! unavailable offline) on the coordinator and substrate invariants:
 //! batcher conservation, router eligibility, cache bounds, inclusive-
-//! hierarchy containment, JSON round-trips, and SLS padding algebra.
+//! hierarchy containment, JSON round-trips, SLS padding algebra, and
+//! the quantization contracts (cross-dtype CTR error bounds, per-dtype
+//! bitwise determinism, SIMD-toggle bitwise invisibility).
 
 use std::collections::HashSet;
 use std::time::{Duration, Instant};
@@ -10,8 +12,8 @@ use recsys::config::{CacheInclusion, RmcConfig, ServerGen, ServerSpec, PJRT_BATC
 use recsys::coordinator::{DynamicBatcher, RoutingPolicy, WorkerInfo};
 use recsys::metrics::LatencyHistogram;
 use recsys::runtime::{
-    golden_dense, golden_ids, golden_lwts, Engine, EngineKind, ExecOptions, NativeModel,
-    ScratchArena, ShardedEmbeddingService,
+    golden_dense, golden_ids, golden_lwts, set_simd_enabled, simd_available, Engine, EngineKind,
+    ExecOptions, NativeModel, ScratchArena, ShardedEmbeddingService, TableDtype,
 };
 use recsys::simulator::{Cache, SharedMemorySystem};
 use recsys::util::prop::{check, f64_in, pick, usize_in};
@@ -468,6 +470,103 @@ fn prop_sharded_conformance_bitwise_across_presets() {
             }
         }
     }
+}
+
+// ------------------------------------------------- quantization/simd --
+#[test]
+fn prop_quantized_forward_tracks_f32_all_presets() {
+    // The ISSUE 8 accuracy contract: int8/f16 row storage perturbs the
+    // CTR by at most a documented bound vs the f32 model on EVERY
+    // preset — the f32 model stays the accuracy oracle, and
+    // quantization error is a measured, bounded quantity, never silent
+    // drift. Bounds match the unit test in runtime::native (int8
+    // carries per-row scale/bias; f16 has ~3 decimal digits).
+    for cfg in recsys::config::all_rmc() {
+        let f32m = NativeModel::new(&cfg, 11);
+        let (dense, ids, lwts) = rmc_inputs(&cfg, 6);
+        let want = f32m.run_rmc(&dense, &ids, &lwts).unwrap();
+        for (dtype, bound) in [(TableDtype::F16, 5e-3f32), (TableDtype::Int8, 0.05)] {
+            let qm = NativeModel::with_dtype(&cfg, 11, dtype);
+            let got = qm.run_rmc(&dense, &ids, &lwts).unwrap();
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    (w - g).abs() <= bound,
+                    "{} sample {i}: f32 CTR {w} vs {} CTR {g} exceeds bound {bound}",
+                    cfg.name,
+                    dtype.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantized_bitwise_determinism_per_dtype() {
+    // The determinism contract is PER DTYPE: for each storage encoding,
+    // serial == 4-thread optimized bitwise, and the sharded service ==
+    // single-node bitwise (cache cold and warm) — quantization changes
+    // which bytes a gather streams, never which bits an execution plan
+    // yields for the same stored bytes.
+    let cfg = recsys::config::rmc1_small();
+    let serial = Engine::serial();
+    let par = Engine::new(ExecOptions { threads: 4, ..Default::default() });
+    for dtype in [TableDtype::F32, TableDtype::F16, TableDtype::Int8] {
+        let m = NativeModel::with_dtype(&cfg, 19, dtype);
+        let mut arena = ScratchArena::new();
+        for &batch in &[1usize, 3, 8] {
+            let (dense, ids, lwts) = rmc_inputs(&cfg, batch);
+            let want =
+                m.run_rmc_with(&serial, &mut ScratchArena::new(), &dense, &ids, &lwts).unwrap();
+            let got = m.run_rmc_with(&par, &mut arena, &dense, &ids, &lwts).unwrap();
+            assert_eq!(want, got, "{} b{batch}: parallel diverged from serial", dtype.name());
+        }
+        for cache_rows in [0.0f64, 0.05] {
+            let svc = ShardedEmbeddingService::new(
+                &cfg,
+                19,
+                ExecOptions { shards: 2, cache_rows, dtype, ..Default::default() },
+            )
+            .unwrap();
+            let (dense, ids, lwts) = rmc_inputs(&cfg, 5);
+            let want = m.run_rmc(&dense, &ids, &lwts).unwrap();
+            for round in 0..2 {
+                let got = svc.run_rmc_into(&mut arena, &dense, &ids, &lwts).unwrap();
+                assert_eq!(
+                    want.as_slice(),
+                    got,
+                    "{} cache={cache_rows} round {round}: sharded diverged from single-node",
+                    dtype.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simd_toggle_is_bitwise_invisible() {
+    // The AVX2 kernels are constructed bitwise-identical to the scalar
+    // optimized path (unfused mul + add, identical order): forcing the
+    // SIMD path off and on around whole forwards must not move a single
+    // bit, for every storage dtype. Auto-skips (with a log line) on
+    // hosts without AVX2/FMA/F16C.
+    if !simd_available() {
+        println!("prop_simd_toggle_is_bitwise_invisible: AVX2/FMA/F16C absent; skipping");
+        return;
+    }
+    let cfg = recsys::config::rmc1_small();
+    let par = Engine::new(ExecOptions { threads: 4, ..Default::default() });
+    let prev = set_simd_enabled(false);
+    for dtype in [TableDtype::F32, TableDtype::F16, TableDtype::Int8] {
+        let m = NativeModel::with_dtype(&cfg, 41, dtype);
+        let (dense, ids, lwts) = rmc_inputs(&cfg, 7);
+        set_simd_enabled(false);
+        let scalar =
+            m.run_rmc_with(&par, &mut ScratchArena::new(), &dense, &ids, &lwts).unwrap();
+        set_simd_enabled(true);
+        let simd = m.run_rmc_with(&par, &mut ScratchArena::new(), &dense, &ids, &lwts).unwrap();
+        assert_eq!(scalar, simd, "{}: toggling SIMD moved the bits", dtype.name());
+    }
+    set_simd_enabled(prev);
 }
 
 // ---------------------------------------------------------- placement --
