@@ -1,0 +1,362 @@
+//! Adversarial autotune experiment (DeepRecSys-style, PAPERS.md arxiv
+//! 2001.02772): open-loop serving through the real coordinator with a
+//! deterministic batch-economics backend, comparing the online
+//! per-tenant `(max_batch, flush timeout)` hill-climber against a grid
+//! of static configurations on three arrival shapes —
+//!
+//!   * **steady**       flat Poisson at light load; every config in the
+//!                      grid keeps the SLA, so the tuner must show
+//!                      parity (its probe windows may not cost
+//!                      throughput).
+//!   * **ramp**         two abrupt load steps up to ~1.4x the
+//!                      single-query-batch capacity; the controller's
+//!                      drift detector must re-probe within one window
+//!                      of each step instead of waiting out a settle
+//!                      phase.
+//!   * **flash_crowd**  a sustained burst past every mid-bucket's
+//!                      queueing knee. The scarce resource here is the
+//!                      admission window (`INFLIGHT_CAP` queries), and
+//!                      batch size decides how fast its slots recycle:
+//!                      at max_batch 1 a slot is held for one bucket-1
+//!                      service (~2.8 ms), so worst-case sojourn is
+//!                      cap x 2.8 ms ~ 22 ms — inside the SLA at *any*
+//!                      offered rate; overload degrades to bounded
+//!                      shedding, never latency collapse. Bucket-8
+//!                      statics run the shared worker near rho ~ 0.9
+//!                      under the burst and queueing pushes p99 past
+//!                      the SLA; bucket-32 statics convert the whole
+//!                      admission window into a single batch (8 queries
+//!                      ~ 32 items) and then block admissions for a full
+//!                      13.5 ms service, shedding a third of the burst.
+//!                      The offline prior seeds the controller at the
+//!                      small-batch config; the win is *holding* it
+//!                      through the burst while every static pick in the
+//!                      grid melts one way or the other.
+//!
+//! The backend charges `base_ms + per_item_ms × bucket` per batch (the
+//! affine batch-latency shape of Fig 8): the fixed per-batch cost is
+//! what makes batching tempting at light load, and the per-item slope
+//! plus the admission cap are what punish it under the burst.
+//!
+//! Emits machine-readable `BENCH_autotune.json` (see EXPERIMENTS.md
+//! §Autotune bench for the schema and runbook).
+//!
+//! Flags:  --smoke        tiny run counts (CI emitter check); defaults
+//!                        to a separate *.smoke.json so it never
+//!                        clobbers the committed tracker
+//!         --out <path>   JSON output path (default: repo root)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use recsys::config::{
+    DeploymentConfig, ServerGen, ServerPoolConfig, PJRT_BATCHES,
+};
+use recsys::coordinator::{
+    AutotuneCfg, Backend, Coordinator, ServeReport, ServerBuilder,
+};
+use recsys::util::json::{num, obj};
+use recsys::util::Json;
+use recsys::workload::{Query, RatePlan, TrafficMix};
+
+/// Deterministic batch-economics backend: a batch on bucket `b` costs
+/// `base_ms + per_item_ms × b` regardless of how many real queries it
+/// carries — padded slots cost the same as real ones, so the per-item
+/// cost of a partial flush is what the flush policy made it.
+struct BatchEconBackend {
+    base_ms: f64,
+    per_item_ms: f64,
+}
+
+impl Backend for BatchEconBackend {
+    fn execute(
+        &self,
+        _model: &str,
+        bucket: usize,
+        queries: &[Query],
+        _gen: ServerGen,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let ms = self.base_ms + self.per_item_ms * bucket as f64;
+        std::thread::sleep(Duration::from_secs_f64(ms / 1e3));
+        Ok(queries.iter().map(|_| Vec::new()).collect())
+    }
+}
+
+/// One serving configuration under test.
+enum Arm {
+    /// Fixed `(max_batch, batch_timeout_us)` through the normal static
+    /// builder path (which caps the tenant flush timeout at SLA/4).
+    Static { max_batch: usize, timeout_us: u64 },
+    /// The online controller, seeded from the offline prior at the
+    /// arm's base rate.
+    Autotune { window_queries: u32, expected_qps: f64 },
+}
+
+struct Shape {
+    name: &'static str,
+    plan: RatePlan,
+    queries: usize,
+    /// Base (pre-burst / pre-ramp) query rate — the tuner's seed prior.
+    base_qps: f64,
+}
+
+const SLA_MS: f64 = 28.0;
+/// Admission cap in queries. Sized so the small-batch config stays
+/// SLA-safe under any overload (8 slots x 2.78 ms bucket-1 service
+/// ~ 22 ms worst-case sojourn < 28 ms), while one 32-item batch
+/// swallows the entire window (8 queries x ~4 items) and blocks
+/// admission for a full service time — the contrast the tuner exploits.
+const INFLIGHT_CAP: usize = 8;
+const BASE_MS: f64 = 2.5;
+const PER_ITEM_MS: f64 = 0.28;
+/// Probe cycles are expensive under the burst (every bucket-8 neighbor
+/// of the small-batch base scores ~40% lower mid-burst), so the bench
+/// holds a settled base much longer than the serving default before
+/// re-probing; drift re-probing still reacts within one window when
+/// load shifts.
+const SETTLE_WINDOWS: u32 = 30;
+/// Decision window in completed queries. Per-query item counts are
+/// uniform in [1, 7], so a 144-query window carries ~576 +/- 24 items:
+/// ~4% score noise per window, comfortably inside the 15% adoption
+/// hysteresis — probe decisions track the load, not the sampling noise.
+const WINDOW_QUERIES: u32 = 144;
+/// Adoption/drift band. Must clear the per-window sampling noise (see
+/// `WINDOW_QUERIES`) yet sit below the ~40% mid-burst gap between the
+/// small-batch base and its bucket-8 neighbors.
+const HYSTERESIS: f64 = 0.15;
+
+fn run_once(mix: &TrafficMix, shape: &Shape, arm: &Arm) -> anyhow::Result<ServeReport> {
+    let (max_batch, timeout_us) = match arm {
+        Arm::Static { max_batch, timeout_us } => (*max_batch, *timeout_us),
+        // The autotune arm starts from the same widest static config;
+        // its controller re-seeds and then adapts from there.
+        Arm::Autotune { .. } => (128, 7000),
+    };
+    let cfg = DeploymentConfig {
+        sla_ms: SLA_MS,
+        batch_timeout_us: timeout_us,
+        max_batch,
+        routing: "least-loaded".into(),
+        pools: vec![ServerPoolConfig {
+            gen: ServerGen::Broadwell,
+            machines: 1,
+            colocation: 1,
+            models: vec![],
+        }],
+    };
+    let backend = Arc::new(BatchEconBackend { base_ms: BASE_MS, per_item_ms: PER_ITEM_MS });
+    let mut builder = ServerBuilder::new()
+        .deployment(&cfg)
+        .backend(backend)
+        .buckets(PJRT_BATCHES.to_vec())
+        .mix(mix.clone())
+        .inflight_cap(INFLIGHT_CAP);
+    if let Arm::Autotune { window_queries, expected_qps } = arm {
+        builder = builder.autotune(AutotuneCfg {
+            window_queries: *window_queries,
+            expected_qps: Some(*expected_qps),
+            settle_windows: SETTLE_WINDOWS,
+            hysteresis: HYSTERESIS,
+        });
+    }
+    let mut c = Coordinator::from_server(builder.build()?);
+    let report =
+        c.run_open_loop(mix.stream_scheduled(shape.queries, shape.plan.clone(), 4242), SLA_MS);
+    c.shutdown();
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = match args.iter().position(|a| a == "--out") {
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => v.clone(),
+            _ => anyhow::bail!("--out requires a path argument"),
+        },
+        // Smoke runs must never clobber the committed tracker with
+        // throwaway short-run numbers.
+        None if smoke => {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_autotune.smoke.json").to_string()
+        }
+        None => concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_autotune.json").to_string(),
+    };
+
+    // Single tenant on a single worker. A query dispatched alone rides
+    // the 1-bucket (2.78 ms, never split), so max_batch 1 serves ~360
+    // q/s (~1.44k items/s) with a worst-case sojourn pinned by the
+    // admission cap; full 8-item batches cost 4.74 ms (~1.69k items/s)
+    // but queue near saturation, and 32-item batches cost 13.46 ms and
+    // monopolize the admission window. Base load (150 q/s, ~600
+    // items/s) is comfortable for every config in the grid; the flash
+    // crowd (400 q/s, ~1.6k items/s) sits past bucket-8's queueing knee
+    // and inside bucket-1's shed-but-in-SLA regime, and the ramp steps
+    // through both.
+    let mix = TrafficMix::parse("rmc1:1.0")?;
+    let shapes: Vec<Shape> = if smoke {
+        vec![
+            Shape {
+                name: "steady",
+                plan: RatePlan::constant(150.0),
+                queries: 60,
+                base_qps: 150.0,
+            },
+            Shape {
+                name: "flash_crowd",
+                plan: RatePlan::flash_crowd(150.0, 400.0, 0.1, 0.1),
+                queries: 60,
+                base_qps: 150.0,
+            },
+        ]
+    } else {
+        vec![
+            Shape {
+                name: "steady",
+                plan: RatePlan::constant(150.0),
+                queries: 1800,
+                base_qps: 150.0,
+            },
+            Shape {
+                name: "ramp",
+                plan: RatePlan::ramp(150.0, 500.0, 8.0, 2),
+                queries: 4000,
+                base_qps: 150.0,
+            },
+            Shape {
+                name: "flash_crowd",
+                plan: RatePlan::flash_crowd(150.0, 400.0, 1.5, 9.0),
+                queries: 3600,
+                base_qps: 150.0,
+            },
+        ]
+    };
+    // Static grid: every (bucket, timeout) pair a sane operator might
+    // pin, including the widest the static path can express (the
+    // builder caps tenant flush timeouts at SLA/4 = 7000us here).
+    let statics: Vec<(usize, u64)> = if smoke {
+        vec![(32, 7000)]
+    } else {
+        vec![(8, 1750), (8, 7000), (32, 1750), (32, 7000), (128, 1750), (128, 7000)]
+    };
+    let window_queries: u32 = WINDOW_QUERIES;
+
+    println!(
+        "autotune sweep: {} arrival shapes x ({} statics + tuner), SLA {} ms, cap {}, \
+         backend {}ms + {}ms/item",
+        shapes.len(),
+        statics.len(),
+        SLA_MS,
+        INFLIGHT_CAP,
+        BASE_MS,
+        PER_ITEM_MS
+    );
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut summary: Vec<Json> = Vec::new();
+    for shape in &shapes {
+        let mut best_static: Option<(String, f64)> = None;
+        for &(max_batch, timeout_us) in &statics {
+            let arm = Arm::Static { max_batch, timeout_us };
+            let r = run_once(&mix, shape, &arm)?;
+            let label = format!("static b{max_batch} t{timeout_us}us");
+            println!(
+                "{:<12} {label:<22} -> {:>7.0} items/s in SLA (shed {}, p99 {:.1} ms)",
+                shape.name,
+                r.bounded_throughput,
+                r.queries_shed,
+                r.p99_ms
+            );
+            let better = match &best_static {
+                Some((_, best)) => r.bounded_throughput > *best,
+                None => true,
+            };
+            if better {
+                best_static = Some((label.clone(), r.bounded_throughput));
+            }
+            results.push(obj(vec![
+                ("arm", Json::Str(shape.name.into())),
+                ("config", Json::Str(label)),
+                ("max_batch", num(max_batch as f64)),
+                ("timeout_us", num(timeout_us as f64)),
+                ("autotune", Json::Bool(false)),
+                ("report", r.to_json()),
+            ]));
+        }
+        let arm = Arm::Autotune { window_queries, expected_qps: shape.base_qps };
+        let r = run_once(&mix, shape, &arm)?;
+        let tuner = r.autotune.first();
+        println!(
+            "{:<12} {:<22} -> {:>7.0} items/s in SLA (shed {}, p99 {:.1} ms, {} windows, \
+             final b{} t{}us)",
+            shape.name,
+            "autotune",
+            r.bounded_throughput,
+            r.queries_shed,
+            r.p99_ms,
+            tuner.map_or(0, |t| t.windows),
+            tuner.map_or(0, |t| t.final_max_batch),
+            tuner.map_or(0, |t| t.final_timeout_us),
+        );
+        let (best_label, best_items) =
+            best_static.unwrap_or_else(|| ("none".into(), 0.0));
+        let gain = if best_items > 0.0 {
+            num(r.bounded_throughput / best_items)
+        } else {
+            Json::Null
+        };
+        summary.push(obj(vec![
+            ("arm", Json::Str(shape.name.into())),
+            ("queries", num(shape.queries as f64)),
+            ("best_static", Json::Str(best_label)),
+            ("best_static_items_per_s", num(best_items)),
+            ("autotune_items_per_s", num(r.bounded_throughput)),
+            ("tuner_gain", gain),
+            ("tuner_windows", num(tuner.map_or(0, |t| t.windows) as f64)),
+            (
+                "tuner_windows_regressed",
+                num(tuner.map_or(0, |t| t.windows_regressed) as f64),
+            ),
+            ("tuner_decisions", num(tuner.map_or(0, |t| t.decisions.len()) as f64)),
+            ("final_max_batch", num(tuner.map_or(0, |t| t.final_max_batch) as f64)),
+            ("final_timeout_us", num(tuner.map_or(0, |t| t.final_timeout_us) as f64)),
+        ]));
+        results.push(obj(vec![
+            ("arm", Json::Str(shape.name.into())),
+            ("config", Json::Str("autotune".into())),
+            ("max_batch", Json::Null),
+            ("timeout_us", Json::Null),
+            ("autotune", Json::Bool(true)),
+            ("report", r.to_json()),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("schema", Json::Str("bench_autotune/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            obj(vec![
+                ("sla_ms", num(SLA_MS)),
+                ("inflight_cap", num(INFLIGHT_CAP as f64)),
+                ("backend_base_ms", num(BASE_MS)),
+                ("backend_per_item_ms", num(PER_ITEM_MS)),
+                ("window_queries", num(window_queries as f64)),
+                ("settle_windows", num(f64::from(SETTLE_WINDOWS))),
+                ("mix", Json::Str("rmc1:1.0".into())),
+                ("workers", num(1.0)),
+            ]),
+        ),
+        (
+            "host",
+            obj(vec![(
+                "available_cores",
+                num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+            )]),
+        ),
+        ("results", Json::Arr(results)),
+        ("summary", Json::Arr(summary)),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty() + "\n")?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

@@ -10,6 +10,13 @@
 //!     every tenant; batches from all models contend on one shared
 //!     engine, thread pool, and scratch arenas.
 //!
+//! Each sweep point runs under three offered-load regimes — the
+//! historical partition-*saturating* steady arm (where both pools run
+//! flat out and the gain pins near 1.00), a *contended* arm (offered
+//! load above the dedicated slices' capacity), and a *bursty*
+//! flash-crowd arm — so dedicated-vs-colocated actually diverges where
+//! scheduling matters.
+//!
 //! Emits machine-readable `BENCH_colocation.json` (see EXPERIMENTS.md
 //! §Co-location sweep for the schema and runbook), so the measured
 //! curves can sit next to the simulator's Fig-11 predictions.
@@ -27,7 +34,7 @@ use recsys::coordinator::{Coordinator, NativeBackend, ServeReport};
 use recsys::runtime::{ExecOptions, NativePool};
 use recsys::util::json::{num, obj};
 use recsys::util::Json;
-use recsys::workload::TrafficMix;
+use recsys::workload::{RatePlan, TrafficMix};
 
 /// Tenant sets swept: the Fig-1 RMC shares, truncated and renormalized.
 const MIXES: [(usize, &str); 3] = [
@@ -36,11 +43,22 @@ const MIXES: [(usize, &str); 3] = [
     (3, "rmc1:0.46,rmc2:0.31,rmc3:0.23"),
 ];
 
-/// Offered load shared by every run in the sweep.
+/// Offered load for one regime of the sweep.
 struct Load {
+    /// Regime label carried into results/summary: "saturating" (the
+    /// historical arm — partition-saturating steady load, where
+    /// dedicated and shared pools both run flat out and the gain pins
+    /// near 1.0), "contended" (offered load exceeds the heaviest
+    /// tenant's dedicated-partition capacity while the shared pool
+    /// still has headroom), or "bursty" (flash-crowd arrivals a static
+    /// partition cannot absorb).
+    regime: &'static str,
     sla_ms: f64,
     queries: usize,
     qps: f64,
+    /// Time-varying arrival plan (bursty regime); `None` = flat Poisson
+    /// at `qps`.
+    plan: Option<RatePlan>,
 }
 
 fn run_once(
@@ -70,7 +88,13 @@ fn run_once(
     let mut c = Coordinator::new_with_mix(&cfg, backend, PJRT_BATCHES.to_vec(), mix)?;
     // Streaming schedule: the open-loop client paces straight off the
     // iterator (O(1) queries in memory at any run length).
-    let report = c.run_open_loop(mix.stream(load.queries, load.qps, 99), load.sla_ms);
+    let report = match &load.plan {
+        Some(plan) => c.run_open_loop(
+            mix.stream_scheduled(load.queries, plan.clone(), 99),
+            load.sla_ms,
+        ),
+        None => c.run_open_loop(mix.stream(load.queries, load.qps, 99), load.sla_ms),
+    };
     c.shutdown();
     Ok(report)
 }
@@ -91,15 +115,55 @@ fn main() -> anyhow::Result<()> {
         None => concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_colocation.json").to_string(),
     };
 
-    // Full-mode load is chosen to stress the *partitioned* pool: at
-    // 3000 qps the heaviest tenant's isolated share-weighted slice runs
-    // near saturation while the fully-shared pool stays comfortable —
-    // the regime where co-location wins latency-bounded throughput
-    // (paper §VI). Smoke mode only proves the emitter end-to-end.
-    let load = if smoke {
-        Load { sla_ms: 25.0, queries: 80, qps: 400.0 }
+    // Three offered-load regimes (the historical single arm ran every
+    // sweep point at partition-saturating steady load, where both pools
+    // run flat out and colocation_gain pins near 1.00 — ROADMAP called
+    // this out as measuring nothing):
+    //
+    //   saturating: the historical arm, kept for continuity.
+    //   contended:  offered load above the heaviest tenant's dedicated
+    //               share-weighted slice capacity — the partition has
+    //               no headroom to absorb its tenant's overflow, while
+    //               the shared pool can still steal idle cycles from
+    //               lighter tenants.
+    //   bursty:     flash-crowd arrivals (4x base for a quarter
+    //               second) — a static partition sized for the mean is
+    //               briefly overwhelmed per tenant; the shared pool
+    //               rides the burst with the whole worker set.
+    //
+    // Smoke mode only proves the emitter end-to-end.
+    let loads: Vec<Load> = if smoke {
+        vec![Load {
+            regime: "saturating",
+            sla_ms: 25.0,
+            queries: 80,
+            qps: 400.0,
+            plan: None,
+        }]
     } else {
-        Load { sla_ms: 25.0, queries: 2400, qps: 3000.0 }
+        vec![
+            Load {
+                regime: "saturating",
+                sla_ms: 25.0,
+                queries: 2400,
+                qps: 3000.0,
+                plan: None,
+            },
+            Load {
+                regime: "contended",
+                sla_ms: 25.0,
+                queries: 3600,
+                qps: 4500.0,
+                plan: None,
+            },
+            Load {
+                regime: "bursty",
+                sla_ms: 25.0,
+                queries: 4000,
+                qps: 2000.0,
+                plan: Some(RatePlan::flash_crowd(2000.0, 8000.0, 0.5, 0.25)),
+            },
+        ]
     };
     let workers_sweep: &[usize] = if smoke { &[2] } else { &[2, 4] };
     let threads_sweep: &[usize] = if smoke { &[1] } else { &[1, 2] };
@@ -115,77 +179,82 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!(
-        "colocation sweep: {} tenant sets x workers {:?} x threads {:?} x {{dedicated, shared}} \
-         ({} queries @ {} qps, SLA {} ms)",
+        "colocation sweep: {} regimes x {} tenant sets x workers {:?} x threads {:?} x \
+         {{dedicated, shared}}",
+        loads.len(),
         mixes.len(),
         workers_sweep,
         threads_sweep,
-        load.queries,
-        load.qps,
-        load.sla_ms
     );
 
     let mut results: Vec<Json> = Vec::new();
     let mut summary: Vec<Json> = Vec::new();
-    for (tenants, spec) in mixes {
-        let mix = TrafficMix::parse(spec)?;
-        for &workers in workers_sweep {
-            for &threads in threads_sweep {
-                // Isolated (dedicated partition) vs co-located (shared).
-                let mut by_mode: BTreeMap<&str, ServeReport> = BTreeMap::new();
-                for routing in ["dedicated", "least-loaded"] {
-                    let mode = if routing == "dedicated" { "isolated" } else { "colocated" };
-                    let r = run_once(&pool, &mix, workers, threads, routing, &load)?;
-                    println!(
-                        "t{tenants} w{workers} thr{threads} {mode:<9} -> {:>7.0} items/s \
-                         p99 {:>7.3} ms viol {:>5.1}%",
-                        r.bounded_throughput,
-                        r.p99_ms,
-                        r.violation_rate * 100.0
-                    );
-                    results.push(obj(vec![
-                        ("tenants", num(*tenants as f64)),
-                        ("mix", Json::Str((*spec).into())),
-                        ("workers", num(workers as f64)),
-                        ("threads", num(threads as f64)),
-                        ("mode", Json::Str(mode.into())),
-                        ("routing", Json::Str(routing.into())),
-                        ("sla_ms", num(load.sla_ms)),
-                        ("qps_target", num(load.qps)),
-                        ("report", r.to_json()),
-                    ]));
-                    by_mode.insert(mode, r);
-                }
-                if let (Some(iso), Some(co)) =
-                    (by_mode.get("isolated"), by_mode.get("colocated"))
-                {
-                    // An incomplete run (worker death) covers only
-                    // completed work, and a fully-violating isolated run
-                    // has a zero denominator — either way the ratio
-                    // would be fabricated, so it is emitted as null.
-                    let incomplete = iso.incomplete || co.incomplete;
-                    let gain = if incomplete || iso.bounded_throughput <= 0.0 {
-                        Json::Null
-                    } else {
-                        num(co.bounded_throughput / iso.bounded_throughput)
-                    };
-                    if incomplete {
-                        eprintln!(
-                            "WARNING: t{tenants} w{workers} thr{threads}: incomplete run; \
-                             colocation_gain omitted"
+    for load in &loads {
+        for (tenants, spec) in mixes {
+            let mix = TrafficMix::parse(spec)?;
+            for &workers in workers_sweep {
+                for &threads in threads_sweep {
+                    // Isolated (dedicated partition) vs co-located (shared).
+                    let mut by_mode: BTreeMap<&str, ServeReport> = BTreeMap::new();
+                    for routing in ["dedicated", "least-loaded"] {
+                        let mode =
+                            if routing == "dedicated" { "isolated" } else { "colocated" };
+                        let r = run_once(&pool, &mix, workers, threads, routing, load)?;
+                        println!(
+                            "{:<10} t{tenants} w{workers} thr{threads} {mode:<9} -> {:>7.0} \
+                             items/s p99 {:>7.3} ms viol {:>5.1}%",
+                            load.regime,
+                            r.bounded_throughput,
+                            r.p99_ms,
+                            r.violation_rate * 100.0
                         );
+                        results.push(obj(vec![
+                            ("regime", Json::Str(load.regime.into())),
+                            ("tenants", num(*tenants as f64)),
+                            ("mix", Json::Str((*spec).into())),
+                            ("workers", num(workers as f64)),
+                            ("threads", num(threads as f64)),
+                            ("mode", Json::Str(mode.into())),
+                            ("routing", Json::Str(routing.into())),
+                            ("sla_ms", num(load.sla_ms)),
+                            ("qps_target", num(load.qps)),
+                            ("report", r.to_json()),
+                        ]));
+                        by_mode.insert(mode, r);
                     }
-                    summary.push(obj(vec![
-                        ("tenants", num(*tenants as f64)),
-                        ("workers", num(workers as f64)),
-                        ("threads", num(threads as f64)),
-                        ("incomplete", Json::Bool(incomplete)),
-                        ("isolated_items_per_s", num(iso.bounded_throughput)),
-                        ("colocated_items_per_s", num(co.bounded_throughput)),
-                        ("colocation_gain", gain),
-                        ("isolated_p99_ms", num(iso.p99_ms)),
-                        ("colocated_p99_ms", num(co.p99_ms)),
-                    ]));
+                    if let (Some(iso), Some(co)) =
+                        (by_mode.get("isolated"), by_mode.get("colocated"))
+                    {
+                        // An incomplete run (worker death) covers only
+                        // completed work, and a fully-violating isolated run
+                        // has a zero denominator — either way the ratio
+                        // would be fabricated, so it is emitted as null.
+                        let incomplete = iso.incomplete || co.incomplete;
+                        let gain = if incomplete || iso.bounded_throughput <= 0.0 {
+                            Json::Null
+                        } else {
+                            num(co.bounded_throughput / iso.bounded_throughput)
+                        };
+                        if incomplete {
+                            eprintln!(
+                                "WARNING: {} t{tenants} w{workers} thr{threads}: incomplete \
+                                 run; colocation_gain omitted",
+                                load.regime
+                            );
+                        }
+                        summary.push(obj(vec![
+                            ("regime", Json::Str(load.regime.into())),
+                            ("tenants", num(*tenants as f64)),
+                            ("workers", num(workers as f64)),
+                            ("threads", num(threads as f64)),
+                            ("incomplete", Json::Bool(incomplete)),
+                            ("isolated_items_per_s", num(iso.bounded_throughput)),
+                            ("colocated_items_per_s", num(co.bounded_throughput)),
+                            ("colocation_gain", gain),
+                            ("isolated_p99_ms", num(iso.p99_ms)),
+                            ("colocated_p99_ms", num(co.p99_ms)),
+                        ]));
+                    }
                 }
             }
         }
@@ -197,11 +266,25 @@ fn main() -> anyhow::Result<()> {
         (
             "config",
             obj(vec![
-                ("sla_ms", num(load.sla_ms)),
-                ("queries", num(load.queries as f64)),
-                ("qps", num(load.qps)),
                 ("batch_timeout_us", num(300.0)),
                 ("max_batch", num(128.0)),
+                (
+                    "regimes",
+                    Json::Arr(
+                        loads
+                            .iter()
+                            .map(|l| {
+                                obj(vec![
+                                    ("regime", Json::Str(l.regime.into())),
+                                    ("sla_ms", num(l.sla_ms)),
+                                    ("queries", num(l.queries as f64)),
+                                    ("qps", num(l.qps)),
+                                    ("bursty", Json::Bool(l.plan.is_some())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
         (

@@ -9,6 +9,22 @@
 //! accumulation model: a bucket of size `b` at arrival rate `lambda`
 //! items/s waits ~`(b-1)/(2*lambda)` to fill (or flushes at the batcher
 //! timeout, whichever is first).
+//!
+//! Two layers live here:
+//!
+//! - `tune` — the fixed *offline* prior: closed-form model, no feedback.
+//! - `OnlineTuner` — a DeepRecSys-style (arxiv 2001.02772) *online*
+//!   per-tenant controller. It observes its tenant's windowed SLA
+//!   counters (in-SLA items, p95) over fixed decision windows and
+//!   hill-climbs `(max_batch bucket, flush timeout)` on a discrete
+//!   grid: one neighbor probed per window, adopted only on improvement
+//!   beyond a hysteresis band, reverted otherwise, settling once no
+//!   neighbor improves and re-probing when the base score drifts.
+//!   Decisions are a pure function of the windowed counter sequence —
+//!   no wall-clock, no randomness — so a replayed trace reproduces the
+//!   decision log bit-for-bit.
+
+use std::time::Duration;
 
 /// One candidate point evaluated by the tuner.
 #[derive(Debug, Clone)]
@@ -37,13 +53,16 @@ pub fn tune(
     let mut points = Vec::new();
     for &b in buckets {
         let exec_ms = latency_ms(b);
-        // Mean fill wait for the *first* item in the batch; capped by the
-        // flush timeout.
-        let fill_ms = ((b.saturating_sub(1)) as f64 / lambda_items) * 1e3;
-        let wait_ms = fill_ms.min(timeout_ms);
+        // Filling a batch of `b` takes (b-1)/lambda end to end, but the
+        // *mean* wait an item sees is half that — (b-1)/(2*lambda), the
+        // M/D/1 accumulation wait (first item waits the full fill, last
+        // item waits zero). Both are capped by the flush timeout.
+        let full_fill_ms = ((b.saturating_sub(1)) as f64 / lambda_items) * 1e3;
+        let wait_ms = (full_fill_ms / 2.0).min(timeout_ms);
         let latency = wait_ms + exec_ms;
-        // Items actually in the batch when it flushes.
-        let filled = if fill_ms <= timeout_ms {
+        // Items actually in the batch when it flushes: the timeout bounds
+        // the *full* fill time, not the mean wait.
+        let filled = if full_fill_ms <= timeout_ms {
             b as f64
         } else {
             (lambda_items * timeout_ms / 1e3).max(1.0)
@@ -71,6 +90,293 @@ pub fn tune(
         })
         .map(|p| p.bucket);
     (best, points)
+}
+
+// ----------------------------------------------------------------------
+// Online controller
+// ----------------------------------------------------------------------
+
+/// Controller knobs. Defaults match the serving path; benches and tests
+/// shrink the window for faster reaction.
+#[derive(Debug, Clone)]
+pub struct AutotuneCfg {
+    /// Decision window length in *completed queries* per tenant. Count
+    /// based (not time based) so the decision sequence is a pure
+    /// function of the trace.
+    pub window_queries: u32,
+    /// Relative improvement a probe must show over the base score to be
+    /// adopted; also the drift band that triggers re-probing.
+    pub hysteresis: f64,
+    /// Windows to hold the base config after a full unimproved probe
+    /// cycle before probing again.
+    pub settle_windows: u32,
+    /// Offered qps hint used to seed from the offline `tune()` prior.
+    pub expected_qps: Option<f64>,
+}
+
+impl Default for AutotuneCfg {
+    fn default() -> Self {
+        AutotuneCfg { window_queries: 64, hysteresis: 0.05, settle_windows: 4, expected_qps: None }
+    }
+}
+
+/// Counters observed over one decision window. The controller sees
+/// nothing else — in particular no wall-clock — so identical stat
+/// sequences yield identical decision logs.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowStats {
+    /// Items completed within the tenant's SLA this window.
+    pub items_ok: u64,
+    /// All items completed this window.
+    pub items_total: u64,
+    /// p95 completion latency this window (logged, not optimized).
+    pub p95_ms: f64,
+}
+
+/// One entry of the controller's decision log: the config applied for
+/// the *next* window, plus the score that drove the choice.
+#[derive(Debug, Clone)]
+pub struct TuneDecision {
+    pub window: u64,
+    /// "seed" | "measure" | "adopt" | "revert" | "hold" | "probe" | "reprobe".
+    pub action: &'static str,
+    pub max_batch: usize,
+    pub timeout_us: u64,
+    pub score: f64,
+    pub p95_ms: f64,
+}
+
+enum Phase {
+    /// First window: measure the seeded base config.
+    MeasureBase,
+    /// `active` is the k-th neighbor of `base`; the next window's stats
+    /// score it.
+    Probe { k: usize },
+    /// No neighbor improved; hold the base for `left` more windows
+    /// (re-measuring it, so drift is caught) before probing again.
+    Settle { left: u32 },
+}
+
+/// Per-tenant online hill-climber over `(max_batch bucket, flush
+/// timeout)`. The grid is the sorted AOT bucket list crossed with a
+/// geometric timeout ladder from SLA/64 up to SLA/2 — deliberately past
+/// the static builder's conservative SLA/4 cap, because the controller
+/// validates every step against the live meter and backs off on
+/// regression, which a static flag cannot.
+pub struct OnlineTuner {
+    model: String,
+    cfg: AutotuneCfg,
+    buckets: Vec<usize>,
+    timeouts_us: Vec<u64>,
+    /// Best-known config (indices into buckets/timeouts_us).
+    base: (usize, usize),
+    base_score: f64,
+    /// Config currently applied (== base except while probing).
+    active: (usize, usize),
+    phase: Phase,
+    window: u64,
+    windows_regressed: u64,
+    log: Vec<TuneDecision>,
+}
+
+fn nearest_idx(values: &[u64], target: u64) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in values.iter().enumerate() {
+        if (v as i64 - target as i64).abs() < (values[best] as i64 - target as i64).abs() {
+            best = i;
+        }
+    }
+    best
+}
+
+impl OnlineTuner {
+    /// Start from an explicit static config (snapped to the grid).
+    pub fn new(
+        model: &str,
+        buckets: &[usize],
+        sla_ms: f64,
+        seed_max_batch: usize,
+        seed_timeout: Duration,
+        cfg: AutotuneCfg,
+    ) -> Self {
+        assert!(!buckets.is_empty(), "need at least one bucket");
+        assert!(sla_ms > 0.0);
+        let mut buckets = buckets.to_vec();
+        buckets.sort_unstable();
+        buckets.dedup();
+        let mut timeouts_us: Vec<u64> = (0..6u32)
+            .map(|i| ((sla_ms * 1e3) / 64.0 * f64::from(1u32 << i)).round().max(50.0) as u64)
+            .collect();
+        timeouts_us.dedup();
+        let bucket_vals: Vec<u64> = buckets.iter().map(|&b| b as u64).collect();
+        let b0 = nearest_idx(&bucket_vals, seed_max_batch as u64);
+        let t0 = nearest_idx(&timeouts_us, seed_timeout.as_micros() as u64);
+        let mut tuner = OnlineTuner {
+            model: model.to_string(),
+            cfg,
+            buckets,
+            timeouts_us,
+            base: (b0, t0),
+            base_score: 0.0,
+            active: (b0, t0),
+            phase: Phase::MeasureBase,
+            window: 0,
+            windows_regressed: 0,
+            log: Vec::new(),
+        };
+        tuner.push_log("seed", 0.0, 0.0);
+        tuner
+    }
+
+    /// Seed from the fixed offline `tune()` prior: pick the starting
+    /// bucket the closed-form model would, then refine online.
+    pub fn seeded(
+        model: &str,
+        buckets: &[usize],
+        latency_ms: impl Fn(usize) -> f64,
+        lambda_items: f64,
+        sla_ms: f64,
+        seed_timeout: Duration,
+        cfg: AutotuneCfg,
+    ) -> Self {
+        let timeout_ms = seed_timeout.as_secs_f64() * 1e3;
+        let (best, _) = tune(buckets, latency_ms, lambda_items, sla_ms, timeout_ms);
+        let seed_max = best.unwrap_or_else(|| buckets.iter().copied().max().unwrap());
+        Self::new(model, buckets, sla_ms, seed_max, seed_timeout, cfg)
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn window_queries(&self) -> u32 {
+        self.cfg.window_queries.max(1)
+    }
+
+    pub fn windows(&self) -> u64 {
+        self.window
+    }
+
+    pub fn windows_regressed(&self) -> u64 {
+        self.windows_regressed
+    }
+
+    pub fn log(&self) -> &[TuneDecision] {
+        &self.log
+    }
+
+    /// Config currently applied (a probe while probing).
+    pub fn current(&self) -> (usize, Duration) {
+        self.cfg_at(self.active)
+    }
+
+    /// Best-known config (what `current` reverts to on regression).
+    pub fn best(&self) -> (usize, Duration) {
+        self.cfg_at(self.base)
+    }
+
+    fn cfg_at(&self, (b, t): (usize, usize)) -> (usize, Duration) {
+        (self.buckets[b], Duration::from_micros(self.timeouts_us[t]))
+    }
+
+    /// Fixed neighbor order: the four axis steps, then the diagonals —
+    /// the bucket and timeout knobs are coupled (a bigger bucket needs a
+    /// longer fill window to pay off), so axis-only moves can stall on a
+    /// ridge the diagonal crosses.
+    fn neighbor(&self, k: usize) -> Option<(usize, usize)> {
+        let (b, t) = self.base;
+        let nb = self.buckets.len();
+        let nt = self.timeouts_us.len();
+        match k {
+            0 if b + 1 < nb => Some((b + 1, t)),
+            1 if b > 0 => Some((b - 1, t)),
+            2 if t + 1 < nt => Some((b, t + 1)),
+            3 if t > 0 => Some((b, t - 1)),
+            4 if b + 1 < nb && t + 1 < nt => Some((b + 1, t + 1)),
+            5 if b + 1 < nb && t > 0 => Some((b + 1, t - 1)),
+            6 if b > 0 && t + 1 < nt => Some((b - 1, t + 1)),
+            7 if b > 0 && t > 0 => Some((b - 1, t - 1)),
+            _ => None,
+        }
+    }
+
+    fn next_probe(&self, from_k: usize) -> Option<(usize, (usize, usize))> {
+        (from_k..8).find_map(|k| self.neighbor(k).map(|c| (k, c)))
+    }
+
+    /// Feed one completed decision window; returns the `(max_batch,
+    /// timeout)` to apply for the next window. The score is the window's
+    /// in-SLA item count — with count-based windows under an open-loop
+    /// trace, ranking configs by in-SLA items per fixed query count is
+    /// ranking them by latency-bounded throughput.
+    pub fn on_window(&mut self, stats: WindowStats) -> (usize, Duration) {
+        self.window += 1;
+        let score = stats.items_ok as f64;
+        let h = self.cfg.hysteresis;
+        match self.phase {
+            Phase::MeasureBase => {
+                self.base_score = score;
+                self.begin_probe(0, "measure", score, stats.p95_ms);
+            }
+            Phase::Settle { left } => {
+                // Each settled window re-measures the base, keeping the
+                // reference fresh; a drop past the hysteresis band means
+                // the load drifted — resume probing immediately.
+                let drifted = score < self.base_score * (1.0 - h);
+                self.base_score = score;
+                if drifted {
+                    self.begin_probe(0, "reprobe", score, stats.p95_ms);
+                } else if left <= 1 {
+                    self.begin_probe(0, "probe", score, stats.p95_ms);
+                } else {
+                    self.phase = Phase::Settle { left: left - 1 };
+                    self.push_log("hold", score, stats.p95_ms);
+                }
+            }
+            Phase::Probe { k } => {
+                if score > self.base_score * (1.0 + h) {
+                    self.base = self.active;
+                    self.base_score = score;
+                    self.begin_probe(0, "adopt", score, stats.p95_ms);
+                } else {
+                    if score < self.base_score {
+                        self.windows_regressed += 1;
+                    }
+                    self.active = self.base;
+                    self.begin_probe(k + 1, "revert", score, stats.p95_ms);
+                }
+            }
+        }
+        self.current()
+    }
+
+    /// Move to the next valid probe at or after `from_k`, or settle if
+    /// the neighbor cycle is exhausted; log what was decided.
+    fn begin_probe(&mut self, from_k: usize, action: &'static str, score: f64, p95_ms: f64) {
+        match self.next_probe(from_k) {
+            Some((k, cand)) => {
+                self.active = cand;
+                self.phase = Phase::Probe { k };
+            }
+            None => {
+                self.active = self.base;
+                self.phase = Phase::Settle { left: self.cfg.settle_windows.max(1) };
+            }
+        }
+        self.push_log(action, score, p95_ms);
+    }
+
+    fn push_log(&mut self, action: &'static str, score: f64, p95_ms: f64) {
+        let (max_batch, timeout) = self.cfg_at(self.active);
+        self.log.push(TuneDecision {
+            window: self.window,
+            action,
+            max_batch,
+            timeout_us: timeout.as_micros() as u64,
+            score,
+            p95_ms,
+        });
+    }
 }
 
 #[cfg(test)]
@@ -110,6 +416,34 @@ mod tests {
     }
 
     #[test]
+    fn mean_wait_is_half_the_full_fill_time() {
+        // Regression for the (b-1)/lambda vs (b-1)/(2*lambda) model bug:
+        // at 50k items/s a 128-batch takes 2.54ms to fill, so the mean
+        // wait charged must be 1.27ms, not the full fill time.
+        let (_, pts) = tune(&[1, 8, 32, 128], lat, 50_000.0, 10.0, 5.0);
+        let p = pts.iter().find(|p| p.bucket == 128).unwrap();
+        assert!((p.wait_ms - 1.27).abs() < 1e-9, "wait {}", p.wait_ms);
+        let p = pts.iter().find(|p| p.bucket == 32).unwrap();
+        assert!((p.wait_ms - 0.31).abs() < 1e-9, "wait {}", p.wait_ms);
+    }
+
+    #[test]
+    fn corrected_model_unlocks_large_buckets_near_the_sla_edge() {
+        // Pin the regime where the old 2x-penalized model skewed `best`
+        // toward an undersized batch: at 30k items/s with a 6ms SLA the
+        // 128-bucket's true mean latency is 2.12 + 3.06 = 5.18ms <= 6
+        // (feasible, throughput-capped at the offered 30k), but the old
+        // model charged 4.23 + 3.06 = 7.29ms and fell back to bucket 32
+        // (28.1k items/s service bound).
+        let (best, pts) = tune(&[1, 8, 32, 128], lat, 30_000.0, 6.0, 5.0);
+        assert_eq!(best, Some(128), "mean-wait model must keep 128 feasible");
+        let p = pts.iter().find(|p| p.bucket == 128).unwrap();
+        assert!(p.feasible);
+        assert!((p.wait_ms - 127.0 / 30_000.0 / 2.0 * 1e3).abs() < 1e-9);
+        assert!((p.throughput - 30_000.0).abs() < 1e-6, "capped at offered load");
+    }
+
+    #[test]
     fn infeasible_everywhere_returns_none() {
         let (best, _) = tune(&[8, 32], |_| 100.0, 1000.0, 1.0, 0.1);
         assert_eq!(best, None);
@@ -121,5 +455,144 @@ mod tests {
         for p in pts {
             assert!(p.throughput <= 500.0 + 1e-9);
         }
+    }
+
+    // --------------------------------------------- online controller ---
+
+    const BUCKETS: [usize; 4] = [1, 8, 32, 128];
+
+    /// Synthetic window score for a config: the same M/D/1 accumulation
+    /// model `tune` uses, evaluated at the batcher's *effective* bucket,
+    /// returning in-SLA items for one window (infeasible configs land a
+    /// 5% straggler fraction, not zero, like a real meter would).
+    fn synth_items_ok(max_batch: usize, timeout: Duration, lambda: f64, sla_ms: f64) -> u64 {
+        let b = *BUCKETS.iter().rev().find(|&&x| x <= max_batch).unwrap();
+        let timeout_ms = timeout.as_secs_f64() * 1e3;
+        let full_fill_ms = ((b - 1) as f64 / lambda) * 1e3;
+        let wait_ms = (full_fill_ms / 2.0).min(timeout_ms);
+        let exec_ms = lat(b);
+        let filled = if full_fill_ms <= timeout_ms {
+            b as f64
+        } else {
+            (lambda * timeout_ms / 1e3).max(1.0)
+        };
+        let service = filled / (exec_ms / 1e3);
+        if wait_ms + exec_ms <= sla_ms {
+            service.min(lambda) as u64
+        } else {
+            (lambda * 0.05) as u64
+        }
+    }
+
+    #[test]
+    fn online_tuner_converges_to_offline_optimum() {
+        // Offline prior at 50k items/s, 10ms SLA: bucket 128.
+        let lambda = 50_000.0;
+        let sla = 10.0;
+        let (offline_best, _) = tune(&BUCKETS, lat, lambda, sla, 5.0);
+        let offline_best = offline_best.unwrap();
+        assert_eq!(offline_best, 128);
+        // Start the online controller from the WORST static config
+        // (bucket 1) and let the synthetic meter drive it.
+        let mut t = OnlineTuner::new(
+            "rmc1-small",
+            &BUCKETS,
+            sla,
+            1,
+            Duration::from_micros(1250),
+            AutotuneCfg::default(),
+        );
+        for _ in 0..20 {
+            let (mb, to) = t.current();
+            let stats = WindowStats {
+                items_ok: synth_items_ok(mb, to, lambda, sla),
+                items_total: lambda as u64,
+                p95_ms: 0.0,
+            };
+            t.on_window(stats);
+        }
+        assert_eq!(t.best().0, offline_best, "log: {:?}", t.log());
+        assert!(t.log().iter().any(|d| d.action == "adopt"));
+        // And it settles: after convergence the base stops moving.
+        let settled = t.best();
+        for _ in 0..20 {
+            let (mb, to) = t.current();
+            let stats = WindowStats {
+                items_ok: synth_items_ok(mb, to, lambda, sla),
+                items_total: lambda as u64,
+                p95_ms: 0.0,
+            };
+            t.on_window(stats);
+        }
+        assert_eq!(t.best(), settled, "steady load must not dislodge the optimum");
+    }
+
+    #[test]
+    fn tuner_reverts_within_one_window_on_regression() {
+        let mut t = OnlineTuner::new(
+            "m",
+            &BUCKETS,
+            10.0,
+            32,
+            Duration::from_micros(1250),
+            AutotuneCfg::default(),
+        );
+        let seed = t.current();
+        // Window 1 measures the base; the controller then applies a probe.
+        t.on_window(WindowStats { items_ok: 1000, items_total: 1100, p95_ms: 4.0 });
+        let probe = t.current();
+        assert_ne!(probe, seed, "controller must be probing a neighbor");
+        // Window 2: the probe regresses hard (injected latency step).
+        // The very next decision must abandon it.
+        t.on_window(WindowStats { items_ok: 300, items_total: 1100, p95_ms: 30.0 });
+        assert_eq!(t.best(), seed, "base must be restored after one bad window");
+        assert_ne!(t.current(), probe, "regressed config must not stay applied");
+        assert_eq!(t.windows_regressed(), 1);
+        assert_eq!(t.log().last().unwrap().action, "revert");
+    }
+
+    #[test]
+    fn decision_log_is_a_pure_function_of_window_stats() {
+        let stats: Vec<WindowStats> = (0..30u64)
+            .map(|i| WindowStats {
+                items_ok: 500 + (i * 37) % 400,
+                items_total: 1000,
+                p95_ms: 5.0 + (i % 7) as f64,
+            })
+            .collect();
+        let run = |stats: &[WindowStats]| {
+            let mut t = OnlineTuner::new(
+                "m",
+                &BUCKETS,
+                10.0,
+                8,
+                Duration::from_micros(625),
+                AutotuneCfg::default(),
+            );
+            for s in stats {
+                t.on_window(*s);
+            }
+            t.log()
+                .iter()
+                .map(|d| format!("{}:{}:{}:{}:{}", d.window, d.action, d.max_batch, d.timeout_us, d.score))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(&stats), run(&stats), "replayed counters must replay the log");
+    }
+
+    #[test]
+    fn seeded_controller_starts_at_the_offline_prior() {
+        let t = OnlineTuner::seeded(
+            "m",
+            &BUCKETS,
+            lat,
+            50_000.0,
+            10.0,
+            Duration::from_micros(2500),
+            AutotuneCfg::default(),
+        );
+        assert_eq!(t.current().0, 128, "prior at high load is the biggest bucket");
+        assert_eq!(t.log()[0].action, "seed");
+        assert_eq!(t.windows(), 0);
     }
 }

@@ -89,15 +89,21 @@ impl DynamicBatcher {
 
     fn flush_model_inner(&mut self, now: Instant, only_full: bool) -> Option<Batch> {
         let max = self.effective_max();
+        // Among eligible queues, flush the one whose head has waited the
+        // longest (oldest enqueue = oldest flush deadline) — NOT whatever
+        // the map happens to iterate first, which would let a
+        // later-iterated model's queue persistently flush late. Ties
+        // break on the model name so the choice is deterministic.
         let key = self
             .pending
             .iter()
             .filter(|(_, p)| !p.queries.is_empty())
-            .find(|(_, p)| match (only_full, p.oldest()) {
+            .filter(|(_, p)| match (only_full, p.oldest()) {
                 (true, _) => p.items >= max,
                 (false, Some(at)) => now.duration_since(at) >= self.timeout,
                 (false, None) => false,
             })
+            .min_by(|(ka, pa), (kb, pb)| pa.oldest().cmp(&pb.oldest()).then_with(|| ka.cmp(kb)))
             .map(|(k, _)| k.clone())?;
         let p = self.pending.get_mut(&key).unwrap();
         // Take queries from the front until the batch is full. Remaining
@@ -170,6 +176,36 @@ impl DynamicBatcher {
             }
         }
         out
+    }
+
+    /// Earliest age-based flush due time across this batcher's queues
+    /// (oldest enqueue + this batcher's timeout), as an absolute instant.
+    fn earliest_due(&self) -> Option<Instant> {
+        self.pending
+            .values()
+            .filter_map(PendingQueue::oldest)
+            .min()
+            .map(|at| at + self.timeout)
+    }
+
+    /// Runtime-adjust the batching knobs (the online autotuner's apply
+    /// path). Pending queues and their enqueue timestamps are untouched,
+    /// so the swap is safe with queries queued or in flight; the new cap
+    /// takes effect at the next push/flush. Same validity contract as
+    /// construction: `max_batch` must cover the smallest AOT bucket.
+    pub fn set_cfg(&mut self, max_batch: usize, timeout: Duration) {
+        assert!(
+            max_batch >= self.buckets[0],
+            "max_batch {max_batch} below the smallest AOT bucket {}",
+            self.buckets[0]
+        );
+        self.max_batch = max_batch;
+        self.timeout = timeout;
+    }
+
+    /// Current (max_batch, timeout) knobs.
+    pub fn cfg(&self) -> (usize, Duration) {
+        (self.max_batch, self.timeout)
     }
 
     /// Time until the next age-based flush is due (for recv_timeout).
@@ -254,9 +290,49 @@ impl TenantBatchers {
         }
     }
 
-    /// Flush the first over-age queue across all tenants.
+    /// Flush the over-age queue with the *oldest deadline* across all
+    /// tenants. The previous policy ("first timed-out tenant in
+    /// registration order") starved later-registered tenants under
+    /// sustained multi-tenant pressure: a tenant iterated earlier could
+    /// keep winning every flush slot while a later tenant's queue sat
+    /// past its deadline. Deadline = oldest enqueue + that tenant's own
+    /// timeout; ties break toward the earlier-registered tenant, which
+    /// keeps the choice deterministic.
     pub fn poll_timeout(&mut self, now: Instant) -> Option<Batch> {
-        self.all_mut().find_map(|b| b.poll_timeout(now))
+        let idx = self
+            .tenants
+            .iter()
+            .map(|(_, b)| b)
+            .chain(std::iter::once(&self.fallback))
+            .enumerate()
+            .filter_map(|(i, b)| b.earliest_due().map(|due| (i, due)))
+            .filter(|&(_, due)| due <= now)
+            .min_by_key(|&(_, due)| due)?
+            .0;
+        if idx < self.tenants.len() {
+            self.tenants[idx].1.poll_timeout(now)
+        } else {
+            self.fallback.poll_timeout(now)
+        }
+    }
+
+    /// Runtime-adjust one tenant's batching knobs (autotuner decisions
+    /// applied between flushes). Returns false if `model` has no
+    /// dedicated batcher; in-flight and queued queries are unaffected —
+    /// see `DynamicBatcher::set_cfg`.
+    pub fn set_tenant_cfg(&mut self, model: &str, max_batch: usize, timeout: Duration) -> bool {
+        match self.tenants.iter_mut().find(|(m, _)| m == model) {
+            Some((_, b)) => {
+                b.set_cfg(max_batch, timeout);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Current (max_batch, timeout) knobs for a tenant's batcher.
+    pub fn tenant_cfg(&self, model: &str) -> Option<(usize, Duration)> {
+        self.tenants.iter().find(|(m, _)| m == model).map(|(_, b)| b.cfg())
     }
 
     pub fn drain(&mut self, now: Instant) -> Vec<Batch> {
@@ -514,6 +590,64 @@ mod tests {
         assert_eq!(batches.len(), 3);
         assert_eq!(tb.pending_items(), 0);
         assert!(tb.next_deadline(t0).is_none());
+    }
+
+    #[test]
+    fn timeout_flush_picks_oldest_queue_not_map_order() {
+        // Two model queues in ONE batcher, both over-age: the flush must
+        // go to the older head regardless of HashMap iteration order.
+        let mut b = DynamicBatcher::new(vec![8], 8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(q(1, "zeta", 2), t0); // oldest
+        b.push(q(2, "alpha", 2), t0 + Duration::from_millis(5));
+        let batch = b.poll_timeout(t0 + Duration::from_millis(16)).expect("both over-age");
+        assert_eq!(batch.model, "zeta", "must flush the oldest head first");
+        let batch = b.poll_timeout(t0 + Duration::from_millis(16)).expect("alpha next");
+        assert_eq!(batch.model, "alpha");
+    }
+
+    #[test]
+    fn poll_timeout_flushes_oldest_deadline_not_registration_order() {
+        // Starvation regression: rmc1 is registered FIRST, so the old
+        // find_map policy always flushed it first whenever both tenants
+        // were over-age — rmc3's older deadline flushed persistently
+        // late. rmc3 enqueues at t0 (due t0+20ms); rmc1 enqueues at
+        // t0+19ms (due t0+21ms). At t0+25ms both are over-age and rmc3
+        // holds the OLDEST deadline: it must win the flush slot.
+        let mut tb = two_tenant();
+        let t0 = Instant::now();
+        tb.push(q(1, "rmc3-small", 2), t0);
+        tb.push(q(2, "rmc1-small", 2), t0 + Duration::from_millis(19));
+        let now = t0 + Duration::from_millis(25);
+        let b = tb.poll_timeout(now).expect("both over-age");
+        assert_eq!(b.model, "rmc3-small", "oldest deadline must flush first");
+        let b = tb.poll_timeout(now).expect("rmc1 next");
+        assert_eq!(b.model, "rmc1-small");
+        assert!(tb.poll_timeout(now).is_none());
+    }
+
+    #[test]
+    fn set_tenant_cfg_swaps_knobs_without_touching_pending() {
+        let mut tb = two_tenant();
+        let t0 = Instant::now();
+        tb.push(q(1, "rmc1-small", 2), t0);
+        assert_eq!(tb.tenant_cfg("rmc1-small"), Some((8, Duration::from_millis(2))));
+        // Raise the cap and lengthen the timeout mid-flight.
+        assert!(tb.set_tenant_cfg("rmc1-small", 32, Duration::from_millis(10)));
+        assert_eq!(tb.tenant_cfg("rmc1-small"), Some((32, Duration::from_millis(10))));
+        // The queued query kept its enqueue age: due at t0+10ms under
+        // the NEW timeout, not restarted at the swap.
+        assert!(tb.poll_timeout(t0 + Duration::from_millis(9)).is_none());
+        let b = tb.poll_timeout(t0 + Duration::from_millis(10)).expect("due under new cfg");
+        assert_eq!(b.model, "rmc1-small");
+        // The new 32-item cap governs size-triggered flushes.
+        for i in 10..17 {
+            assert!(tb.push(q(i, "rmc1-small", 4), t0).is_none(), "below new cap");
+        }
+        let b = tb.push(q(17, "rmc1-small", 4), t0).expect("32-item cap hit");
+        assert_eq!(b.bucket, 32);
+        // Unknown tenants are reported, not silently created.
+        assert!(!tb.set_tenant_cfg("nope", 8, Duration::from_millis(1)));
     }
 
     #[test]

@@ -40,12 +40,12 @@ mod server;
 mod service;
 mod worker;
 
-pub use autotune::{tune, TunePoint};
+pub use autotune::{tune, AutotuneCfg, OnlineTuner, TuneDecision, TunePoint, WindowStats};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{Backend, MockBackend, NativeBackend, SimBackend};
 pub use batcher::{Batch, DynamicBatcher, TenantBatchCfg, TenantBatchers};
 pub use router::{partition_by_share, Router, RoutingPolicy, WorkerInfo};
 pub use server::{CompletedQuery, Server, ServerBuilder, ServerHandle, Ticket, TicketOutcome};
-pub use service::{Coordinator, ServeReport, TenantReport};
+pub use service::{Coordinator, ServeReport, TenantReport, TenantTunerReport};
 pub use worker::WorkerHandle;

@@ -37,10 +37,11 @@ use crate::metrics::MultiSlaMeter;
 use crate::runtime::ExecOptions;
 use crate::workload::{FaultAction, FaultEvent, FaultPlan, Query, QueryResult, TrafficMix};
 
-use super::backend::{Backend, NativeBackend};
+use super::autotune::{AutotuneCfg, OnlineTuner, WindowStats};
+use super::backend::{Backend, NativeBackend, SimBackend};
 use super::batcher::{TenantBatchCfg, TenantBatchers};
 use super::router::{partition_by_share, Router, RoutingPolicy, WorkerInfo};
-use super::service::{ServeReport, TenantReport};
+use super::service::{ServeReport, TenantReport, TenantTunerReport};
 use super::worker::WorkerHandle;
 
 // ---------------------------------------------------------------- tickets --
@@ -242,6 +243,12 @@ impl Admission {
         self.shed.lock().unwrap().clone()
     }
 
+    /// Cumulative (queries, items) shed for one tenant — polled by the
+    /// autotuner so shed load scores against the active config.
+    fn shed_for(&self, model: &str) -> (u64, u64) {
+        self.shed.lock().unwrap().by_tenant.get(model).copied().unwrap_or((0, 0))
+    }
+
     fn reset_shed(&self) {
         *self.shed.lock().unwrap() = ShedCounts::default();
         self.peak.store(self.inflight.load(Ordering::SeqCst), Ordering::SeqCst);
@@ -310,6 +317,9 @@ pub struct ServerBuilder {
     inflight_cap: usize,
     drain_deadline: Duration,
     faults: FaultPlan,
+    /// `Some` = online per-tenant autotuning (requires a tenant mix).
+    /// `None` leaves the dispatcher bit-identical to the static path.
+    autotune: Option<AutotuneCfg>,
 }
 
 impl Default for ServerBuilder {
@@ -332,6 +342,7 @@ impl ServerBuilder {
             inflight_cap: 0,
             drain_deadline: Duration::from_secs(30),
             faults: FaultPlan::new(),
+            autotune: None,
         }
     }
 
@@ -451,6 +462,18 @@ impl ServerBuilder {
         self
     }
 
+    /// Online per-tenant autotuning (`serve --autotune`): one
+    /// `OnlineTuner` per configured tenant runs in the dispatcher loop,
+    /// hill-climbing that tenant's `(max_batch, flush timeout)` against
+    /// its SLA meter over fixed decision windows. Requires `mix` — the
+    /// controllers attach to the per-tenant batchers. Without this call
+    /// the dispatcher carries no tuner state and serving is
+    /// bit-identical to the static path.
+    pub fn autotune(mut self, cfg: AutotuneCfg) -> Self {
+        self.autotune = Some(cfg);
+        self
+    }
+
     /// Validate the whole configuration and start the server: workers
     /// spawn, the dispatcher thread starts, and the returned `Server`
     /// is ready for `handle().submit(..)`.
@@ -464,6 +487,7 @@ impl ServerBuilder {
             inflight_cap,
             drain_deadline,
             faults,
+            autotune,
         } = self;
         let policy = RoutingPolicy::parse(&cfg.routing)
             .ok_or_else(|| anyhow::anyhow!("unknown routing policy '{}'", cfg.routing))?;
@@ -560,6 +584,53 @@ impl ServerBuilder {
             }
         }
 
+        // Online per-tenant controllers: seeded from the fixed offline
+        // `tune()` prior over the simulator's latency table when the
+        // offered rate is known, else from the static config. Each
+        // seeded starting point is applied to its tenant batcher so the
+        // decision log's first entry is the config actually in force.
+        let tuners: Option<Vec<TunerSlot>> = autotune.map(|acfg| {
+            let sim = SimBackend::new(0.0);
+            let sim_gen = cfg.pools.first().map(|p| p.gen).unwrap_or(ServerGen::Broadwell);
+            let mut slots = Vec::new();
+            if let Some(mix) = &mix {
+                for t in &mix.tenants {
+                    let sla_ms = t.sla_ms.unwrap_or(cfg.sla_ms);
+                    let timeout =
+                        default_timeout.min(Duration::from_secs_f64(sla_ms / 4.0 / 1e3));
+                    let tuner = match acfg.expected_qps {
+                        Some(qps) if qps > 0.0 => {
+                            let lambda = (qps * t.share * t.items_mean as f64).max(1.0);
+                            OnlineTuner::seeded(
+                                &t.model,
+                                &buckets,
+                                |b| {
+                                    sim.latency_ms(&t.model, b, sim_gen)
+                                        .unwrap_or(f64::INFINITY)
+                                },
+                                lambda,
+                                sla_ms,
+                                timeout,
+                                acfg.clone(),
+                            )
+                        }
+                        _ => OnlineTuner::new(
+                            &t.model,
+                            &buckets,
+                            sla_ms,
+                            cfg.max_batch,
+                            timeout,
+                            acfg.clone(),
+                        ),
+                    };
+                    let (max_batch, seed_timeout) = tuner.current();
+                    batchers.set_tenant_cfg(&t.model, max_batch, seed_timeout);
+                    slots.push(TunerSlot::new(tuner));
+                }
+            }
+            slots
+        });
+
         let admission = Arc::new(Admission::new(if inflight_cap == 0 {
             usize::MAX
         } else {
@@ -602,6 +673,7 @@ impl ServerBuilder {
             shard_base: (0, 0, 0),
             degraded_since: None,
             degraded_total: Duration::ZERO,
+            tuners,
             t0,
             window_t0: t0,
         };
@@ -804,6 +876,56 @@ struct PendingQuery {
     attempts: u32,
 }
 
+/// Dispatcher-side state for one tenant's online tuner: the controller
+/// plus the decision window currently accumulating. Windows are counted
+/// in completed queries (not wall time) so the controller's input — and
+/// therefore its decision log — is a pure function of the trace.
+struct TunerSlot {
+    tuner: OnlineTuner,
+    win_queries: u32,
+    win_items_ok: u64,
+    win_items_total: u64,
+    /// Finite completion latencies this window (p95 for the log).
+    win_lat_ms: Vec<f64>,
+    /// Cumulative per-tenant shed counters already folded into windows.
+    /// Shed queries advance the window and score zero in-SLA items, so
+    /// a config that survives only by shedding cannot look healthy.
+    last_shed_q: u64,
+    last_shed_items: u64,
+}
+
+impl TunerSlot {
+    fn new(tuner: OnlineTuner) -> Self {
+        TunerSlot {
+            tuner,
+            win_queries: 0,
+            win_items_ok: 0,
+            win_items_total: 0,
+            win_lat_ms: Vec::new(),
+            last_shed_q: 0,
+            last_shed_items: 0,
+        }
+    }
+
+    fn clear_window(&mut self) {
+        self.win_queries = 0;
+        self.win_items_ok = 0;
+        self.win_items_total = 0;
+        self.win_lat_ms.clear();
+    }
+}
+
+/// p95 by nearest rank over the window's latency buffer (sorts the
+/// scratch in place; the caller clears it right after).
+fn percentile95(lat_ms: &mut [f64]) -> f64 {
+    if lat_ms.is_empty() {
+        return 0.0;
+    }
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((lat_ms.len() as f64) * 0.95).ceil() as usize;
+    lat_ms[rank.saturating_sub(1).min(lat_ms.len() - 1)]
+}
+
 struct Dispatcher {
     workers: Vec<WorkerHandle>,
     router: Router,
@@ -855,6 +977,11 @@ struct Dispatcher {
     degraded_since: Option<Instant>,
     /// Degraded wall-clock accumulated over closed intervals.
     degraded_total: Duration,
+    /// Online per-tenant autotuners (`--autotune`); `None` keeps the
+    /// dispatcher bit-identical to the static path. Controller state is
+    /// server-lifetime — an accounting `Reset` clears the partial
+    /// window, not the learned config or the decision log.
+    tuners: Option<Vec<TunerSlot>>,
     /// Latency epoch (arrival_s is measured from here) — fixed for the
     /// server's lifetime.
     t0: Instant,
@@ -1182,6 +1309,7 @@ impl Dispatcher {
         self.meter.record(&r.model, r.latency_ms, r.items as u64);
         *self.bucket_hist.entry(r.batch_bucket).or_default() += 1;
         self.queries_completed += 1;
+        self.observe_completion(&r.model, r.latency_ms, r.items as u64);
         let p = self.pending.remove(&r.ticket).expect("checked pending above");
         p.state.resolve(TicketOutcome::Completed(CompletedQuery {
             id: r.id,
@@ -1193,6 +1321,58 @@ impl Dispatcher {
             worker: r.worker,
         }));
         self.admission.release();
+    }
+
+    /// Feed one finite completion into its tenant's autotune window; on
+    /// window close, step the controller and apply the decision to the
+    /// tenant's batcher. We are on the dispatcher thread between
+    /// flushes, so the swap is in-flight-safe (queued queries keep
+    /// their enqueue ages; see `DynamicBatcher::set_cfg`).
+    fn observe_completion(&mut self, model: &str, latency_ms: f64, items: u64) {
+        if self.tuners.is_none() {
+            return;
+        }
+        let sla_ms = self.sla_for(model);
+        let (shed_q, shed_items) = self.admission.shed_for(model);
+        let slot = match self
+            .tuners
+            .as_mut()
+            .unwrap()
+            .iter_mut()
+            .find(|s| s.tuner.model() == model)
+        {
+            Some(s) => s,
+            None => return,
+        };
+        // Fold load shed since the last completion into the window:
+        // shed queries advance it with zero in-SLA items (a config that
+        // keeps latency low only by shedding must score by what it
+        // actually served).
+        let dq = shed_q.saturating_sub(slot.last_shed_q);
+        let di = shed_items.saturating_sub(slot.last_shed_items);
+        slot.last_shed_q = shed_q;
+        slot.last_shed_items = shed_items;
+        slot.win_queries =
+            slot.win_queries.saturating_add(1).saturating_add(dq.min(u32::MAX as u64) as u32);
+        slot.win_items_total += items + di;
+        if latency_ms <= sla_ms {
+            slot.win_items_ok += items;
+        }
+        slot.win_lat_ms.push(latency_ms);
+        if slot.win_queries < slot.tuner.window_queries() {
+            return;
+        }
+        let p95_ms = percentile95(&mut slot.win_lat_ms);
+        let stats = WindowStats {
+            items_ok: slot.win_items_ok,
+            items_total: slot.win_items_total,
+            p95_ms,
+        };
+        let (max_batch, timeout) = slot.tuner.on_window(stats);
+        slot.clear_window();
+        let tenant = slot.tuner.model().to_string();
+        let applied = self.batchers.set_tenant_cfg(&tenant, max_batch, timeout);
+        debug_assert!(applied, "tuner must target a configured tenant batcher");
     }
 
     fn reset(&mut self, default_sla_ms: Option<f64>) {
@@ -1224,6 +1404,18 @@ impl Dispatcher {
             !self.dead_shards.is_empty() || self.workers.iter().any(|w| !w.alive());
         self.degraded_since = degraded_now.then(Instant::now);
         self.admission.reset_shed();
+        // Controller state (learned config, decision log) survives an
+        // accounting reset; only the half-filled window is dropped so
+        // the next decision is driven entirely by the new window.
+        if let Some(tuners) = self.tuners.as_mut() {
+            for slot in tuners.iter_mut() {
+                slot.clear_window();
+                // The admission shed counters were just zeroed; re-base
+                // the fold-in baseline or the first delta underflows.
+                slot.last_shed_q = 0;
+                slot.last_shed_items = 0;
+            }
+        }
         self.window_t0 = Instant::now();
     }
 
@@ -1309,6 +1501,26 @@ impl Dispatcher {
         let degraded_duration_s = (self.degraded_total
             + self.degraded_since.map(|t| t.elapsed()).unwrap_or_default())
         .as_secs_f64();
+        let autotune: Vec<TenantTunerReport> = self
+            .tuners
+            .as_ref()
+            .map(|tuners| {
+                tuners
+                    .iter()
+                    .map(|s| {
+                        let (final_max_batch, final_timeout) = s.tuner.current();
+                        TenantTunerReport {
+                            model: s.tuner.model().to_string(),
+                            windows: s.tuner.windows(),
+                            windows_regressed: s.tuner.windows_regressed(),
+                            final_max_batch,
+                            final_timeout_us: final_timeout.as_micros() as u64,
+                            decisions: s.tuner.log().to_vec(),
+                        }
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         ServeReport {
             queries_offered,
             queries: self.queries_completed,
@@ -1342,6 +1554,7 @@ impl Dispatcher {
             p99_ms: pooled.p99(),
             bucket_histogram: self.bucket_hist.iter().map(|(b, n)| (*b, *n)).collect(),
             per_tenant,
+            autotune,
             sharded: Vec::new(),
         }
     }

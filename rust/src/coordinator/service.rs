@@ -16,6 +16,7 @@ use crate::config::DeploymentConfig;
 use crate::util::Json;
 use crate::workload::{Query, TrafficMix};
 
+use super::autotune::TuneDecision;
 use super::backend::Backend;
 use super::server::{Server, ServerBuilder, ServerHandle};
 
@@ -39,6 +40,23 @@ pub struct TenantReport {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+}
+
+/// Per-tenant online-tuner trajectory for a serving run: the decision
+/// log plus the configuration the controller ended on. Empty unless the
+/// server was built with `--autotune`.
+#[derive(Debug, Clone)]
+pub struct TenantTunerReport {
+    pub model: String,
+    /// Completed decision windows.
+    pub windows: u64,
+    /// Probe windows whose score regressed below the incumbent (each one
+    /// triggered a same-window revert).
+    pub windows_regressed: u64,
+    pub final_max_batch: usize,
+    pub final_timeout_us: u64,
+    /// Full decision log, window order (entry 0 is the seed).
+    pub decisions: Vec<TuneDecision>,
 }
 
 /// Outcome of a serving run (or a live accounting window).
@@ -109,6 +127,9 @@ pub struct ServeReport {
     /// Per-tenant breakdown, model-name order. One entry per model that
     /// completed (or shed) at least one query.
     pub per_tenant: Vec<TenantReport>,
+    /// Online-tuner trajectories (one per mix tenant); empty when the
+    /// server runs without `--autotune`.
+    pub autotune: Vec<TenantTunerReport>,
     /// Per-model sharded-execution breakdown (shard SLS / gather /
     /// leader MLP / cache hit-rate), model-name order. Empty for
     /// single-node serving; the serve CLI attaches it from
@@ -200,6 +221,17 @@ impl ServeReport {
                     t.violation_rate * 100.0
                 ));
             }
+        }
+        for t in &self.autotune {
+            s.push_str(&format!(
+                "autotune[{}]: {} windows ({} regressed), {} decisions, final b{} @ {}us\n",
+                t.model,
+                t.windows,
+                t.windows_regressed,
+                t.decisions.len(),
+                t.final_max_batch,
+                t.final_timeout_us
+            ));
         }
         for (model, st) in &self.sharded {
             if st.batches == 0 {
@@ -313,6 +345,41 @@ impl ServeReport {
                                 ("mean_ms", num(t.mean_ms)),
                                 ("p50_ms", num(t.p50_ms)),
                                 ("p99_ms", num(t.p99_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "autotune",
+                Json::Arr(
+                    self.autotune
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("model", Json::Str(t.model.clone())),
+                                ("windows", num(t.windows as f64)),
+                                ("windows_regressed", num(t.windows_regressed as f64)),
+                                ("final_max_batch", num(t.final_max_batch as f64)),
+                                ("final_timeout_us", num(t.final_timeout_us as f64)),
+                                (
+                                    "decisions",
+                                    Json::Arr(
+                                        t.decisions
+                                            .iter()
+                                            .map(|d| {
+                                                obj(vec![
+                                                    ("window", num(d.window as f64)),
+                                                    ("action", Json::Str(d.action.into())),
+                                                    ("max_batch", num(d.max_batch as f64)),
+                                                    ("timeout_us", num(d.timeout_us as f64)),
+                                                    ("score", num(d.score)),
+                                                    ("p95_ms", num(d.p95_ms)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
                             ])
                         })
                         .collect(),

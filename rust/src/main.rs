@@ -13,6 +13,7 @@
 //!                [--placement whole|rows|auto] [--replicate-hot F]
 //!                [--inflight-cap N] [--drain-deadline-s F]
 //!                [--faults SPEC]
+//!                [--autotune [on|off]] [--autotune-window N]
 //!                                       end-to-end serving run (native
 //!                                       needs no artifacts; xla/pallas
 //!                                       need the `pjrt` feature).
@@ -44,6 +45,17 @@
 //!                                       workers per tenant (isolated)
 //!                                       instead of sharing them all
 //!                                       (co-located).
+//!                                       --autotune (requires --mix)
+//!                                       runs an online per-tenant
+//!                                       hill-climber over (max_batch,
+//!                                       flush timeout), one decision
+//!                                       every --autotune-window
+//!                                       completed queries (default 64),
+//!                                       seeded from the offline tune()
+//!                                       prior at the offered --qps; the
+//!                                       report gains the per-tenant
+//!                                       decision log. off (default) is
+//!                                       bitwise-identical serving.
 //!                                       --threads N enables intra-op
 //!                                       parallelism per batch (0 = one
 //!                                       per core); --engine reference
@@ -430,6 +442,27 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(spec) => TrafficMix::parse(spec)?,
         None => TrafficMix::single(&model, items),
     };
+    // Online per-tenant autotuner: `--autotune` (or `--autotune on`)
+    // opts in; `--autotune off` (the default) leaves serving bitwise
+    // identical to a binary without the flag.
+    let autotune_on = match flags.get("autotune").map(String::as_str) {
+        None | Some("off") => false,
+        Some("true") | Some("on") => true,
+        Some(v) => anyhow::bail!("unknown --autotune '{v}' (expected on or off)"),
+    };
+    let autotune_window: u32 =
+        flags.get("autotune-window").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    if flags.contains_key("autotune-window") && !autotune_on {
+        anyhow::bail!("--autotune-window requires --autotune");
+    }
+    if autotune_on {
+        anyhow::ensure!(
+            flags.contains_key("mix"),
+            "--autotune tunes per-tenant batchers and needs --mix (a single model is a \
+             one-tenant mix, e.g. --mix {model}:1.0)"
+        );
+        anyhow::ensure!(autotune_window >= 1, "--autotune-window must be at least 1");
+    }
     let opts =
         ExecOptions { threads, engine, dtype, shards, cache_rows, placement, replicate_hot };
     opts.validate()?;
@@ -446,6 +479,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     // for, exactly as before.
     if flags.contains_key("mix") {
         builder = builder.mix(mix.clone());
+    }
+    if autotune_on {
+        builder = builder.autotune(recsys::coordinator::AutotuneCfg {
+            window_queries: autotune_window,
+            // Seed each tenant's controller from the offline tune()
+            // prior at the offered load.
+            expected_qps: Some(qps),
+            ..Default::default()
+        });
     }
     builder = builder_with_backend(builder, &mix.models(), &impl_, opts)?;
     let server = builder.build()?;

@@ -1,4 +1,7 @@
-//! Poisson arrival process for the serving experiments (open-loop load).
+//! Arrival processes for the serving experiments (open-loop load):
+//! homogeneous Poisson at a fixed rate, and non-homogeneous Poisson
+//! against a piecewise-constant [`RatePlan`] (diurnal ramps, flash
+//! crowds) via thinning.
 
 use crate::util::Rng;
 
@@ -21,6 +24,114 @@ impl PoissonArrivals {
     pub fn next_arrival_s(&mut self) -> f64 {
         self.t += self.rng.exp(self.rate_qps);
         self.t
+    }
+
+    /// All arrivals up to `horizon_s`.
+    pub fn schedule(&mut self, horizon_s: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        loop {
+            let t = self.next_arrival_s();
+            if t > horizon_s {
+                break;
+            }
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// Piecewise-constant offered-load plan: `(start_s, rate_qps)` segments
+/// in ascending start order. The rate at time `t` is the rate of the
+/// last segment whose start is ≤ `t`; the plan is flat at the final
+/// segment's rate forever after. Constructors cover the two adversarial
+/// shapes the autotune bench needs (diurnal ramp, flash crowd).
+#[derive(Debug, Clone)]
+pub struct RatePlan {
+    segments: Vec<(f64, f64)>,
+}
+
+impl RatePlan {
+    /// Flat plan — equivalent load to `PoissonArrivals::new(rate, _)`.
+    pub fn constant(rate_qps: f64) -> Self {
+        Self::segments(vec![(0.0, rate_qps)])
+    }
+
+    /// Explicit segment list. Panics on empty plans, segments before
+    /// t=0, non-ascending starts, or non-positive rates (an offered-load
+    /// plan with a zero-rate tail would hang an open-loop driver that
+    /// asks for N queries).
+    pub fn segments(segments: Vec<(f64, f64)>) -> Self {
+        assert!(!segments.is_empty(), "rate plan needs at least one segment");
+        assert!(segments[0].0 <= 0.0 + 1e-12, "first segment must start at t=0");
+        for w in segments.windows(2) {
+            assert!(w[1].0 > w[0].0, "segment starts must ascend");
+        }
+        assert!(segments.iter().all(|&(_, r)| r > 0.0), "rates must be positive");
+        RatePlan { segments }
+    }
+
+    /// Diurnal-style ramp: `steps` equal-duration risers from `from` to
+    /// `to` qps over `duration_s`, then flat at `to`.
+    pub fn ramp(from_qps: f64, to_qps: f64, duration_s: f64, steps: usize) -> Self {
+        assert!(steps >= 1 && duration_s > 0.0);
+        let segs = (0..=steps)
+            .map(|i| {
+                let frac = i as f64 / steps as f64;
+                (frac * duration_s, from_qps + frac * (to_qps - from_qps))
+            })
+            .collect();
+        Self::segments(segs)
+    }
+
+    /// Flash crowd: `base` qps, spiking to `burst` qps for
+    /// `[at_s, at_s + duration_s)`, then back to `base`.
+    pub fn flash_crowd(base_qps: f64, burst_qps: f64, at_s: f64, duration_s: f64) -> Self {
+        assert!(at_s > 0.0 && duration_s > 0.0);
+        Self::segments(vec![(0.0, base_qps), (at_s, burst_qps), (at_s + duration_s, base_qps)])
+    }
+
+    /// Offered rate at absolute time `t` seconds.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        self.segments
+            .iter()
+            .rev()
+            .find(|&&(start, _)| start <= t)
+            .map(|&(_, r)| r)
+            .unwrap_or(self.segments[0].1)
+    }
+
+    /// Peak rate — the thinning envelope.
+    pub fn max_rate(&self) -> f64 {
+        self.segments.iter().map(|&(_, r)| r).fold(f64::MIN, f64::max)
+    }
+}
+
+/// Non-homogeneous Poisson arrivals against a [`RatePlan`], generated
+/// by thinning: candidates at the envelope rate `max_rate`, each kept
+/// with probability `rate_at(t) / max_rate`. Deterministic given the
+/// seed, like [`PoissonArrivals`].
+#[derive(Debug, Clone)]
+pub struct ScheduledArrivals {
+    plan: RatePlan,
+    rng: Rng,
+    t: f64,
+}
+
+impl ScheduledArrivals {
+    pub fn new(plan: RatePlan, seed: u64) -> Self {
+        ScheduledArrivals { plan, rng: Rng::seed_from_u64(seed), t: 0.0 }
+    }
+
+    /// Next absolute arrival time in seconds.
+    pub fn next_arrival_s(&mut self) -> f64 {
+        let envelope = self.plan.max_rate();
+        loop {
+            self.t += self.rng.exp(envelope);
+            let keep = self.plan.rate_at(self.t) / envelope;
+            if self.rng.gen_f64() < keep {
+                return self.t;
+            }
+        }
     }
 
     /// All arrivals up to `horizon_s`.
@@ -63,5 +174,52 @@ mod tests {
         let a = PoissonArrivals::new(10.0, 4).schedule(2.0);
         let b = PoissonArrivals::new(10.0, 4).schedule(2.0);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rate_plan_lookup_and_envelope() {
+        let plan = RatePlan::flash_crowd(100.0, 900.0, 2.0, 0.5);
+        assert_eq!(plan.rate_at(0.0), 100.0);
+        assert_eq!(plan.rate_at(1.99), 100.0);
+        assert_eq!(plan.rate_at(2.0), 900.0);
+        assert_eq!(plan.rate_at(2.49), 900.0);
+        assert_eq!(plan.rate_at(2.5), 100.0);
+        assert_eq!(plan.rate_at(100.0), 100.0);
+        assert_eq!(plan.max_rate(), 900.0);
+        let ramp = RatePlan::ramp(100.0, 500.0, 4.0, 4);
+        assert_eq!(ramp.rate_at(0.0), 100.0);
+        assert_eq!(ramp.rate_at(2.0), 300.0);
+        assert_eq!(ramp.rate_at(4.0), 500.0);
+        assert_eq!(ramp.rate_at(99.0), 500.0, "flat at the final rate");
+    }
+
+    #[test]
+    fn scheduled_arrivals_track_the_plan() {
+        // Flat plan ≈ homogeneous Poisson at the same rate.
+        let mut flat = ScheduledArrivals::new(RatePlan::constant(1000.0), 9);
+        let n = flat.schedule(10.0).len() as f64 / 10.0;
+        assert!((n - 1000.0).abs() < 100.0, "flat rate {n}");
+        // Flash crowd: the burst second carries ~8x the base-rate load.
+        let plan = RatePlan::flash_crowd(200.0, 1600.0, 4.0, 1.0);
+        let arr = ScheduledArrivals::new(plan, 7).schedule(10.0);
+        let base: usize = arr.iter().filter(|&&t| t < 4.0).count();
+        let burst: usize = arr.iter().filter(|&&t| (4.0..5.0).contains(&t)).count();
+        let base_rate = base as f64 / 4.0;
+        assert!((base_rate - 200.0).abs() < 60.0, "base rate {base_rate}");
+        assert!(
+            (burst as f64 - 1600.0).abs() < 200.0,
+            "burst second carried {burst} arrivals"
+        );
+    }
+
+    #[test]
+    fn scheduled_arrivals_deterministic_and_monotonic() {
+        let plan = RatePlan::ramp(50.0, 400.0, 5.0, 10);
+        let a = ScheduledArrivals::new(plan.clone(), 11).schedule(8.0);
+        let b = ScheduledArrivals::new(plan, 11).schedule(8.0);
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[1] > w[0]);
+        }
     }
 }

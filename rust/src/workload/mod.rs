@@ -9,7 +9,7 @@ mod query;
 mod sparse_gen;
 mod traffic_mix;
 
-pub use arrivals::PoissonArrivals;
+pub use arrivals::{PoissonArrivals, RatePlan, ScheduledArrivals};
 pub use faults::{FaultAction, FaultEvent, FaultPlan, FaultTrigger};
 pub use query::{Query, QueryResult};
 pub use sparse_gen::{unique_fraction, IdDistribution, SparseIdGen};

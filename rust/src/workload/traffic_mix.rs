@@ -8,7 +8,7 @@
 use crate::fleet::{SHARE_RMC1, SHARE_RMC2, SHARE_RMC3};
 use crate::util::Rng;
 
-use super::{PoissonArrivals, Query};
+use super::{PoissonArrivals, Query, RatePlan, ScheduledArrivals};
 
 /// One tenant (model class) in the served mix.
 #[derive(Debug, Clone)]
@@ -159,7 +159,22 @@ impl TrafficMix {
     pub fn stream(&self, n: usize, qps: f64, seed: u64) -> QueryStream {
         QueryStream {
             mix: self.clone(),
-            arr: PoissonArrivals::new(qps, seed),
+            arr: ArrivalGen::Poisson(PoissonArrivals::new(qps, seed)),
+            rng: Rng::seed_from_u64(seed ^ 0x7E41_A7C0_FFEE_D00D),
+            next_id: 0,
+            remaining: n,
+        }
+    }
+
+    /// Like [`TrafficMix::stream`] but pacing arrivals against a
+    /// time-varying [`RatePlan`] (diurnal ramps, flash crowds) instead
+    /// of a flat Poisson rate. Tenant/item draws use the same RNG split
+    /// as `stream`, so two sources with the same seed serve the same
+    /// query identities — only the arrival times differ.
+    pub fn stream_scheduled(&self, n: usize, plan: RatePlan, seed: u64) -> QueryStream {
+        QueryStream {
+            mix: self.clone(),
+            arr: ArrivalGen::Scheduled(ScheduledArrivals::new(plan, seed)),
             rng: Rng::seed_from_u64(seed ^ 0x7E41_A7C0_FFEE_D00D),
             next_id: 0,
             remaining: n,
@@ -179,13 +194,30 @@ impl TrafficMix {
     }
 }
 
+/// Arrival pacing for a [`QueryStream`]: flat Poisson or a
+/// piecewise-constant rate plan.
+#[derive(Debug, Clone)]
+enum ArrivalGen {
+    Poisson(PoissonArrivals),
+    Scheduled(ScheduledArrivals),
+}
+
+impl ArrivalGen {
+    fn next_arrival_s(&mut self) -> f64 {
+        match self {
+            ArrivalGen::Poisson(p) => p.next_arrival_s(),
+            ArrivalGen::Scheduled(s) => s.next_arrival_s(),
+        }
+    }
+}
+
 /// Lazy open-loop query source (see [`TrafficMix::stream`]). Owns its
 /// RNG state, so two streams with the same (mix, n, qps, seed) yield
 /// identical query sequences.
 #[derive(Debug, Clone)]
 pub struct QueryStream {
     mix: TrafficMix,
-    arr: PoissonArrivals,
+    arr: ArrivalGen,
     rng: Rng,
     next_id: u64,
     remaining: usize,
@@ -299,6 +331,26 @@ mod tests {
                 && a.arrival_s == b.arrival_s
                 && a.seed == b.seed
         }));
+    }
+
+    #[test]
+    fn stream_scheduled_keeps_query_identities() {
+        // Same seed → same (model, items) sequence as the flat stream;
+        // only arrival times change with the plan.
+        let mix = TrafficMix::parse("rmc1:0.5,rmc3:0.5").unwrap();
+        let flat: Vec<Query> = mix.stream(300, 500.0, 21).collect();
+        let plan = RatePlan::flash_crowd(500.0, 2000.0, 0.2, 0.1);
+        let shaped: Vec<Query> = mix.stream_scheduled(300, plan, 21).collect();
+        assert_eq!(shaped.len(), 300);
+        assert!(flat
+            .iter()
+            .zip(&shaped)
+            .all(|(a, b)| a.id == b.id && a.model == b.model && a.items == b.items));
+        assert!(shaped.windows(2).all(|w| w[1].arrival_s > w[0].arrival_s));
+        // Determinism of the shaped source itself.
+        let plan2 = RatePlan::flash_crowd(500.0, 2000.0, 0.2, 0.1);
+        let again: Vec<Query> = mix.stream_scheduled(300, plan2, 21).collect();
+        assert!(shaped.iter().zip(&again).all(|(a, b)| a.arrival_s == b.arrival_s));
     }
 
     #[test]

@@ -341,3 +341,63 @@ fn open_loop_pacing_still_paces() {
     assert!((report.qps_offered - 100.0 / horizon).abs() / (100.0 / horizon) < 0.01);
     coordinator.shutdown();
 }
+
+#[test]
+fn autotune_serves_with_decision_log_and_exact_accounting() {
+    // ISSUE 9 tentpole: the online controller runs inside the live
+    // dispatcher. A multi-tenant run with small windows must produce a
+    // per-tenant trajectory (seed entry + at least one windowed
+    // decision for the busy tenants) while the shed/failed/completed
+    // accounting identity stays exact.
+    use recsys::coordinator::AutotuneCfg;
+    let mix = TrafficMix::parse("rmc1-small:0.7,rmc2-small:0.3").unwrap();
+    let server = ServerBuilder::new()
+        .mix(mix.clone())
+        .workers(2)
+        .routing("least-loaded")
+        .sla_ms(50.0)
+        .buckets(vec![1, 8, 32])
+        .max_batch(32)
+        .backend(Arc::new(MockBackend { latency: Duration::from_micros(200) }))
+        .autotune(AutotuneCfg { window_queries: 8, ..Default::default() })
+        .build()
+        .unwrap();
+    let mut coordinator = Coordinator::from_server(server);
+    let report = coordinator.run_open_loop(mix.generate(240, 3000.0, 77), 50.0);
+    coordinator.shutdown();
+
+    assert_eq!(report.queries, 240);
+    assert_eq!(
+        report.queries_offered,
+        report.queries + report.queries_shed + report.queries_failed,
+        "autotune must not break the accounting identity"
+    );
+    assert_eq!(report.autotune.len(), 2, "one trajectory per mix tenant");
+    for t in &report.autotune {
+        assert!(
+            !t.decisions.is_empty(),
+            "{}: decision log must at least carry the seed entry",
+            t.model
+        );
+        assert_eq!(t.decisions[0].action, "seed");
+        assert!(
+            t.final_max_batch >= 1 && t.final_timeout_us >= 50,
+            "{}: final config ({}, {}us) out of range",
+            t.model,
+            t.final_max_batch,
+            t.final_timeout_us
+        );
+    }
+    // 240 queries at a 0.7 share with window 8 → the majority tenant
+    // closes many windows; the controller must actually have stepped.
+    let rmc1 = report.autotune.iter().find(|t| t.model == "rmc1-small").unwrap();
+    assert!(rmc1.windows >= 3, "rmc1 closed {} windows", rmc1.windows);
+    assert!(rmc1.decisions.len() as u64 >= rmc1.windows, "one log entry per window + seed");
+
+    // The decision log is replayable: every logged config is one of the
+    // tuner's discrete grid points (bucket ladder x timeout ladder).
+    for d in &rmc1.decisions {
+        assert!([1usize, 8, 32].contains(&d.max_batch), "bucket {} off-grid", d.max_batch);
+        assert!(d.timeout_us >= 50, "timeout {}us below floor", d.timeout_us);
+    }
+}
