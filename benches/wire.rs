@@ -1,0 +1,281 @@
+//! Wire-boundary cost quantification (ISSUE 10): the same open-loop
+//! load served in-process (harness → `ServerHandle`, no sockets) vs
+//! over the HTTP/1.1 front-end (loadgen client → `WireServer`), across
+//! connection counts and payload sizes, plus a decode microbench of the
+//! lazy JSON scanner against the full tree parser.
+//!
+//! Both serving arms run the identical deterministic `TrafficMix`
+//! stream (same n, qps, seed) against an identically-built native
+//! server, so the only difference is the boundary: framing, decode,
+//! encode, and socket hops. Latency semantics per arm:
+//!
+//! * in-process — report latency measured from the paced schedule
+//!   arrival (the historical harness number);
+//! * wire — the server report measures from receipt (`submit_live`),
+//!   and the client additionally measures full round-trip time; the
+//!   headline `boundary_rtt_overhead_ms` is wire client RTT p50 minus
+//!   the in-process report p50 at the same load.
+//!
+//! Every arm asserts `completed + shed + failed == offered` — the
+//! identity must hold on both sides of the socket.
+//!
+//! Emits machine-readable `BENCH_wire.json` (see EXPERIMENTS.md §Wire
+//! boundary for the schema and runbook).
+//!
+//! Flags:  --smoke        tiny run (CI emitter check); defaults to a
+//!                        separate *.smoke.json so it never clobbers
+//!                        the committed tracker
+//!         --out <path>   JSON output path (default: repo root)
+
+use std::time::{Duration, Instant};
+
+use recsys::coordinator::{Coordinator, ServeReport, ServerBuilder};
+use recsys::net::loadgen;
+use recsys::net::{wire, LoadgenCfg, Pacing, WireCfg, WireServer};
+use recsys::runtime::ExecOptions;
+use recsys::util::json::{num, obj};
+use recsys::util::Json;
+use recsys::workload::TrafficMix;
+
+const MODEL: &str = "rmc1-small";
+const SLA_MS: f64 = 50.0;
+const SEED: u64 = 1234;
+
+struct Load {
+    queries: usize,
+    qps: f64,
+}
+
+fn build_server() -> anyhow::Result<recsys::coordinator::Server> {
+    // Mirror the serve CLI's single-model path: uniform batcher, native
+    // backend, model preloaded so the first query never pays the build.
+    Ok(ServerBuilder::new()
+        .workers(2)
+        .routing("least-loaded")
+        .sla_ms(SLA_MS)
+        .native(ExecOptions::default())
+        .preload(vec![MODEL.into()])
+        .buckets(recsys::config::PJRT_BATCHES.to_vec())
+        .drain_deadline(Duration::from_secs(30))
+        .build()?)
+}
+
+fn assert_identity(r: &ServeReport, arm: &str) {
+    assert_eq!(
+        r.queries_offered,
+        r.queries + r.queries_shed + r.queries_failed,
+        "{arm}: accounting identity broken"
+    );
+    assert!(!r.incomplete, "{arm}: run must drain");
+}
+
+/// In-process baseline: the open-loop harness pacing the stream straight
+/// into a `ServerHandle` — zero boundary cost.
+fn run_in_process(items_mean: usize, load: &Load) -> anyhow::Result<ServeReport> {
+    let mix = TrafficMix::single(MODEL, items_mean);
+    let mut coordinator = Coordinator::from_server(build_server()?);
+    let report = coordinator.run_open_loop(mix.stream(load.queries, load.qps, SEED), SLA_MS);
+    coordinator.shutdown();
+    assert_identity(&report, "in-process");
+    Ok(report)
+}
+
+/// Wire arm: same stream paced by the loadgen client over real sockets.
+/// Returns the (drained) server report plus client-side RTT quantiles.
+fn run_wire(
+    items_mean: usize,
+    connections: usize,
+    load: &Load,
+) -> anyhow::Result<(ServeReport, f64, f64, u64)> {
+    let mix = TrafficMix::single(MODEL, items_mean);
+    let server = build_server()?;
+    let wire_srv = WireServer::start(
+        "127.0.0.1:0",
+        server.handle(),
+        server.models(),
+        Duration::from_secs(30),
+        WireCfg::default(),
+    )?;
+    let mut cfg = LoadgenCfg::new(wire_srv.local_addr().to_string());
+    cfg.connections = connections;
+    cfg.fetch_report = false; // the typed report comes from the handle below
+    let mut stats = loadgen::run(&mix, load.queries, Pacing::Qps(load.qps), SEED, &cfg)?;
+    let handle = server.handle();
+    anyhow::ensure!(handle.quiesce(Duration::from_secs(30))?, "wire arm failed to drain");
+    let report = handle.report()?;
+    assert_identity(&report, "wire");
+    anyhow::ensure!(
+        stats.transport_errors == 0,
+        "loopback run lost {} requests to transport errors",
+        stats.transport_errors
+    );
+    let (p50, p99) = (stats.rtt_ms.p50(), stats.rtt_ms.p99());
+    drop(wire_srv);
+    Ok((report, p50, p99, stats.completed))
+}
+
+/// Decode microbench: the lazy scanner (full wire validation included)
+/// vs the recursive tree parser, on a representative query body with
+/// extra fields the scanner must skip.
+fn decode_bench(iters: usize) -> (f64, f64) {
+    let body = "{\"id\": 123456789, \"model\": \"rmc1-small\", \"items\": 32, \
+                \"client\": {\"lib\": \"bench\", \"retry\": false}, \
+                \"trace\": [1, 2, 3, 4], \"priority\": 0.5}";
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let q = wire::decode_query(std::hint::black_box(body.as_bytes())).unwrap();
+        std::hint::black_box(q);
+    }
+    let lazy_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let tree = Json::parse(std::hint::black_box(body)).unwrap();
+        std::hint::black_box(tree);
+    }
+    let full_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    (lazy_ns, full_ns)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = match args.iter().position(|a| a == "--out") {
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => v.clone(),
+            _ => anyhow::bail!("--out requires a path argument"),
+        },
+        // Smoke runs must never clobber the committed tracker with
+        // throwaway short-run numbers.
+        None if smoke => {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_wire.smoke.json").to_string()
+        }
+        None => concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_wire.json").to_string(),
+    };
+
+    let load = if smoke {
+        Load { queries: 80, qps: 400.0 }
+    } else {
+        Load { queries: 500, qps: 500.0 }
+    };
+    let payloads: &[usize] = if smoke { &[4] } else { &[4, 32] };
+    let conn_counts: &[usize] = if smoke { &[1] } else { &[1, 4] };
+    let decode_iters = if smoke { 20_000 } else { 200_000 };
+
+    println!(
+        "wire boundary: {MODEL}, {} queries at {} qps | payload items {:?} x connections {:?}",
+        load.queries, load.qps, payloads, conn_counts
+    );
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut summary: Vec<Json> = Vec::new();
+    for &items in payloads {
+        let base = run_in_process(items, &load)?;
+        println!(
+            "items~{items} in-process         -> p50 {:>7.3} ms p99 {:>7.3} ms | \
+             {:>8.0} items/s bounded",
+            base.p50_ms, base.p99_ms, base.bounded_throughput
+        );
+        results.push(obj(vec![
+            ("mode", Json::Str("in-process".into())),
+            ("items_mean", num(items as f64)),
+            ("connections", Json::Null),
+            ("queries_offered", num(base.queries_offered as f64)),
+            ("queries_completed", num(base.queries as f64)),
+            ("p50_ms", num(base.p50_ms)),
+            ("p99_ms", num(base.p99_ms)),
+            ("mean_ms", num(base.mean_ms)),
+            ("bounded_throughput", num(base.bounded_throughput)),
+            ("accounting_identity_ok", Json::Bool(true)),
+        ]));
+        for &connections in conn_counts {
+            let (r, rtt_p50, rtt_p99, completed) = run_wire(items, connections, &load)?;
+            println!(
+                "items~{items} wire conns={connections}     -> p50 {:>7.3} ms p99 {:>7.3} ms | \
+                 rtt p50 {:>7.3} ms p99 {:>7.3} ms | {:>8.0} items/s bounded",
+                r.p50_ms, r.p99_ms, rtt_p50, rtt_p99, r.bounded_throughput
+            );
+            results.push(obj(vec![
+                ("mode", Json::Str("wire".into())),
+                ("items_mean", num(items as f64)),
+                ("connections", num(connections as f64)),
+                ("queries_offered", num(r.queries_offered as f64)),
+                ("queries_completed", num(completed as f64)),
+                ("p50_ms", num(r.p50_ms)),
+                ("p99_ms", num(r.p99_ms)),
+                ("mean_ms", num(r.mean_ms)),
+                ("client_rtt_p50_ms", num(rtt_p50)),
+                ("client_rtt_p99_ms", num(rtt_p99)),
+                ("bounded_throughput", num(r.bounded_throughput)),
+                ("accounting_identity_ok", Json::Bool(true)),
+            ]));
+            // Boundary headline: what a caller pays for crossing the
+            // socket vs calling the handle, at the same offered load.
+            summary.push(obj(vec![
+                ("items_mean", num(items as f64)),
+                ("connections", num(connections as f64)),
+                ("in_process_p50_ms", num(base.p50_ms)),
+                ("wire_rtt_p50_ms", num(rtt_p50)),
+                ("boundary_rtt_overhead_ms", num(rtt_p50 - base.p50_ms)),
+                ("in_process_p99_ms", num(base.p99_ms)),
+                ("wire_rtt_p99_ms", num(rtt_p99)),
+                (
+                    "bounded_throughput_ratio",
+                    num(if base.bounded_throughput > 0.0 {
+                        r.bounded_throughput / base.bounded_throughput
+                    } else {
+                        0.0
+                    }),
+                ),
+            ]));
+        }
+    }
+
+    let (lazy_ns, full_ns) = decode_bench(decode_iters);
+    println!(
+        "decode: lazy scan {lazy_ns:.0} ns/op vs full parse {full_ns:.0} ns/op \
+         ({:.2}x) over {decode_iters} iters",
+        full_ns / lazy_ns
+    );
+
+    let doc = obj(vec![
+        ("schema", Json::Str("bench_wire/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            obj(vec![
+                ("model", Json::Str(MODEL.into())),
+                ("sla_ms", num(SLA_MS)),
+                ("queries", num(load.queries as f64)),
+                ("qps", num(load.qps)),
+                ("seed", num(SEED as f64)),
+                ("workers", num(2.0)),
+                ("payload_items", Json::Arr(payloads.iter().map(|&i| num(i as f64)).collect())),
+                (
+                    "connection_counts",
+                    Json::Arr(conn_counts.iter().map(|&c| num(c as f64)).collect()),
+                ),
+            ]),
+        ),
+        (
+            "host",
+            obj(vec![(
+                "available_cores",
+                num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+            )]),
+        ),
+        ("results", Json::Arr(results)),
+        (
+            "decode",
+            obj(vec![
+                ("iters", num(decode_iters as f64)),
+                ("lazy_scan_ns_per_op", num(lazy_ns)),
+                ("full_parse_ns_per_op", num(full_ns)),
+                ("full_over_lazy", num(full_ns / lazy_ns)),
+            ]),
+        ),
+        ("summary", obj(vec![("boundary_overhead", Json::Arr(summary))])),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty() + "\n")?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

@@ -47,5 +47,7 @@ pub use backend::{Backend, MockBackend, NativeBackend, SimBackend};
 pub use batcher::{Batch, DynamicBatcher, TenantBatchCfg, TenantBatchers};
 pub use router::{partition_by_share, Router, RoutingPolicy, WorkerInfo};
 pub use server::{CompletedQuery, Server, ServerBuilder, ServerHandle, Ticket, TicketOutcome};
-pub use service::{Coordinator, ServeReport, TenantReport, TenantTunerReport};
+pub use service::{
+    Coordinator, ServeReport, TenantReport, TenantTunerReport, SERVE_REPORT_SCHEMA,
+};
 pub use worker::WorkerHandle;

@@ -691,6 +691,7 @@ impl ServerBuilder {
             join: Some(join),
             drain_deadline,
             worker_models,
+            models,
             native,
         })
     }
@@ -705,6 +706,7 @@ pub struct Server {
     join: Option<std::thread::JoinHandle<()>>,
     drain_deadline: Duration,
     worker_models: Vec<Vec<String>>,
+    models: Vec<String>,
     native: Option<Arc<NativeBackend>>,
 }
 
@@ -717,6 +719,13 @@ impl Server {
     /// Worker partition view (post-`dedicated` assignment) — test/debug.
     pub fn worker_models(&self) -> Vec<Vec<String>> {
         self.worker_models.clone()
+    }
+
+    /// Models this server was built to serve (mix tenants + preload
+    /// list) — the wire listener validates request models against this
+    /// set so unknown tenants 404 before touching admission control.
+    pub fn models(&self) -> Vec<String> {
+        self.models.clone()
     }
 
     /// The internally-built native backend, when the builder constructed

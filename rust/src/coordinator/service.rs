@@ -20,6 +20,11 @@ use super::autotune::TuneDecision;
 use super::backend::Backend;
 use super::server::{Server, ServerBuilder, ServerHandle};
 
+/// Schema tag stamped on every [`ServeReport::to_json`] body, asserted
+/// by the CI smoke runs so report-format drift fails loudly. Bump on
+/// breaking shape changes.
+pub const SERVE_REPORT_SCHEMA: &str = "serve_report/v1";
+
 /// Per-tenant slice of a serving run.
 #[derive(Debug, Clone)]
 pub struct TenantReport {
@@ -274,6 +279,7 @@ impl ServeReport {
     pub fn to_json(&self) -> Json {
         use crate::util::json::{num, obj};
         obj(vec![
+            ("schema", Json::Str(SERVE_REPORT_SCHEMA.into())),
             ("queries_offered", num(self.queries_offered as f64)),
             ("queries_completed", num(self.queries as f64)),
             ("items_offered", num(self.items_offered as f64)),
@@ -665,6 +671,7 @@ mod tests {
         )];
         let text = report.to_json().to_string_pretty();
         let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("schema").and_then(Json::as_str), Some(SERVE_REPORT_SCHEMA));
         assert_eq!(v.get("queries_completed").and_then(Json::as_usize), Some(10));
         assert_eq!(v.get("incomplete").and_then(Json::as_bool), Some(false));
         assert_eq!(v.get("drain_deadline_hit").and_then(Json::as_bool), Some(false));

@@ -29,6 +29,7 @@ pub mod figures;
 pub mod fleet;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod runtime;
 pub mod simulator;
 pub mod util;

@@ -5,7 +5,7 @@
 //!   recsys figure <id|all> [--out-dir]  regenerate paper tables/figures
 //!   recsys serve [--config f.json] [--qps N] [--queries N] [--model M]
 //!                [--mix m:share[,m:share...]] [--routing POLICY]
-//!                [--json out.json]
+//!                [--json out.json] [--listen HOST:PORT]
 //!                [--impl native|xla|pallas] [--threads N]
 //!                [--engine optimized|reference]
 //!                [--dtype f32|f16|int8]
@@ -120,6 +120,29 @@
 //!                                       reads, and degraded time, and
 //!                                       completed + shed + failed ==
 //!                                       offered stays exact
+//!                                       --listen HOST:PORT skips the
+//!                                       in-process open loop and
+//!                                       exposes the same server over a
+//!                                       std-only HTTP/1.1 wire (POST
+//!                                       /v1/query, GET /v1/report,
+//!                                       POST /v1/quiesce, GET
+//!                                       /v1/healthz); runs until
+//!                                       Ctrl-C or a client quiesce,
+//!                                       drains through the same
+//!                                       --drain-deadline-s path, and
+//!                                       always emits the final report
+//!   recsys loadgen --addr HOST:PORT [--mix ...|--model M] [--queries N]
+//!                  [--qps N | --rate-plan SPEC] [--seed S]
+//!                  [--connections N] [--quiesce] [--json out.json]
+//!                                       separate-process open-loop
+//!                                       load generator: paces the same
+//!                                       deterministic TrafficMix
+//!                                       stream an in-process run uses
+//!                                       over real sockets, prints the
+//!                                       client view (rtt/outcomes),
+//!                                       fetches the server report, and
+//!                                       fails unless completed + shed
+//!                                       + failed == offered holds
 //!   recsys check                        numeric self-verification
 //!   recsys simulate --model M [--gen G] [--batch B] [--jobs N]
 //!                                       one simulator measurement
@@ -179,13 +202,14 @@ fn main() {
         "info" => cmd_info(),
         "figure" => cmd_figure(&pos, &flags),
         "serve" => cmd_serve(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         "check" => cmd_check(&flags),
         "simulate" => cmd_simulate(&flags),
         "tune" => cmd_tune(&flags),
         "shard" => cmd_shard(&flags),
         _ => {
             eprintln!(
-                "usage: recsys <info|figure|serve|check|simulate|tune|shard> [flags]\n\
+                "usage: recsys <info|figure|serve|loadgen|check|simulate|tune|shard> [flags]\n\
                  figure ids: {:?} or 'all'",
                 recsys::figures::ALL
             );
@@ -416,6 +440,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "--items applies to single-model serving only; a mix draws per-tenant item counts \
          from each tenant's distribution"
     );
+    // --listen replaces the in-process open loop with the wire
+    // front-end; pacing flags belong to `recsys loadgen` there.
+    if flags.contains_key("listen") {
+        anyhow::ensure!(
+            !flags.contains_key("queries") && !flags.contains_key("qps"),
+            "--listen serves over the wire until shutdown; --queries/--qps pace the \
+             in-process open loop (drive load with `recsys loadgen`)"
+        );
+    }
     let inflight_cap: usize =
         flags.get("inflight-cap").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let drain_deadline_s: f64 =
@@ -495,6 +528,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     // backend so the per-model per-stage breakdown can be attached to
     // the report after the run (empty vec for single-node / PJRT).
     let native_backend = server.native_backend();
+    if let Some(addr) = flags.get("listen") {
+        return serve_listen(addr, server, flags);
+    }
     let mut coordinator = Coordinator::from_server(server);
 
     println!(
@@ -529,6 +565,156 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         println!("wrote {path}");
     }
     coordinator.shutdown();
+    Ok(())
+}
+
+/// `serve --listen ADDR`: expose the built server over the std-only
+/// HTTP/1.1 wire front-end instead of driving the in-process open loop.
+/// Runs until Ctrl-C or a client `POST /v1/quiesce`; either way the
+/// drain goes through the same `--drain-deadline-s` path and the final
+/// report is always emitted (and written to `--json` when asked).
+fn serve_listen(
+    addr: &str,
+    server: recsys::coordinator::Server,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<()> {
+    use recsys::net::{install_ctrlc_flag, WireCfg, WireServer};
+    let ctrlc = install_ctrlc_flag();
+    let drain = server.drain_deadline();
+    let wire =
+        WireServer::start(addr, server.handle(), server.models(), drain, WireCfg::default())?;
+    println!(
+        "listening on http://{} (POST /v1/query, GET /v1/report, POST /v1/quiesce; \
+         Ctrl-C or a client quiesce drains and exits)",
+        wire.local_addr()
+    );
+    let mut client_quiesced = false;
+    loop {
+        if ctrlc.load(std::sync::atomic::Ordering::SeqCst) {
+            println!("SIGINT: draining (deadline {:.1}s) ...", drain.as_secs_f64());
+            break;
+        }
+        if wire.quiesce_requested() {
+            // The quiesce handler already drained before raising the flag.
+            println!("client quiesce: drained, exiting");
+            client_quiesced = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let (h2, h4, h5) = wire.response_counts();
+    wire.stop();
+    let handle = server.handle();
+    if !client_quiesced && !handle.quiesce(drain)? {
+        println!("drain deadline hit; report marked incomplete");
+    }
+    let mut report = handle.report()?;
+    if let Some(nb) = server.native_backend() {
+        report.sharded = nb.sharded_breakdown();
+    }
+    println!("wire responses: {h2} 2xx / {h4} 4xx / {h5} 5xx");
+    print!("{}", report.render());
+    if let Some(path) = flags.get("json") {
+        std::fs::write(path, report.to_json().to_string_pretty() + "\n")?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Separate-process open-loop load generator (`recsys loadgen`): the
+/// wire-side client of a `serve --listen` process. Exits non-zero if
+/// the fetched server report violates completed + shed + failed ==
+/// offered — the cross-process version of the identity every in-process
+/// test asserts.
+fn cmd_loadgen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use recsys::net::loadgen;
+    use recsys::net::{LoadgenCfg, Pacing};
+    let addr = flags.get("addr").cloned().ok_or_else(|| {
+        anyhow::anyhow!("--addr HOST:PORT is required (a `recsys serve --listen` process)")
+    })?;
+    anyhow::ensure!(
+        !(flags.contains_key("mix") && flags.contains_key("model")),
+        "--mix and --model are mutually exclusive (the mix names its models)"
+    );
+    anyhow::ensure!(
+        !(flags.contains_key("rate-plan") && flags.contains_key("qps")),
+        "--rate-plan and --qps are mutually exclusive (the plan sets the rate)"
+    );
+    let model = flags.get("model").cloned().unwrap_or_else(|| "rmc1-small".into());
+    let items: usize = flags.get("items").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let mix = match flags.get("mix") {
+        Some(spec) => TrafficMix::parse(spec)?,
+        None => TrafficMix::single(&model, items),
+    };
+    let n: usize = flags.get("queries").map(|s| s.parse()).transpose()?.unwrap_or(500);
+    let qps: f64 = flags.get("qps").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1234);
+    let connections: usize =
+        flags.get("connections").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let pacing = match flags.get("rate-plan") {
+        Some(spec) => Pacing::Plan(recsys::workload::RatePlan::parse(spec)?),
+        None => Pacing::Qps(qps),
+    };
+    let mut cfg = LoadgenCfg::new(&addr);
+    cfg.connections = connections;
+    cfg.quiesce = flags.contains_key("quiesce");
+    let pace_desc = match &pacing {
+        Pacing::Qps(q) => format!("{q} qps"),
+        Pacing::Plan(_) => format!("rate plan {}", flags["rate-plan"]),
+    };
+    println!(
+        "loadgen: {n} queries from {:?} at {pace_desc} -> {addr} \
+         ({connections} connection(s), seed {seed})",
+        mix.models()
+    );
+    let t0 = std::time::Instant::now();
+    let mut stats = loadgen::run(&mix, n, pacing, seed, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    println!(
+        "client: sent {} completed {} rejected {} failed {} other {} transport-errors {} \
+         in {wall:.2}s ({:.0} req/s)",
+        stats.sent,
+        stats.completed,
+        stats.rejected,
+        stats.failed,
+        stats.other_status,
+        stats.transport_errors,
+        stats.sent as f64 / wall
+    );
+    if !stats.rtt_ms.is_empty() {
+        println!(
+            "client rtt p50 {:.3} ms p99 {:.3} ms | server latency p50 {:.3} ms p99 {:.3} ms",
+            stats.rtt_ms.p50(),
+            stats.rtt_ms.p99(),
+            stats.server_latency_ms.p50(),
+            stats.server_latency_ms.p99()
+        );
+    }
+    if let Some(drained) = stats.drained {
+        println!("server drained: {drained}");
+    }
+    if let Some(r) = &stats.report {
+        let schema = r.get("schema").and_then(recsys::util::Json::as_str);
+        anyhow::ensure!(
+            schema == Some(recsys::coordinator::SERVE_REPORT_SCHEMA),
+            "unexpected report schema {schema:?}"
+        );
+        if let Some(path) = flags.get("json") {
+            std::fs::write(path, r.to_string_pretty() + "\n")?;
+            println!("wrote {path}");
+        }
+    }
+    match stats.report_identity() {
+        Some((offered, completed, shed, failed, ok)) => {
+            println!(
+                "server report: offered {offered} = completed {completed} + shed {shed} \
+                 + failed {failed} -> {}",
+                if ok { "exact" } else { "VIOLATED" }
+            );
+            anyhow::ensure!(ok, "server accounting identity violated");
+        }
+        None => println!("server report: not fetched"),
+    }
     Ok(())
 }
 

@@ -1,0 +1,598 @@
+//! Lazy JSON scanning for the wire hot path (DESIGN.md §9).
+//!
+//! `POST /v1/query` decode sits between the socket and
+//! `ServerHandle::submit` — every byte of tree-building there is pure
+//! overhead, because a Query needs only a handful of top-level fields
+//! (model/tenant, item count or id list, id, seed). In the spirit of
+//! ADR-002 (SNIPPETS.md snippet 3: miniserde-style lazy path scanning,
+//! ~33x faster than full-tree parse for partial reads), [`scan_object`]
+//! walks the document once, structurally validating *everything* but
+//! materializing *only* the wanted fields. No allocation happens for
+//! skipped values, and number arrays (item ids / weights) are captured
+//! without boxing each element.
+//!
+//! The scanner is deliberately not a full JSON decoder: exotic-but-valid
+//! inputs (escaped keys, `\uXXXX` escapes in captured strings, captured
+//! values that are objects or mixed-type arrays) return
+//! [`ScanError::Unsupported`], and the caller falls back to the full
+//! [`crate::util::Json`] tree parser. Malformed inputs fail with a byte
+//! position in *both* paths — the fallback never turns garbage into a
+//! panic. The fuzz tests at the bottom pin the contract: any input that
+//! full-parses must not be reported `Malformed` by the scanner, and
+//! whenever both succeed the captured fields agree.
+
+/// Nesting bound for skipped values (and for [`depth_ok`], the guard the
+/// fallback path runs before handing adversarial input to the recursive
+/// tree parser). 64 is far beyond any real request and small enough that
+/// the scanner's own recursion is trivially stack-safe.
+pub const MAX_DEPTH: usize = 64;
+
+/// Scanner outcome for one wanted field.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScanValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+    /// A captured array of numbers (item ids, weights).
+    Nums(Vec<f64>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScanError {
+    /// Not JSON. `pos` is a byte offset into the input.
+    Malformed { pos: usize, msg: &'static str },
+    /// Valid-looking but outside the scanner's fast shapes — caller
+    /// should retry with the full tree parser.
+    Unsupported,
+}
+
+impl std::fmt::Display for ScanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScanError::Malformed { pos, msg } => {
+                write!(f, "malformed JSON at byte {pos}: {msg}")
+            }
+            ScanError::Unsupported => write!(f, "unsupported shape for lazy scan"),
+        }
+    }
+}
+
+/// Scan a top-level JSON object, capturing the values of the `wanted`
+/// keys (by position) and structurally validating the rest. Later
+/// duplicates overwrite earlier ones — the same last-wins behavior as
+/// the full parser's map insert, so the two paths agree on duplicates.
+pub fn scan_object(text: &str, wanted: &[&str]) -> Result<Vec<Option<ScanValue>>, ScanError> {
+    let mut s = Scanner { b: text.as_bytes(), i: 0 };
+    let mut out: Vec<Option<ScanValue>> = vec![None; wanted.len()];
+    s.skip_ws();
+    s.expect(b'{', "expected '{'")?;
+    s.skip_ws();
+    if s.peek() == Some(b'}') {
+        s.i += 1;
+    } else {
+        loop {
+            s.skip_ws();
+            let key = s.raw_key()?;
+            s.skip_ws();
+            s.expect(b':', "expected ':'")?;
+            s.skip_ws();
+            match wanted.iter().position(|w| w.as_bytes() == key) {
+                Some(idx) => out[idx] = Some(s.capture_value()?),
+                None => s.skip_value(0)?,
+            }
+            s.skip_ws();
+            match s.peek() {
+                Some(b',') => s.i += 1,
+                Some(b'}') => {
+                    s.i += 1;
+                    break;
+                }
+                _ => return Err(s.fail("expected ',' or '}'")),
+            }
+        }
+    }
+    s.skip_ws();
+    if s.i != s.b.len() {
+        return Err(s.fail("trailing content"));
+    }
+    Ok(out)
+}
+
+/// Cheap iterative nesting check — run before feeding untrusted input to
+/// the *recursive* full parser, so a `[[[[...` bomb can't overflow the
+/// stack on the fallback path. String-aware: brackets inside strings
+/// don't count.
+pub fn depth_ok(text: &str, max: usize) -> bool {
+    let b = text.as_bytes();
+    let mut depth = 0usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        match b[i] {
+            b'{' | b'[' => {
+                depth += 1;
+                if depth > max {
+                    return false;
+                }
+            }
+            b'}' | b']' => depth = depth.saturating_sub(1),
+            b'"' => {
+                // Skip the string body (escape-aware, no validation).
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' => i += 1,
+                        b'"' => break,
+                        _ => {}
+                    }
+                    i += 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    true
+}
+
+/// Append `s` to `out` as a JSON string literal — the encoder half of
+/// the zero-dependency codec, shared by the hot response builders.
+pub fn push_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Scanner<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scanner<'a> {
+    fn fail(&self, msg: &'static str) -> ScanError {
+        ScanError::Malformed { pos: self.i, msg }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8, msg: &'static str) -> Result<(), ScanError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.fail(msg))
+        }
+    }
+
+    /// Object key as raw bytes (no unescaping). Keys containing any
+    /// escape are `Unsupported` — protocol keys are plain ASCII, and
+    /// punting keeps the comparison a straight memcmp.
+    fn raw_key(&mut self) -> Result<&'a [u8], ScanError> {
+        self.expect(b'"', "expected object key")?;
+        let start = self.i;
+        loop {
+            match self.peek() {
+                None => return Err(self.fail("unterminated key")),
+                Some(b'"') => {
+                    let key = &self.b[start..self.i];
+                    self.i += 1;
+                    return Ok(key);
+                }
+                Some(b'\\') => return Err(ScanError::Unsupported),
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    /// Materialize one wanted value. Scalars and number arrays are the
+    /// fast shapes; objects, mixed arrays, and `\u` escapes punt to the
+    /// full parser via `Unsupported`.
+    fn capture_value(&mut self) -> Result<ScanValue, ScanError> {
+        match self.peek() {
+            Some(b'"') => Ok(ScanValue::Str(self.capture_string()?)),
+            Some(b't') => self.literal("true").map(|_| ScanValue::Bool(true)),
+            Some(b'f') => self.literal("false").map(|_| ScanValue::Bool(false)),
+            Some(b'n') => self.literal("null").map(|_| ScanValue::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(ScanValue::Num),
+            Some(b'[') => {
+                self.i += 1;
+                let mut nums = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(ScanValue::Nums(nums));
+                }
+                loop {
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(c) if c == b'-' || c.is_ascii_digit() => nums.push(self.number()?),
+                        Some(b'{' | b'[' | b'"' | b't' | b'f' | b'n') => {
+                            return Err(ScanError::Unsupported)
+                        }
+                        _ => return Err(self.fail("expected array element")),
+                    }
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(ScanValue::Nums(nums));
+                        }
+                        _ => return Err(self.fail("expected ',' or ']'")),
+                    }
+                }
+            }
+            Some(b'{') => Err(ScanError::Unsupported),
+            _ => Err(self.fail("expected value")),
+        }
+    }
+
+    fn capture_string(&mut self) -> Result<String, ScanError> {
+        self.expect(b'"', "expected string")?;
+        let start = self.i;
+        // Fast path: no escapes → one slice copy.
+        loop {
+            match self.peek() {
+                None => return Err(self.fail("unterminated string")),
+                Some(b'"') => {
+                    // Safety of from_utf8: input is a &str and we only
+                    // split at ASCII quote bytes, which can't appear
+                    // inside a multi-byte UTF-8 sequence.
+                    let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+                    self.i += 1;
+                    return Ok(s.to_string());
+                }
+                Some(b'\\') => break,
+                Some(_) => self.i += 1,
+            }
+        }
+        // Slow path: unescape from the start.
+        self.i = start;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.fail("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        // \uXXXX (and surrogate pairs) go to the full
+                        // parser — one policy for exotic unicode.
+                        Some(b'u') => return Err(ScanError::Unsupported),
+                        _ => return Err(self.fail("bad escape")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    let rest = std::str::from_utf8(&self.b[self.i..]).unwrap();
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn literal(&mut self, word: &'static str) -> Result<(), ScanError> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(self.fail("bad literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, ScanError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or(ScanError::Malformed { pos: start, msg: "bad number" })
+    }
+
+    /// Structurally validate and skip one value without materializing
+    /// it. Strings are checked for escape well-formedness (so the "lazy
+    /// accepts ⇒ full accepts" direction of the agreement tests holds);
+    /// `\u` sequences are fine here because nothing is decoded.
+    fn skip_value(&mut self, depth: usize) -> Result<(), ScanError> {
+        if depth > MAX_DEPTH {
+            return Err(self.fail("nesting too deep"));
+        }
+        match self.peek() {
+            Some(b'"') => self.skip_string(),
+            Some(b't') => self.literal("true"),
+            Some(b'f') => self.literal("false"),
+            Some(b'n') => self.literal("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(|_| ()),
+            Some(b'[') => {
+                self.i += 1;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.fail("expected ',' or ']'")),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.i += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_string()?;
+                    self.skip_ws();
+                    self.expect(b':', "expected ':'")?;
+                    self.skip_ws();
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.fail("expected ',' or '}'")),
+                    }
+                }
+            }
+            _ => Err(self.fail("expected value")),
+        }
+    }
+
+    fn skip_string(&mut self) -> Result<(), ScanError> {
+        self.expect(b'"', "expected string")?;
+        loop {
+            match self.peek() {
+                None => return Err(self.fail("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f') => {
+                            self.i += 1
+                        }
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err(self.fail("bad \\u escape"));
+                            }
+                            if !self.b[self.i + 1..self.i + 5]
+                                .iter()
+                                .all(|c| c.is_ascii_hexdigit())
+                            {
+                                return Err(self.fail("bad \\u escape"));
+                            }
+                            self.i += 5;
+                        }
+                        _ => return Err(self.fail("bad escape")),
+                    }
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    const DOC: &str = r#"{"model": "rmc1-small", "items": 7, "id": 42, "extra": {"a": [1, {"b": "x"}], "c": null}, "flag": true}"#;
+
+    #[test]
+    fn captures_wanted_fields_only() {
+        let got = scan_object(DOC, &["model", "items", "id", "missing"]).unwrap();
+        assert_eq!(got[0], Some(ScanValue::Str("rmc1-small".into())));
+        assert_eq!(got[1], Some(ScanValue::Num(7.0)));
+        assert_eq!(got[2], Some(ScanValue::Num(42.0)));
+        assert_eq!(got[3], None);
+    }
+
+    #[test]
+    fn captures_number_arrays() {
+        let got =
+            scan_object(r#"{"item_ids": [3, 1, 4, 1, 5], "weights": []}"#, &["item_ids", "weights"])
+                .unwrap();
+        assert_eq!(got[0], Some(ScanValue::Nums(vec![3.0, 1.0, 4.0, 1.0, 5.0])));
+        assert_eq!(got[1], Some(ScanValue::Nums(vec![])));
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins_like_full_parse() {
+        let doc = r#"{"items": 3, "items": 9}"#;
+        let got = scan_object(doc, &["items"]).unwrap();
+        assert_eq!(got[0], Some(ScanValue::Num(9.0)));
+        assert_eq!(Json::parse(doc).unwrap().get("items").unwrap().as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn unsupported_shapes_punt_to_fallback() {
+        // Captured object, mixed array, \u escape, escaped key: all
+        // valid JSON the scanner declines.
+        for doc in [
+            r#"{"model": {"name": "x"}}"#,
+            r#"{"model": [1, "x"]}"#,
+            r#"{"model": "\u0041"}"#,
+            r#"{"mode\u006c": "x"}"#,
+        ] {
+            assert_eq!(scan_object(doc, &["model"]).unwrap_err(), ScanError::Unsupported);
+            assert!(Json::parse(doc).is_ok(), "fallback must handle {doc}");
+        }
+    }
+
+    #[test]
+    fn simple_escapes_captured_inline() {
+        let got = scan_object(r#"{"model": "a\"b\\c\nd"}"#, &["model"]).unwrap();
+        assert_eq!(got[0], Some(ScanValue::Str("a\"b\\c\nd".into())));
+    }
+
+    #[test]
+    fn malformed_inputs_report_position() {
+        for doc in [
+            "",
+            "{",
+            "[1, 2]",
+            r#"{"a"}"#,
+            r#"{"a": }"#,
+            r#"{"a": 1,}"#,
+            r#"{"a": 1} trailing"#,
+            r#"{"a": truthy}"#,
+            r#"{"a": "unterminated"#,
+            r#"{"a": [1, 2}"#,
+            r#"{"a": "\q"}"#,
+            r#"{"b": "\u00"}"#,
+        ] {
+            match scan_object(doc, &["a"]) {
+                Err(ScanError::Malformed { .. }) => {}
+                other => panic!("{doc:?}: expected Malformed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn depth_bomb_rejected_without_recursion() {
+        let bomb = format!(r#"{{"a": {}1{}}}"#, "[".repeat(5000), "]".repeat(5000));
+        match scan_object(&bomb, &[]) {
+            Err(ScanError::Malformed { msg, .. }) => assert_eq!(msg, "nesting too deep"),
+            other => panic!("expected depth error, got {other:?}"),
+        }
+        assert!(!depth_ok(&bomb, MAX_DEPTH));
+        assert!(depth_ok(DOC, MAX_DEPTH));
+        assert!(depth_ok(r#"{"s": "quoted [[[[ brackets"}"#, 2));
+    }
+
+    /// Fuzz-style: every prefix of valid documents must scan to Ok or
+    /// Err, never panic — and a truncated document must never scan Ok.
+    #[test]
+    fn truncation_fuzz_never_panics() {
+        for doc in [
+            DOC,
+            r#"{"item_ids": [3, 1, 4], "weights": [0.5, 0.25]}"#,
+            r#"{"s": "café", "t": "a\\b"}"#,
+        ] {
+            for cut in 0..doc.len() {
+                if !doc.is_char_boundary(cut) {
+                    continue;
+                }
+                let prefix = &doc[..cut];
+                if let Ok(vals) = scan_object(prefix, &["model", "items"]) {
+                    panic!("truncated input scanned Ok: {prefix:?} -> {vals:?}");
+                }
+            }
+        }
+    }
+
+    /// Agreement with the full parser: whenever the scanner accepts, the
+    /// tree parser accepts and the captured fields match; whenever the
+    /// tree parser accepts, the scanner must not claim Malformed.
+    #[test]
+    fn agrees_with_full_parse() {
+        let corpus = [
+            DOC,
+            r#"{}"#,
+            r#"{"model": "rmc2-small"}"#,
+            r#"{"items": 1e2, "id": -0.5}"#,
+            r#"{"a": false, "b": null, "model": "m"}"#,
+            r#"{"nested": [[[1], [2]], {"k": [true]}], "items": 3}"#,
+            r#"{"model": {"deep": 1}}"#,
+            r#"{"model": "A"}"#,
+            r#"{"a": 1"#,
+            r#"not json"#,
+        ];
+        for doc in corpus {
+            let lazy = scan_object(doc, &["model", "items", "id"]);
+            let full = Json::parse(doc);
+            match (&lazy, &full) {
+                (Ok(vals), Ok(tree)) => {
+                    for (i, key) in ["model", "items", "id"].iter().enumerate() {
+                        match (&vals[i], tree.get(key)) {
+                            (Some(ScanValue::Str(s)), Some(j)) => {
+                                assert_eq!(j.as_str(), Some(s.as_str()), "{doc}")
+                            }
+                            (Some(ScanValue::Num(n)), Some(j)) => {
+                                assert_eq!(j.as_f64(), Some(*n), "{doc}")
+                            }
+                            (Some(ScanValue::Bool(b)), Some(j)) => {
+                                assert_eq!(j.as_bool(), Some(*b), "{doc}")
+                            }
+                            (None, None) => {}
+                            (got, want) => panic!("{doc}: lazy {got:?} vs full {want:?}"),
+                        }
+                    }
+                }
+                (Err(ScanError::Malformed { .. }), Ok(_)) => {
+                    panic!("{doc}: scanner rejected what the full parser accepts")
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn push_escaped_roundtrips_through_parser() {
+        for s in ["plain", "with \"quotes\"", "tab\there", "newline\nend", "unicode é\u{1}"] {
+            let mut out = String::new();
+            push_escaped(&mut out, s);
+            assert_eq!(Json::parse(&out).unwrap(), Json::Str(s.into()));
+        }
+    }
+}

@@ -1,0 +1,550 @@
+//! Std-only HTTP/1.1 listener fronting a [`ServerHandle`]
+//! (DESIGN.md §9).
+//!
+//! One accept thread hands connections to a small fixed pool of
+//! connection workers over a channel; each worker runs a keep-alive
+//! request loop with Content-Length framing. Routes:
+//!
+//! - `POST /v1/query`   — decode ([`super::wire`]), validate the model
+//!   against the server's tenant set (404 *before* admission is
+//!   touched), `submit_live`, block on the ticket, map the outcome.
+//! - `GET  /v1/report`  — the live [`ServeReport`] as JSON.
+//! - `POST /v1/quiesce` — force-flush + drain via the server's
+//!   `drain_deadline`, reply with the drained report, and raise the
+//!   quiesce flag the serve CLI polls for graceful exit.
+//! - `GET  /v1/healthz` — liveness probe for scripts waiting on startup.
+//!
+//! Framing limits (header bytes, body bytes, read timeouts) are small
+//! and fixed: a request that exceeds them gets a typed 4xx and the
+//! connection closes, because the framing state is no longer
+//! trustworthy. Everything rejected here was never submitted, so the
+//! serve report's offered/completed/shed/failed identity is untouched
+//! by malformed traffic.
+//!
+//! [`ServeReport`]: crate::coordinator::ServeReport
+
+use std::collections::HashSet;
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::wire::{decode_query, encode_error, encode_outcome, encode_pending, WireError};
+use crate::coordinator::ServerHandle;
+use crate::workload::Query;
+
+/// Listener tuning knobs. Defaults suit both tests and the serve CLI.
+#[derive(Debug, Clone)]
+pub struct WireCfg {
+    /// Connection-handling threads (each owns one connection at a time;
+    /// accepted connections queue when all are busy).
+    pub conn_threads: usize,
+    /// Cap on request line + headers.
+    pub max_header_bytes: usize,
+    /// Cap on Content-Length; larger requests get 413 without reading
+    /// the body.
+    pub max_body_bytes: usize,
+    /// Socket read timeout — bounds both an idle keep-alive wait and a
+    /// stalled mid-request read (the latter answers 408).
+    pub read_timeout: Duration,
+    /// Bound on blocking for one query ticket before answering 504.
+    pub ticket_deadline: Duration,
+}
+
+impl Default for WireCfg {
+    fn default() -> Self {
+        WireCfg {
+            conn_threads: 4,
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 1024 * 1024,
+            read_timeout: Duration::from_secs(5),
+            ticket_deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Shared state every connection worker sees.
+struct Shared {
+    handle: ServerHandle,
+    /// Models the server was built with — wire-side 404 validation, so
+    /// unknown tenants are rejected before admission control runs.
+    models: HashSet<String>,
+    drain_deadline: Duration,
+    cfg: WireCfg,
+    shutdown: AtomicBool,
+    quiesce: AtomicBool,
+    /// Requests answered, by coarse class — listener-level counters
+    /// (the serve report owns query accounting).
+    http_2xx: std::sync::atomic::AtomicU64,
+    http_4xx: std::sync::atomic::AtomicU64,
+    http_5xx: std::sync::atomic::AtomicU64,
+}
+
+/// A running wire front-end. Dropping it (or calling [`WireServer::stop`])
+/// stops accepting; established connections finish their current
+/// request and close on the next read.
+pub struct WireServer {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port) and
+    /// start serving requests against `handle`.
+    pub fn start(
+        addr: &str,
+        handle: ServerHandle,
+        models: Vec<String>,
+        drain_deadline: Duration,
+        cfg: WireCfg,
+    ) -> anyhow::Result<WireServer> {
+        anyhow::ensure!(cfg.conn_threads >= 1, "need at least one connection thread");
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            handle,
+            models: models.into_iter().collect(),
+            drain_deadline,
+            cfg: cfg.clone(),
+            shutdown: AtomicBool::new(false),
+            quiesce: AtomicBool::new(false),
+            http_2xx: Default::default(),
+            http_4xx: Default::default(),
+            http_5xx: Default::default(),
+        });
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(cfg.conn_threads);
+        for i in 0..cfg.conn_threads {
+            let rx = rx.clone();
+            let shared = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("wire-conn-{i}"))
+                    .spawn(move || conn_worker(rx, shared))
+                    .expect("spawn wire connection worker"),
+            );
+        }
+        let accept_shared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("wire-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_shared.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            let _ = s.set_nodelay(true);
+                            if tx.send(s).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => continue,
+                    }
+                }
+                // tx drops here; idle workers see the channel close.
+            })
+            .expect("spawn wire accept thread");
+        Ok(WireServer { local_addr, shared, accept: Some(accept), workers })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// True once a client has completed `POST /v1/quiesce` — the serve
+    /// CLI polls this to exit gracefully after the drain.
+    pub fn quiesce_requested(&self) -> bool {
+        self.shared.quiesce.load(Ordering::SeqCst)
+    }
+
+    /// `(2xx, 4xx, 5xx)` responses written so far.
+    pub fn response_counts(&self) -> (u64, u64, u64) {
+        (
+            self.shared.http_2xx.load(Ordering::Relaxed),
+            self.shared.http_4xx.load(Ordering::Relaxed),
+            self.shared.http_5xx.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Stop accepting and join the listener threads. Connection workers
+    /// exit when their current connection closes or after at most one
+    /// `read_timeout` of idleness.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Unblock accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+// ------------------------------------------------------------- requests --
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// Why a connection can't yield another request: clean close, or a
+/// framing-level error to answer before closing.
+enum ConnEnd {
+    Closed,
+    Reply(WireError),
+}
+
+fn conn_worker(rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>, shared: Arc<Shared>) {
+    loop {
+        let stream = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => return, // listener gone
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        handle_conn(stream, &shared);
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let req = match read_request(&mut reader, &shared.cfg) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean EOF / idle timeout
+            Err(ConnEnd::Closed) => return,
+            Err(ConnEnd::Reply(e)) => {
+                // Framing is unreliable after an error: reply and close.
+                let _ = respond(reader.get_mut(), e.status, &encode_error(&e), false, shared);
+                return;
+            }
+        };
+        let keep = req.keep_alive;
+        let (status, body) = route(&req, shared);
+        if respond(reader.get_mut(), status, &body, keep, shared).is_err() || !keep {
+            return;
+        }
+    }
+}
+
+fn route(req: &Request, shared: &Shared) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/query") => handle_query(&req.body, shared),
+        ("GET", "/v1/report") => match shared.handle.report() {
+            Ok(r) => (200, r.to_json().to_string_pretty()),
+            Err(e) => err_pair(WireError::unavailable(format!("report unavailable: {e}"))),
+        },
+        ("POST", "/v1/quiesce") => match shared.handle.quiesce(shared.drain_deadline) {
+            Ok(drained) => {
+                let report = match shared.handle.report() {
+                    Ok(r) => r.to_json().to_string_pretty(),
+                    Err(_) => "null".into(),
+                };
+                // Raise the flag only after the drain finished, so the
+                // serve CLI never exits mid-drain.
+                shared.quiesce.store(true, Ordering::SeqCst);
+                let body = format!(
+                    "{{\"schema\":\"quiesce/v1\",\"drained\":{drained},\"report\":{report}}}"
+                );
+                (200, body)
+            }
+            Err(e) => err_pair(WireError::unavailable(format!("quiesce failed: {e}"))),
+        },
+        ("GET", "/v1/healthz") => (200, "{\"status\":\"ok\"}".into()),
+        (m, p @ ("/v1/query" | "/v1/report" | "/v1/quiesce" | "/v1/healthz")) => {
+            err_pair(WireError::method_not_allowed(m, p))
+        }
+        (_, p) => err_pair(WireError::not_found(p)),
+    }
+}
+
+fn handle_query(body: &[u8], shared: &Shared) -> (u16, String) {
+    let wq = match decode_query(body) {
+        Ok(wq) => wq,
+        Err(e) => return err_pair(e),
+    };
+    // Unknown tenants 404 *before* submit: they must not show up in
+    // offered/shed accounting.
+    if !shared.models.contains(&wq.model) {
+        return err_pair(WireError::unknown_model(&wq.model));
+    }
+    let mut q = Query::new(wq.id, wq.model, wq.items, 0.0);
+    if let Some(seed) = wq.seed {
+        q.seed = seed;
+    }
+    let t0 = Instant::now();
+    let ticket = shared.handle.submit_live(q);
+    match ticket.wait_timeout(shared.cfg.ticket_deadline) {
+        Some(outcome) => encode_outcome(&outcome, wq.id, shared.handle.inflight()),
+        None => encode_pending(wq.id, t0.elapsed()),
+    }
+}
+
+fn err_pair(e: WireError) -> (u16, String) {
+    (e.status, encode_error(&e))
+}
+
+fn respond(
+    w: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+    shared: &Shared,
+) -> std::io::Result<()> {
+    match status {
+        200..=299 => shared.http_2xx.fetch_add(1, Ordering::Relaxed),
+        400..=499 => shared.http_4xx.fetch_add(1, Ordering::Relaxed),
+        _ => shared.http_5xx.fetch_add(1, Ordering::Relaxed),
+    };
+    let reason = reason_phrase(status);
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+        body.len()
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    }
+}
+
+/// Read one HTTP/1.1 request. `Ok(None)` — the connection closed (or
+/// idled past the read timeout) between requests, which is the normal
+/// end of a keep-alive session.
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    cfg: &WireCfg,
+) -> Result<Option<Request>, ConnEnd> {
+    let mut line = Vec::new();
+    let mut header_bytes = 0usize;
+    match read_line(reader, &mut line, cfg.max_header_bytes) {
+        LineRead::Line => {}
+        LineRead::Eof => return Ok(None),
+        LineRead::TimedOut { partial } => {
+            if partial {
+                return Err(ConnEnd::Reply(WireError::timeout(
+                    "timed out reading request line",
+                )));
+            }
+            return Ok(None); // idle keep-alive expiry
+        }
+        LineRead::TooLong => {
+            return Err(ConnEnd::Reply(WireError::header_too_large(cfg.max_header_bytes)))
+        }
+        LineRead::Failed => return Err(ConnEnd::Closed),
+    }
+    header_bytes += line.len();
+    let request_line = String::from_utf8_lossy(&line).trim_end().to_string();
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m.to_string(), p.to_string(), v.to_string()),
+        _ => {
+            return Err(ConnEnd::Reply(WireError::bad_request(format!(
+                "malformed request line '{request_line}'"
+            ))))
+        }
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(ConnEnd::Reply(WireError::bad_request(format!(
+            "unsupported protocol version '{version}'"
+        ))));
+    }
+    // Headers.
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut expect_continue = false;
+    loop {
+        line.clear();
+        match read_line(reader, &mut line, cfg.max_header_bytes.saturating_sub(header_bytes)) {
+            LineRead::Line => {}
+            LineRead::TooLong => {
+                return Err(ConnEnd::Reply(WireError::header_too_large(cfg.max_header_bytes)))
+            }
+            LineRead::Eof | LineRead::TimedOut { .. } => {
+                return Err(ConnEnd::Reply(WireError::timeout("timed out reading headers")))
+            }
+            LineRead::Failed => return Err(ConnEnd::Closed),
+        }
+        header_bytes += line.len();
+        let text = String::from_utf8_lossy(&line);
+        let text = text.trim_end();
+        if text.is_empty() {
+            break;
+        }
+        let Some((name, value)) = text.split_once(':') else {
+            return Err(ConnEnd::Reply(WireError::bad_request(format!(
+                "malformed header line '{text}'"
+            ))));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => match value.parse::<usize>() {
+                Ok(n) => content_length = Some(n),
+                Err(_) => {
+                    return Err(ConnEnd::Reply(WireError::bad_request(format!(
+                        "bad Content-Length '{value}'"
+                    ))))
+                }
+            },
+            "transfer-encoding" => {
+                return Err(ConnEnd::Reply(WireError::not_implemented(
+                    "Transfer-Encoding is not supported; use Content-Length",
+                )))
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "expect" => {
+                if value.eq_ignore_ascii_case("100-continue") {
+                    expect_continue = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    // Body.
+    let len = content_length.unwrap_or(0);
+    if len > cfg.max_body_bytes {
+        return Err(ConnEnd::Reply(WireError::too_large(len, cfg.max_body_bytes)));
+    }
+    if expect_continue && len > 0 {
+        let _ = reader.get_mut().write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        if let Err(e) = reader.read_exact(&mut body) {
+            let msg = match e.kind() {
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                    format!("timed out reading request body (got fewer than {len} bytes)")
+                }
+                _ => format!("connection closed mid-body (expected {len} bytes)"),
+            };
+            return Err(ConnEnd::Reply(WireError::timeout(msg)));
+        }
+    }
+    Ok(Some(Request { method, path, body, keep_alive }))
+}
+
+enum LineRead {
+    Line,
+    Eof,
+    TimedOut { partial: bool },
+    TooLong,
+    Failed,
+}
+
+/// `read_until('\n')` with a byte cap and timeout classification.
+fn read_line(reader: &mut BufReader<TcpStream>, buf: &mut Vec<u8>, cap: usize) -> LineRead {
+    buf.clear();
+    loop {
+        // Read byte-at-a-time off the BufReader (cheap: it's buffered)
+        // so the cap is enforced incrementally.
+        let mut byte = [0u8; 1];
+        match reader.read(&mut byte) {
+            Ok(0) => {
+                return if buf.is_empty() { LineRead::Eof } else { LineRead::Failed };
+            }
+            Ok(_) => {
+                buf.push(byte[0]);
+                if byte[0] == b'\n' {
+                    return LineRead::Line;
+                }
+                if buf.len() > cap {
+                    return LineRead::TooLong;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return LineRead::TimedOut { partial: !buf.is_empty() };
+            }
+            Err(_) => return LineRead::Failed,
+        }
+    }
+}
+
+// ------------------------------------------------------------ shutdown --
+
+/// Install a SIGINT (Ctrl-C) handler that only raises a flag —
+/// async-signal-safe by construction (the handler is a single atomic
+/// store), no dependency needed. On non-Unix targets the flag simply
+/// never fires; `POST /v1/quiesce` remains the shutdown path there.
+pub fn install_ctrlc_flag() -> &'static AtomicBool {
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    #[cfg(unix)]
+    {
+        extern "C" fn on_sigint(_sig: i32) {
+            FLAG.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        // A fn item doesn't cast straight to usize — go through the
+        // concrete fn-pointer type first.
+        let handler: extern "C" fn(i32) = on_sigint;
+        unsafe {
+            signal(SIGINT, handler as usize);
+        }
+    }
+    &FLAG
+}

@@ -1,0 +1,345 @@
+//! Separate-process open-loop load generator (DESIGN.md §9).
+//!
+//! `recsys loadgen` runs this against a `recsys serve --listen` process:
+//! the *same* deterministic [`TrafficMix`] stream the in-process harness
+//! uses paces an open loop over real sockets, so client pacing can never
+//! couple to the server's flush timing — the decoupling DeepRecSys
+//! argues is required for honest at-scale tail latency. The pacer thread
+//! owns the schedule; a small pool of keep-alive connections carries the
+//! requests. Query ids ride the wire and the server re-derives seeds
+//! from them exactly like `Query::new`, which is what makes a wire run
+//! bitwise-conformant with an in-process run of the same (mix, n, seed).
+//!
+//! Also home to [`WireConn`] / [`http_request`] — the std-only HTTP/1.1
+//! client used by the conformance/malformed-input tests and the wire
+//! bench.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::json::{scan_object, ScanValue};
+use super::wire::encode_query_request;
+use crate::metrics::LatencyHistogram;
+use crate::util::Json;
+use crate::workload::{Query, RatePlan, TrafficMix};
+
+// ---------------------------------------------------------- http client --
+
+/// A keep-alive HTTP/1.1 client connection.
+pub struct WireConn {
+    reader: BufReader<TcpStream>,
+    addr: String,
+}
+
+impl WireConn {
+    pub fn connect(addr: &str) -> anyhow::Result<WireConn> {
+        let stream = TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(120))).ok();
+        Ok(WireConn { reader: BufReader::new(stream), addr: addr.to_string() })
+    }
+
+    /// Issue one request, return `(status, body)`. On a transport error
+    /// the connection is poisoned — callers reconnect.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> anyhow::Result<(u16, String)> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            self.addr,
+            body.len()
+        );
+        let stream = self.reader.get_mut();
+        stream.write_all(head.as_bytes())?;
+        if !body.is_empty() {
+            stream.write_all(body.as_bytes())?;
+        }
+        stream.flush()?;
+        read_response(&mut self.reader)
+    }
+}
+
+/// One-shot request on a fresh connection.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> anyhow::Result<(u16, String)> {
+    WireConn::connect(addr)?.request(method, path, body)
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> anyhow::Result<(u16, String)> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        anyhow::bail!("connection closed before status line");
+    }
+    // "HTTP/1.1 200 OK"
+    let status: u16 = line
+        .split_ascii_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad status line '{}'", line.trim_end()))?;
+    let mut content_length = 0usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("connection closed mid-headers");
+        }
+        let text = line.trim_end();
+        if text.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = text.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+// -------------------------------------------------------------- loadgen --
+
+/// How the open loop paces arrivals.
+#[derive(Debug, Clone)]
+pub enum Pacing {
+    /// Flat Poisson at `qps` (same schedule as `TrafficMix::stream`).
+    Qps(f64),
+    /// Time-varying plan (same schedule as `stream_scheduled`).
+    Plan(RatePlan),
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadgenCfg {
+    pub addr: String,
+    /// Keep-alive client connections (each owned by one sender thread).
+    pub connections: usize,
+    /// Collect per-query CTR bit patterns for conformance checking
+    /// (full-parses every response body — test/bench use, not for rate
+    /// measurement).
+    pub collect_ctrs: bool,
+    /// Fetch `GET /v1/report` after the run.
+    pub fetch_report: bool,
+    /// `POST /v1/quiesce` after the run (implies the server drains).
+    pub quiesce: bool,
+}
+
+impl LoadgenCfg {
+    pub fn new(addr: impl Into<String>) -> Self {
+        LoadgenCfg {
+            addr: addr.into(),
+            connections: 4,
+            collect_ctrs: false,
+            fetch_report: true,
+            quiesce: false,
+        }
+    }
+}
+
+/// Client-side tally of one loadgen run. Offered/completed counts are
+/// the *client's* view; the authoritative accounting identity lives in
+/// the fetched server report.
+#[derive(Debug, Default)]
+pub struct LoadgenStats {
+    /// Requests actually written to a socket.
+    pub sent: u64,
+    /// 200s.
+    pub completed: u64,
+    /// 429s (server shed).
+    pub rejected: u64,
+    /// 503s (failed/abandoned server-side).
+    pub failed: u64,
+    /// Any other HTTP status (bugs, 504 deadline expiries).
+    pub other_status: u64,
+    /// Requests lost to connect/write/read errors (outcome unknown).
+    pub transport_errors: u64,
+    /// Client-observed round-trip times, ms.
+    pub rtt_ms: LatencyHistogram,
+    /// Server-reported per-query latency, ms (lazy-scanned from 200s).
+    pub server_latency_ms: LatencyHistogram,
+    /// id → CTR bit patterns (only when `collect_ctrs`).
+    pub ctr_bits: BTreeMap<u64, Vec<u32>>,
+    /// id → tenant (only when `collect_ctrs`).
+    pub tenants: BTreeMap<u64, String>,
+    /// Parsed `GET /v1/report` body (when `fetch_report`).
+    pub report: Option<Json>,
+    /// `drained` from the quiesce response (when `quiesce`).
+    pub drained: Option<bool>,
+}
+
+impl LoadgenStats {
+    fn absorb(&mut self, other: LoadgenStats) {
+        self.sent += other.sent;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.failed += other.failed;
+        self.other_status += other.other_status;
+        self.transport_errors += other.transport_errors;
+        self.rtt_ms.merge(&other.rtt_ms);
+        self.server_latency_ms.merge(&other.server_latency_ms);
+        self.ctr_bits.extend(other.ctr_bits);
+        self.tenants.extend(other.tenants);
+    }
+
+    /// The server-side accounting identity from the fetched report:
+    /// `completed + shed + failed == offered`. `None` if no report.
+    pub fn report_identity(&self) -> Option<(u64, u64, u64, u64, bool)> {
+        let r = self.report.as_ref()?;
+        let f = |k: &str| r.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let (offered, completed, shed, failed) = (
+            f("queries_offered"),
+            f("queries_completed"),
+            f("queries_shed"),
+            f("queries_failed"),
+        );
+        if !offered.is_finite() {
+            return None;
+        }
+        let ok = completed + shed + failed == offered;
+        Some((offered as u64, completed as u64, shed as u64, failed as u64, ok))
+    }
+}
+
+/// Drive `n` queries from `mix` at `pacing` against a wire server.
+/// Deterministic query identities given `seed` — identical to what
+/// `mix.stream(n, qps, seed)` would feed an in-process harness.
+pub fn run(
+    mix: &TrafficMix,
+    n: usize,
+    pacing: Pacing,
+    seed: u64,
+    cfg: &LoadgenCfg,
+) -> anyhow::Result<LoadgenStats> {
+    anyhow::ensure!(cfg.connections >= 1, "need at least one connection");
+    let stream = match &pacing {
+        Pacing::Qps(qps) => mix.stream(n, *qps, seed),
+        Pacing::Plan(plan) => mix.stream_scheduled(n, plan.clone(), seed),
+    };
+    let (tx, rx) = mpsc::channel::<Query>();
+    let rx = Arc::new(Mutex::new(rx));
+    let mut senders = Vec::with_capacity(cfg.connections);
+    for i in 0..cfg.connections {
+        let rx = rx.clone();
+        let cfg = cfg.clone();
+        senders.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-conn-{i}"))
+                .spawn(move || sender_loop(rx, &cfg))
+                .map_err(|e| anyhow::anyhow!("spawn sender: {e}"))?,
+        );
+    }
+    // Open-loop pacer: sleep to each arrival, hand off, never wait for
+    // responses — the whole point of the separate process.
+    let t0 = Instant::now();
+    for q in stream {
+        let target = Duration::from_secs_f64(q.arrival_s);
+        let elapsed = t0.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        if tx.send(q).is_err() {
+            break; // all senders died (server unreachable)
+        }
+    }
+    drop(tx);
+    let mut stats = LoadgenStats::default();
+    for s in senders {
+        match s.join() {
+            Ok(local) => stats.absorb(local),
+            Err(_) => anyhow::bail!("loadgen sender thread panicked"),
+        }
+    }
+    if stats.sent == 0 && n > 0 {
+        anyhow::bail!("no request reached {} (connect failed?)", cfg.addr);
+    }
+    if cfg.quiesce {
+        let (status, body) = http_request(&cfg.addr, "POST", "/v1/quiesce", Some("{}"))?;
+        anyhow::ensure!(status == 200, "quiesce returned {status}: {body}");
+        let parsed = Json::parse(&body).map_err(|e| anyhow::anyhow!("quiesce body: {e}"))?;
+        stats.drained = parsed.get("drained").and_then(|v| v.as_bool());
+        stats.report = parsed.get("report").cloned();
+    } else if cfg.fetch_report {
+        let (status, body) = http_request(&cfg.addr, "GET", "/v1/report", None)?;
+        anyhow::ensure!(status == 200, "report returned {status}: {body}");
+        stats.report =
+            Some(Json::parse(&body).map_err(|e| anyhow::anyhow!("report body: {e}"))?);
+    }
+    Ok(stats)
+}
+
+fn sender_loop(rx: Arc<Mutex<mpsc::Receiver<Query>>>, cfg: &LoadgenCfg) -> LoadgenStats {
+    let mut stats = LoadgenStats::default();
+    let mut conn: Option<WireConn> = None;
+    loop {
+        let q = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(q) = q else { return stats };
+        let body = encode_query_request(q.id, &q.model, q.items);
+        // One reconnect attempt per query: a keep-alive connection the
+        // server idle-closed is indistinguishable from a dead server
+        // until a request fails.
+        let mut outcome = None;
+        for _attempt in 0..2 {
+            if conn.is_none() {
+                conn = WireConn::connect(&cfg.addr).ok();
+            }
+            let Some(c) = conn.as_mut() else { continue };
+            let sent_at = Instant::now();
+            match c.request("POST", "/v1/query", Some(&body)) {
+                Ok((status, resp)) => {
+                    outcome = Some((status, resp, sent_at.elapsed()));
+                    break;
+                }
+                Err(_) => conn = None,
+            }
+        }
+        let Some((status, resp, rtt)) = outcome else {
+            stats.transport_errors += 1;
+            continue;
+        };
+        stats.sent += 1;
+        match status {
+            200 => {
+                stats.completed += 1;
+                stats.rtt_ms.record(rtt.as_secs_f64() * 1e3);
+                // Lazy scan keeps the client cheap at rate; the full
+                // parse below runs only in conformance collection.
+                if let Ok(vals) = scan_object(&resp, &["latency_ms"]) {
+                    if let Some(ScanValue::Num(ms)) = &vals[0] {
+                        stats.server_latency_ms.record(*ms);
+                    }
+                }
+                if cfg.collect_ctrs {
+                    if let Ok(parsed) = Json::parse(&resp) {
+                        let bits: Vec<u32> = parsed
+                            .get("ctr_bits")
+                            .and_then(|v| v.as_arr())
+                            .map(|a| {
+                                a.iter().filter_map(|x| x.as_f64()).map(|x| x as u32).collect()
+                            })
+                            .unwrap_or_default();
+                        stats.ctr_bits.insert(q.id, bits);
+                        if let Some(t) = parsed.get("tenant").and_then(|v| v.as_str()) {
+                            stats.tenants.insert(q.id, t.to_string());
+                        }
+                    }
+                }
+            }
+            429 => stats.rejected += 1,
+            503 => stats.failed += 1,
+            _ => stats.other_status += 1,
+        }
+    }
+}

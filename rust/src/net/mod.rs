@@ -1,0 +1,24 @@
+//! Wire-protocol serving front-end (DESIGN.md §9).
+//!
+//! Everything between a TCP socket and [`crate::coordinator::ServerHandle`]:
+//!
+//! - [`json`] — zero-dependency lazy JSON scanning + encode helpers, so
+//!   request decode stays off the batching hot path (ADR-002 style).
+//! - [`wire`] — typed request/response structs and the HTTP error
+//!   mapping that keeps `completed + shed + failed == offered` exact
+//!   across the boundary.
+//! - [`listener`] — std-only HTTP/1.1 server (accept + connection
+//!   thread pool, keep-alive, Content-Length framing) behind
+//!   `recsys serve --listen`.
+//! - [`loadgen`] — the separate-process open-loop driver behind
+//!   `recsys loadgen`, reusing the deterministic TrafficMix/RatePlan
+//!   streams so wire runs stay bitwise-conformant with in-process runs.
+
+pub mod json;
+pub mod listener;
+pub mod loadgen;
+pub mod wire;
+
+pub use listener::{install_ctrlc_flag, WireCfg, WireServer};
+pub use loadgen::{http_request, LoadgenCfg, LoadgenStats, Pacing, WireConn};
+pub use wire::{WireError, WireQuery};

@@ -1,0 +1,587 @@
+//! Typed wire requests/responses and HTTP error mapping (DESIGN.md §9).
+//!
+//! The contract this module owns: every byte sequence a client can send
+//! maps to exactly one of (a) a validated [`WireQuery`] handed to
+//! `ServerHandle::submit_live`, or (b) a typed error response *without*
+//! touching admission control — so the serve report's
+//! `completed + shed + failed == offered` identity holds across the
+//! socket exactly as in-process. Malformed input is rejected before
+//! submit (never offered); `Rejected` tickets map to 429 with the
+//! per-tenant shed accounting already recorded by the handle; `Failed`
+//! and `Abandoned` map to 503.
+//!
+//! CTR payloads carry both decimal floats (human-readable) and raw f32
+//! bit patterns (`ctr_bits`) — conformance tests compare bits, so wire
+//! determinism is provable without trusting decimal round-trips.
+
+use super::json::{depth_ok, push_escaped, scan_object, ScanError, ScanValue, MAX_DEPTH};
+use crate::coordinator::{CompletedQuery, TicketOutcome};
+use crate::util::Json;
+
+/// Schema tag on every `/v1/query` outcome body.
+pub const WIRE_QUERY_SCHEMA: &str = "wire_query/v1";
+/// Schema tag on every error body.
+pub const WIRE_ERROR_SCHEMA: &str = "wire_error/v1";
+
+/// Largest item count a single wire query may request. Wire-level
+/// sanity bound (the batcher would happily split bigger queries, but a
+/// million-item request is a client bug, not a workload).
+pub const MAX_WIRE_ITEMS: usize = 4096;
+
+/// Exact integer range of f64 — ids/seeds beyond this can't round-trip
+/// through a JSON number, so they must be sent as decimal strings.
+const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0; // 2^53
+
+/// A validated `POST /v1/query` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireQuery {
+    /// Client-supplied query id; the seed derives from it exactly as
+    /// `Query::new` does, which is what makes wire replay bitwise
+    /// conformant with in-process replay.
+    pub id: u64,
+    pub model: String,
+    pub items: usize,
+    /// Explicit seed override (decimal string or integer ≤ 2^53 on the
+    /// wire). `None` → derive from `id`.
+    pub seed: Option<u64>,
+}
+
+/// One typed wire failure: HTTP status + stable machine code + human
+/// message. Everything a handler can reject with becomes one of these.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub status: u16,
+    pub code: &'static str,
+    pub msg: String,
+}
+
+impl WireError {
+    pub fn bad_request(msg: impl Into<String>) -> Self {
+        WireError { status: 400, code: "bad_request", msg: msg.into() }
+    }
+
+    pub fn unknown_model(model: &str) -> Self {
+        WireError { status: 404, code: "unknown_model", msg: format!("unknown model '{model}'") }
+    }
+
+    pub fn not_found(path: &str) -> Self {
+        WireError { status: 404, code: "not_found", msg: format!("unknown path '{path}'") }
+    }
+
+    pub fn method_not_allowed(method: &str, path: &str) -> Self {
+        WireError {
+            status: 405,
+            code: "method_not_allowed",
+            msg: format!("method {method} not allowed on {path}"),
+        }
+    }
+
+    pub fn timeout(msg: impl Into<String>) -> Self {
+        WireError { status: 408, code: "request_timeout", msg: msg.into() }
+    }
+
+    pub fn too_large(len: usize, cap: usize) -> Self {
+        WireError {
+            status: 413,
+            code: "payload_too_large",
+            msg: format!("Content-Length {len} exceeds limit {cap}"),
+        }
+    }
+
+    pub fn header_too_large(cap: usize) -> Self {
+        WireError {
+            status: 431,
+            code: "header_too_large",
+            msg: format!("request header exceeds limit {cap}"),
+        }
+    }
+
+    pub fn not_implemented(msg: impl Into<String>) -> Self {
+        WireError { status: 501, code: "not_implemented", msg: msg.into() }
+    }
+
+    pub fn unavailable(msg: impl Into<String>) -> Self {
+        WireError { status: 503, code: "unavailable", msg: msg.into() }
+    }
+}
+
+/// Fields the lazy scanner pulls from a query body, in one place so the
+/// lazy and full-parse paths can't drift apart.
+const QUERY_FIELDS: [&str; 7] = ["model", "tenant", "items", "item_ids", "weights", "id", "seed"];
+
+/// Decode a `POST /v1/query` body. Lazy scan first; full-tree fallback
+/// only for exotic-but-valid JSON (`ScanError::Unsupported`), guarded
+/// by an iterative depth check so adversarial nesting can't overflow
+/// the recursive parser's stack.
+pub fn decode_query(body: &[u8]) -> Result<WireQuery, WireError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|e| WireError::bad_request(format!("body is not valid UTF-8: {e}")))?;
+    match scan_object(text, &QUERY_FIELDS) {
+        Ok(vals) => build_query(Raw::from_scan(vals)?),
+        Err(ScanError::Malformed { pos, msg }) => {
+            Err(WireError::bad_request(format!("malformed JSON at byte {pos}: {msg}")))
+        }
+        Err(ScanError::Unsupported) => {
+            if !depth_ok(text, MAX_DEPTH) {
+                return Err(WireError::bad_request("JSON nesting too deep"));
+            }
+            let tree = Json::parse(text)
+                .map_err(|e| WireError::bad_request(format!("malformed JSON: {e}")))?;
+            build_query(Raw::from_tree(&tree)?)
+        }
+    }
+}
+
+/// Intermediate decoded fields, normalized from either parse path.
+struct Raw {
+    model: Option<String>,
+    tenant: Option<String>,
+    items: Option<f64>,
+    item_ids: Option<Vec<f64>>,
+    weights: Option<Vec<f64>>,
+    id: Option<f64>,
+    /// Seed accepts integer or decimal-string (u64 > 2^53 can't ride a
+    /// JSON number losslessly).
+    seed_num: Option<f64>,
+    seed_str: Option<String>,
+}
+
+impl Raw {
+    fn from_scan(vals: Vec<Option<ScanValue>>) -> Result<Raw, WireError> {
+        let [model, tenant, items, item_ids, weights, id, seed]: [Option<ScanValue>; 7] =
+            vals.try_into().expect("QUERY_FIELDS arity");
+        let (mut seed_num, mut seed_str) = (None, None);
+        match seed {
+            Some(ScanValue::Num(n)) => seed_num = Some(n),
+            Some(ScanValue::Str(s)) => seed_str = Some(s),
+            Some(ScanValue::Null) | None => {}
+            Some(_) => return Err(type_err("seed", "a number or decimal string")),
+        }
+        Ok(Raw {
+            model: take_str("model", model)?,
+            tenant: take_str("tenant", tenant)?,
+            items: take_num("items", items)?,
+            item_ids: take_nums("item_ids", item_ids)?,
+            weights: take_nums("weights", weights)?,
+            id: take_num("id", id)?,
+            seed_num,
+            seed_str,
+        })
+    }
+
+    fn from_tree(tree: &Json) -> Result<Raw, WireError> {
+        if !matches!(tree, Json::Obj(_)) {
+            return Err(WireError::bad_request("request body must be a JSON object"));
+        }
+        let (mut seed_num, mut seed_str) = (None, None);
+        match tree.get("seed") {
+            Some(Json::Num(n)) => seed_num = Some(*n),
+            Some(Json::Str(s)) => seed_str = Some(s.clone()),
+            Some(Json::Null) | None => {}
+            Some(_) => return Err(type_err("seed", "a number or decimal string")),
+        }
+        Ok(Raw {
+            model: tree_str(tree, "model")?,
+            tenant: tree_str(tree, "tenant")?,
+            items: tree_num(tree, "items")?,
+            item_ids: tree_nums(tree, "item_ids")?,
+            weights: tree_nums(tree, "weights")?,
+            id: tree_num(tree, "id")?,
+            seed_num,
+            seed_str,
+        })
+    }
+}
+
+fn type_err(field: &str, want: &str) -> WireError {
+    WireError::bad_request(format!("field '{field}' must be {want}"))
+}
+
+fn take_str(field: &str, v: Option<ScanValue>) -> Result<Option<String>, WireError> {
+    match v {
+        Some(ScanValue::Str(s)) => Ok(Some(s)),
+        Some(ScanValue::Null) | None => Ok(None),
+        Some(_) => Err(type_err(field, "a string")),
+    }
+}
+
+fn take_num(field: &str, v: Option<ScanValue>) -> Result<Option<f64>, WireError> {
+    match v {
+        Some(ScanValue::Num(n)) => Ok(Some(n)),
+        Some(ScanValue::Null) | None => Ok(None),
+        Some(_) => Err(type_err(field, "a number")),
+    }
+}
+
+fn take_nums(field: &str, v: Option<ScanValue>) -> Result<Option<Vec<f64>>, WireError> {
+    match v {
+        Some(ScanValue::Nums(ns)) => Ok(Some(ns)),
+        Some(ScanValue::Null) | None => Ok(None),
+        Some(_) => Err(type_err(field, "an array of numbers")),
+    }
+}
+
+fn tree_str(obj: &Json, field: &str) -> Result<Option<String>, WireError> {
+    match obj.get(field) {
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(Json::Null) | None => Ok(None),
+        Some(_) => Err(type_err(field, "a string")),
+    }
+}
+
+fn tree_num(obj: &Json, field: &str) -> Result<Option<f64>, WireError> {
+    match obj.get(field) {
+        Some(Json::Num(n)) => Ok(Some(*n)),
+        Some(Json::Null) | None => Ok(None),
+        Some(_) => Err(type_err(field, "a number")),
+    }
+}
+
+fn tree_nums(obj: &Json, field: &str) -> Result<Option<Vec<f64>>, WireError> {
+    match obj.get(field) {
+        Some(Json::Arr(a)) => {
+            let mut out = Vec::with_capacity(a.len());
+            for v in a {
+                match v {
+                    Json::Num(n) => out.push(*n),
+                    _ => return Err(type_err(field, "an array of numbers")),
+                }
+            }
+            Ok(Some(out))
+        }
+        Some(Json::Null) | None => Ok(None),
+        Some(_) => Err(type_err(field, "an array of numbers")),
+    }
+}
+
+fn as_u64(field: &str, n: f64) -> Result<u64, WireError> {
+    if n.fract() != 0.0 || !(0.0..=MAX_SAFE_INT).contains(&n) {
+        return Err(type_err(field, "a non-negative integer (≤ 2^53; use a string beyond)"));
+    }
+    Ok(n as u64)
+}
+
+fn build_query(r: Raw) -> Result<WireQuery, WireError> {
+    let model = match (r.model, r.tenant) {
+        (Some(m), _) => m,
+        (None, Some(t)) => t,
+        (None, None) => {
+            return Err(WireError::bad_request("missing required field 'model' (or 'tenant')"))
+        }
+    };
+    if model.is_empty() {
+        return Err(WireError::bad_request("field 'model' must be non-empty"));
+    }
+    let from_ids = r.item_ids.as_ref().map(|v| v.len());
+    let items = match (r.items, from_ids) {
+        (Some(n), ids) => {
+            let n = as_u64("items", n)? as usize;
+            if let Some(len) = ids {
+                if len != n {
+                    return Err(WireError::bad_request(format!(
+                        "'items' ({n}) disagrees with 'item_ids' length ({len})"
+                    )));
+                }
+            }
+            n
+        }
+        (None, Some(len)) => len,
+        (None, None) => {
+            return Err(WireError::bad_request("missing required field 'items' (or 'item_ids')"))
+        }
+    };
+    if items == 0 {
+        return Err(WireError::bad_request("'items' must be at least 1"));
+    }
+    if items > MAX_WIRE_ITEMS {
+        return Err(WireError::bad_request(format!(
+            "'items' {items} exceeds per-query limit {MAX_WIRE_ITEMS}"
+        )));
+    }
+    if let Some(w) = &r.weights {
+        if w.len() != items {
+            return Err(WireError::bad_request(format!(
+                "'weights' length ({}) must match item count ({items})",
+                w.len()
+            )));
+        }
+    }
+    let id = match r.id {
+        Some(n) => as_u64("id", n)?,
+        None => 0,
+    };
+    let seed = match (r.seed_num, r.seed_str) {
+        (Some(n), _) => Some(as_u64("seed", n)?),
+        (None, Some(s)) => Some(
+            s.parse::<u64>()
+                .map_err(|_| type_err("seed", "a decimal u64 string"))?,
+        ),
+        (None, None) => None,
+    };
+    Ok(WireQuery { id, model, items, seed })
+}
+
+// -------------------------------------------------------------- encoding --
+
+/// Encode the request body the load generator sends — the hot-path
+/// encoder half: a single String build, no tree.
+pub fn encode_query_request(id: u64, model: &str, items: usize) -> String {
+    let mut out = String::with_capacity(64 + model.len());
+    out.push_str("{\"id\":");
+    out.push_str(&id.to_string());
+    out.push_str(",\"model\":");
+    push_escaped(&mut out, model);
+    out.push_str(",\"items\":");
+    out.push_str(&items.to_string());
+    out.push('}');
+    out
+}
+
+/// Map a resolved ticket outcome to (HTTP status, JSON body).
+/// `inflight` rides along as the live counter a submitting client most
+/// wants to see next to its own outcome.
+pub fn encode_outcome(outcome: &TicketOutcome, query_id: u64, inflight: usize) -> (u16, String) {
+    match outcome {
+        TicketOutcome::Completed(c) => (200, encode_completed(c, inflight)),
+        TicketOutcome::Rejected => (
+            429,
+            outcome_body(
+                "rejected",
+                query_id,
+                inflight,
+                "shed by admission control (inflight cap reached)",
+            ),
+        ),
+        TicketOutcome::Failed { retries } => {
+            let msg = format!("execution failed after {retries} retries");
+            (503, outcome_body("failed", query_id, inflight, &msg))
+        }
+        TicketOutcome::Abandoned => {
+            let msg = "server shut down before execution";
+            (503, outcome_body("abandoned", query_id, inflight, msg))
+        }
+    }
+}
+
+/// `504` body for a query still in flight when the wire deadline
+/// expired. The server still owns the ticket (the admission slot
+/// releases when it resolves); only this HTTP exchange gave up.
+pub fn encode_pending(query_id: u64, waited: std::time::Duration) -> (u16, String) {
+    let msg =
+        format!("query still in flight after {:.1}s; result discarded", waited.as_secs_f64());
+    (504, outcome_body("pending", query_id, 0, &msg))
+}
+
+fn outcome_body(outcome: &str, query_id: u64, inflight: usize, msg: &str) -> String {
+    let mut out = String::with_capacity(128);
+    out.push_str("{\"schema\":\"");
+    out.push_str(WIRE_QUERY_SCHEMA);
+    out.push_str("\",\"outcome\":\"");
+    out.push_str(outcome);
+    out.push_str("\",\"id\":");
+    out.push_str(&query_id.to_string());
+    out.push_str(",\"inflight\":");
+    out.push_str(&inflight.to_string());
+    out.push_str(",\"message\":");
+    push_escaped(&mut out, msg);
+    out.push('}');
+    out
+}
+
+fn encode_completed(c: &CompletedQuery, inflight: usize) -> String {
+    let mut out = String::with_capacity(96 + c.ctrs.len() * 24);
+    out.push_str("{\"schema\":\"");
+    out.push_str(WIRE_QUERY_SCHEMA);
+    out.push_str("\",\"outcome\":\"completed\",\"id\":");
+    out.push_str(&c.id.to_string());
+    out.push_str(",\"tenant\":");
+    push_escaped(&mut out, &c.tenant);
+    out.push_str(",\"items\":");
+    out.push_str(&c.items.to_string());
+    out.push_str(",\"latency_ms\":");
+    out.push_str(&c.latency_ms.to_string());
+    out.push_str(",\"bucket\":");
+    out.push_str(&c.batch_bucket.to_string());
+    out.push_str(",\"worker\":");
+    out.push_str(&c.worker.to_string());
+    out.push_str(",\"inflight\":");
+    out.push_str(&inflight.to_string());
+    out.push_str(",\"ctrs\":[");
+    for (i, x) in c.ctrs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&x.to_string());
+    }
+    // Bit patterns make CTR determinism checkable across the wire
+    // without decimal round-trip concerns.
+    out.push_str("],\"ctr_bits\":[");
+    for (i, x) in c.ctrs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&x.to_bits().to_string());
+    }
+    out.push_str("]}");
+    out
+}
+
+/// JSON body for a [`WireError`].
+pub fn encode_error(e: &WireError) -> String {
+    let mut out = String::with_capacity(64 + e.msg.len());
+    out.push_str("{\"schema\":\"");
+    out.push_str(WIRE_ERROR_SCHEMA);
+    out.push_str("\",\"status\":");
+    out.push_str(&e.status.to_string());
+    out.push_str(",\"error\":\"");
+    out.push_str(e.code);
+    out.push_str("\",\"message\":");
+    push_escaped(&mut out, &e.msg);
+    out.push('}');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode(s: &str) -> Result<WireQuery, WireError> {
+        decode_query(s.as_bytes())
+    }
+
+    #[test]
+    fn happy_path_minimal() {
+        let q = decode(r#"{"model": "rmc1-small", "items": 4, "id": 17}"#).unwrap();
+        assert_eq!(
+            q,
+            WireQuery { id: 17, model: "rmc1-small".into(), items: 4, seed: None }
+        );
+    }
+
+    #[test]
+    fn tenant_alias_and_item_ids() {
+        let q = decode(r#"{"tenant": "rmc2-small", "item_ids": [10, 20, 30]}"#).unwrap();
+        assert_eq!(q.model, "rmc2-small");
+        assert_eq!(q.items, 3);
+        assert_eq!(q.id, 0);
+    }
+
+    #[test]
+    fn loadgen_encode_decodes_to_itself() {
+        let body = encode_query_request(99, "rmc3-small", 12);
+        let q = decode_query(body.as_bytes()).unwrap();
+        assert_eq!(
+            q,
+            WireQuery { id: 99, model: "rmc3-small".into(), items: 12, seed: None }
+        );
+    }
+
+    #[test]
+    fn seed_as_string_survives_beyond_f64() {
+        // 17 * golden-ratio constant wraps into the no-f64-roundtrip zone.
+        let big = 17u64.wrapping_mul(0x9E3779B97F4A7C15);
+        let q = decode(&format!(r#"{{"model": "m", "items": 1, "seed": "{big}"}}"#)).unwrap();
+        assert_eq!(q.seed, Some(big));
+        // The same value as a JSON number is rejected, not silently rounded.
+        let e = decode(&format!(r#"{{"model": "m", "items": 1, "seed": {big}}}"#)).unwrap_err();
+        assert_eq!(e.status, 400);
+    }
+
+    #[test]
+    fn rejects_with_typed_400s() {
+        for (body, needle) in [
+            (r#"{"items": 3}"#, "missing required field 'model'"),
+            (r#"{"model": "m"}"#, "missing required field 'items'"),
+            (r#"{"model": "m", "items": 0}"#, "at least 1"),
+            (r#"{"model": "m", "items": 99999}"#, "exceeds per-query limit"),
+            (r#"{"model": "m", "items": 2.5}"#, "non-negative integer"),
+            (r#"{"model": "m", "items": -3}"#, "non-negative integer"),
+            (r#"{"model": 7, "items": 3}"#, "must be a string"),
+            (r#"{"model": "m", "items": 2, "item_ids": [1]}"#, "disagrees"),
+            (r#"{"model": "m", "item_ids": [1, 2], "weights": [0.5]}"#, "'weights' length"),
+            (r#"{"model": "m", "items": 1, "id": -1}"#, "non-negative integer"),
+            ("{nope", "malformed JSON"),
+            (r#"[1, 2]"#, "malformed JSON"),
+            (r#""just a string""#, "malformed JSON"),
+        ] {
+            let e = decode(body).unwrap_err();
+            assert_eq!(e.status, 400, "{body}");
+            assert!(e.msg.contains(needle), "{body}: got '{}'", e.msg);
+        }
+    }
+
+    #[test]
+    fn non_utf8_is_a_400() {
+        let e = decode_query(&[0x7b, 0xff, 0xfe, 0x7d]).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.msg.contains("UTF-8"));
+    }
+
+    #[test]
+    fn fallback_path_agrees_with_lazy() {
+        // \u escape forces the full-parse fallback; same query decoded.
+        let lazy = decode(r#"{"model": "rmc1-small", "items": 2, "id": 5}"#).unwrap();
+        let fall = decode("{\"model\": \"rmc1-smal\\u006c\", \"items\": 2, \"id\": 5}").unwrap();
+        assert_eq!(lazy, fall);
+    }
+
+    #[test]
+    fn depth_bomb_rejected_on_fallback_path() {
+        // An escaped key punts to the fallback, which must depth-check
+        // before recursing.
+        let bomb = format!("{{\"\\u0061\": {}1{}}}", "[".repeat(5000), "]".repeat(5000));
+        let e = decode(&bomb).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.msg.contains("nesting too deep"), "{}", e.msg);
+    }
+
+    #[test]
+    fn outcome_encoding_statuses() {
+        let c = CompletedQuery {
+            id: 3,
+            tenant: "rmc1-small".into(),
+            items: 2,
+            ctrs: vec![0.5, 0.25],
+            latency_ms: 1.5,
+            batch_bucket: 4,
+            worker: 0,
+        };
+        let (st, body) = encode_outcome(&TicketOutcome::Completed(c), 3, 1);
+        assert_eq!(st, 200);
+        let parsed = Json::parse(&body).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(WIRE_QUERY_SCHEMA));
+        assert_eq!(parsed.get("outcome").unwrap().as_str(), Some("completed"));
+        let bits: Vec<u64> = parsed
+            .get("ctr_bits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as u64)
+            .collect();
+        assert_eq!(bits, vec![0.5f32.to_bits() as u64, 0.25f32.to_bits() as u64]);
+        assert_eq!(encode_outcome(&TicketOutcome::Rejected, 1, 0).0, 429);
+        assert_eq!(encode_outcome(&TicketOutcome::Failed { retries: 3 }, 1, 0).0, 503);
+        assert_eq!(encode_outcome(&TicketOutcome::Abandoned, 1, 0).0, 503);
+        let (st, body) = encode_pending(9, std::time::Duration::from_secs(30));
+        assert_eq!(st, 504);
+        assert!(Json::parse(&body).is_ok());
+    }
+
+    #[test]
+    fn error_bodies_parse_and_tag() {
+        for e in [
+            WireError::bad_request("x"),
+            WireError::unknown_model("nope"),
+            WireError::too_large(10, 5),
+            WireError::timeout("slow"),
+            WireError::method_not_allowed("PUT", "/v1/query"),
+            WireError::not_implemented("chunked \"bodies\""),
+        ] {
+            let parsed = Json::parse(&encode_error(&e)).unwrap();
+            assert_eq!(parsed.get("schema").unwrap().as_str(), Some(WIRE_ERROR_SCHEMA));
+            assert_eq!(parsed.get("status").unwrap().as_f64(), Some(e.status as f64));
+            assert_eq!(parsed.get("error").unwrap().as_str(), Some(e.code));
+        }
+    }
+}

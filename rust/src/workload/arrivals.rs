@@ -90,6 +90,77 @@ impl RatePlan {
         Self::segments(vec![(0.0, base_qps), (at_s, burst_qps), (at_s + duration_s, base_qps)])
     }
 
+    /// Parse a CLI rate-plan spec (the `loadgen --rate-plan` flag):
+    ///
+    /// - `constant:QPS`
+    /// - `ramp:FROM:TO:DURATION_S:STEPS`
+    /// - `flash:BASE:BURST:AT_S:DURATION_S`
+    /// - `segments:T0=R0,T1=R1,...` (explicit piecewise-constant plan)
+    ///
+    /// Errors (instead of panicking) on malformed specs, so a typo'd
+    /// flag is a usage message, not a crash.
+    pub fn parse(spec: &str) -> anyhow::Result<RatePlan> {
+        let (kind, rest) = spec.split_once(':').unwrap_or((spec, ""));
+        let nums = |s: &str| -> anyhow::Result<Vec<f64>> {
+            s.split(':')
+                .map(|x| {
+                    x.parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("bad number '{x}' in rate plan '{spec}'"))
+                })
+                .collect()
+        };
+        match kind {
+            "constant" => {
+                let v = nums(rest)?;
+                anyhow::ensure!(v.len() == 1, "constant takes one rate: 'constant:QPS'");
+                anyhow::ensure!(v[0] > 0.0, "rate must be positive");
+                Ok(RatePlan::constant(v[0]))
+            }
+            "ramp" => {
+                let v = nums(rest)?;
+                anyhow::ensure!(v.len() == 4, "ramp takes 'ramp:FROM:TO:DURATION_S:STEPS'");
+                let steps = v[3] as usize;
+                anyhow::ensure!(v[0] > 0.0 && v[1] > 0.0, "rates must be positive");
+                anyhow::ensure!(v[2] > 0.0, "duration must be positive");
+                anyhow::ensure!(steps >= 1 && v[3].fract() == 0.0, "steps must be an integer >= 1");
+                Ok(RatePlan::ramp(v[0], v[1], v[2], steps))
+            }
+            "flash" => {
+                let v = nums(rest)?;
+                anyhow::ensure!(v.len() == 4, "flash takes 'flash:BASE:BURST:AT_S:DURATION_S'");
+                anyhow::ensure!(v[0] > 0.0 && v[1] > 0.0, "rates must be positive");
+                anyhow::ensure!(v[2] > 0.0 && v[3] > 0.0, "at/duration must be positive");
+                Ok(RatePlan::flash_crowd(v[0], v[1], v[2], v[3]))
+            }
+            "segments" => {
+                let mut segs = Vec::new();
+                for part in rest.split(',') {
+                    let (t, r) = part
+                        .split_once('=')
+                        .ok_or_else(|| anyhow::anyhow!("segment '{part}' is not 'T=RATE'"))?;
+                    let t: f64 = t
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad segment start '{t}' in '{spec}'"))?;
+                    let r: f64 = r
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad segment rate '{r}' in '{spec}'"))?;
+                    segs.push((t, r));
+                }
+                anyhow::ensure!(!segs.is_empty(), "segments plan needs at least one segment");
+                anyhow::ensure!(segs[0].0 <= 1e-12, "first segment must start at t=0");
+                for w in segs.windows(2) {
+                    anyhow::ensure!(w[1].0 > w[0].0, "segment starts must ascend");
+                }
+                anyhow::ensure!(segs.iter().all(|&(_, r)| r > 0.0), "rates must be positive");
+                Ok(RatePlan::segments(segs))
+            }
+            _ => anyhow::bail!(
+                "unknown rate plan '{spec}' (want constant:QPS, ramp:FROM:TO:DUR:STEPS, \
+                 flash:BASE:BURST:AT:DUR, or segments:T0=R0,...)"
+            ),
+        }
+    }
+
     /// Offered rate at absolute time `t` seconds.
     pub fn rate_at(&self, t: f64) -> f64 {
         self.segments
@@ -210,6 +281,43 @@ mod tests {
             (burst as f64 - 1600.0).abs() < 200.0,
             "burst second carried {burst} arrivals"
         );
+    }
+
+    #[test]
+    fn parse_specs_match_constructors() {
+        let p = RatePlan::parse("constant:500").unwrap();
+        assert_eq!(p.rate_at(3.0), 500.0);
+        let p = RatePlan::parse("ramp:100:500:4:4").unwrap();
+        assert_eq!(p.rate_at(2.0), 300.0);
+        assert_eq!(p.rate_at(99.0), 500.0);
+        let p = RatePlan::parse("flash:200:1600:4:1").unwrap();
+        assert_eq!(p.rate_at(4.5), 1600.0);
+        assert_eq!(p.rate_at(5.5), 200.0);
+        let p = RatePlan::parse("segments:0=100,2=900,2.5=100").unwrap();
+        assert_eq!(p.rate_at(2.2), 900.0);
+        assert_eq!(p.max_rate(), 900.0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "constant",
+            "constant:0",
+            "constant:-5",
+            "constant:abc",
+            "ramp:100:500:4",
+            "ramp:100:500:4:0",
+            "ramp:100:500:4:1.5",
+            "flash:200:1600:0:1",
+            "segments:",
+            "segments:1=100",
+            "segments:0=100,0=200",
+            "segments:0=-1",
+            "warble:1:2",
+        ] {
+            assert!(RatePlan::parse(bad).is_err(), "spec '{bad}' should be rejected");
+        }
     }
 
     #[test]

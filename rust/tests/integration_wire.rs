@@ -1,0 +1,334 @@
+//! Integration tests over the wire front-end (ISSUE 10): in-process vs
+//! wire conformance (bitwise CTRs + identical per-tenant accounting),
+//! malformed-input safety (typed 4xx, no panics, no leaked admission
+//! slots, nothing counted as offered), keep-alive sessions, the quiesce
+//! endpoint, and shed mapping to 429 across real sockets.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use recsys::coordinator::{MockBackend, ServerBuilder, Ticket, SERVE_REPORT_SCHEMA};
+use recsys::net::loadgen;
+use recsys::net::{LoadgenCfg, Pacing, WireCfg, WireConn, WireServer};
+use recsys::runtime::ExecOptions;
+use recsys::util::Json;
+use recsys::workload::TrafficMix;
+
+const MIX: &str = "rmc1-small:0.7,rmc2-small:0.3";
+
+fn native_server() -> recsys::coordinator::Server {
+    ServerBuilder::new()
+        .mix(TrafficMix::parse(MIX).unwrap())
+        .workers(2)
+        .routing("least-loaded")
+        .sla_ms(500.0)
+        .native(ExecOptions::default())
+        .build()
+        .unwrap()
+}
+
+fn start_wire(server: &recsys::coordinator::Server, cfg: WireCfg) -> WireServer {
+    WireServer::start(
+        "127.0.0.1:0",
+        server.handle(),
+        server.models(),
+        Duration::from_secs(20),
+        cfg,
+    )
+    .unwrap()
+}
+
+#[test]
+fn wire_conformance_bitwise_with_in_process() {
+    // The tentpole contract: the same (mix, n, seed) driven in-process
+    // and over the wire serves bitwise-identical CTRs per query id and
+    // lands the same per-tenant accounting in the report. Pacing,
+    // connection count, and batch composition are scheduling — never
+    // numerics, never counts.
+    let (n, seed) = (60usize, 7u64);
+    let mix = TrafficMix::parse(MIX).unwrap();
+
+    // In-process run: submit the stream through the session API.
+    let in_server = native_server();
+    let handle = in_server.handle();
+    let tickets: Vec<Ticket> =
+        mix.stream(n, 2000.0, seed).map(|q| handle.submit_live(q)).collect();
+    let mut in_bits: BTreeMap<u64, (String, Vec<u32>)> = BTreeMap::new();
+    for t in tickets {
+        let out = t.wait();
+        let done = out.completed().expect("uncapped run completes everything");
+        let bits = done.ctrs.iter().map(|x| x.to_bits()).collect();
+        in_bits.insert(done.id, (done.tenant.clone(), bits));
+    }
+    assert!(handle.quiesce(Duration::from_secs(20)).unwrap());
+    let in_report = handle.report().unwrap();
+    drop(in_server);
+
+    // Wire run: fresh server, same stream paced by the load generator
+    // over real sockets (4 keep-alive connections).
+    let wire_server = native_server();
+    let wire = start_wire(&wire_server, WireCfg::default());
+    let mut cfg = LoadgenCfg::new(wire.local_addr().to_string());
+    cfg.collect_ctrs = true;
+    cfg.quiesce = true;
+    let stats = loadgen::run(&mix, n, Pacing::Qps(2000.0), seed, &cfg).unwrap();
+
+    assert_eq!(stats.completed, n as u64, "every wire query completes");
+    assert_eq!(stats.transport_errors, 0);
+    assert_eq!(stats.ctr_bits.len(), n);
+    for (id, (tenant, bits)) in &in_bits {
+        assert_eq!(
+            stats.tenants.get(id),
+            Some(tenant),
+            "query {id}: wire run routed to a different tenant"
+        );
+        assert_eq!(
+            stats.ctr_bits.get(id),
+            Some(bits),
+            "query {id}: wire CTR bits diverge from in-process"
+        );
+        assert!(!bits.is_empty());
+    }
+
+    // Same per-tenant accounting identity on both sides of the socket.
+    let report = stats.report.as_ref().expect("quiesce returns the drained report");
+    assert_eq!(
+        report.get("schema").and_then(Json::as_str),
+        Some(SERVE_REPORT_SCHEMA)
+    );
+    let (offered, completed, shed, failed, ok) = stats.report_identity().unwrap();
+    assert!(ok, "wire identity violated: {offered} != {completed} + {shed} + {failed}");
+    assert_eq!(offered, n as u64);
+    assert_eq!(completed, in_report.queries);
+    assert_eq!(shed, in_report.queries_shed);
+    assert_eq!(failed, in_report.queries_failed);
+    let wire_tenants = report.get("per_tenant").and_then(Json::as_arr).unwrap();
+    assert_eq!(wire_tenants.len(), in_report.per_tenant.len());
+    for (w, t) in wire_tenants.iter().zip(&in_report.per_tenant) {
+        let f = |k: &str| w.get(k).and_then(Json::as_f64).unwrap();
+        assert_eq!(w.get("model").and_then(Json::as_str), Some(t.model.as_str()));
+        assert_eq!(f("queries") as u64, t.queries, "{}: wire tenant queries", t.model);
+        assert_eq!(f("items") as u64, t.items, "{}: wire tenant items", t.model);
+        assert_eq!(f("shed_queries") as u64, t.shed_queries, "{}", t.model);
+    }
+    assert_eq!(stats.drained, Some(true));
+}
+
+/// Write raw bytes, read everything until the server closes, return the
+/// parsed status line. Framing-error paths always close the connection.
+fn raw_roundtrip(addr: &str, req: &[u8]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(req).unwrap();
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    let text = String::from_utf8_lossy(&buf).into_owned();
+    let status: u16 = text
+        .split_ascii_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in response: '{text}'"));
+    (status, text)
+}
+
+fn raw_post_query(addr: &str, body: &[u8]) -> (u16, String) {
+    let mut req = format!(
+        "POST /v1/query HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(body);
+    raw_roundtrip(addr, &req)
+}
+
+#[test]
+fn malformed_wire_input_is_typed_and_leaks_nothing() {
+    // Every malformed request maps to a typed 4xx/5xx, never a panic, a
+    // hung ticket, or a leaked admission slot — and none of it is ever
+    // *offered*, so the report identity only counts the good query.
+    let server = native_server();
+    let handle = server.handle();
+    // Short read timeout so the truncated-body case answers 408 fast.
+    let cfg = WireCfg {
+        read_timeout: Duration::from_millis(200),
+        max_body_bytes: 64 * 1024,
+        ..WireCfg::default()
+    };
+    let wire = start_wire(&server, cfg);
+    let addr = wire.local_addr().to_string();
+
+    // Body-level rejections over one keep-alive connection.
+    let mut conn = WireConn::connect(&addr).unwrap();
+    for (body, want) in [
+        ("{nope", 400),                                          // malformed JSON
+        ("{\"items\": 3}", 400),                                 // missing model
+        ("{\"model\": \"nope\", \"items\": 3}", 404),            // unknown model
+        ("{\"model\": \"rmc1-small\", \"items\": 0}", 400),      // zero items
+        ("{\"model\": \"rmc1-small\", \"items\": 9999999}", 400), // over item cap
+        ("[]", 400),                                             // not an object
+    ] {
+        let (status, resp) = conn.request("POST", "/v1/query", Some(body)).unwrap();
+        assert_eq!(status, want, "body {body}: {resp}");
+        let parsed = Json::parse(&resp).unwrap();
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some("wire_error/v1"));
+    }
+    // Method/path errors on the same connection.
+    let (status, _) = conn.request("GET", "/v1/query", None).unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = conn.request("GET", "/v1/nothing", None).unwrap();
+    assert_eq!(status, 404);
+
+    // Framing-level rejections (fresh sockets; server closes after).
+    let (status, _) = raw_post_query(&addr, &[0x7b, 0xff, 0xfe, 0x7d]);
+    assert_eq!(status, 400, "non-UTF8 body");
+    let (status, _) = raw_roundtrip(
+        &addr,
+        b"POST /v1/query HTTP/1.1\r\nHost: t\r\nContent-Length: 99999999\r\n\r\n",
+    );
+    assert_eq!(status, 413, "oversized Content-Length rejected without reading the body");
+    let (status, _) = raw_roundtrip(
+        &addr,
+        b"POST /v1/query HTTP/1.1\r\nHost: t\r\nContent-Length: 100\r\n\r\n{\"model\":",
+    );
+    assert_eq!(status, 408, "truncated body times out with a typed error");
+    let (status, _) = raw_roundtrip(&addr, b"GARBAGE REQUEST LINE EXTRA WORDS HERE\r\n\r\n");
+    assert_eq!(status, 400, "malformed request line");
+    let (status, _) = raw_roundtrip(
+        &addr,
+        b"POST /v1/query HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+    );
+    assert_eq!(status, 501, "chunked framing is refused, not misparsed");
+
+    // Nothing above touched admission control or the ticket table.
+    assert_eq!(handle.inflight(), 0, "malformed traffic leaked an admission slot");
+
+    // The server still serves: one good query (fresh connection — the
+    // 200ms idle timeout has long since closed the keep-alive one),
+    // then the report counts exactly that one offered/completed query.
+    let good = "{\"model\": \"rmc1-small\", \"items\": 2, \"id\": 1}";
+    let mut conn = WireConn::connect(&addr).unwrap();
+    let (status, resp) = conn.request("POST", "/v1/query", Some(good)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let parsed = Json::parse(&resp).unwrap();
+    assert_eq!(parsed.get("outcome").and_then(Json::as_str), Some("completed"));
+    assert!(handle.quiesce(Duration::from_secs(10)).unwrap());
+    let report = handle.report().unwrap();
+    assert_eq!(report.queries_offered, 1, "only the good query was ever offered");
+    assert_eq!(report.queries, 1);
+    assert_eq!(report.queries_shed, 0);
+    assert_eq!(report.queries_failed, 0);
+    let (_h2, h4, _h5) = wire.response_counts();
+    assert!(h4 >= 10, "the rejections above were all counted as 4xx (got {h4})");
+}
+
+#[test]
+fn keep_alive_session_and_report_schema() {
+    // One connection carries many requests; GET /v1/report answers the
+    // live schema-tagged report between queries.
+    let server = native_server();
+    let wire = start_wire(&server, WireCfg::default());
+    let mut conn = WireConn::connect(&wire.local_addr().to_string()).unwrap();
+    for id in 0..5u64 {
+        let body = format!("{{\"model\": \"rmc1-small\", \"items\": 2, \"id\": {id}}}");
+        let (status, resp) = conn.request("POST", "/v1/query", Some(&body)).unwrap();
+        assert_eq!(status, 200, "query {id}: {resp}");
+        let parsed = Json::parse(&resp).unwrap();
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some("wire_query/v1"));
+        assert_eq!(parsed.get("id").and_then(Json::as_f64), Some(id as f64));
+    }
+    let (status, resp) = conn.request("GET", "/v1/report", None).unwrap();
+    assert_eq!(status, 200);
+    let report = Json::parse(&resp).unwrap();
+    assert_eq!(report.get("schema").and_then(Json::as_str), Some(SERVE_REPORT_SCHEMA));
+    assert_eq!(report.get("queries_completed").and_then(Json::as_f64), Some(5.0));
+    let (status, resp) = conn.request("GET", "/v1/healthz", None).unwrap();
+    assert_eq!(status, 200, "{resp}");
+}
+
+#[test]
+fn quiesce_endpoint_drains_and_raises_the_exit_flag() {
+    let server = native_server();
+    let wire = start_wire(&server, WireCfg::default());
+    let addr = wire.local_addr().to_string();
+    let mut conn = WireConn::connect(&addr).unwrap();
+    let (status, _) = conn
+        .request("POST", "/v1/query", Some("{\"model\": \"rmc2-small\", \"items\": 3}"))
+        .unwrap();
+    assert_eq!(status, 200);
+    assert!(!wire.quiesce_requested(), "flag must not be up before any quiesce");
+    let (status, resp) = conn.request("POST", "/v1/quiesce", Some("{}")).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let parsed = Json::parse(&resp).unwrap();
+    assert_eq!(parsed.get("schema").and_then(Json::as_str), Some("quiesce/v1"));
+    assert_eq!(parsed.get("drained").and_then(Json::as_bool), Some(true));
+    let report = parsed.get("report").unwrap();
+    assert_eq!(report.get("schema").and_then(Json::as_str), Some(SERVE_REPORT_SCHEMA));
+    assert_eq!(report.get("queries_completed").and_then(Json::as_f64), Some(1.0));
+    assert!(wire.quiesce_requested(), "the serve CLI polls this flag to exit");
+}
+
+#[test]
+fn overload_sheds_as_429_with_exact_wire_accounting() {
+    // A capped server under a socket-side flood: sheds surface as 429,
+    // completions as 200, and the wire-side tallies reconcile exactly
+    // with the server report — the accounting identity crosses the wire.
+    let server = ServerBuilder::new()
+        .mix(TrafficMix::parse(MIX).unwrap())
+        .workers(2)
+        .routing("least-loaded")
+        .sla_ms(50.0)
+        .buckets(vec![1, 8])
+        .backend(Arc::new(MockBackend { latency: Duration::from_millis(10) }))
+        .inflight_cap(1)
+        .build()
+        .unwrap();
+    let wire = start_wire(&server, WireCfg::default());
+    let addr = wire.local_addr().to_string();
+    let (clients, per_client) = (4usize, 30usize);
+    let counts: Vec<(u64, u64, u64)> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut conn = WireConn::connect(&addr).unwrap();
+                    let (mut ok, mut shed, mut other) = (0u64, 0u64, 0u64);
+                    for i in 0..per_client {
+                        let id = (c * per_client + i) as u64;
+                        let model = if id % 2 == 0 { "rmc1-small" } else { "rmc2-small" };
+                        let body =
+                            format!("{{\"model\": \"{model}\", \"items\": 2, \"id\": {id}}}");
+                        let (status, _) =
+                            conn.request("POST", "/v1/query", Some(&body)).unwrap();
+                        match status {
+                            200 => ok += 1,
+                            429 => shed += 1,
+                            _ => other += 1,
+                        }
+                    }
+                    (ok, shed, other)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let ok: u64 = counts.iter().map(|c| c.0).sum();
+    let shed: u64 = counts.iter().map(|c| c.1).sum();
+    let other: u64 = counts.iter().map(|c| c.2).sum();
+    let offered = (clients * per_client) as u64;
+    assert_eq!(ok + shed, offered, "every query answered 200 or 429");
+    assert_eq!(other, 0);
+    assert!(shed > 0, "a cap-1 flood must shed");
+
+    let handle = server.handle();
+    assert!(handle.quiesce(Duration::from_secs(20)).unwrap());
+    let report = handle.report().unwrap();
+    assert_eq!(report.queries_offered, offered);
+    assert_eq!(report.queries, ok, "wire 200s == report completions");
+    assert_eq!(report.queries_shed, shed, "wire 429s == report sheds");
+    assert_eq!(report.queries_failed, 0);
+    let tenant_shed: u64 = report.per_tenant.iter().map(|t| t.shed_queries).sum();
+    assert_eq!(tenant_shed, shed, "per-tenant shed accounting intact across the wire");
+}
